@@ -1,0 +1,67 @@
+"""§Perf hillclimb driver: compile cells with config overrides, record the
+three roofline terms + dry-run memory before/after each change.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell gemma-7b/train_4k \
+        --set sharding_strategy=fsdp_pure --out hc.json
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+from pathlib import Path  # noqa: E402
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.launch import dryrun as DR       # noqa: E402
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True)      # arch/shape
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="hillclimb.json")
+    args = ap.parse_args()
+    arch, shape = args.cell.split("/")
+    overrides = dict(parse_override(kv) for kv in args.set)
+
+    rec = DR.run_cell(arch, shape, args.multi_pod, overrides or None)
+    # attach analytic roofline terms under the same overrides
+    import dataclasses
+    from benchmarks import roofline as R
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    from repro.configs.registry import SHAPES
+    sh = SHAPES[shape]
+    fl = R.step_flops(cfg, sh)
+    coll = R.step_collective_bytes(cfg, sh, args.multi_pod)
+    rec["roofline"] = {
+        "compute_s": fl["total"] / (R.CHIPS * R.PEAK_FLOPS),
+        "memory_s": R.step_hbm_bytes(cfg, sh) / (R.CHIPS * R.HBM_BW),
+        "collective_s": coll["total"] / R.ICI_BW,
+        "collective_breakdown": coll,
+    }
+    hist = json.load(open(args.out)) if os.path.exists(args.out) else []
+    hist.append(rec)
+    json.dump(hist, open(args.out, "w"), indent=1)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("trace",)}, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Benchmarks mirroring the paper's tables/figures at CPU-runnable scale.
+
+Each function returns a list of result dicts; benchmarks/run.py prints them
+as CSV.  Scale is reduced (CPU container) but the *comparisons* are the
+paper's: precision parity across fp32/BF16/FP8, Renee's instability, memory
+vs labels, chunk-count trade-off, and the (E, M) precision grid.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elmo_head as H
+from repro.core import memory_model as MM
+from repro.core import precision as P
+from repro.core import renee_baseline as RB
+from repro.data import DataCursor, xmc_batches
+
+
+# ---------------------------------------------------------------------------
+# shared tiny-XMC training harness
+# ---------------------------------------------------------------------------
+
+
+def _make_data(num_labels=2000, d=64, n_train=512, n_test=256, seed=0):
+    """Linearly-separable-ish synthetic XMC: each label has a prototype."""
+    rng = np.random.default_rng(seed)
+    protos = rng.standard_normal((num_labels, d)).astype(np.float32)
+    protos /= np.linalg.norm(protos, axis=1, keepdims=True)
+
+    def sample(n):
+        ys = rng.integers(0, num_labels, (n, 3))
+        x = protos[ys[:, 0]] + 0.3 * protos[ys[:, 1]] \
+            + 0.1 * rng.standard_normal((n, d)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(ys, jnp.int32)
+
+    return sample(n_train), sample(n_test)
+
+
+def _train_head(cfg: H.ELMOHeadConfig, data, steps=300, lr=2.0, bs=128,
+                seed=1):
+    (xtr, ytr), (xte, yte) = data
+    state = H.init_head(jax.random.PRNGKey(seed), cfg)
+    n = xtr.shape[0]
+    step_fn = jax.jit(lambda s, x, y, sd: H.head_train_step(
+        cfg, s, x, y, jnp.float32(lr), jnp.float32(0.0), sd))
+    t0 = time.time()
+    for i in range(steps):
+        lo = (i * bs) % (n - bs)
+        state, _, m = step_fn(state, xtr[lo:lo + bs], ytr[lo:lo + bs],
+                              jnp.uint32(i))
+    train_s = time.time() - t0
+    p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1))
+    p5 = float(H.precision_at_k(cfg, state, xte, yte, k=5))
+    return {"p@1": round(p1, 4), "p@5": round(p5, 4),
+            "train_s": round(train_s, 2), "loss": float(m["loss"])}
+
+
+# ---------------------------------------------------------------------------
+# Table 2/3 analogue: precision parity fp32 / ELMO-BF16 / ELMO-FP8 / Renee
+# ---------------------------------------------------------------------------
+
+
+def bench_convergence_parity(num_labels=500, d=32, steps=300):
+    data = _make_data(num_labels, d)
+    rows = []
+    for name, wd, sr in [("fp32", "f32", False), ("elmo_bf16", "bf16", True),
+                         ("elmo_fp8", "e4m3", True),
+                         ("bf16_no_sr", "bf16", False)]:
+        cfg = H.ELMOHeadConfig(num_labels=num_labels, d_model=d,
+                               num_chunks=4, weight_dtype=wd, loss="bce",
+                               use_sr=sr, impl="xla")
+        r = _train_head(cfg, data, steps=steps)
+        rows.append(dict(name=f"parity/{name}", **r))
+    # Renee baseline (full logits, FP16 MPT)
+    rcfg = RB.ReneeConfig(num_labels=num_labels, d_model=d,
+                          init_loss_scale=64.0)
+    rstate = RB.init_renee(jax.random.PRNGKey(1), rcfg)
+    (xtr, ytr), (xte, yte) = data
+    step_fn = jax.jit(lambda s, x, y: RB.renee_train_step(
+        rcfg, s, x, y, jnp.float32(0.2)))   # momentum 0.9 → eff. lr ≈ 2.0
+    t0 = time.time()
+    for i in range(steps):
+        lo = (i * 128) % (xtr.shape[0] - 128)
+        rstate, _, m = step_fn(rstate, xtr[lo:lo + 128], ytr[lo:lo + 128])
+    z = xte @ rstate.w_master.T
+    top1 = jnp.argsort(z, axis=1)[:, -1:]
+    p1 = float(((top1[:, :, None] == yte[:, None, :]).any(-1)).mean())
+    rows.append({"name": "parity/renee_fp16", "p@1": round(p1, 4),
+                 "p@5": float("nan"), "train_s": round(time.time() - t0, 2),
+                 "loss": float(m["loss"])})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 2a: precision grid over (exponent, mantissa) bits, ± SR
+# ---------------------------------------------------------------------------
+
+
+def bench_precision_grid(num_labels=500, d=32, steps=120):
+    data = _make_data(num_labels, d)
+    rows = []
+    for e_bits, m_bits in [(4, 3), (4, 2), (3, 3), (5, 2), (2, 3)]:
+        for sr in (False, True):
+            # simulate the format by quantizing after every update
+            cfg = H.ELMOHeadConfig(num_labels=num_labels, d_model=d,
+                                   num_chunks=2, weight_dtype="f32",
+                                   loss="bce", use_sr=False, impl="xla")
+            state = H.init_head(jax.random.PRNGKey(1), cfg)
+            (xtr, ytr), (xte, yte) = data
+
+            @jax.jit
+            def step_q(state, x, y, i):
+                state, _, _ = H.head_train_step(
+                    cfg, state, x, y, jnp.float32(2.0), jnp.float32(0.0),
+                    i.astype(jnp.uint32))
+                if sr:
+                    w = P.simulate_format(state.w.astype(jnp.float32),
+                                          e_bits, m_bits, True,
+                                          jax.random.fold_in(
+                                              jax.random.PRNGKey(0), i))
+                else:
+                    w = P.simulate_format(state.w.astype(jnp.float32),
+                                          e_bits, m_bits)
+                return H.HeadState(w.astype(state.w.dtype), state.comp)
+
+            for i in range(steps):
+                lo = (i * 128) % (xtr.shape[0] - 128)
+                state = step_q(state, xtr[lo:lo + 128], ytr[lo:lo + 128],
+                               jnp.int32(i))
+            p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1))
+            rows.append({"name": f"grid/E{e_bits}M{m_bits}"
+                                 f"{'+sr' if sr else ''}",
+                         "p@1": round(p1, 4)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 2b/5: value-range histograms (what fraction fits e4m3/e5m2 range)
+# ---------------------------------------------------------------------------
+
+
+def bench_range_histograms(num_labels=500, d=32, steps=50):
+    data = _make_data(num_labels, d)
+    cfg = H.ELMOHeadConfig(num_labels=num_labels, d_model=d, num_chunks=4,
+                           weight_dtype="bf16", loss="bce", impl="xla")
+    state = H.init_head(jax.random.PRNGKey(1), cfg)
+    (xtr, ytr), _ = data
+    for i in range(steps):
+        lo = (i * 128) % (xtr.shape[0] - 128)
+        state, xg, _ = H.head_train_step(cfg, state, xtr[lo:lo + 128],
+                                         ytr[lo:lo + 128], jnp.float32(2.0),
+                                         jnp.float32(0.0), jnp.uint32(i))
+    w = np.abs(np.asarray(state.w, np.float32).ravel())
+    w = w[w > 0]
+    # grads: recompute one loss-skip grad batch
+    z = H.head_logits(cfg, state, xtr[:64])
+    from repro.core import losses as L
+    y = L.chunk_multi_hot(ytr[:64], jnp.int32(0), cfg.num_labels)
+    g = np.abs(np.asarray(L.bce_logit_grad(z, y, jnp.float32(1 / 64))))
+    g = g[g > 0]
+
+    def in_range(vals, lo_e, hi):
+        return float(((vals >= 2.0 ** lo_e) & (vals <= hi)).mean())
+
+    def flushed(vals, lo_e):      # would round to zero (paper Fig. 2b)
+        return float((vals < 2.0 ** lo_e).mean())
+
+    # paper (131K labels): ~90% of grads flush in E4M3, ~20% in E5M2; the
+    # flush fraction is scale-dependent (grows with label count), so at
+    # this 500-label scale the absolute numbers are smaller — the ORDERING
+    # e4m3 ≫ e5m2 is the reproduced claim
+    return [{
+        "name": "ranges/weights_in_e4m3", "frac": round(in_range(w, -9, 448), 4)},
+        {"name": "ranges/grads_flushed_e4m3", "frac": round(flushed(g, -9), 4)},
+        {"name": "ranges/grads_flushed_e5m2", "frac": round(flushed(g, -16), 4)},
+        {"name": "ranges/grad_p01_log2",
+         "val": round(float(np.log2(np.percentile(g, 1))), 1)},
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Table 10: chunk count vs peak memory (analytic) + measured latency
+# ---------------------------------------------------------------------------
+
+
+def bench_chunk_sweep(num_labels=4096, d=32, steps=30):
+    data = _make_data(num_labels, d)
+    rows = []
+    for k in (1, 2, 4, 8, 16):
+        cfg = H.ELMOHeadConfig(num_labels=num_labels, d_model=d,
+                               num_chunks=k, weight_dtype="bf16",
+                               loss="bce", impl="xla")
+        r = _train_head(cfg, data, steps=steps)
+        analytic = MM.elmo_peak(
+            MM.MemScenario(num_labels=2_812_281, num_chunks=k),
+            "bf16")["total"] / MM.GIB
+        rows.append({"name": f"chunks/k{k}",
+                     "us_per_step": round(r["train_s"] / steps * 1e6),
+                     "amazon3m_peak_gib": round(analytic, 2)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: peak memory vs label count (analytic model, paper-validated)
+# ---------------------------------------------------------------------------
+
+
+def bench_memory_vs_labels():
+    rows = []
+    for r in MM.sweep_labels([131_072, 670_091, 3_000_000, 8_623_847,
+                              18_000_000]):
+        rows.append({"name": f"mem/{r['labels']}",
+                     "renee_gib": round(r["renee_gib"], 2),
+                     "elmo_bf16_gib": round(r["elmo_bf16_gib"], 2),
+                     "elmo_fp8_gib": round(r["elmo_fp8_gib"], 2),
+                     "ratio_fp8": round(r["renee_gib"] / r["elmo_fp8_gib"],
+                                        1)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §5-style stability: Renee overflow rate vs loss scale (why BF16)
+# ---------------------------------------------------------------------------
+
+
+def bench_stability():
+    rows = []
+    for scale_pow in (8, 16, 24):
+        cfg = RB.ReneeConfig(num_labels=4096, d_model=16,
+                             init_loss_scale=2.0 ** scale_pow)
+        state = RB.init_renee(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16)) * 4
+        tg = jax.random.randint(jax.random.PRNGKey(2), (8, 3), 0, 4096)
+        overflows = 0
+        for i in range(10):
+            state, _, m = RB.renee_train_step(cfg, state, x, tg,
+                                              jnp.float32(0.05))
+            overflows += int(m["overflow"])
+        rows.append({"name": f"stability/renee_scale2^{scale_pow}",
+                     "overflow_steps": overflows, "of": 10})
+    return rows

@@ -1,0 +1,373 @@
+"""Roofline model: compute / memory / collective terms per (arch × shape).
+
+Why analytic: XLA's ``cost_analysis()`` visits ``while`` (scan) bodies ONCE
+(verified in tests/test_roofline.py), and this framework deliberately scans
+over layers / label chunks / attention blocks, so compiled counters
+undercount by the trip counts.  ``memory_analysis()`` (buffer assignment) is
+loop-aware and is taken from the dry-run; FLOPs / HBM bytes / collective
+bytes come from the closed-form model below, validated against
+``cost_analysis`` on configs whose loops are trip-1 (inlined by XLA).
+
+The model counts what the implementation ACTUALLY executes, including its
+known inefficiencies (they are the hillclimb targets in EXPERIMENTS.md §Perf):
+
+* causal full attention visits all block pairs → ~2× ideal FLOPs,
+* remat recomputes each period's forward once (+1× fwd),
+* softmax-CE heads run the logits matmul twice (LSE pass + grad pass),
+* MoE routers run replicated over the model axis (EP mode).
+
+Hardware constants (TPU v5e, task spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs import get_config
+from repro.configs.registry import SHAPES, ShapeCell, cell_applicable
+from repro.core.elmo_head import ELMOHeadConfig
+from repro.models.config import BlockSpec, ModelConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+CHIPS = 256                  # single-pod 16×16 (roofline table mesh)
+N_DATA, N_MODEL = 16, 16
+
+# training multipliers: fwd + remat-recompute + bwd(2×)
+MM_TRAIN = 4.0               # plain matmuls
+ATTN_TRAIN = 4.5             # flash bwd ≈ 2.5× fwd (recompute + 4 matmuls)
+
+# attention block sizes (models/attention.py defaults)
+BQ, BK = 512, 1024
+
+
+def _head_cfg(cfg: ModelConfig) -> ELMOHeadConfig:
+    return ELMOHeadConfig(num_labels=cfg.head_size, d_model=cfg.d_model,
+                          num_chunks=cfg.head_chunks,
+                          weight_dtype=cfg.head_weight_dtype,
+                          loss=cfg.head_loss)
+
+
+# ---------------------------------------------------------------------------
+# parameter counts
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ModelConfig) -> dict:
+    D, F, dh = cfg.d_model, cfg.d_ff, cfg.hdim
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    per_period = 0
+    expert = 0
+    for bs in cfg.pattern:
+        if bs.kind in ("attn", "hymba"):
+            per_period += D * H * dh * 2 + D * KH * dh * 2
+        if bs.kind in ("mamba", "hymba"):
+            DI, N, R = cfg.d_inner, cfg.ssm_state, max(1, D // 16)
+            per_period += (D * 2 * DI + 4 * DI + DI * (R + 2 * N)
+                           + R * DI + DI * N + DI + DI * D)
+        if bs.kind == "mlstm":
+            per_period += 5 * D * D + 2 * D * cfg.mlstm_heads
+        if bs.kind == "slstm":
+            per_period += D * 4 * D + 4 * D * (D // cfg.mlstm_heads) + D * D
+        if bs.cross_attn:
+            per_period += D * H * dh * 2 + D * KH * dh * 2
+        if bs.ffn != "none":
+            mult = 3 if bs.ffn in ("swiglu", "geglu") else 2
+            if bs.moe:
+                expert += cfg.n_experts * mult * D * F
+                per_period += D * cfg.n_experts          # router
+                if cfg.moe_dense_residual:
+                    per_period += mult * D * F
+            else:
+                per_period += mult * D * F
+    n_backbone = cfg.n_periods * (per_period + expert)
+    n_expert = cfg.n_periods * expert
+    hc = _head_cfg(cfg)
+    n_head = hc.padded_labels * D
+    n_embed = cfg.vocab * D
+    total = n_backbone + n_head + n_embed
+    active = (total - n_expert
+              + n_expert * cfg.top_k / max(cfg.n_experts, 1))
+    return {"total": total, "active": active, "expert": n_expert,
+            "head": n_head, "embed": n_embed}
+
+
+# ---------------------------------------------------------------------------
+# FLOPs actually executed per step (global)
+# ---------------------------------------------------------------------------
+
+
+def _attn_core_flops(T: int, ctx: int, H: int, dh: int,
+                     window: Optional[int], causal_full_blocks: bool) -> float:
+    """scores + PV for T query tokens against ``ctx`` keys, as implemented."""
+    if window is not None:
+        n_win = min(math.ceil(ctx / BK), math.ceil(window / BK) + 2)
+        visited = min(ctx, n_win * BK)
+    else:
+        visited = ctx                      # all blocks (causal masks inside)
+    return 2.0 * T * visited * H * dh * 2
+
+
+def fwd_flops(cfg: ModelConfig, T: int, S: int, decode: bool = False) -> dict:
+    """Forward FLOPs by component (global, one pass)."""
+    D, F, dh = cfg.d_model, cfg.d_ff, cfg.hdim
+    H, KH = cfg.n_heads, cfg.n_kv_heads
+    proj = attn_core = ffn = moe = ssm = rec = cross = 0.0
+    for bs in cfg.pattern:
+        if bs.kind in ("attn", "hymba"):
+            proj += 2.0 * T * D * (2 * H * dh + 2 * KH * dh)
+            ctx = S if not decode else min(S, cfg.sliding_window or S)
+            attn_core += _attn_core_flops(T, ctx, H, dh,
+                                          cfg.sliding_window, True)
+        if bs.kind in ("mamba", "hymba"):
+            DI, N, R = cfg.d_inner, cfg.ssm_state, max(1, D // 16)
+            ssm += T * (2 * D * 2 * DI + 2 * DI * 4 + 2 * DI * (R + 2 * N)
+                        + 2 * R * DI + 10 * DI * N + 2 * DI * D)
+        if bs.kind == "mlstm":
+            Hm = cfg.mlstm_heads
+            dhm = D // Hm
+            W = 64
+            rec += T * (5 * 2 * D * D          # q,k,v,z,o projections
+                        + 2 * W * D * 2        # intra scores + PV
+                        + 2 * D * dhm * 2 * 2)  # inter read + state update
+        if bs.kind == "slstm":
+            Hm = cfg.mlstm_heads
+            dhm = D // Hm
+            rec += T * (2 * D * 4 * D + 2 * 4 * D * dhm + 2 * D * D)
+        if bs.cross_attn:
+            N_img = cfg.n_frontend_tokens
+            B = max(1, T // max(S, 1))
+            proj += 2.0 * T * D * 2 * H * dh + 2.0 * B * N_img * D * 2 * KH * dh
+            cross += 2.0 * T * N_img * H * dh * 2
+        if bs.ffn != "none":
+            mult = 6 if bs.ffn in ("swiglu", "geglu") else 4
+            if bs.moe:
+                moe += 2.0 * T * D * cfg.n_experts * (
+                    N_MODEL if cfg.n_experts % N_MODEL == 0 else 1)  # router ×EP
+                slots = T * cfg.top_k * cfg.capacity_factor
+                moe += mult * slots * D * F
+                if cfg.moe_dense_residual:
+                    ffn += mult * T * D * F
+            else:
+                ffn += mult * T * D * F
+    out = {k: v * cfg.n_periods for k, v in
+           dict(proj=proj, attn_core=attn_core, ffn=ffn, moe=moe, ssm=ssm,
+                rec=rec, cross=cross).items()}
+    return out
+
+
+def head_flops(cfg: ModelConfig, T_head: int, kind: str) -> float:
+    hc = _head_cfg(cfg)
+    L = hc.padded_labels
+    D = cfg.d_model
+    if kind == "train":
+        passes = 4 if hc.loss == "softmax_ce" else 3
+        return passes * 2.0 * T_head * D * L
+    return 2.0 * T_head * D * L    # serve: logits once
+
+
+def step_flops(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    decode = shape.kind == "decode"
+    T = shape.batch if decode else shape.batch * shape.seq
+    # XMC encoders pool to one vector per example before the head
+    T_head = shape.batch if cfg.pool == "first" else T
+    f = fwd_flops(cfg, T, shape.seq, decode)
+    attn = f.pop("attn_core")
+    fwd_total = sum(f.values()) + attn
+    kind = "train" if shape.kind == "train" else "serve"
+    hf = head_flops(cfg, T_head, kind)
+    if shape.kind == "train":
+        total = sum(f.values()) * MM_TRAIN + attn * ATTN_TRAIN + hf
+    else:
+        total = fwd_total + hf
+    return {"fwd": fwd_total, "total": total, "head": hf,
+            "attn_core_fwd": attn}
+
+
+# ---------------------------------------------------------------------------
+# HBM bytes per step (global)
+# ---------------------------------------------------------------------------
+
+
+def step_hbm_bytes(cfg: ModelConfig, shape: ShapeCell) -> float:
+    pc = param_counts(cfg)
+    D = cfg.d_model
+    decode = shape.kind == "decode"
+    T = shape.batch if decode else shape.batch * shape.seq
+    hc = _head_cfg(cfg)
+    wb = {"bf16": 2, "e4m3": 1, "f32": 4}[cfg.head_weight_dtype]
+    backbone_bytes = (pc["total"] - pc["head"]) * 2          # bf16
+    head_bytes = pc["head"] * wb
+
+    if shape.kind == "train":
+        # weights: fwd + remat + bwd reads; update read+write; opt r/w
+        w_traffic = backbone_bytes * 3 + backbone_bytes * 2 \
+            + (pc["total"] - pc["head"] - pc["expert"]) * 6 * 2
+        head_passes = 4 if hc.loss == "softmax_ce" else 3
+        head_traffic = head_bytes * head_passes + head_bytes * 2
+        # activations: boundary saves w+r, per-chunk logits w+r, x̄ f32
+        acts = cfg.n_periods * T * D * 2 * 2
+        t_head = shape.batch if cfg.pool == "first" else T
+        logits = head_passes * t_head * hc.chunk * 2 * 2
+        xg = T * D * 4 * 2
+        return w_traffic + head_traffic + acts + logits + xg
+    # serving: weights once + cache traffic + chunked logits
+    cache = 0.0
+    if shape.kind == "decode":
+        ctx = min(shape.seq, cfg.sliding_window or shape.seq)
+        kv_layers = sum(1 for b in cfg.pattern if b.kind in ("attn", "hymba"))
+        cache = shape.batch * ctx * cfg.n_kv_heads * cfg.hdim * 2 * 2 \
+            * kv_layers * cfg.n_periods
+    logits = T * hc.padded_labels * 2
+    return backbone_bytes + head_bytes + cache + logits
+
+
+# ---------------------------------------------------------------------------
+# collective bytes per device per step
+# ---------------------------------------------------------------------------
+
+
+def step_collective_bytes(cfg: ModelConfig, shape: ShapeCell,
+                          multi_pod: bool = False) -> dict:
+    pc = param_counts(cfg)
+    D = cfg.d_model
+    decode = shape.kind == "decode"
+    T = shape.batch if decode else shape.batch * shape.seq
+    hc = _head_cfg(cfg)
+    nm = N_MODEL
+    ring = 2 * (nm - 1) / nm
+    out = {}
+    backbone_bytes = (pc["total"] - pc["head"]) * 2
+    n_micro = max(1, cfg.grad_accum) if shape.kind == "train" else 1
+
+    if cfg.sharding_strategy == "fsdp_pure":
+        # batch over (data×model); params FSDP over 256; no TP/SP
+        T_local = T / (N_DATA * nm * (2 if multi_pod else 1))
+        if shape.kind == "train":
+            # each device RECEIVES ~full params per pass; passes = 3
+            # (fwd + remat + bwd) × microbatches; grads reduce-scatter once
+            out["fsdp_allgather"] = 3 * n_micro * backbone_bytes
+            out["grad_reduce_scatter"] = backbone_bytes
+            # head W chunks gathered over model per pass (weights, small)
+            wb = {"bf16": 2, "e4m3": 1, "f32": 4}[cfg.head_weight_dtype]
+            passes = 4 if hc.loss == "softmax_ce" else 3
+            out["head_w_gather"] = passes * n_micro * pc["head"] * wb
+            if hc.loss == "softmax_ce":
+                out["head_lse_psum"] = 2 * hc.num_chunks * ring * T_local * 8
+            if multi_pod:
+                out["crosspod_grad_allreduce"] = \
+                    2 * 0.5 * backbone_bytes / (nm * N_DATA)
+        else:
+            out["serve_w_gather"] = backbone_bytes
+        out["total"] = sum(out.values())
+        return out
+
+    T_local = T / max(N_DATA * (2 if multi_pod else 1), 1)
+    T_micro = T_local / n_micro
+    if shape.kind == "train":
+        # FSDP param all-gathers (fwd + remat + bwd per microbatch) + grad RS
+        shard = backbone_bytes / (nm * N_DATA)
+        out["fsdp_allgather"] = 3 * n_micro * shard * (N_DATA - 1)
+        out["grad_reduce_scatter"] = shard * (N_DATA - 1)
+        # SP boundary all-gather/reduce-scatter per period (fwd+remat+2bwd)
+        sp = (T_micro * D * 2 / nm) * (nm - 1) * 2 * cfg.n_periods * 4 \
+            * n_micro
+        out["seq_parallel"] = sp
+        # head x̄ all-reduce over model per chunk (bf16 accumulator)
+        out["head_xgrad_allreduce"] = \
+            n_micro * hc.num_chunks * ring * T_micro * D * 2
+        if hc.loss == "softmax_ce":
+            out["head_lse_psum"] = \
+                n_micro * 2 * hc.num_chunks * ring * T_micro * 8
+        # MoE combine psum per layer (bf16; fwd+bwd+remat ≈ 4 passes)
+        if any(b.moe for b in cfg.pattern):
+            out["moe_psum"] = ring * T_micro * D * 2 * cfg.n_periods * 4 \
+                * n_micro
+        if multi_pod:
+            out["crosspod_grad_allreduce"] = \
+                2 * 0.5 * backbone_bytes / (nm * N_DATA)  # e5m2 compressed
+    else:
+        # TP all-reduces through the stack (attn out + ffn out per layer)
+        out["tp_allreduce"] = ring * T_local * D * 2 * 2 * cfg.n_periods
+        out["head_logits"] = ring * T_local * 8  # top-k combine, tiny
+    out["total"] = sum(out.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    note: str = ""
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_cell(arch: str, shape_name: str, chips: int = CHIPS,
+                 multi_pod: bool = False) -> Optional[Roofline]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if cell_applicable(cfg, shape):
+        return None
+    fl = step_flops(cfg, shape)
+    hbm = step_hbm_bytes(cfg, shape)
+    coll = step_collective_bytes(cfg, shape, multi_pod)
+
+    compute_s = fl["total"] / (chips * PEAK_FLOPS)
+    memory_s = hbm / (chips * HBM_BW)
+    collective_s = coll["total"] / ICI_BW       # already per device
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+
+    pc = param_counts(cfg)
+    decode = shape.kind == "decode"
+    T = shape.batch if decode else shape.batch * shape.seq
+    # 6·N_active·D, with the head counted at its own token count (XMC heads
+    # see one pooled vector per example, not per token)
+    T_head = shape.batch if cfg.pool == "first" else T
+    n_body = pc["active"] - pc["head"]
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * (n_body * T + pc["head"] * T_head)
+    notes = {
+        "compute": "raise MFU: cut causal block waste / fuse head passes",
+        "memory": "cut HBM traffic: larger chunks, fp8 weights, fewer passes",
+        "collective": "cut collectives: defer head x̄ reduce, a2a MoE dispatch",
+    }
+    return Roofline(arch=arch, shape=shape_name,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=collective_s, dominant=dominant,
+                    model_flops=model_flops, hlo_flops=fl["total"],
+                    useful_ratio=model_flops / max(fl["total"], 1.0),
+                    note=notes[dominant])
+
+
+def full_table(multi_pod: bool = False):
+    rows = []
+    from repro.configs.registry import ARCHS
+    for arch in ARCHS:
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, multi_pod=multi_pod)
+            if r is not None:
+                rows.append(r.row())
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(full_table(), indent=1))

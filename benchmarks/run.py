@@ -1,0 +1,108 @@
+"""Benchmark driver — one section per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only mem # one section
+
+Prints ``name,us_per_call,derived...`` CSV rows per section.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(rows):
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", r.pop("us_per_step", ""))
+        derived = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{us},{derived}", flush=True)
+
+
+SECTIONS = {}
+
+
+def section(name):
+    def deco(fn):
+        SECTIONS[name] = fn
+        return fn
+    return deco
+
+
+@section("parity")      # paper Table 2/3
+def _parity():
+    from benchmarks.paper_tables import bench_convergence_parity
+    _emit(bench_convergence_parity())
+
+
+@section("grid")        # paper Fig. 2a
+def _grid():
+    from benchmarks.paper_tables import bench_precision_grid
+    _emit(bench_precision_grid())
+
+
+@section("ranges")      # paper Fig. 2b / 5
+def _ranges():
+    from benchmarks.paper_tables import bench_range_histograms
+    _emit(bench_range_histograms())
+
+
+@section("chunks")      # paper Table 10
+def _chunks():
+    from benchmarks.paper_tables import bench_chunk_sweep
+    _emit(bench_chunk_sweep())
+
+
+@section("mem")         # paper Fig. 4 + §4.4
+def _mem():
+    from benchmarks.paper_tables import bench_memory_vs_labels
+    _emit(bench_memory_vs_labels())
+
+
+@section("stability")   # paper §5 Renee instability
+def _stability():
+    from benchmarks.paper_tables import bench_stability
+    _emit(bench_stability())
+
+
+@section("kernels")
+def _kernels():
+    from benchmarks.kernel_bench import bench_fp8_logits, bench_fused_update
+    _emit(bench_fused_update())
+    _emit(bench_fp8_logits())
+
+
+@section("roofline")    # §Roofline table (analytic; dry-run mem separate)
+def _roofline():
+    from benchmarks.roofline import full_table
+    rows = []
+    for r in full_table():
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "useful_ratio": round(r["useful_ratio"], 3),
+        })
+    _emit(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(SECTIONS), default=None)
+    args = ap.parse_args()
+    todo = [args.only] if args.only else list(SECTIONS)
+    t0 = time.time()
+    for name in todo:
+        print(f"# === {name} ===", flush=True)
+        try:
+            SECTIONS[name]()
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    print(f"# done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

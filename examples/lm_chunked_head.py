@@ -1,0 +1,38 @@
+"""ELMO for LLM training: the chunked low-precision head on an LM vocab.
+
+    PYTHONPATH=src python examples/lm_chunked_head.py
+
+Trains a reduced smollm-360m for a few hundred steps with the softmax-CE
+streaming-LSE head (DESIGN.md §3) — the paper's XMC technique transplanted
+to a language-model vocabulary — and shows the loss decreasing, plus a
+comparison of the head's memory against a naive full-logit head.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core.memory_model import GIB
+from repro.launch.train import train
+
+
+def main():
+    cfg = get_smoke("smollm-360m", vocab=2048, head_chunks=4,
+                    head_weight_dtype="e4m3")
+    B, S = 8, 32
+    naive_logits = B * S * cfg.vocab * 4
+    chunked = B * S * (cfg.vocab // cfg.head_chunks) * 2
+    print(f"full-logit buffer {naive_logits/2**20:.1f} MiB → "
+          f"chunked {chunked/2**20:.1f} MiB "
+          f"({naive_logits/chunked:.0f}× smaller)")
+    _, losses = train(cfg, steps=200, global_batch=B, seq=S, ckpt_dir="",
+                      head_lr=0.3, backbone_lr=2e-3, impl="xla",
+                      log_every=25)
+    # synthetic tokens are uniform: the achievable floor is ln(vocab)=7.62
+    import math
+    assert losses[-1] < math.log(cfg.vocab) + 0.15, losses[-1]
+    assert losses[-1] < losses[0] - 0.3
+    print(f"loss {losses[0]:.3f} → {losses[-1]:.3f}  lm_chunked_head OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: train a tiny XMC model end-to-end with the ELMO recipe.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the paper's full pipeline at laptop scale: a small bidirectional
+encoder + an FP8-E4M3 chunked classifier head trained with loss-skipping,
+fused stochastic-rounding SGD (no momentum, no master weights), and
+Kahan-AdamW for the encoder — then reports Precision@k.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import elmo_head as EH
+from repro.data import DataCursor, xmc_batches
+from repro.launch import steps as St
+from repro.optim import kahan_adamw
+
+
+def main():
+    cfg = get_smoke("xmc-bert-3m", head_labels=5000, vocab=1000,
+                    head_chunks=4)
+    print(f"arch: {cfg.name}  labels={cfg.head_labels} "
+          f"head={cfg.head_weight_dtype} chunks={cfg.head_chunks}")
+    opt = kahan_adamw()
+    state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, impl="xla")
+
+    batches = xmc_batches(cfg.vocab, cfg.head_labels, global_batch=32,
+                          seq=16, max_pos=5, cursor=DataCursor(0, 0))
+    step = jax.jit(lambda s, t, y: St.train_step(
+        cfg, opt, s, {"tokens": t, "targets": y},
+        head_lr=jnp.float32(0.2), backbone_lr=jnp.float32(1e-3), impl="xla"))
+
+    for i, b in zip(range(60), batches):
+        state, m = step(state, jnp.asarray(b["tokens"]),
+                        jnp.asarray(b["targets"]))
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}")
+
+    # evaluate P@1 on fresh data through the chunked streaming top-k
+    b = next(batches)
+    from repro.models import transformer as T
+    hidden = T.backbone_apply(state.backbone, cfg,
+                              jnp.asarray(b["tokens"]))
+    hcfg = St.make_head_cfg(cfg, impl="xla")
+    p1 = EH.precision_at_k(hcfg, state.head, hidden[:, 0, :],
+                           jnp.asarray(b["targets"]), k=1)
+    print(f"P@1 (synthetic): {float(p1):.3f}")
+    print("quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Mesh-independent sharded checkpointing with async writes and elastic
+restore."""
+from repro.checkpoint.ckpt import (CheckpointManager, restore_checkpoint,
+                                   save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,6 @@
+"""Architecture registry: the 10 assigned configs + the paper's own XMC
+models.  ``get_config(name)`` returns the full published config;
+``get_smoke(name)`` a reduced same-family config for CPU smoke tests."""
+from repro.configs.registry import ARCHS, get_config, get_smoke
+
+__all__ = ["ARCHS", "get_config", "get_smoke"]

@@ -1,0 +1,14 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual branch
+[hf:Snowflake/snowflake-arctic-base; hf].  35L d=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000.  ~477B params; the ELMO treatment is extended to the
+expert weights at this scale (DESIGN.md §3, beyond-paper)."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, d_ff=4864,
+    vocab=32000,
+    pattern=(BlockSpec(kind="attn", moe=True, ffn="swiglu"),),
+    n_experts=128, top_k=2, moe_dense_residual=True,
+    grad_accum=8,   # 469B params: divide token-side transients 8×
+)

@@ -1,0 +1,18 @@
+"""gemma-7b [dense] — GeGLU, head_dim=256, MHA (kv=16)
+[arXiv:2403.08295; hf].  28L d=3072 16H d_ff=24576 vocab=256000.
+The 256K-vocab head (786M params; 512GB of unchunked train_4k logits) is
+the flagship ELMO cell (DESIGN.md §3).  Full attention → long_500k skipped.
+Input/output embeddings untied (deviation: ELMO head is separately
+optimized; noted in EXPERIMENTS.md)."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16, d_ff=24576,
+    vocab=256_000, head_dim=256,
+    pattern=(BlockSpec(kind="attn", ffn="geglu"),),
+    head_chunks=16,
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

@@ -1,0 +1,17 @@
+"""hymba-1.5b [hybrid] — parallel attention+mamba heads per layer
+[arXiv:2411.13676; hf].  32L d=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16.  Sliding-window attention (global-attn layers simplified to
+SWA; DESIGN.md §3) + O(1) SSM state → runs long_500k."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, d_ff=5504,
+    vocab=32001, head_dim=64,
+    pattern=(BlockSpec(kind="hymba", ffn="swiglu"),),
+    sliding_window=2048, ssm_state=16, ssm_expand=2,
+    subquadratic=True,
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

@@ -1,0 +1,21 @@
+"""llama-3.2-vision-11b [vlm] — gated cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].  40L d=4096 32H (GQA kv=8)
+d_ff=14336 vocab=128256.  Vision tower is a STUB: precomputed patch
+embeddings (1600 × 1280) enter via gated cross-attn every 5th layer.
+Full attention → long_500k skipped."""
+from repro.models.config import BlockSpec, ModelConfig
+
+_PERIOD = tuple([BlockSpec(kind="attn", ffn="swiglu")] * 4
+                + [BlockSpec(kind="attn", cross_attn=True, ffn="swiglu")])
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=128_256,
+    pattern=_PERIOD,
+    frontend="vision", n_frontend_tokens=1600,
+    grad_accum=2,
+    # fsdp_pure REFUTED for this arch (EXPERIMENTS.md §Perf): the vision
+    # cross-attn context replicates under batch-over-512 (41.6 GiB/dev vs
+    # 12.2 under tp_sp) — stays on the tp_sp baseline
+)

@@ -1,0 +1,14 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention
+[arXiv:2401.04088; hf].  32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+SWA bounds the decode KV state → runs long_500k (DESIGN.md §3)."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=32000,
+    pattern=(BlockSpec(kind="attn", moe=True, ffn="swiglu"),),
+    n_experts=8, top_k=2, sliding_window=4096,
+    grad_accum=4,
+    subquadratic=True,
+)

@@ -1,0 +1,19 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf].  48L d=2048 32H (MHA kv=32) d_ff=8192 vocab=2048.
+EnCodec frontend is a STUB: the model consumes precomputed frame embeddings
+(input_specs supplies them).  Head is tiny (2048) → ELMO applicable but not
+profitable; head_chunks=1 (DESIGN.md §3).  Full attention → long_500k
+skipped."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=2048, head_dim=64,
+    pattern=(BlockSpec(kind="attn", ffn="gelu"),),
+    frontend="audio_frames",
+    head_chunks=1, head_weight_dtype="bf16",
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

@@ -1,0 +1,14 @@
+"""phi3-medium-14b [dense] — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+40L d=5120 40H (GQA kv=10) d_ff=17920 vocab=100352.  Pure full attention →
+long_500k skipped (DESIGN.md §3)."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10, d_ff=17920,
+    vocab=100352,
+    pattern=(BlockSpec(kind="attn", ffn="swiglu"),),
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

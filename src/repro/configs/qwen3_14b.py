@@ -1,0 +1,14 @@
+"""qwen3-14b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B; hf].
+40L d=5120 40H (GQA kv=8) d_ff=17408 vocab=151936.  Pure full attention →
+long_500k skipped."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=17408,
+    vocab=151936, head_dim=128, qk_norm=True,
+    pattern=(BlockSpec(kind="attn", ffn="swiglu"),),
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

@@ -1,0 +1,121 @@
+"""Registry + input-shape definitions for every (arch × shape) cell.
+
+The four LM shape regimes (task spec):
+    train_4k     seq 4,096   global_batch 256   → train_step
+    prefill_32k  seq 32,768  global_batch 32    → prefill (serve)
+    decode_32k   seq 32,768  global_batch 128   → serve_step (1 new token,
+                                                  KV/SSM state at seq_len)
+    long_500k    seq 524,288 global_batch 1     → serve_step; ONLY for
+                 subquadratic archs (DESIGN.md §3 skip rule)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input of a cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontends as Fe
+from repro.models.config import ModelConfig, reduced
+
+ARCHS = {
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    # paper's own
+    "xmc-bert-3m": "repro.configs.xmc_bert_3m",
+    "xmc-distilbert-8.6m": "repro.configs.xmc_distilbert_8_6m",
+}
+
+ASSIGNED = [k for k in ARCHS if not k.startswith("xmc-")]
+
+
+def get_config(name: str) -> ModelConfig:
+    return importlib.import_module(ARCHS[name]).CONFIG
+
+
+def get_smoke(name: str, **overrides) -> ModelConfig:
+    return reduced(get_config(name), **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+    # the paper's own regime (BERT-base, seq 128, batch 128 — Table 9)
+    "xmc_train": ShapeCell("xmc_train", "train", 128, 128),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: long_500k needs sub-quadratic "
+                "attention (DESIGN.md §3 skip rule)")
+    if shape.name == "xmc_train" and cfg.head_labels is None:
+        return "xmc_train shape only applies to the paper's own XMC archs"
+    if shape.name != "xmc_train" and cfg.head_labels is not None:
+        return "XMC encoders use the xmc_train shape (paper Table 9 regime)"
+    if shape.kind in ("prefill", "decode") and not cfg.causal:
+        return "encoder-only arch has no decode step (task spec)"
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for one cell's step function inputs."""
+    B, S = shape.batch, shape.seq
+    f = jnp.bfloat16
+    specs: dict = {}
+    if shape.kind == "train":
+        if cfg.frontend == "audio_frames":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, Fe.D_FRONTEND["audio_frames"]), f)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend == "vision":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, Fe.D_FRONTEND["vision"]), f)
+        if cfg.head_labels:
+            specs["targets"] = jax.ShapeDtypeStruct(
+                (B, cfg.max_labels_per_example), jnp.int32)
+        else:
+            specs["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend == "audio_frames":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, Fe.D_FRONTEND["audio_frames"]), f)
+        if cfg.frontend == "vision":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, Fe.D_FRONTEND["vision"]), f)
+    else:  # decode: one new token against a seq-length cache
+        specs["token"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        if cfg.frontend == "audio_frames":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, 1, Fe.D_FRONTEND["audio_frames"]), f)
+        if cfg.frontend == "vision":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, Fe.D_FRONTEND["vision"]), f)
+    return specs

@@ -1,0 +1,15 @@
+"""smollm-360m [dense] — llama-architecture small model
+[hf:HuggingFaceTB/SmolLM-135M; hf].  32L d=960 15H (GQA kv=5) d_ff=2560
+vocab=49152.  The head is 47M/360M params — the closest small-scale
+analogue of the paper's XMC regime."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab=49152, head_dim=64,
+    pattern=(BlockSpec(kind="attn", ffn="swiglu"),),
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

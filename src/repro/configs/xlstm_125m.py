@@ -1,0 +1,20 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+12L d=768 4 heads, no separate FFN (d_ff=0; xLSTM blocks carry their own
+projections), vocab=50304.  Pattern: 5×mLSTM + 1×sLSTM per period (the
+paper's ~7:1 placement rounded to the 12-layer budget).  Attention-free,
+O(1) decode state → runs long_500k."""
+from repro.models.config import BlockSpec, ModelConfig
+
+_PERIOD = tuple([BlockSpec(kind="mlstm", ffn="none")] * 5
+                + [BlockSpec(kind="slstm", ffn="none")])
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50304, mlstm_heads=4,
+    pattern=_PERIOD,
+    subquadratic=True,
+    # §Perf-derived default (EXPERIMENTS.md): fsdp_pure makes this arch
+    # compute-bound on v5e; tp_sp baseline numbers retained in §Perf
+    sharding_strategy="fsdp_pure",
+)

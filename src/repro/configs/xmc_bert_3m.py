@@ -1,0 +1,15 @@
+"""xmc-bert-3m — the paper's own Amazon-3M setting (Table 2): BERT-base-like
+bidirectional encoder (12L d=768, seq 128) + 2,812,281-label BCE ELMO head,
+FP8 E4M3 weights, 8 chunks, momentum-free SR-SGD."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xmc-bert-3m",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab=30522,
+    pattern=(BlockSpec(kind="attn", ffn="gelu"),),
+    causal=False, pool="first",
+    head_labels=2_812_281, head_chunks=8, head_weight_dtype="e4m3",
+    head_kahan_chunks=2,   # App. D: Kahan for the top ~25% (head) labels
+    max_labels_per_example=40,
+)

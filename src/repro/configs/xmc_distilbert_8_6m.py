@@ -1,0 +1,13 @@
+"""xmc-distilbert-8.6m — the paper's LF-Paper2Keywords-8.6M setting
+(Table 3): DistilBERT-like 6L encoder + 8,623,847-label BCE ELMO head."""
+from repro.models.config import BlockSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="xmc-distilbert-8.6m",
+    n_layers=6, d_model=768, n_heads=12, n_kv_heads=12, d_ff=3072,
+    vocab=30522,
+    pattern=(BlockSpec(kind="attn", ffn="gelu"),),
+    causal=False, pool="first",
+    head_labels=8_623_847, head_chunks=16, head_weight_dtype="e4m3",
+    max_labels_per_example=16,
+)

@@ -1,0 +1,333 @@
+"""ELMO head: the paper's chunked, low-precision large output layer.
+
+This module is the paper's primary contribution as a composable JAX unit.
+One ``head_train_step`` performs, for each label chunk (paper §4.2–4.3):
+
+    1. forward    z_c = q8(X) @ W_cᵀ            (FP8-storage matmul)
+    2. loss-skip  ḡ_c = σ(z_c) − Y_c   |  softmax(z_c) − onehot      (App. B)
+    3. input grad X̄  += ḡ_c @ W_c
+    4. fused upd  W_c ← SR((1 − lr·wd) W_c − lr ḡ_cᵀ X)   (grad never in HBM)
+
+as a ``lax.scan`` over chunks, so transient memory is 1/k of the full logits
+(paper §4.2, Table 10) and the weight/optimizer memory is W itself — SGD
+without momentum (§4.2), stochastic rounding instead of master weights
+(§4.1/4.3).  The softmax-CE variant (for LM heads, DESIGN.md §3) adds a
+streaming-LSE pre-pass.  Head-label chunks can use Kahan compensation
+instead of SR (paper App. D).
+
+The head never enters autodiff: the caller runs the backbone under
+``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces the
+paper's reordered computation flow (encoder fwd → head fwd/bwd/update →
+encoder bwd) and its peak-memory profile by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as L
+from repro.core import precision as P
+from repro.kernels import ops
+from repro.kernels import prng_utils as PR
+
+_WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "f32": P.F32}
+
+
+@dataclasses.dataclass(frozen=True)
+class ELMOHeadConfig:
+    num_labels: int
+    d_model: int
+    num_chunks: int = 8
+    weight_dtype: str = "bf16"         # "bf16" | "e4m3" | "f32" (baseline)
+    loss: str = "bce"                  # "bce" (XMC) | "softmax_ce" (LM)
+    use_sr: bool = True                # stochastic rounding in the update
+    kahan_chunks: int = 0              # leading chunks w/ Kahan comp (App. D)
+    drop_rate: float = 0.0             # in-kernel DropConnect (App. H)
+    quantize_x: Optional[bool] = None  # default: True iff weight is e4m3
+    compute_loss: bool = True          # loss value is optional (loss-skip)
+    impl: str = "auto"                 # kernels: auto|kernel|interpret|xla
+
+    @property
+    def wdtype(self):
+        return _WEIGHT_DTYPES[self.weight_dtype]
+
+    @property
+    def qx(self) -> bool:
+        return self.weight_dtype == "e4m3" if self.quantize_x is None \
+            else self.quantize_x
+
+    # label rows per chunk are padded to a multiple of _CHUNK_ALIGN so the
+    # chunk dimension stays divisible by the mesh's model axis (vocab-
+    # parallel sharding) and by MXU tile sizes
+    _CHUNK_ALIGN = 256
+
+    @property
+    def chunk(self) -> int:
+        c = self.num_chunks
+        per = (self.num_labels + c - 1) // c
+        if self.num_labels >= self._CHUNK_ALIGN:
+            per = ((per + self._CHUNK_ALIGN - 1) // self._CHUNK_ALIGN
+                   ) * self._CHUNK_ALIGN
+        return per
+
+    @property
+    def padded_labels(self) -> int:
+        return self.chunk * self.num_chunks
+
+    def __post_init__(self):
+        assert 0 <= self.kahan_chunks <= self.num_chunks
+        assert self.loss in ("bce", "softmax_ce")
+
+
+class HeadState(NamedTuple):
+    """w: (C, Lc, D) in storage dtype; comp: (Ck, Lc, D) BF16 (App. D)."""
+    w: jax.Array
+    comp: Optional[jax.Array]
+
+
+def init_head(key: jax.Array, cfg: ELMOHeadConfig, scale: float | None = None
+              ) -> HeadState:
+    scale = scale if scale is not None else 1.0 / np.sqrt(cfg.d_model)
+    w = (jax.random.normal(key, (cfg.num_chunks, cfg.chunk, cfg.d_model),
+                           jnp.float32) * scale).astype(cfg.wdtype)
+    comp = (jnp.zeros((cfg.kahan_chunks, cfg.chunk, cfg.d_model), P.BF16)
+            if cfg.kahan_chunks else None)
+    return HeadState(w, comp)
+
+
+def _valid_cols(cfg: ELMOHeadConfig, cidx: jax.Array) -> jax.Array:
+    """(chunk,) bool — masks padded label columns in the final chunk."""
+    c0 = cidx * cfg.chunk
+    return (c0 + jnp.arange(cfg.chunk)) < cfg.num_labels
+
+
+def _chunk_logits(cfg: ELMOHeadConfig, wc: jax.Array, x: jax.Array,
+                  seed: jax.Array) -> jax.Array:
+    return ops.fp8_logits(x, wc, seed, drop_rate=cfg.drop_rate,
+                          quantize_x=cfg.qx, impl=cfg.impl)
+
+
+def _chunk_seed(seed: jax.Array, cidx: jax.Array, salt: int) -> jax.Array:
+    return PR.mix32(seed.astype(jnp.uint32)
+                    + cidx.astype(jnp.uint32) * np.uint32(2654435761)
+                    + np.uint32(salt))
+
+
+# ---------------------------------------------------------------------------
+# training step
+# ---------------------------------------------------------------------------
+
+
+def _chunk_grad(cfg: ELMOHeadConfig, z: jax.Array, targets: jax.Array,
+                cidx: jax.Array, lse: Optional[jax.Array],
+                scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Loss-skip logit gradient + optional loss contribution for one chunk."""
+    c0 = cidx * cfg.chunk
+    valid = _valid_cols(cfg, cidx)[None, :]
+    if cfg.loss == "bce":
+        y = L.chunk_multi_hot(targets, c0, cfg.chunk)
+        g = L.bce_logit_grad(z, y, scale) * valid
+        loss_c = (L.bce_chunk_loss(z, y, mask=valid)
+                  if cfg.compute_loss else jnp.float32(0.0))
+    else:
+        onehot = L.chunk_one_hot(targets, c0, cfg.chunk)
+        tok_mask = (targets >= 0).astype(jnp.float32)[:, None]
+        g = L.ce_logit_grad(z, lse, onehot, scale) * valid * tok_mask
+        # CE loss needs the target logit; folded in by the caller via lse
+        loss_c = (L.ce_target_logit_chunk(z, targets, c0, cfg.chunk).sum()
+                  if cfg.compute_loss else jnp.float32(0.0))
+    return g.astype(jnp.bfloat16), loss_c
+
+
+def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
+    valid = _valid_cols(cfg, cidx)[None, :]
+    return jnp.where(valid, z.astype(jnp.float32), L.NEG_INF)
+
+
+def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                    targets: jax.Array, lr: jax.Array, wd: jax.Array,
+                    seed: jax.Array
+                    ) -> Tuple[HeadState, jax.Array, dict]:
+    """One fused forward/backward/update pass over all label chunks.
+
+    x: (B, D) bf16 backbone outputs (tokens flattened).
+    targets: (B, P) int32 multi-label ids (bce) or (B,) int32 ids (ce).
+    Returns (new_state, x_grad (B, D) bf16, metrics).
+    """
+    B = x.shape[0]
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+
+    if cfg.loss == "bce":
+        scale = jnp.float32(1.0 / B)
+        lse = None
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+
+        # ----- pass 1: streaming LSE over chunks (paper §4.2 chunking + CE)
+        def lse_body(carry, inp):
+            wc, cidx = inp
+            m, s = carry
+            z = _masked_z(cfg, _chunk_logits(cfg, wc, x,
+                                             _chunk_seed(seed, cidx, 0)), cidx)
+            return L.lse_update(m, s, z), None
+
+        (m, s), _ = jax.lax.scan(
+            lse_body, L.lse_init(B),
+            (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        lse = L.lse_finalize(m, s)
+
+    # ----- pass 2: per-chunk grad + fused update + x̄ accumulation
+    def chunk_step(xg, loss_acc, wc, comp_c, cidx):
+        sd = _chunk_seed(seed, cidx, 0)
+        z = _chunk_logits(cfg, wc, x, sd)
+        g, loss_c = _chunk_grad(cfg, z, targets, cidx, lse, scale)
+        # x̄ accumulates in BF16 (paper §4.1: gradients stay BF16) — halves
+        # the accumulator and its cross-model all-reduce
+        xg = xg + ops.fp8_input_grad(g, wc, impl=cfg.impl)
+        upd_seed = _chunk_seed(seed, cidx, 1)
+        if comp_c is None:
+            wc_new = ops.fused_head_update(g, x, wc, lr, wd, upd_seed,
+                                           use_sr=cfg.use_sr, impl=cfg.impl)
+            return xg, loss_acc + loss_c, wc_new, None
+        wc_new, comp_new = ops.fused_head_update_kahan(
+            g, x, wc, comp_c, lr, wd, upd_seed, impl=cfg.impl)
+        return xg, loss_acc + loss_c, wc_new, comp_new
+
+    xg0 = jnp.zeros((B, cfg.d_model), jnp.bfloat16)
+    loss0 = jnp.float32(0.0)
+    ck = cfg.kahan_chunks
+
+    def kahan_body(carry, inp):
+        xg, loss = carry
+        wc, comp_c, cidx = inp
+        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx)
+        return (xg, loss), (wc_new, comp_new)
+
+    def sr_body(carry, inp):
+        xg, loss = carry
+        wc, cidx = inp
+        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx)
+        return (xg, loss), wc_new
+
+    carry = (xg0, loss0)
+    if ck:
+        carry, (w_k, comp_new) = jax.lax.scan(
+            kahan_body, carry,
+            (state.w[:ck], state.comp, jnp.arange(ck, dtype=jnp.int32)))
+    else:
+        w_k, comp_new = state.w[:0], state.comp
+
+    if ck < cfg.num_chunks:
+        carry, w_s = jax.lax.scan(
+            sr_body, carry,
+            (state.w[ck:], jnp.arange(ck, cfg.num_chunks, dtype=jnp.int32)))
+    else:
+        w_s = state.w[:0]
+
+    (xg, loss_raw) = carry
+    w_new = jnp.concatenate([w_k, w_s], axis=0) if ck else w_s
+
+    if cfg.loss == "bce":
+        loss = loss_raw / B
+    else:
+        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
+        tok_mask = (targets >= 0)
+        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
+            if cfg.compute_loss else loss_raw
+
+    metrics = {"loss": loss,
+               "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
+    return HeadState(w_new, comp_new), xg, metrics
+
+
+# ---------------------------------------------------------------------------
+# inference
+# ---------------------------------------------------------------------------
+
+
+def head_logits(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array
+                ) -> jax.Array:
+    """Full (B, L) logits — O(B·L) memory; eval/serve at modest B only."""
+    x = x.astype(jnp.bfloat16)
+
+    def body(_, inp):
+        wc, cidx = inp
+        z = _chunk_logits(cfg, wc, x, jnp.uint32(0))  # no dropout at eval
+        return None, z
+
+    _, zs = jax.lax.scan(
+        body, None, (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+    z = jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
+    return z[:, :cfg.num_labels]
+
+
+def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over chunks — never materializes full logits."""
+    x = x.astype(jnp.bfloat16)
+    B = x.shape[0]
+
+    def body(carry, inp):
+        vals, idx = carry
+        wc, cidx = inp
+        z = _masked_z(cfg, _chunk_logits(cfg, wc, x, jnp.uint32(0)), cidx)
+        cand = jnp.concatenate([vals, z], axis=1)
+        cand_idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(cidx * cfg.chunk + jnp.arange(cfg.chunk),
+                                   (B, cfg.chunk))], axis=1)
+        v, local = jax.lax.top_k(cand, k)
+        return (v, jnp.take_along_axis(cand_idx, local, axis=1)), None
+
+    init = (jnp.full((B, k), L.NEG_INF, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(
+        body, init, (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+    return vals, idx
+
+
+def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                   label_ids: jax.Array, k: int) -> jax.Array:
+    """P@k for multi-label targets (paper's headline metric)."""
+    _, pred = head_topk(cfg, state, x, k)
+    hits = (pred[:, :, None] == label_ids[:, None, :]) \
+        & (label_ids >= 0)[:, None, :]
+    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k
+
+
+# ---------------------------------------------------------------------------
+# post-hoc classifier refinement (paper App. D.1)
+# ---------------------------------------------------------------------------
+
+
+def convert_head(state: HeadState, from_cfg: ELMOHeadConfig,
+                 to_cfg: ELMOHeadConfig) -> HeadState:
+    """Re-type the head weights (e.g. FP8 checkpoint → BF16 for refinement).
+
+    Shapes must match (same labels/chunks); the Kahan buffer is created or
+    dropped per the target config."""
+    assert from_cfg.padded_labels == to_cfg.padded_labels
+    assert from_cfg.num_chunks == to_cfg.num_chunks
+    w = state.w.astype(jnp.float32).astype(to_cfg.wdtype)
+    comp = (jnp.zeros((to_cfg.kahan_chunks, to_cfg.chunk, to_cfg.d_model),
+                      P.BF16) if to_cfg.kahan_chunks else None)
+    return HeadState(w, comp)
+
+
+def posthoc_refine(to_cfg: ELMOHeadConfig, state: HeadState,
+                   batches, steps: int, lr: float, seed: int = 0
+                   ) -> HeadState:
+    """App. D.1: fine-tune the head in higher precision on FROZEN encoder
+    features.  ``batches`` yields (x, targets) with x already encoded —
+    only head memory is resident, so this stays within the low-precision
+    run's budget (label chunks stream exactly as in training)."""
+    for i, (x, targets) in zip(range(steps), batches):
+        state, _, _ = head_train_step(to_cfg, state, x, targets,
+                                      jnp.float32(lr), jnp.float32(0.0),
+                                      jnp.uint32(seed + i))
+    return state

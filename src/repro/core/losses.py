@@ -1,0 +1,153 @@
+"""Loss-skipping gradients for large output spaces (paper App. B).
+
+Renee/ELMO never materialize the loss graph for the output layer: the
+logit gradient has a closed form, so autodiff (and its activation buffers)
+is skipped entirely:
+
+    BCE        :  ḡ = σ(z) − Y                      (paper App. B)
+    softmax CE :  ḡ = softmax(z) − onehot(Y)
+
+For softmax CE the row normalizer (LSE) couples all label chunks, so the
+chunked head uses an *online* (max, sumexp) accumulator across chunks —
+the standard streaming-softmax recurrence — followed by a second pass that
+emits per-chunk gradients.  Loss *values* are optional byproducts.
+
+Target encodings (dense multi-hot is never materialized at full width):
+  * multi-label (XMC): ``ids (B, P) int32`` padded with -1 — P ≪ L.
+  * single-label (LM): ``ids (B,) int32`` with -1 = ignore.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunk-local target materialization
+# ---------------------------------------------------------------------------
+
+
+def chunk_multi_hot(ids: jax.Array, c0: jax.Array, chunk: int) -> jax.Array:
+    """(B, P) padded label ids → (B, chunk) multi-hot for labels [c0, c0+chunk).
+
+    Padding entries (-1) and out-of-chunk ids scatter into a dropped slot.
+    """
+    B = ids.shape[0]
+    local = ids - c0
+    valid = (ids >= 0) & (local >= 0) & (local < chunk)
+    slot = jnp.where(valid, local, chunk)  # `chunk` = trash slot
+    y = jnp.zeros((B, chunk + 1), jnp.float32)
+    y = y.at[jnp.arange(B)[:, None], slot].add(1.0)
+    return jnp.minimum(y[:, :chunk], 1.0)  # duplicate ids collapse to 1
+
+
+def chunk_one_hot(ids: jax.Array, c0: jax.Array, chunk: int) -> jax.Array:
+    """(B,) target ids → (B, chunk) one-hot restricted to this chunk."""
+    local = ids - c0
+    valid = (ids >= 0) & (local >= 0) & (local < chunk)
+    iota = jnp.arange(chunk)[None, :]
+    return ((iota == local[:, None]) & valid[:, None]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BCE (multi-label XMC)
+# ---------------------------------------------------------------------------
+
+
+def bce_logit_grad(z: jax.Array, y: jax.Array, scale: jax.Array) -> jax.Array:
+    """ḡ = scale · (σ(z) − y).  scale folds the 1/B loss normalization."""
+    return (jax.nn.sigmoid(z.astype(jnp.float32)) - y) * scale
+
+
+def bce_chunk_loss(z: jax.Array, y: jax.Array,
+                   mask: jax.Array | None = None) -> jax.Array:
+    """Numerically stable Σ BCE-with-logits over this chunk (f32 scalar)."""
+    z32 = z.astype(jnp.float32)
+    # softplus(z) - z*y  ==  max(z,0) - z*y + log1p(exp(-|z|))
+    per = jnp.maximum(z32, 0.0) - z32 * y + jnp.log1p(jnp.exp(-jnp.abs(z32)))
+    if mask is not None:
+        per = per * mask
+    return per.sum()
+
+
+# ---------------------------------------------------------------------------
+# softmax CE (LM heads) — streaming LSE across chunks
+# ---------------------------------------------------------------------------
+
+
+def lse_init(batch: int) -> Tuple[jax.Array, jax.Array]:
+    return (jnp.full((batch,), NEG_INF, jnp.float32),
+            jnp.zeros((batch,), jnp.float32))
+
+
+def lse_update(m: jax.Array, s: jax.Array, z: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Online logsumexp: fold one logits chunk into the (max, sumexp) carry."""
+    z32 = z.astype(jnp.float32)
+    m_new = jnp.maximum(m, z32.max(axis=-1))
+    s_new = s * jnp.exp(m - m_new) + jnp.exp(z32 - m_new[:, None]).sum(-1)
+    return m_new, s_new
+
+
+def lse_finalize(m: jax.Array, s: jax.Array) -> jax.Array:
+    return m + jnp.log(s)
+
+
+def ce_logit_grad(z: jax.Array, lse: jax.Array, onehot: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """ḡ = scale · (softmax(z) − onehot), softmax via the precomputed LSE."""
+    p = jnp.exp(z.astype(jnp.float32) - lse[:, None])
+    return (p - onehot) * scale
+
+
+def ce_target_logit_chunk(z: jax.Array, ids: jax.Array, c0: jax.Array,
+                          chunk: int) -> jax.Array:
+    """Per-row target logit contribution from this chunk (0 if not here)."""
+    local = ids - c0
+    valid = (ids >= 0) & (local >= 0) & (local < chunk)
+    safe = jnp.where(valid, local, 0)
+    picked = jnp.take_along_axis(z.astype(jnp.float32), safe[:, None],
+                                 axis=1)[:, 0]
+    return jnp.where(valid, picked, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# full-width oracles (tests / tiny eval only)
+# ---------------------------------------------------------------------------
+
+
+def full_bce_loss(z: jax.Array, ids: jax.Array) -> jax.Array:
+    y = chunk_multi_hot(ids, jnp.int32(0), z.shape[1])
+    return bce_chunk_loss(z, y) / z.shape[0]
+
+
+def full_ce_loss(z: jax.Array, ids: jax.Array) -> jax.Array:
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, 0)
+    lse = jax.scipy.special.logsumexp(z.astype(jnp.float32), axis=-1)
+    zt = jnp.take_along_axis(z.astype(jnp.float32), safe[:, None], 1)[:, 0]
+    per = (lse - zt) * mask
+    return per.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def propensity_scores(label_freq: jax.Array, a: float = 0.55,
+                      b: float = 1.5) -> jax.Array:
+    """Jain et al. (2016) propensities from label frequencies (paper App. A):
+    p_l = 1 / (1 + C·e^{−a·log(N_l + b)}), standard XMC constants."""
+    c = (jnp.log(label_freq.sum()) - 1.0) * (b + 1.0) ** a
+    return 1.0 / (1.0 + c * jnp.exp(-a * jnp.log(label_freq + b)))
+
+
+def psp_at_k(pred_ids: jax.Array, label_ids: jax.Array,
+             propensity: jax.Array, k: int) -> jax.Array:
+    """Propensity-scored P@k (paper eq. 3, Tables 7/8): tail-label-weighted
+    precision.  pred_ids (B, k); label_ids (B, P) padded with -1."""
+    hits = (pred_ids[:, :k, None] == label_ids[:, None, :]) \
+        & (label_ids >= 0)[:, None, :]
+    hit_any = hits.any(-1)
+    inv_p = 1.0 / jnp.take(propensity, jnp.clip(pred_ids[:, :k], 0, None))
+    return (hit_any * inv_p).sum(-1).mean() / k

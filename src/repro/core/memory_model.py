@@ -1,0 +1,88 @@
+"""Analytic peak-memory model — reproduces paper Fig. 3, Fig. 4, Table 10.
+
+XLA allocates statically, so at full scale we *verify* with
+``compiled.memory_analysis()`` (launch/dryrun.py); this model provides the
+paper-style component breakdown and the label-size sweeps without
+instantiating 3M×768 tensors.  Constants follow the paper §4.4 walkthrough
+(BERT-base, B=128, seq 128): encoder+opt ≈ 1.2 GiB, BF16 activations
+≈ 4.6 GiB, FP8 activations ≈ 3.0 GiB (+0.5 GiB torchao-style buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GIB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class MemScenario:
+    num_labels: int
+    d_model: int = 768
+    batch: int = 128
+    num_chunks: int = 8
+    encoder_gib: float = 1.2          # params + AdamW states (BERT-base)
+    act_bf16_gib: float = 4.6         # paper §4.4
+    act_fp8_gib: float = 3.0 + 0.5    # fp8 acts + scaling buffers
+
+
+def _w_bytes(s: MemScenario, bytes_per: float) -> float:
+    return s.num_labels * s.d_model * bytes_per
+
+
+def renee_peak(s: MemScenario) -> dict:
+    """Paper Fig. 3 (left): masters + momentum + fp16 copy + fp16 grads +
+    f32 upcast grads + full logit-grad buffer, stacked at one instant."""
+    comp = {
+        "W_master_f32": _w_bytes(s, 4),
+        "W_momentum_f32": _w_bytes(s, 4),
+        "W_copy_fp16": _w_bytes(s, 2),
+        "W_grad_fp16": _w_bytes(s, 2),
+        "W_grad_f32_upcast": _w_bytes(s, 4),
+        "logit_grad_buffer": s.batch * s.num_labels * 2,
+        "encoder": s.encoder_gib * GIB,
+        "activations": s.act_bf16_gib * GIB,
+    }
+    comp["total"] = sum(comp.values())
+    return comp
+
+
+def elmo_peak(s: MemScenario, weight_dtype: str = "bf16") -> dict:
+    """Paper Fig. 3 (right): W in 16/8-bit, no momentum, no grads (fused),
+    logits/grads divided by the chunk count."""
+    wb = {"bf16": 2, "e4m3": 1, "f32": 4}[weight_dtype]
+    act = s.act_fp8_gib if weight_dtype == "e4m3" else s.act_bf16_gib
+    comp = {
+        f"W_{weight_dtype}": _w_bytes(s, wb),
+        "chunk_logits_bf16": s.batch * (s.num_labels / s.num_chunks) * 2,
+        "chunk_logit_grad_bf16": s.batch * (s.num_labels / s.num_chunks) * 2,
+        "W_grad": 0.0,                      # fused into the update kernel
+        "encoder": s.encoder_gib * GIB,
+        "activations": act * GIB,
+    }
+    comp["total"] = sum(comp.values())
+    return comp
+
+
+def sweep_labels(labels: list[int], **kw) -> list[dict]:
+    """Fig. 4: peak GiB vs label count for Renee / ELMO-BF16 / ELMO-FP8."""
+    rows = []
+    for lab in labels:
+        s = MemScenario(num_labels=lab, **kw)
+        rows.append({
+            "labels": lab,
+            "renee_gib": renee_peak(s)["total"] / GIB,
+            "elmo_bf16_gib": elmo_peak(s, "bf16")["total"] / GIB,
+            "elmo_fp8_gib": elmo_peak(s, "e4m3")["total"] / GIB,
+        })
+    return rows
+
+
+def chunk_sweep(num_chunks: list[int], num_labels: int = 2_812_281,
+                **kw) -> list[dict]:
+    """Table 10: peak memory vs chunk count (BF16, Amazon-3M geometry)."""
+    rows = []
+    for k in num_chunks:
+        s = MemScenario(num_labels=num_labels, num_chunks=k, **kw)
+        rows.append({"chunks": k,
+                     "elmo_bf16_gib": elmo_peak(s, "bf16")["total"] / GIB})
+    return rows

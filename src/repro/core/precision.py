@@ -1,0 +1,261 @@
+"""Low-precision numerics: stochastic rounding, Kahan summation, format sim.
+
+This is the numerical foundation of ELMO (paper §3, §4.1, §4.3):
+
+* ``stochastic_round``      — exact two-neighbour SR into any ml_dtypes float
+                              (the *oracle*; used by tests and small tensors).
+* ``sr_bits_bf16/e4m3``     — the fast bit-trick SR used inside optimizers and
+                              Pallas kernels (add uniform low bits, truncate).
+* ``kahan_update``          — compensated summation step for BF16 parameters.
+* ``simulate_format``       — generic (E, M) float quantizer (RN or SR) used to
+                              reproduce the paper's Fig. 2(a) precision grid.
+
+All functions are pure jnp and jit-compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# dtype registry
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+E4M3 = jnp.float8_e4m3fn
+E5M2 = jnp.float8_e5m2
+
+# (unsigned int view dtype, total bits, mantissa bits, max finite)
+_FLOAT_INFO = {
+    jnp.dtype(F32): (jnp.uint32, 32, 23, float(np.finfo(np.float32).max)),
+    jnp.dtype(BF16): (jnp.uint16, 16, 7, float(jnp.finfo(BF16).max)),
+    jnp.dtype(E4M3): (jnp.uint8, 8, 3, 448.0),
+    jnp.dtype(E5M2): (jnp.uint8, 8, 2, 57344.0),
+}
+
+
+def max_finite(dtype) -> float:
+    return _FLOAT_INFO[jnp.dtype(dtype)][3]
+
+
+def _uint_view(dtype):
+    return _FLOAT_INFO[jnp.dtype(dtype)][0]
+
+
+# ---------------------------------------------------------------------------
+# exact two-neighbour stochastic rounding (oracle)
+# ---------------------------------------------------------------------------
+
+
+def _to_ordered(bits: jax.Array, nbits: int) -> jax.Array:
+    """Map IEEE sign-magnitude bit patterns to a monotone unsigned ordering."""
+    sign = np.uint32(1) << np.uint32(nbits - 1)
+    bits32 = bits.astype(jnp.uint32)
+    neg = (bits32 & sign) != 0
+    return jnp.where(neg, (sign << 1) - 1 - bits32, bits32 | sign)
+
+
+def _from_ordered(ordered: jax.Array, nbits: int, out_dtype) -> jax.Array:
+    sign = np.uint32(1) << np.uint32(nbits - 1)
+    neg = (ordered & sign) == 0
+    bits = jnp.where(neg, (sign << 1) - 1 - ordered, ordered & (sign - 1))
+    return bits.astype(_uint_view(out_dtype))
+
+
+def _nextafter_dir(y: jax.Array, direction: jax.Array) -> jax.Array:
+    """nextafter(y, ±inf) within y.dtype. ``direction`` ∈ {-1, 0, +1} (f32)."""
+    dtype = y.dtype
+    uint = _uint_view(dtype)
+    nbits = jnp.iinfo(uint).bits
+    bits = jax.lax.bitcast_convert_type(y, uint)
+    ordered = _to_ordered(bits, nbits)
+    step = direction.astype(jnp.int32)
+    moved = (ordered.astype(jnp.int32) + step).astype(jnp.uint32)
+    out_bits = _from_ordered(moved, nbits, dtype)
+    return jax.lax.bitcast_convert_type(out_bits, dtype)
+
+
+def stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """Exact stochastic rounding of f32/bf16 ``x`` into ``dtype``.
+
+    SR(x) = up   with p = (x - down)/(up - down)
+          = down with 1 - p          (paper eq. 1)
+
+    Implemented as: round-to-nearest, then move to the neighbour in the
+    residual direction with probability |err| / gridstep.  Saturates at the
+    target's max finite value (e4m3fn convention — no inf).
+    """
+    dtype = jnp.dtype(dtype)
+    x32 = x.astype(F32)
+    lim = max_finite(dtype)
+    x32 = jnp.clip(x32, -lim, lim)
+    y = x32.astype(dtype)  # round-to-nearest-even
+    y32 = y.astype(F32)
+    err = x32 - y32
+    direction = jnp.sign(err)
+    z = _nextafter_dir(y, direction)
+    z32 = jnp.clip(z.astype(F32), -lim, lim)
+    denom = z32 - y32
+    p = jnp.where(denom != 0, err / jnp.where(denom == 0, 1.0, denom), 0.0)
+    u = jax.random.uniform(key, x32.shape, dtype=F32)
+    take_z = u < p
+    return jnp.where(take_z, z32, y32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fast bit-trick stochastic rounding (optimizer / kernel fast path)
+# ---------------------------------------------------------------------------
+
+
+def sr_bits_bf16(x32: jax.Array, rand_bits: jax.Array) -> jax.Array:
+    """SR f32→bf16 by adding 16 uniform random low bits and truncating.
+
+    ``rand_bits`` is uint32 (only the low 16 bits are used).  Exact SR for all
+    finite values (carry into the exponent implements the grid step across
+    binades); saturating at bf16 max to avoid rounding into inf.
+    """
+    bits = jax.lax.bitcast_convert_type(x32.astype(F32), jnp.uint32)
+    r = rand_bits.astype(jnp.uint32) & np.uint32(0xFFFF)
+    jittered = bits + r
+    trunc = jittered & np.uint32(0xFFFF0000)
+    y = jax.lax.bitcast_convert_type(trunc, F32)
+    lim = max_finite(BF16)
+    y = jnp.where(jnp.isfinite(y), y, jnp.sign(x32) * lim)
+    # non-finite inputs propagate as-is (RN cast)
+    y = jnp.where(jnp.isfinite(x32), y, x32)
+    return y.astype(BF16)
+
+
+def sr_bits_e4m3(x32: jax.Array, rand_bits: jax.Array) -> jax.Array:
+    """SR f32→float8_e4m3fn via the 20-low-mantissa-bit trick.
+
+    Normal range (|x| ≥ 2⁻⁶): the e4m3 grid equals the f32 grid truncated to
+    3 mantissa bits, so adding U[0, 2²⁰) below bit 20 and truncating is exact
+    SR.  Subnormal range (|x| < 2⁻⁶): the grid is uniform with step 2⁻⁹; we SR
+    on that fixed grid explicitly.  Saturates at ±448 (e4m3fn has no inf).
+    """
+    x32 = x32.astype(F32)
+    lim = 448.0
+    xc = jnp.clip(x32, -lim, lim)
+
+    # --- normal-range bit trick ---
+    mask = np.uint32((1 << 20) - 1)
+    bits = jax.lax.bitcast_convert_type(xc, jnp.uint32)
+    r = rand_bits.astype(jnp.uint32) & mask
+    trunc = (bits + r) & ~mask
+    y_norm = jax.lax.bitcast_convert_type(trunc, F32)
+    y_norm = jnp.clip(y_norm, -lim, lim)
+
+    # --- subnormal fixed grid (step 2⁻⁹) ---
+    scaled = xc * 512.0  # 2⁹
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    # reuse high random bits as the uniform draw
+    u = (rand_bits.astype(jnp.uint32) >> 8).astype(F32) * (1.0 / float(1 << 24))
+    y_sub = (lo + (u < frac).astype(F32)) * (1.0 / 512.0)
+
+    y = jnp.where(jnp.abs(xc) < 2.0 ** -6, y_sub, y_norm)
+    y = jnp.where(jnp.isfinite(x32), y, x32)
+    return y.astype(E4M3)
+
+
+def sr_cast(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """Dispatching fast SR cast (bit trick where available, oracle otherwise)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(BF16):
+        bits = jax.random.bits(key, x.shape, jnp.uint32)
+        return sr_bits_bf16(x.astype(F32), bits)
+    if dtype == jnp.dtype(E4M3):
+        bits = jax.random.bits(key, x.shape, jnp.uint32)
+        return sr_bits_e4m3(x.astype(F32), bits)
+    return stochastic_round(x, dtype, key)
+
+
+# ---------------------------------------------------------------------------
+# Kahan summation (paper §3; used for the encoder optimizer, §4.1)
+# ---------------------------------------------------------------------------
+
+
+def kahan_update(param: jax.Array, comp: jax.Array, update: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """One compensated addition: param ← param + update, error carried in comp.
+
+        y ← v − c;  s ← s + y;  c ← (s_new − s_old) − y      (paper §3)
+
+    ``param``/``comp`` are stored low-precision (BF16); arithmetic is f32.
+    Returns (new_param, new_comp) in the storage dtype of the inputs.
+    """
+    store = param.dtype
+    p32 = param.astype(F32)
+    c32 = comp.astype(F32)
+    y = update.astype(F32) - c32
+    t32 = p32 + y
+    p_new = t32.astype(store)
+    # what actually landed in the parameter, minus what we meant to add
+    c_new = (p_new.astype(F32) - p32) - y
+    return p_new, c_new.astype(store)
+
+
+# ---------------------------------------------------------------------------
+# generic (E, M) format simulation — paper Fig. 2(a)
+# ---------------------------------------------------------------------------
+
+
+def format_max(e_bits: int, m_bits: int) -> float:
+    bias = 2 ** (e_bits - 1) - 1
+    max_exp = 2 ** e_bits - 2 - bias  # reserve top exponent (IEEE inf/nan)
+    return float((2.0 - 2.0 ** (-m_bits)) * 2.0 ** max_exp)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def simulate_format(x: jax.Array, e_bits: int, m_bits: int,
+                    use_sr: bool = False, key: jax.Array | None = None
+                    ) -> jax.Array:
+    """Quantize f32 ``x`` onto a simulated (e_bits, m_bits) float grid.
+
+    IEEE-like: bias 2^(E-1)−1, subnormals with fixed step 2^(1−bias−M),
+    saturating at the max finite value.  RN (ties away, adequate for the
+    grid study) or SR when ``use_sr``.
+    """
+    bias = 2 ** (e_bits - 1) - 1
+    min_exp = 1 - bias
+    x32 = x.astype(F32)
+    lim = format_max(e_bits, m_bits)
+    xc = jnp.clip(x32, -lim, lim)
+
+    mant, expo = jnp.frexp(xc)  # x = mant * 2^expo, mant in [0.5, 1)
+    # rescale so grid exponent = floor(log2|x|) = expo - 1
+    grid_exp = jnp.maximum(expo - 1, min_exp)
+    step = jnp.exp2((grid_exp - m_bits).astype(F32))
+    q = xc / step
+    if use_sr:
+        assert key is not None, "SR needs a PRNG key"
+        lo = jnp.floor(q)
+        u = jax.random.uniform(key, x32.shape, dtype=F32)
+        qr = lo + (u < (q - lo)).astype(F32)
+    else:
+        qr = jnp.round(q)
+    y = qr * step
+    y = jnp.clip(y, -lim, lim)
+    return jnp.where(jnp.isfinite(x32), y, x32)
+
+
+# ---------------------------------------------------------------------------
+# tree helpers
+# ---------------------------------------------------------------------------
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree)
+
+
+def tree_bytes(tree) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(tree)
+               if hasattr(a, "dtype"))

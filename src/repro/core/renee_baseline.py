@@ -1,0 +1,83 @@
+"""Renee-style baseline: full-logit, FP16-mixed-precision end-to-end head.
+
+Implements the training scheme the paper compares against (Jain et al. 2023,
+as characterized in ELMO §3/Fig. 1):
+
+* f32 master classifier weights + SGD **with** momentum (f32) — 8 GiB each at
+  3M labels;
+* an ephemeral FP16 compute copy of W created every step;
+* full (B, L) logits materialized; loss-skip BCE gradient in FP16 with a
+  dynamic loss scale;
+* input-gradient matmul ḡ @ W executed in FP16 — the overflow-prone
+  accumulation over L that makes Renee unstable (paper §4.1);
+* FP16 weight gradients upcast to f32 for the update (the memory spike in
+  Fig. 1).
+
+Used by the stability tests and the memory benchmarks; not a production path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ReneeConfig:
+    num_labels: int
+    d_model: int
+    momentum: float = 0.9
+    init_loss_scale: float = 2.0 ** 12
+    growth_interval: int = 2000
+
+
+class ReneeState(NamedTuple):
+    w_master: jax.Array     # (L, D) f32
+    mom: jax.Array          # (L, D) f32
+    loss_scale: jax.Array
+    good_steps: jax.Array
+
+
+def init_renee(key: jax.Array, cfg: ReneeConfig) -> ReneeState:
+    w = jax.random.normal(key, (cfg.num_labels, cfg.d_model),
+                          jnp.float32) / jnp.sqrt(cfg.d_model)
+    return ReneeState(w, jnp.zeros_like(w), jnp.float32(cfg.init_loss_scale),
+                      jnp.int32(0))
+
+
+def renee_train_step(cfg: ReneeConfig, state: ReneeState, x: jax.Array,
+                     targets: jax.Array, lr: jax.Array
+                     ) -> Tuple[ReneeState, jax.Array, dict]:
+    """Full-logit FP16 MPT step. Returns (state, x_grad, metrics)."""
+    B = x.shape[0]
+    w16 = state.w_master.astype(jnp.float16)          # ephemeral FP16 copy
+    x16 = x.astype(jnp.float16)
+    z = jnp.dot(x16, w16.T)                           # full (B, L) FP16 logits
+    y = L.chunk_multi_hot(targets, jnp.int32(0), cfg.num_labels)
+    # loss-skip grad, scaled into FP16 range (§3: loss scaling)
+    g16 = ((jax.nn.sigmoid(z.astype(jnp.float32)) - y)
+           * (state.loss_scale / B)).astype(jnp.float16)
+    # FP16 × FP16 matmuls — the overflow-prone path
+    xg16 = jnp.dot(g16, w16)                          # (B, D) FP16
+    dw16 = jnp.dot(g16.T, x16)                        # (L, D) FP16
+    dw32 = dw16.astype(jnp.float32) / state.loss_scale  # the f32 upcast spike
+
+    finite = jnp.isfinite(dw16).all() & jnp.isfinite(xg16).all()
+    mom = jnp.where(finite, cfg.momentum * state.mom + dw32, state.mom)
+    w_new = jnp.where(finite, state.w_master - lr * mom, state.w_master)
+    good = jnp.where(finite, state.good_steps + 1, 0)
+    scale = jnp.where(finite,
+                      jnp.where(good >= cfg.growth_interval,
+                                state.loss_scale * 2, state.loss_scale),
+                      state.loss_scale * 0.5)
+    good = jnp.where(good >= cfg.growth_interval, 0, good)
+
+    xg = jnp.where(finite, xg16.astype(jnp.float32) / state.loss_scale, 0.0)
+    loss = L.full_bce_loss(z.astype(jnp.float32), targets)
+    metrics = {"loss": loss, "overflow": ~finite,
+               "loss_scale": state.loss_scale}
+    return ReneeState(w_new, mom, scale, good), xg.astype(x.dtype), metrics

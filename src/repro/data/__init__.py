@@ -1,0 +1,5 @@
+"""Deterministic, host-sharded data pipeline."""
+from repro.data.pipeline import (DataCursor, lm_batches, synthetic_xmc,
+                                 xmc_batches)
+
+__all__ = ["DataCursor", "lm_batches", "xmc_batches", "synthetic_xmc"]

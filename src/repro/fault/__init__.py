@@ -1,0 +1,5 @@
+"""Fault tolerance: heartbeat, straggler detection, elastic restart driver."""
+from repro.fault.runtime import (ElasticController, Heartbeat,
+                                 StragglerMonitor, retry)
+
+__all__ = ["Heartbeat", "StragglerMonitor", "ElasticController", "retry"]

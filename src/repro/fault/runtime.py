@@ -1,0 +1,120 @@
+"""Launcher-level fault tolerance.
+
+JAX SPMD programs are lock-step: a dead or slow host stalls the whole job.
+Recovery therefore lives OUTSIDE the compiled step, in the launcher:
+
+* ``Heartbeat``          — each host touches a per-host file (or KV entry)
+                           every step; the controller treats a stale
+                           heartbeat as a failed host.
+* ``StragglerMonitor``   — per-step wall-time EWMA; hosts persistently above
+                           ``threshold ×`` the fleet median are flagged for
+                           preemptive replacement (checkpoint → drop →
+                           rejoin), which beats waiting for a hard failure.
+* ``ElasticController``  — the restart policy: on failure, restore the last
+                           committed checkpoint and rebuild the mesh with
+                           the surviving host count (the data axis shrinks;
+                           checkpoints are mesh-independent so restore just
+                           reshards — see repro.checkpoint).
+* ``retry``              — exponential-backoff wrapper for transient errors
+                           (preempted TPU, flaky interconnect init).
+
+These are deliberately simple, dependency-free primitives with the same
+control contract as production setups (GKE + TPU provisioner, Borg, etc.);
+tests drive them with simulated failures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class Heartbeat:
+    """File-based heartbeat (stands in for a distributed KV store)."""
+
+    def __init__(self, directory: str, host_id: int, timeout_s: float = 60.0):
+        self.dir = directory
+        self.host_id = host_id
+        self.timeout_s = timeout_s
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, host: int) -> str:
+        return os.path.join(self.dir, f"host_{host:04d}.hb")
+
+    def beat(self, step: int, now: Optional[float] = None) -> None:
+        tmp = self._path(self.host_id) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "t": now or time.time()}, f)
+        os.replace(tmp, self._path(self.host_id))
+
+    def alive_hosts(self, n_hosts: int, now: Optional[float] = None
+                    ) -> List[int]:
+        now = now or time.time()
+        alive = []
+        for h in range(n_hosts):
+            try:
+                rec = json.load(open(self._path(h)))
+                if now - rec["t"] <= self.timeout_s:
+                    alive.append(h)
+            except (FileNotFoundError, json.JSONDecodeError):
+                pass
+        return alive
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags hosts whose step time EWMA exceeds threshold × fleet median."""
+    threshold: float = 1.5
+    alpha: float = 0.2
+    ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def record(self, host: int, step_time_s: float) -> None:
+        prev = self.ewma.get(host, step_time_s)
+        self.ewma[host] = (1 - self.alpha) * prev + self.alpha * step_time_s
+
+    def stragglers(self) -> List[int]:
+        if len(self.ewma) < 2:
+            return []
+        med = sorted(self.ewma.values())[len(self.ewma) // 2]
+        return [h for h, t in self.ewma.items() if t > self.threshold * med]
+
+
+def retry(fn: Callable, attempts: int = 3, base_delay_s: float = 1.0,
+          retriable=(RuntimeError, OSError), sleep=time.sleep):
+    """Exponential backoff around transient launcher-side failures."""
+    for i in range(attempts):
+        try:
+            return fn()
+        except retriable:
+            if i == attempts - 1:
+                raise
+            sleep(base_delay_s * (2 ** i))
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Restart policy: shrink the data axis to the surviving host count.
+
+    The model axis is never shrunk (TP/EP shards are not replicated), so a
+    failure inside a model group requires a spare from the pool first; pure
+    data-parallel hosts can simply drop out.
+    """
+    n_hosts: int
+    hosts_per_data_shard: int = 1
+    min_hosts: int = 1
+
+    def plan_after_failure(self, alive: List[int]) -> dict:
+        n_alive = len(alive)
+        if n_alive < self.min_hosts:
+            return {"action": "abort",
+                    "reason": f"only {n_alive} hosts alive"}
+        # keep the largest power-of-two-ish divisible configuration
+        usable = n_alive - (n_alive % self.hosts_per_data_shard)
+        if usable <= 0:
+            return {"action": "abort", "reason": "model group incomplete"}
+        return {"action": "restart",
+                "hosts": alive[:usable],
+                "new_data_parallelism": usable // self.hosts_per_data_shard,
+                "restore": "latest_committed"}

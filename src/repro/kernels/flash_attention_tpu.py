@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: flash-attention forward (blockwise online softmax).
+
+The XLA-level custom-VJP flash attention (models/flash_attention.py) is the
+portable path used by training and the dry-run; this kernel is the TPU fast
+path for the forward/serving side, with explicit VMEM tiling:
+
+* grid (B·H, Sq/bq, Sk/bk), the KV loop innermost so the (bq, dh) output
+  accumulator and the (bq,) online-softmax stats stay resident in VMEM;
+* q tiles are (bq, dh) per (batch·head); k/v tiles (bk, dh) indexed through
+  the GQA map h → h // group so grouped queries share KV traffic;
+* causal/sliding-window masks are evaluated per tile from absolute block
+  offsets, and fully-masked tiles are skipped with ``pl.when`` — on TPU the
+  skipped MXU work is real saved time (the XLA path can only mask);
+* fp32 accumulation, bf16 tile math on the MXU.
+
+Backward uses the XLA custom-VJP path (kernel bwd: future work, noted in
+EXPERIMENTS.md).  ``ref.py``'s oracle for this kernel is the dense softmax
+attention; tests sweep shapes/dtypes/GQA groups in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               bq: int, bk: int, nk: int, causal: bool, window, scale):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block-level skip: causal ⇒ only j·bk ≤ (i+1)·bq − 1; window ⇒ lower cut
+    q_end = (i + 1) * bq - 1
+    live = jnp.bool_(True)
+    if causal:
+        live = live & (j * bk <= q_end)
+    if window is not None:
+        live = live & ((j + 1) * bk - 1 >= i * bq - (window - 1))
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[...].astype(jnp.bfloat16)
+        k = k_ref[...].astype(jnp.bfloat16)
+        v = v_ref[...].astype(jnp.bfloat16)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alive = m_new > NEG_INF / 2
+        p = jnp.where(alive, jnp.exp(s - m_new), 0.0)
+        corr = jnp.where(alive, jnp.exp(m_prev - m_new), 1.0)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(jnp.bfloat16), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention_fwd_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            causal: bool = True, window=None,
+                            bq: int = 256, bk: int = 256,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, dh); k, v: (B, KH, Sk, dh), H % KH == 0 → (B, H, Sq, dh).
+
+    Sq/Sk must be multiples of bq/bk (the caller pads — see
+    models/attention.py for the padding contract)."""
+    B, H, Sq, dh = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0 and Sq % bq == 0 and Sk % bk == 0
+    G = H // KH
+    nq, nk = Sq // bq, Sk // bk
+    scale = np.float32(1.0 / np.sqrt(dh))
+
+    q3 = q.reshape(B * H, Sq, dh)
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window, scale=scale),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((None, None, bk, dh),
+                         lambda bh, i, j, G=G, H=H: (bh // H, (bh % H) // G,
+                                                     j, 0)),
+            pl.BlockSpec((None, None, bk, dh),
+                         lambda bh, i, j, G=G, H=H: (bh // H, (bh % H) // G,
+                                                     j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q3, k, v)
+    return out.reshape(B, H, Sq, dh)

@@ -1,0 +1,137 @@
+"""Pallas TPU kernels: FP8-storage matmuls for the ELMO head (paper §4.3).
+
+Two access patterns over the same FP8 E4M3 weight chunk W (L, D):
+
+* ``fp8_logits``      Z = q8(X) @ Wᵀ   → BF16 logits      (head forward)
+* ``fp8_input_grad``  X̄ = G @ W        → BF16 input grads (head backward)
+
+TPU adaptation (DESIGN.md §2): the MXU has no FP8 mode, so FP8 is a *storage*
+format — tiles are loaded from HBM at 1 byte/elem (halving weight traffic, the
+paper's memory win) and upcast to BF16 in VREGs before hitting the MXU with
+fp32 accumulation.  Inputs X are quantized to E4M3 (round-to-nearest, no
+tensor scaling — paper Fig. 5b shows the native range suffices) before the
+product so the forward numerics match the paper's FP8×FP8 GEMM.
+
+``fp8_logits`` optionally applies DropConnect *inside* the kernel (paper
+App. H): a hash-PRNG mask is applied to the W tile in VMEM, so no HBM-side
+weight copy is ever made.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import prng_utils as PR
+
+
+def _logits_kernel(seed_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                   drop_rate: float, quantize_x: bool):
+    """Z[b, l] += q8(X)[b, k] · W[l, k] for one (b, l, k) grid step."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    if quantize_x:
+        # paper §4.3: cast BF16 inputs to E4M3 when computing logits
+        x = x.astype(jnp.float8_e4m3fn)
+    x = x.astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+
+    if drop_rate > 0.0:
+        li, ki = pl.program_id(1), pl.program_id(2)
+        rows, cols = w_ref.shape
+        bits = PR.hash_bits_2d(seed_ref[0], (li * rows).astype(jnp.uint32),
+                               (ki * cols).astype(jnp.uint32), (rows, cols))
+        keep = PR.uniform_from_bits(bits) >= drop_rate
+        w = jnp.where(keep, w, jnp.bfloat16(0.0)) / jnp.bfloat16(1.0 - drop_rate)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _input_grad_kernel(g_ref, w_ref, o_ref, acc_ref):
+    """X̄[b, d] += G[b, l] · W[l, d] — BF16 × FP8-storage matmul."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+    acc_ref[...] += jnp.dot(g, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad2(x, b0, b1):
+    p0, p1 = (-x.shape[0]) % b0, (-x.shape[1]) % b1
+    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+
+@functools.partial(jax.jit, static_argnames=("drop_rate", "quantize_x",
+                                             "blocks", "interpret"))
+def fp8_logits(x: jax.Array, w: jax.Array, seed: jax.Array | None = None, *,
+               drop_rate: float = 0.0, quantize_x: bool = True,
+               blocks: tuple[int, int, int] = (128, 256, 256),
+               interpret: bool = True) -> jax.Array:
+    """Z = q8(X) @ Wᵀ.  x: (B, D) bf16, w: (L, D) e4m3/bf16 → (B, L) bf16."""
+    (B, D), (L, _) = x.shape, w.shape
+    bb, bl, bd = blocks
+    bb, bl, bd = min(bb, B) or 8, min(bl, L) or 8, min(bd, D) or 8
+    xp, wp = _pad2(x, bb, bd), _pad2(w, bl, bd)
+    Bp, Dp = xp.shape
+    Lp = wp.shape[0]
+    if seed is None:
+        seed = jnp.zeros((), jnp.uint32)
+    out = pl.pallas_call(
+        functools.partial(_logits_kernel, drop_rate=drop_rate,
+                          quantize_x=quantize_x),
+        grid=(Bp // bb, Lp // bl, Dp // bd),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bb, bd), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bb, bl), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Lp), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bb, bl), jnp.float32)],
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), xp, wp)
+    return out[:B, :L]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def fp8_input_grad(g: jax.Array, w: jax.Array, *,
+                   blocks: tuple[int, int, int] = (128, 256, 256),
+                   interpret: bool = True) -> jax.Array:
+    """X̄ = G @ W.  g: (B, L) bf16, w: (L, D) e4m3/bf16 → (B, D) bf16."""
+    (B, L), (_, D) = g.shape, w.shape
+    bb, bd, bl = blocks
+    bb, bd, bl = min(bb, B) or 8, min(bd, D) or 8, min(bl, L) or 8
+    gp, wp = _pad2(g, bb, bl), _pad2(w, bl, bd)
+    Bp, Lp = gp.shape
+    Dp = wp.shape[1]
+    out = pl.pallas_call(
+        _input_grad_kernel,
+        grid=(Bp // bb, Dp // bd, Lp // bl),
+        in_specs=[
+            pl.BlockSpec((bb, bl), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Dp), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((bb, bd), jnp.float32)],
+        interpret=interpret,
+    )(gp, wp)
+    return out[:B, :D]

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused classifier-gradient + SGD update (paper §4.3).
+
+The flagship ELMO kernel.  For one label-chunk:
+
+    dW = Gᵀ X                 (logit-grad × input, accumulated on the MXU)
+    W ← SR( (1 − lr·wd)·W − lr·dW )        [stochastic-rounding variant]
+    (W, C) ← KahanAdd(W, C, −lr·dW − lr·wd·W)  [head-label hybrid, App. D]
+
+The gradient tile lives only in VMEM scratch — classifier gradients are never
+materialized in HBM (the paper's "reducing its memory footprint to nearly
+zero").  ``input_output_aliases`` makes the W (and C) update truly in-place.
+
+Grid is (L/bl, D/bd, B/bk) with the batch reduction innermost so the dW
+accumulator stays resident; the W tile is read and written exactly once per
+(l, d) tile, at the final reduction step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import precision as P
+from repro.kernels import prng_utils as PR
+
+
+def _apply_sr(w_new32, out_dtype, bits, use_sr: bool):
+    if not use_sr:
+        return w_new32.astype(out_dtype)
+    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
+        return P.sr_bits_bf16(w_new32, bits)
+    if jnp.dtype(out_dtype) == jnp.dtype(P.E4M3):
+        return P.sr_bits_e4m3(w_new32, bits)
+    raise ValueError(f"unsupported weight dtype {out_dtype}")
+
+
+def _update_kernel_sr(seed_ref, hyper_ref, g_ref, x_ref, w_ref, w_out_ref,
+                      acc_ref, *, use_sr: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dW_tile += G_tileᵀ @ X_tile   (contract over the batch block)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...].astype(jnp.bfloat16), x_ref[...].astype(jnp.bfloat16),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # program_id must be read at the top level (not inside pl.when bodies)
+    li, di = pl.program_id(0), pl.program_id(1)
+    rows, cols = w_ref.shape
+    row0 = (li * rows).astype(jnp.uint32)
+    col0 = (di * cols).astype(jnp.uint32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _update():
+        lr, wd = hyper_ref[0], hyper_ref[1]
+        w32 = w_ref[...].astype(jnp.float32)
+        w_new = w32 * (1.0 - lr * wd) - lr * acc_ref[...]
+        bits = PR.hash_bits_2d(seed_ref[0], row0, col0, (rows, cols))
+        w_out_ref[...] = _apply_sr(w_new, w_out_ref.dtype, bits, use_sr)
+
+
+def _update_kernel_kahan(seed_ref, hyper_ref, g_ref, x_ref, w_ref, c_ref,
+                         w_out_ref, c_out_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...].astype(jnp.bfloat16), x_ref[...].astype(jnp.bfloat16),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _update():
+        lr, wd = hyper_ref[0], hyper_ref[1]
+        w32 = w_ref[...].astype(jnp.float32)
+        upd = -lr * acc_ref[...] - (lr * wd) * w32
+        # Kahan compensated add (paper §3), all in VMEM
+        y = upd - c_ref[...].astype(jnp.float32)
+        t32 = w32 + y
+        w_new = t32.astype(w_out_ref.dtype)
+        c_new = (w_new.astype(jnp.float32) - w32) - y
+        w_out_ref[...] = w_new
+        c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def _pad2(x, b0, b1):
+    p0, p1 = (-x.shape[0]) % b0, (-x.shape[1]) % b1
+    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
+
+
+@functools.partial(jax.jit, static_argnames=("use_sr", "blocks", "interpret"))
+def fused_head_update(g: jax.Array, x: jax.Array, w: jax.Array,
+                      lr: jax.Array, wd: jax.Array, seed: jax.Array, *,
+                      use_sr: bool = True,
+                      blocks: tuple[int, int, int] = (256, 256, 128),
+                      interpret: bool = True) -> jax.Array:
+    """W ← SR((1−lr·wd)·W − lr·GᵀX).  g:(B,L) x:(B,D) w:(L,D) → (L,D)."""
+    (B, L), (_, D) = g.shape, x.shape
+    bl, bd, bb = blocks
+    bl, bd, bb = min(bl, L) or 8, min(bd, D) or 8, min(bb, B) or 8
+    gp, xp, wp = _pad2(g, bb, bl), _pad2(x, bb, bd), _pad2(w, bl, bd)
+    Bp, Lp = gp.shape
+    Dp = xp.shape[1]
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       jnp.asarray(wd, jnp.float32)])
+    out = pl.pallas_call(
+        functools.partial(_update_kernel_sr, use_sr=use_sr),
+        grid=(Lp // bl, Dp // bd, Bp // bb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # seed
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # (lr, wd)
+            pl.BlockSpec((bb, bl), lambda i, j, k: (k, i)),  # G
+            pl.BlockSpec((bb, bd), lambda i, j, k: (k, j)),  # X
+            pl.BlockSpec((bl, bd), lambda i, j, k: (i, j)),  # W
+        ],
+        out_specs=pl.BlockSpec((bl, bd), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Lp, Dp), w.dtype),
+        scratch_shapes=[pltpu.VMEM((bl, bd), jnp.float32)],
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), hyper, gp, xp, wp)
+    return out[:L, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
+def fused_head_update_kahan(g: jax.Array, x: jax.Array, w: jax.Array,
+                            comp: jax.Array, lr: jax.Array, wd: jax.Array,
+                            seed: jax.Array, *,
+                            blocks: tuple[int, int, int] = (256, 256, 128),
+                            interpret: bool = True
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Head-label hybrid (paper App. D): Kahan-compensated fused update."""
+    (B, L), (_, D) = g.shape, x.shape
+    bl, bd, bb = blocks
+    bl, bd, bb = min(bl, L) or 8, min(bd, D) or 8, min(bb, B) or 8
+    gp, xp = _pad2(g, bb, bl), _pad2(x, bb, bd)
+    wp, cp = _pad2(w, bl, bd), _pad2(comp, bl, bd)
+    Bp, Lp = gp.shape
+    Dp = xp.shape[1]
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       jnp.asarray(wd, jnp.float32)])
+    w_new, c_new = pl.pallas_call(
+        _update_kernel_kahan,
+        grid=(Lp // bl, Dp // bd, Bp // bb),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bb, bl), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bb, bd), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bl, bd), lambda i, j, k: (i, j)),
+        ],
+        out_specs=(pl.BlockSpec((bl, bd), lambda i, j, k: (i, j)),
+                   pl.BlockSpec((bl, bd), lambda i, j, k: (i, j))),
+        out_shape=(jax.ShapeDtypeStruct((Lp, Dp), w.dtype),
+                   jax.ShapeDtypeStruct((Lp, Dp), comp.dtype)),
+        scratch_shapes=[pltpu.VMEM((bl, bd), jnp.float32)],
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), hyper, gp, xp, wp, cp)
+    return w_new[:L, :D], c_new[:L, :D]

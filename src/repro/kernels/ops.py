@@ -1,0 +1,86 @@
+"""Backend dispatch for ELMO kernels.
+
+``impl`` selects the execution path:
+
+* ``"kernel"``     — Pallas, compiled for TPU (interpret=False).
+* ``"interpret"``  — Pallas interpret mode (CPU-correct, used by tests).
+* ``"xla"``        — the pure-jnp oracle from ``ref.py``; the production
+                     fallback for non-TPU backends, and what the multi-pod
+                     dry-run lowers (same algorithm, honest HLO costs).
+* ``"auto"``       — "kernel" on TPU, "xla" elsewhere.
+
+All entry points are jit-compatible and shard_map-friendly (they only see the
+local shard of any distributed operand).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention_tpu as _fa
+from repro.kernels import fp8_matmul as _fp8
+from repro.kernels import fused_head_update as _fused
+from repro.kernels import ref as _ref
+from repro.kernels import sr_cast as _sr
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "xla"
+    return impl
+
+
+def sr_cast_2d(x, seed, *, out_dtype, impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.sr_cast_2d_ref(x, seed, out_dtype=out_dtype)
+    return _sr.sr_cast_2d(x, seed, out_dtype=out_dtype,
+                          interpret=(impl == "interpret"), **kw)
+
+
+def fp8_logits(x, w, seed=None, *, drop_rate: float = 0.0,
+               quantize_x: bool = True, impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.fp8_logits_ref(x, w, seed, drop_rate=drop_rate,
+                                   quantize_x=quantize_x)
+    return _fp8.fp8_logits(x, w, seed, drop_rate=drop_rate,
+                           quantize_x=quantize_x,
+                           interpret=(impl == "interpret"), **kw)
+
+
+def fp8_input_grad(g, w, *, impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.fp8_input_grad_ref(g, w)
+    return _fp8.fp8_input_grad(g, w, interpret=(impl == "interpret"), **kw)
+
+
+def fused_head_update(g, x, w, lr, wd, seed, *, use_sr: bool = True,
+                      impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.fused_head_update_ref(g, x, w, lr, wd, seed, use_sr=use_sr)
+    return _fused.fused_head_update(g, x, w, lr, wd, seed, use_sr=use_sr,
+                                    interpret=(impl == "interpret"), **kw)
+
+
+def fused_head_update_kahan(g, x, w, comp, lr, wd, seed, *,
+                            impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.fused_head_update_kahan_ref(g, x, w, comp, lr, wd, seed)
+    return _fused.fused_head_update_kahan(g, x, w, comp, lr, wd, seed,
+                                          interpret=(impl == "interpret"),
+                                          **kw)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
+                        impl: str = "auto", **kw):
+    """TPU flash-attention forward (serving fast path).  The training path
+    keeps the XLA custom-VJP flash (models/flash_attention.py) everywhere."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.flash_attention_fwd_ref(q, k, v, causal=causal,
+                                            window=window)
+    return _fa.flash_attention_fwd_tpu(q, k, v, causal=causal, window=window,
+                                       interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,72 @@
+"""Counter-based PRNG usable inside Pallas kernel bodies and jnp oracles.
+
+``pltpu.prng_random_bits`` has no CPU/interpret lowering, so ELMO kernels
+derive stochastic-rounding bits from a counter hash instead: uniform uint32
+bits are a pure function of (seed, global element index).  This is
+
+* portable   — identical bits in interpret mode, on TPU, and in the jnp oracle,
+* stateless  — fits Pallas' functional model; no HBM random tensor is ever
+               materialized (the paper's "no extra memory" property), and
+* cheap      — a few VPU integer ops per element.
+
+The mix is the murmur3/squirrel-style avalanche finalizer; SR only needs
+uniformity of low bits, not cryptographic quality.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy scalars embed as literals (jnp module-level arrays would be rejected
+# as captured constants inside Pallas kernel bodies)
+_PRIME1 = np.uint32(0x7FEB352D)
+_PRIME2 = np.uint32(0x846CA68B)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """Murmur3-style 32-bit avalanche. Input/output uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _PRIME1
+    x = x ^ (x >> 15)
+    x = x * _PRIME2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_bits_2d(seed: jax.Array, row0: jax.Array, col0: jax.Array,
+                 shape: tuple[int, int]) -> jax.Array:
+    """Uniform uint32 bits for a (rows, cols) tile at offset (row0, col0).
+
+    Bits are a pure function of the *absolute* (row, col) coordinate and the
+    seed — independent of tiling, block shape, or padding — so Pallas kernels
+    and the jnp oracle produce identical draws for the same logical element.
+    """
+    rows, cols = shape
+    ii = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 0)
+    jj = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
+    r = row0.astype(jnp.uint32) + ii
+    c = col0.astype(jnp.uint32) + jj
+    h = mix32(r * _PRIME1 ^ mix32(seed.astype(jnp.uint32)))
+    return mix32(h ^ (c * _GOLDEN))
+
+
+def hash_bits_nd(seed: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Uniform uint32 bits for an arbitrary-rank array, built from per-axis
+    iotas (elementwise → preserves any sharding; no reshape/flatten, so a
+    sharded 4-D parameter never gets gathered just to draw SR bits)."""
+    if not shape:
+        return mix32(seed.astype(jnp.uint32))
+    lin = jnp.zeros(shape, jnp.uint32)
+    stride = np.uint32(1)
+    for axis in range(len(shape) - 1, -1, -1):
+        lin = lin + jax.lax.broadcasted_iota(jnp.uint32, shape, axis) * stride
+        stride = np.uint32(stride * np.uint32(shape[axis]))
+    return mix32(lin * _GOLDEN ^ mix32(seed.astype(jnp.uint32)))
+
+
+def uniform_from_bits(bits: jax.Array) -> jax.Array:
+    """uint32 → f32 uniform in [0, 1) using the top 24 bits."""
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(1.0 / float(1 << 24))

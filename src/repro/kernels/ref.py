@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` reproduces the kernel's exact semantics (including the counter
+hash PRNG, so SR results match bit-for-bit in interpret mode).  These oracles
+are also the production XLA fallback used by the distributed train step on
+non-TPU backends and in the multi-pod dry-run (see DESIGN.md §4): they express
+the same chunked algorithm, letting XLA fuse it, while the Pallas kernels are
+the TPU fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as P
+from repro.kernels import prng_utils as PR
+
+
+def _hash_full(seed: jax.Array, shape: tuple[int, int]) -> jax.Array:
+    """Bits for the whole array — matches kernel tiling because the hash is a
+    function of the *global* element index only."""
+    zero = jnp.zeros((), jnp.uint32)
+    return PR.hash_bits_2d(seed.reshape(()).astype(jnp.uint32), zero, zero,
+                           shape)
+
+
+def sr_cast_2d_ref(x: jax.Array, seed: jax.Array, *, out_dtype) -> jax.Array:
+    bits = _hash_full(seed, x.shape)
+    x32 = x.astype(jnp.float32)
+    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
+        return P.sr_bits_bf16(x32, bits)
+    return P.sr_bits_e4m3(x32, bits)
+
+
+def fp8_logits_ref(x: jax.Array, w: jax.Array, seed: jax.Array | None = None,
+                   *, drop_rate: float = 0.0, quantize_x: bool = True
+                   ) -> jax.Array:
+    """Z = q8(X) @ Wᵀ with optional DropConnect on W (same hash mask)."""
+    if quantize_x:
+        x = x.astype(jnp.float8_e4m3fn)
+    x = x.astype(jnp.bfloat16)
+    w32 = w.astype(jnp.bfloat16)
+    if drop_rate > 0.0:
+        assert seed is not None
+        bits = _hash_full(seed, w.shape)
+        keep = PR.uniform_from_bits(bits) >= drop_rate
+        w32 = jnp.where(keep, w32, 0).astype(jnp.bfloat16) / jnp.bfloat16(1.0 - drop_rate)
+    z = jax.lax.dot_general(x, w32, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return z.astype(jnp.bfloat16)
+
+
+def fp8_input_grad_ref(g: jax.Array, w: jax.Array) -> jax.Array:
+    xg = jnp.dot(g.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                 preferred_element_type=jnp.float32)
+    return xg.astype(jnp.bfloat16)
+
+
+def fused_head_update_ref(g: jax.Array, x: jax.Array, w: jax.Array,
+                          lr, wd, seed: jax.Array, *, use_sr: bool = True
+                          ) -> jax.Array:
+    dw = jax.lax.dot_general(g.astype(jnp.bfloat16), x.astype(jnp.bfloat16),
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w32 = w.astype(jnp.float32)
+    w_new = w32 * (1.0 - jnp.float32(lr) * jnp.float32(wd)) - jnp.float32(lr) * dw
+    if not use_sr:
+        return w_new.astype(w.dtype)
+    bits = _hash_full(seed, w.shape)
+    if jnp.dtype(w.dtype) == jnp.dtype(P.BF16):
+        return P.sr_bits_bf16(w_new, bits)
+    return P.sr_bits_e4m3(w_new, bits)
+
+
+def fused_head_update_kahan_ref(g: jax.Array, x: jax.Array, w: jax.Array,
+                                comp: jax.Array, lr, wd, seed: jax.Array
+                                ) -> tuple[jax.Array, jax.Array]:
+    dw = jax.lax.dot_general(g.astype(jnp.bfloat16), x.astype(jnp.bfloat16),
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w32 = w.astype(jnp.float32)
+    upd = -jnp.float32(lr) * dw - (jnp.float32(lr) * jnp.float32(wd)) * w32
+    return P.kahan_update(w, comp, upd)
+
+
+def flash_attention_fwd_ref(q, k, v, causal: bool = True, window=None):
+    """Dense softmax-attention oracle for the Pallas flash kernel.
+    q: (B, H, Sq, dh); k, v: (B, KH, Sk, dh) — O(S²), tests/tiny only."""
+    import numpy as _np
+    B, H, Sq, dh = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    kk = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk)
+    s = s / _np.sqrt(dh)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: stochastic-rounding cast f32/bf16 → {bf16, e4m3}.
+
+Used by the SGD-SR optimizer path when the fused head-update kernel is not in
+play (e.g. backbone tensors).  Tiles the (flattened-to-2D) array through VMEM;
+SR bits come from the counter hash in ``prng_utils`` (no HBM random tensor).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import precision as P
+from repro.kernels import prng_utils as PR
+
+
+def _sr_cast_kernel(seed_ref, x_ref, o_ref, *, out_dtype):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    rows, cols = x_ref.shape
+    row0 = (i * rows).astype(jnp.uint32)
+    col0 = (j * cols).astype(jnp.uint32)
+    bits = PR.hash_bits_2d(seed_ref[0], row0, col0, (rows, cols))
+    x32 = x_ref[...].astype(jnp.float32)
+    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
+        o_ref[...] = P.sr_bits_bf16(x32, bits)
+    else:
+        o_ref[...] = P.sr_bits_e4m3(x32, bits)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_dtype", "block", "interpret"))
+def sr_cast_2d(x: jax.Array, seed: jax.Array, *, out_dtype,
+               block: tuple[int, int] = (256, 256),
+               interpret: bool = True) -> jax.Array:
+    """SR-cast a 2-D array. Pads to block multiples, slices back."""
+    assert x.ndim == 2, x.shape
+    m, n = x.shape
+    bm, bn = block
+    pm, pn = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x, ((0, pm), (0, pn)))
+    mp, np_ = m + pm, n + pn
+    out = pl.pallas_call(
+        functools.partial(_sr_cast_kernel, out_dtype=out_dtype),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # seed: whole (1,) array
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(seed.reshape(1).astype(jnp.uint32), xp)
+    return out[:m, :n]

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, step functions, dry-run, train/serve
+drivers."""

@@ -1,0 +1,319 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+we build ShapeDtypeStruct stand-ins (no allocation), jit-lower the step
+function under the production mesh, compile, and record
+``memory_analysis()`` (fits/doesn't), ``cost_analysis()`` (FLOPs/bytes for
+§Roofline) and the collective-operand bytes parsed from the
+post-partitioning HLO.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+        --shape train_4k --mesh single          # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+Results are appended incrementally to the JSON report so a crash loses one
+cell, not the run.
+"""
+# The VERY FIRST two lines, before ANY other import (jax locks device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config                        # noqa: E402
+from repro.configs.registry import (ARCHS, SHAPES, cell_applicable,  # noqa: E402
+                                    input_specs)
+from repro.core import elmo_head as EH                      # noqa: E402
+from repro.dist import meshctx, sharding as Sh              # noqa: E402
+from repro.launch import steps as St                        # noqa: E402
+from repro.launch.mesh import make_context                  # noqa: E402
+from repro.models import transformer as T                   # noqa: E402
+from repro.optim import kahan_adamw                         # noqa: E402
+from repro.optim.partitioned import expert_route, partitioned  # noqa: E402
+from repro.optim.sgd_sr import sgd_sr                       # noqa: E402
+
+GIB = 1024 ** 3
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from post-SPMD HLO
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "u32": 4, "s32": 4,
+                "f8e4m3fn": 1, "f8e5m2": 1, "u8": 1, "s8": 1, "u16": 2,
+                "s16": 2, "pred": 1, "u64": 8, "s64": 8}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?\S+\s*=\s*(\(?[^)=]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op, by kind (per device —
+    the HLO is post-partitioning so shapes are local shards)."""
+    out: dict = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if "-done(" in line:      # avoid double-counting async pairs
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        out["total"] = out.get("total", 0) + b
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _sds(tree, mesh, spec_tree):
+    """ShapeDtypeStructs with shardings from (abstract) value tree + specs.
+    Specs are sanitized against actual dim divisibility (e.g. batch=1)."""
+    def mk(leaf, spec):
+        if leaf is None:
+            return None
+        spec = Sh.sanitize_spec(leaf.shape, spec if spec is not None else P(),
+                                mesh)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, tree, spec_tree,
+                        is_leaf=lambda x: x is None or isinstance(
+                            x, (jax.ShapeDtypeStruct, P)))
+
+
+def _shardings_of(sds_tree):
+    """Extract the NamedSharding tree from a ShapeDtypeStruct tree."""
+    return jax.tree.map(lambda x: x.sharding if x is not None else None,
+                        sds_tree,
+                        is_leaf=lambda x: x is None or isinstance(
+                            x, jax.ShapeDtypeStruct))
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def make_optimizer(arch: str):
+    if arch == "arctic-480b":   # ELMO treatment for 469B expert params
+        return partitioned(expert_route, {"expert": sgd_sr(use_sr=True),
+                                          "base": kahan_adamw()})
+    return kahan_adamw()
+
+
+def lower_train_cell(cfg, shape, ctx):
+    opt = make_optimizer(cfg.name)
+    state_abs = jax.eval_shape(
+        lambda k: St.init_train_state(k, cfg, opt, impl="xla"),
+        jax.random.PRNGKey(0))
+    n_model = ctx.model_size
+    n_data = ctx.mesh.shape["data"]        # FSDP axis (pods stay pure DP)
+    bspec = Sh.backbone_specs(cfg, state_abs.backbone, n_model, n_data)
+    state_specs = St.TrainState(
+        backbone=bspec,
+        opt_state=Sh.opt_state_specs(bspec, state_abs.opt_state),
+        head=Sh.head_specs(cfg, n_model),
+        step=P())
+    state_sds = _sds(state_abs, ctx.mesh, state_specs)
+
+    raw = input_specs(cfg, shape)
+    bspecs = Sh.batch_specs(cfg, ctx.batch_axes)
+    batch_sds = {k: _sds(v, ctx.mesh, bspecs[k]) for k, v in raw.items()}
+
+    def step(state, batch):
+        return St.train_step(cfg, opt, state, batch,
+                             head_lr=jnp.float32(0.05),
+                             backbone_lr=jnp.float32(2e-5), impl="xla")
+
+    # out_shardings pinned to the input state shardings: guarantees donation
+    # aliasing and stops XLA from materializing updated weights replicated
+    metrics_sh = {"loss": _rep(ctx.mesh), "xgrad_norm": _rep(ctx.mesh),
+                  "step": _rep(ctx.mesh)}
+    return jax.jit(step, donate_argnums=(0,),
+                   out_shardings=(_shardings_of(state_sds), metrics_sh)
+                   ).lower(state_sds, batch_sds)
+
+
+def lower_decode_cell(cfg, shape, ctx):
+    state_abs = jax.eval_shape(
+        lambda k: St.init_serve_state(k, cfg, shape.batch, shape.seq,
+                                      impl="xla"),
+        jax.random.PRNGKey(0))
+    n_model = ctx.model_size
+    n_data = ctx.mesh.shape["data"]   # weight-gathered serving (FSDP specs)
+    specs = St.ServeState(
+        backbone=Sh.backbone_specs(cfg, state_abs.backbone, n_model, n_data),
+        head=Sh.head_specs(cfg, n_model),
+        caches=Sh.cache_specs(cfg, state_abs.caches, ctx.batch_axes, n_model))
+    state_sds = _sds(state_abs, ctx.mesh, specs)
+
+    raw = input_specs(cfg, shape)
+    tok_sds = _sds(raw["token"], ctx.mesh, P(ctx.batch_axes, None))
+    fe = raw.get("frontend_embeds")
+    fe_sds = (_sds(fe, ctx.mesh, P(ctx.batch_axes, None, None))
+              if fe is not None else None)
+
+    def step(state, token, fe_in):
+        return St.serve_decode(cfg, state, token, fe_in, impl="xla")
+
+    tok_out = NamedSharding(ctx.mesh, Sh.sanitize_spec(
+        (shape.batch,), P(ctx.batch_axes), ctx.mesh))
+    return jax.jit(step, donate_argnums=(0,),
+                   out_shardings=(tok_out, _shardings_of(state_sds))
+                   ).lower(state_sds, tok_sds, fe_sds)
+
+
+def lower_prefill_cell(cfg, shape, ctx):
+    state_abs = jax.eval_shape(
+        lambda k: St.init_serve_state(k, cfg, shape.batch, shape.seq,
+                                      impl="xla"),
+        jax.random.PRNGKey(0))
+    n_model = ctx.model_size
+    n_data = ctx.mesh.shape["data"]   # weight-gathered serving (FSDP specs)
+    specs = St.ServeState(
+        backbone=Sh.backbone_specs(cfg, state_abs.backbone, n_model, n_data),
+        head=Sh.head_specs(cfg, n_model),
+        caches=Sh.cache_specs(cfg, state_abs.caches, ctx.batch_axes, n_model))
+    state_sds = _sds(state_abs, ctx.mesh, specs)
+
+    raw = input_specs(cfg, shape)
+    bspecs = Sh.batch_specs(cfg, ctx.batch_axes)
+    in_sds = {k: _sds(v, ctx.mesh, bspecs[k]) for k, v in raw.items()}
+
+    def step(state, inputs):
+        return St.serve_prefill(cfg, state, inputs["tokens"],
+                                inputs.get("frontend_embeds"), impl="xla")
+
+    tok_out = NamedSharding(ctx.mesh, Sh.sanitize_spec(
+        (shape.batch,), P(ctx.batch_axes), ctx.mesh))
+    return jax.jit(step, donate_argnums=(0,),
+                   out_shardings=(tok_out, _shardings_of(state_sds))
+                   ).lower(state_sds, in_sds)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if overrides:
+        rec["overrides"] = overrides
+    skip = cell_applicable(cfg, shape)
+    if skip:
+        rec["skipped"] = skip
+        return rec
+    t0 = time.time()
+    ctx = make_context(multi_pod=multi_pod)
+    if cfg.sharding_strategy == "fsdp_pure" and shape.kind == "train":
+        # batch over (data × model); params FSDP over both; no TP/SP
+        ctx = dataclasses.replace(ctx, data_axes=("data", "model"))
+    elif cfg.sharding_strategy == "fsdp_pure":
+        # serving keeps TP: per-token weight gathers would be absurd
+        cfg = dataclasses.replace(cfg, sharding_strategy="tp_sp")
+    with meshctx.use(ctx):
+        if shape.kind == "train":
+            lowered = lower_train_cell(cfg, shape, ctx)
+        elif shape.kind == "prefill":
+            lowered = lower_prefill_cell(cfg, shape, ctx)
+        else:
+            lowered = lower_decode_cell(cfg, shape, ctx)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_gib": mem.argument_size_in_bytes / GIB,
+            "output_gib": mem.output_size_in_bytes / GIB,
+            "temp_gib": mem.temp_size_in_bytes / GIB,
+            "alias_gib": mem.alias_size_in_bytes / GIB,
+            "peak_per_device_gib":
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / GIB,
+        }
+        cost = compiled.cost_analysis() or {}
+        rec["cost"] = {k: cost.get(k, 0.0)
+                       for k in ("flops", "bytes accessed", "transcendentals")}
+        rec["collectives"] = collective_bytes(compiled.as_text())
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="dryrun_report.json")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    report = []
+    if os.path.exists(args.out):
+        report = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in report}
+
+    for arch, shape in cells:
+        for mp in meshes:
+            key = (arch, shape, "2x16x16" if mp else "16x16")
+            if key in done:
+                continue
+            print(f"=== {arch} × {shape} × {key[2]} ===", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                rec = {"arch": arch, "shape": shape, "mesh": key[2],
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+            print(json.dumps({k: v for k, v in rec.items() if k != "trace"},
+                             indent=1), flush=True)
+            report.append(rec)
+            json.dump(report, open(args.out, "w"), indent=1)
+
+    ok = sum(1 for r in report if "memory" in r)
+    sk = sum(1 for r in report if "skipped" in r)
+    err = sum(1 for r in report if "error" in r)
+    print(f"\n==== dry-run: {ok} compiled, {sk} skipped, {err} errors ====")
+
+
+if __name__ == "__main__":
+    main()

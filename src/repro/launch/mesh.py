@@ -1,0 +1,29 @@
+"""Production mesh construction (task spec: a FUNCTION, never module-level —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+from repro.dist.meshctx import MeshContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_context(*, multi_pod: bool = False) -> MeshContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model",
+                       pod_axis="pod" if multi_pod else None)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1) -> MeshContext:
+    """Small mesh over host devices (tests with forced device count)."""
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")

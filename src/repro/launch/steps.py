@@ -1,0 +1,279 @@
+"""Step functions: the paper's reordered computation flow as pure JAX.
+
+``train_step`` (paper §4.2, Fig. 3 right):
+
+    1. backbone forward             (under jax.vjp — no loss graph)
+    2. ELMO head: chunked fwd / loss-skip grad / fused low-precision update
+    3. backbone backward            (seeded with the head's input gradient —
+                                     runs AFTER the head, when chunk buffers
+                                     are free: the peak-memory reordering)
+    4. Kahan-AdamW backbone update  (pure BF16, §4.1)
+
+The head never appears in the autodiff graph (loss-skipping by
+construction).  ``serve_prefill`` / ``serve_decode`` are the inference pair;
+decode shapes lower ``serve_decode`` (one token against a full-length
+cache), per the task spec.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import elmo_head as EH
+from repro.kernels import prng_utils as PR
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.base import Optimizer
+
+
+def make_head_cfg(cfg: ModelConfig, impl: str = "auto") -> EH.ELMOHeadConfig:
+    return EH.ELMOHeadConfig(
+        num_labels=cfg.head_size,
+        d_model=cfg.d_model,
+        num_chunks=cfg.head_chunks,
+        weight_dtype=cfg.head_weight_dtype,
+        loss=cfg.head_loss,
+        kahan_chunks=cfg.head_kahan_chunks,
+        impl=impl,
+    )
+
+
+class TrainState(NamedTuple):
+    backbone: T.Backbone
+    opt_state: Any
+    head: EH.HeadState
+    step: jax.Array
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig, optimizer: Optimizer,
+                     impl: str = "auto") -> TrainState:
+    kb, kh = jax.random.split(key)
+    backbone = T.backbone_init(kb, cfg)
+    head = EH.init_head(kh, make_head_cfg(cfg, impl))
+    return TrainState(backbone, optimizer.init(backbone), head, jnp.int32(0))
+
+
+def _head_inputs(cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    if cfg.pool == "first":        # XMC encoders: CLS pooling
+        return hidden[:, 0, :]
+    B, S, D = hidden.shape
+    return hidden.reshape(B * S, D)
+
+
+def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
+                    frontend, head_lr, head_wd, seed):
+    """fwd → chunked head (fwd/grad/update) → bwd. Returns head', grads,
+    metrics — the paper's §4.2 ordering."""
+    if cfg.head_loss == "softmax_ce":
+        targets = targets.reshape(-1)      # (B·S,) next-token ids
+
+    def fwd(bb):
+        hidden = T.backbone_apply(bb, cfg, tokens, frontend)
+        return _head_inputs(cfg, hidden)
+
+    x, pullback = jax.vjp(fwd, backbone)
+    head_new, x_grad, metrics = EH.head_train_step(
+        head_cfg, head_state, x, targets, head_lr, head_wd, seed)
+    (bb_grads,) = pullback(x_grad.astype(x.dtype))
+    return head_new, bb_grads, metrics
+
+
+def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
+               batch: dict, head_lr: jax.Array, backbone_lr: jax.Array,
+               head_wd: jax.Array = jnp.float32(1e-4),
+               impl: str = "auto") -> Tuple[TrainState, dict]:
+    head_cfg = make_head_cfg(cfg, impl)
+    tokens = batch["tokens"]
+    frontend = batch.get("frontend_embeds")
+    targets = batch["targets"]
+    seed = PR.mix32(state.step.astype(jnp.uint32))
+    n_micro = max(1, cfg.grad_accum)
+
+    if n_micro == 1:
+        head_new, bb_grads, metrics = _one_microbatch(
+            cfg, head_cfg, state.backbone, state.head, tokens, targets,
+            frontend, head_lr, head_wd, seed)
+    else:
+        # gradient accumulation: scan over microbatches; the head streams
+        # its own fused updates per microbatch, backbone grads accumulate
+        # in BF16 and the Kahan-AdamW update runs once
+        B = tokens.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+        mb = B // n_micro
+
+        def split(a):
+            return (a.reshape(n_micro, mb, *a.shape[1:])
+                    if a is not None else None)
+
+        xs = (split(tokens), split(targets), split(frontend))
+
+        def micro_body(carry, inp):
+            head_state, gacc = carry
+            tok, tgt, fe = inp
+            m_seed = PR.mix32(seed + jnp.uint32(1))
+            head_state, g, metrics = _one_microbatch(
+                cfg, head_cfg, state.backbone, head_state, tok, tgt, fe,
+                head_lr, head_wd, m_seed)
+            gacc = jax.tree.map(
+                lambda a, b: (a + b.astype(a.dtype)), gacc, g)
+            return (head_state, gacc), metrics["loss"]
+
+        gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                             state.backbone)
+        (head_new, gacc), losses = jax.lax.scan(
+            micro_body, (state.head, gacc0), xs)
+        bb_grads = jax.tree.map(lambda g: g / n_micro, gacc)
+        metrics = {"loss": losses.mean(),
+                   "xgrad_norm": jnp.float32(0.0)}
+
+    bb_new, opt_new = optimizer.update(state.backbone, state.opt_state,
+                                       bb_grads, state.step, backbone_lr)
+    metrics = dict(metrics, step=state.step)
+    return TrainState(bb_new, opt_new, head_new, state.step + 1), metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+class ServeState(NamedTuple):
+    backbone: T.Backbone
+    head: EH.HeadState
+    caches: Any
+
+
+def init_serve_state(key: jax.Array, cfg: ModelConfig, batch: int,
+                     max_len: int, impl: str = "auto") -> ServeState:
+    kb, kh = jax.random.split(key)
+    backbone = T.backbone_init(kb, cfg)
+    head = EH.init_head(kh, make_head_cfg(cfg, impl))
+    return ServeState(backbone, head, T.init_caches(cfg, batch, max_len))
+
+
+def serve_prefill(cfg: ModelConfig, state: ServeState, tokens: jax.Array,
+                  frontend_embeds: Optional[jax.Array] = None,
+                  impl: str = "auto") -> Tuple[jax.Array, ServeState]:
+    """Process the prompt, fill caches, emit the first generated token."""
+    head_cfg = make_head_cfg(cfg, impl)
+    x, ctx = T._embed_inputs(state.backbone, cfg, tokens, frontend_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def period_body(carry, slices):
+        x = carry
+        param_slice, cache_slice = slices
+        new_caches = []
+        for bs, p, c in zip(cfg.pattern, param_slice, cache_slice):
+            # prefill = train-style blockwise attention + cache population
+            h = T.Ly.rmsnorm(p["norm1"], x, cfg.norm_eps)
+            if bs.kind in ("attn", "hymba"):
+                y_attn, kv = T.Attn.prefill_self_attention(p["attn"], cfg, h,
+                                                           c["kv"])
+                c = dict(c, kv=kv)
+            if bs.kind == "attn":
+                y = y_attn
+            elif bs.kind == "hymba":
+                y_ssm = T.Ssm.ssm_apply(p["ssm"], cfg, h)
+                y = 0.5 * (T.Ly.rmsnorm(p["norm_attn_out"], y_attn,
+                                        cfg.norm_eps)
+                           + T.Ly.rmsnorm(p["norm_ssm_out"], y_ssm,
+                                          cfg.norm_eps))
+                # populate the end-of-prompt SSM state with a stateful pass
+                _, ssm_c = _ssm_prefill_state(p["ssm"], cfg, h)
+                c = dict(c, ssm=ssm_c)
+            elif bs.kind == "mamba":
+                y = T.Ssm.ssm_apply(p["ssm"], cfg, h)
+                _, ssm_c = _ssm_prefill_state(p["ssm"], cfg, h)
+                c = dict(c, ssm=ssm_c)
+            elif bs.kind == "mlstm":
+                y = T.Xl.mlstm_apply(p["mlstm"], cfg, h)
+                c = dict(c, mlstm=_mlstm_prefill_state(p["mlstm"], cfg, h))
+            elif bs.kind == "slstm":
+                y, c_sl = _slstm_prefill(p["slstm"], cfg, h)
+                c = dict(c, slstm=c_sl)
+            else:
+                raise ValueError(bs.kind)
+            x = x + y
+            if bs.cross_attn:
+                x = x + T.Attn.cross_attention(
+                    p["cross"], cfg,
+                    T.Ly.rmsnorm(p["norm_cross"], x, cfg.norm_eps), ctx)
+            x = x + T._ffn_part(p, cfg, bs, x)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(period_body, x,
+                                 (state.backbone.periods, state.caches))
+    hidden = T.Ly.rmsnorm(state.backbone.final_norm, x, cfg.norm_eps)
+    _, next_tok = EH.head_topk(head_cfg, state.head, hidden[:, -1, :], k=1)
+    return next_tok[:, 0], ServeState(state.backbone, state.head, new_caches)
+
+
+def _ssm_prefill_state(p, cfg, h):
+    """Run the SSM over the prompt, returning the end-of-prompt state."""
+    B, S, _ = h.shape
+    xz = T.Ly.dense(p["in_proj"], h)
+    x_in, _ = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = T.Ssm._causal_conv(p["conv_w"], p["conv_b"], x_in)
+    x_c = jax.nn.silu(x_conv.astype(jnp.float32)).astype(h.dtype)
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    _, h_last = T.Ssm._ssm_inner(p, cfg, x_c, h0, chunk=128)
+    return None, T.Ssm.SSMCache(h_last, conv_state.astype(jnp.bfloat16))
+
+
+def _mlstm_prefill_state(p, cfg, h):
+    B, S, _ = h.shape
+    H, dh = T.Xl._heads(cfg)
+    k = T.Ly.dense(p["w_k"], h).reshape(B, S, H, dh)
+    v = T.Ly.dense(p["w_v"], h).reshape(B, S, H, dh)
+    q = T.Ly.dense(p["w_q"], h).reshape(B, S, H, dh)
+    logf, logi = T.Xl._mlstm_gates(p, h)
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    Wc = min(64, S)
+    pad = (-S) % Wc
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-50.0)
+    nc = (S + pad) // Wc
+    xs = tuple(a.reshape(B, nc, Wc, *a.shape[2:]).swapaxes(0, 1)
+               for a in (q, k, v, logf, logi))
+
+    def body(carry, inp):
+        C, n = carry
+        _, C1, n1 = T.Xl._mlstm_chunk(*inp, C, n, 1.0 / (dh ** 0.5))
+        return (C1, n1), None
+
+    (C1, n1), _ = jax.lax.scan(body, (C0, n0), xs)
+    return T.Xl.MLSTMCache(C1, n1)
+
+
+def _slstm_prefill(p, cfg, h):
+    B, S, _ = h.shape
+
+    def body(cache, xt):
+        cache = T.Xl._slstm_step(p, cfg, xt, cache)
+        return cache, cache.h
+
+    cache0 = T.Xl.init_slstm_cache(cfg, B)
+    cache, hs = jax.lax.scan(body, cache0, h.swapaxes(0, 1))
+    y = T.Ly.dense(p["w_o"],
+                   hs.swapaxes(0, 1).reshape(B, S, -1).astype(h.dtype))
+    return y, cache
+
+
+def serve_decode(cfg: ModelConfig, state: ServeState, token: jax.Array,
+                 frontend_embeds: Optional[jax.Array] = None,
+                 impl: str = "auto") -> Tuple[jax.Array, ServeState]:
+    """One token in → one token out (greedy), caches advanced."""
+    head_cfg = make_head_cfg(cfg, impl)
+    hidden, new_caches = T.backbone_decode_step(state.backbone, cfg, token,
+                                                state.caches, frontend_embeds)
+    _, next_tok = EH.head_topk(head_cfg, state.head, hidden[:, 0, :], k=1)
+    return next_tok[:, 0], ServeState(state.backbone, state.head, new_caches)

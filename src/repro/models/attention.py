@@ -1,0 +1,207 @@
+"""Attention: GQA + RoPE + sliding-window + qk-norm + cross-attn + KV cache.
+
+Training/prefill attention is *blockwise with online softmax* (Rabe & Staats
+2021 — cited by the paper for its chunking strategy): an outer scan over query
+blocks and an inner scan over KV blocks keep transient memory at
+O(bq·bk) instead of O(S²), which is what makes the 32k-prefill dry-run
+cells compile within HBM.  Sliding-window attention only visits the KV blocks
+inside the window (true sub-quadratic FLOPs, not just masking).
+
+Decode attends a single query against the cache in one einsum.  SWA decode
+uses a ring-buffer cache of size ``window`` — the reason mixtral/hymba run
+the 500k-context cell (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    dh, H, KH, D = cfg.hdim, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 7)
+    p = {
+        "wq": Ly.dense_init(ks[0], D, H * dh),
+        "wk": Ly.dense_init(ks[1], D, KH * dh),
+        "wv": Ly.dense_init(ks[2], D, KH * dh),
+        "wo": Ly.dense_init(ks[3], H * dh, D, scale=1.0 / np.sqrt(H * dh)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Ly.rmsnorm_init(dh)
+        p["k_norm"] = Ly.rmsnorm_init(dh)
+    if cross:
+        p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated injection (VLM)
+    return p
+
+
+def _project_q(p, cfg: ModelConfig, x, positions, rope: bool):
+    B, S, _ = x.shape
+    q = Ly.dense(p["wq"], x).reshape(B, S, cfg.n_heads, cfg.hdim)
+    if cfg.qk_norm:
+        q = Ly.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    if rope:
+        q = Ly.apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, cfg: ModelConfig, x, positions, rope: bool):
+    B, S, _ = x.shape
+    k = Ly.dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, cfg.hdim)
+    v = Ly.dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, cfg.hdim)
+    if cfg.qk_norm:
+        k = Ly.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        k = Ly.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# blockwise online-softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _pad_seq(x, block):
+    s = x.shape[1]
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, s
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, *, causal: bool,
+                        window: Optional[int], bq: int = 512,
+                        bk: int = 1024) -> jax.Array:
+    """q:(B,Sq,H,dh) k,v:(B,Sk,KH,dh) → (B,Sq,H,dh).
+
+    Thin padding/layout wrapper over ``flash_attention`` (custom VJP: online
+    softmax forward, FA2 recompute backward — O(S) memory in both passes)."""
+    from repro.models.flash_attention import flash_attention
+
+    B, Sq, H, dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+
+    q, Sq0 = _pad_seq(q, bq)
+    k, Sk0 = _pad_seq(k, bk)
+    v, _ = _pad_seq(v, bk)
+    q_pos, _ = _pad_seq(q_pos[..., None], bq)
+    k_pos, _ = _pad_seq(k_pos[..., None], bk)
+    q_pos, k_pos = q_pos[..., 0], k_pos[..., 0]
+    Sqp, Skp = q.shape[1], k.shape[1]
+    k_valid = jnp.broadcast_to(jnp.arange(Skp) < Sk0, (B, Skp))
+
+    q5 = q.reshape(B, Sqp, KH, G, dh)
+    out5 = flash_attention(q5, k, v, q_pos, k_pos, k_valid, causal, window,
+                           bq, bk)
+    return out5.reshape(B, Sqp, H, dh)[:, :Sq0]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def self_attention(p, cfg: ModelConfig, x, positions, *,
+                   bq: int = 512, bk: int = 1024) -> jax.Array:
+    """Causal (optionally sliding-window) self-attention for training.
+    Non-causal (bidirectional) when cfg.causal=False (XMC encoders)."""
+    B, S, _ = x.shape
+    q = _project_q(p, cfg, x, positions, rope=True)
+    k, v = _project_kv(p, cfg, x, positions, rope=True)
+    out = blockwise_attention(q, k, v, positions, positions, causal=cfg.causal,
+                              window=cfg.sliding_window, bq=min(bq, S),
+                              bk=min(bk, S))
+    return Ly.dense(p["wo"], out.reshape(B, S, -1))
+
+
+def cross_attention(p, cfg: ModelConfig, x, ctx) -> jax.Array:
+    """Gated cross-attention onto precomputed context embeddings (VLM)."""
+    B, S, _ = x.shape
+    N = ctx.shape[1]
+    zero = jnp.zeros((B, S), jnp.int32)
+    q = _project_q(p, cfg, x, zero, rope=False)
+    k, v = _project_kv(p, cfg, ctx, jnp.zeros((B, N), jnp.int32), rope=False)
+    out = blockwise_attention(q, k, v, zero, jnp.zeros((B, N), jnp.int32),
+                              causal=False, window=None,
+                              bq=min(512, S), bk=min(1024, N))
+    y = Ly.dense(p["wo"], out.reshape(B, S, -1))
+    return jnp.tanh(p["gate"]).astype(y.dtype) * y
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, C, KH, dh) — C = window (SWA) or max_len
+    v: jax.Array
+    pos: jax.Array    # scalar int32: tokens seen so far
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    C = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    shape = (batch, C, cfg.n_kv_heads, cfg.hdim)
+    return KVCache(jnp.zeros(shape, jnp.bfloat16),
+                   jnp.zeros(shape, jnp.bfloat16), jnp.int32(0))
+
+
+def decode_self_attention(p, cfg: ModelConfig, x, cache: KVCache):
+    """One-token decode step against the (ring) cache."""
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    pos = cache.pos
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = _project_q(p, cfg, x, positions, rope=True)           # (B,1,H,dh)
+    k_new, v_new = _project_kv(p, cfg, x, positions, rope=True)
+    slot = jnp.mod(pos, C)
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+
+    # absolute position of each cache slot under ring addressing
+    idx = jnp.arange(C)
+    n_seen = pos + 1
+    abs_pos = jnp.where(
+        n_seen <= C, idx,
+        jnp.where(idx <= slot, pos - slot + idx, pos - slot - C + idx))
+    valid = abs_pos < n_seen
+    if cfg.sliding_window:
+        valid = valid & (pos - abs_pos < cfg.sliding_window)
+
+    H, KH, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+    G = H // KH
+    qh = q.reshape(B, KH, G, dh)
+    s = jnp.einsum("bhgd,bchd->bhgc", qh.astype(jnp.bfloat16),
+                   k_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) / np.sqrt(dh)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", w.astype(jnp.bfloat16),
+                   v_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    y = Ly.dense(p["wo"], o.reshape(B, 1, H * dh).astype(x.dtype))
+    return y, KVCache(k_cache, v_cache, pos + 1)
+
+
+def prefill_self_attention(p, cfg: ModelConfig, x, cache: KVCache):
+    """Prefill: run blockwise attention AND populate the cache."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    y = self_attention(p, cfg, x, positions)
+    k, v = _project_kv(p, cfg, x, positions, rope=True)
+    C = cache.k.shape[1]
+    if S >= C:   # keep last C entries, ring-aligned so slot = pos % C works
+        k_c = jnp.roll(k[:, S - C:], shift=(S - C) % C, axis=1)
+        v_c = jnp.roll(v[:, S - C:], shift=(S - C) % C, axis=1)
+        cache = KVCache(k_c.astype(jnp.bfloat16), v_c.astype(jnp.bfloat16),
+                        jnp.int32(S))
+    else:
+        k_c = jax.lax.dynamic_update_slice(cache.k, k.astype(jnp.bfloat16),
+                                           (0, 0, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(cache.v, v.astype(jnp.bfloat16),
+                                           (0, 0, 0, 0))
+        cache = KVCache(k_c, v_c, jnp.int32(S))
+    return y, cache

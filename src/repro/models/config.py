@@ -1,0 +1,139 @@
+"""Unified model configuration covering the 10 assigned architectures plus
+the paper's own XMC encoders.
+
+A model is a repeating *pattern* of blocks (period P); layers = n_periods × P.
+Uniform architectures have P=1; llama-3.2-vision has P=5 (4 self-attn + 1
+cross-attn layer); xlstm has P=6 (5 mLSTM + 1 sLSTM).  Parameters are stacked
+over periods and the decoder scans over them (HLO size O(P), not O(L) — see
+DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One block position inside the repeating pattern."""
+    kind: str = "attn"            # attn | mamba | hymba | mlstm | slstm
+    cross_attn: bool = False      # add gated cross-attention (VLM)
+    moe: bool = False             # FFN is a mixture of experts
+    ffn: str = "swiglu"           # swiglu | geglu | gelu | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    # attention
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None    # SWA width (mixtral/hymba)
+    qk_norm: bool = False                   # qwen3
+    attn_logit_softcap: Optional[float] = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    moe_dense_residual: bool = False        # arctic: dense FFN ∥ MoE
+    capacity_factor: float = 1.25
+    # dispatch mode: "auto" = EP-over-model when divisible else TP-in-expert;
+    # "a2a" = tokens all_to_all'd to resident 2-D-sharded experts
+    # (E over data × F over model) — weights never move (§Perf A2)
+    moe_mode: str = "auto"
+    # SSM / recurrent
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    mlstm_heads: int = 4
+    # frontends (stub: precomputed embeddings are model inputs)
+    frontend: Optional[str] = None          # None | "audio_frames" | "vision"
+    n_frontend_tokens: int = 0              # e.g. image patches per sample
+    # ELMO head
+    head_chunks: int = 8
+    head_weight_dtype: str = "e4m3"
+    head_kahan_chunks: int = 0
+    head_labels: Optional[int] = None   # XMC: label count (BCE head);
+    #                                     None → LM head over vocab (CE)
+    # encoder-style (paper's own XMC archs)
+    causal: bool = True
+    pool: str = "none"                  # "none" (LM) | "first" (CLS pooling)
+    max_labels_per_example: int = 40    # P in the sparse multi-label targets
+    # numerics
+    param_dtype: str = "bf16"
+    norm_eps: float = 1e-6
+    # gradient accumulation: microbatches per step (divides token-
+    # proportional transients — MoE dispatch buffers, head chunk logits,
+    # activations — at the cost of re-running the backbone per microbatch)
+    grad_accum: int = 1
+    # sharding strategy (§Perf hillclimb lever):
+    #   "tp_sp"     — TP over model axis + sequence parallelism (baseline)
+    #   "fsdp_pure" — batch sharded over (data × model), params FSDP over
+    #                 both; no per-layer activation collectives. Right for
+    #                 dense models whose params ≪ activations (roofline).
+    sharding_strategy: str = "tp_sp"
+    # long-context support marker (DESIGN.md §3 skip rule)
+    subquadratic: bool = False
+
+    @property
+    def hdim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, \
+            f"{self.name}: {self.n_layers} layers not divisible by period " \
+            f"{self.period}"
+        return self.n_layers // self.period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def head_size(self) -> int:
+        """Output-space size the ELMO head covers (labels or vocab)."""
+        return self.head_labels if self.head_labels else self.vocab
+
+    @property
+    def head_loss(self) -> str:
+        return "bce" if self.head_labels else "softmax_ce"
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0
+        if any(b.moe for b in self.pattern):
+            assert self.n_experts > 0
+        _ = self.n_periods
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test scale: same family/pattern, tiny dims (spec: REDUCED config
+    of the same family)."""
+    small = dict(
+        n_layers=2 * cfg.period,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=max(1, 4 // max(1, cfg.n_heads // cfg.n_kv_heads)),
+        d_ff=128 if cfg.d_ff else 0,
+        vocab=503,
+        head_dim=16 if cfg.head_dim else None,
+        n_experts=4 if cfg.n_experts else 0,
+        sliding_window=8 if cfg.sliding_window else None,
+        ssm_state=4,
+        mlstm_heads=2,
+        n_frontend_tokens=3 if cfg.n_frontend_tokens else 0,
+        head_chunks=4,
+        grad_accum=1,
+        name=cfg.name + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama/phi/qwen/mixtral), GeGLU (gemma),
+plain GELU (musicgen/BERT-style encoders)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+
+def ffn_init(key, cfg: ModelConfig, kind: str) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"w_gate": Ly.dense_init(ks[0], D, F),
+                "w_up": Ly.dense_init(ks[1], D, F),
+                "w_down": Ly.dense_init(ks[2], F, D)}
+    if kind == "gelu":
+        return {"w_up": Ly.dense_init(ks[0], D, F),
+                "w_down": Ly.dense_init(ks[1], F, D)}
+    raise ValueError(kind)
+
+
+def ffn_apply(p, x, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(Ly.dense(p["w_gate"], x).astype(jnp.float32)
+                        ).astype(x.dtype) * Ly.dense(p["w_up"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(Ly.dense(p["w_gate"], x).astype(jnp.float32),
+                        approximate=True).astype(x.dtype) \
+            * Ly.dense(p["w_up"], x)
+    elif kind == "gelu":
+        h = jax.nn.gelu(Ly.dense(p["w_up"], x).astype(jnp.float32),
+                        approximate=True).astype(x.dtype)
+        return Ly.dense(p["w_down"], h)
+    else:
+        raise ValueError(kind)
+    return Ly.dense(p["w_down"], h)

@@ -1,0 +1,207 @@
+"""Blockwise attention with a flash-style custom VJP (pure jnp).
+
+Plain autodiff through an online-softmax scan would save the per-block
+probability tiles — i.e. the full O(S²) attention matrix in pieces — which
+is exactly the activation blow-up the paper's chunking philosophy removes.
+This module gives attention the same treatment the ELMO head gives logits:
+
+* forward: outer scan over q-blocks, inner scan over kv-blocks, online
+  (m, l) softmax — saves only (q, k, v, out, lse);
+* backward: FA2-style — recomputes each probability tile from the saved lse,
+  accumulates dq per q-block and scatter-adds dk/dv per kv-block.  Transient
+  memory is O(bq·bk), total O(S).
+
+Sliding windows visit only the ≤ ceil(window/bk)+2 kv-blocks that can
+intersect each q-block, in both passes — SWA costs S·window FLOPs, not S².
+
+GQA is native: q (B,Sq,KH,G,dh) against k/v (B,Sk,KH,dh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _win_blocks(window: Optional[int], nk: int, bk: int) -> int:
+    if window is None:
+        return nk
+    return min(nk, int(np.ceil(window / bk)) + 2)
+
+
+def _kv_index(i, r, bq: int, bk: int, nk: int, window: Optional[int]):
+    """kv-block index at relative step r for q-block i, + visit validity
+    (clipped steps would revisit block 0 and double-count)."""
+    if window is None:
+        return r, jnp.bool_(True)
+    j_of_i = jnp.clip(((i + 1) * bq - 1) // bk, 0, nk - 1)
+    raw = j_of_i - r
+    return jnp.clip(raw, 0, nk - 1), raw >= 0
+
+
+def _tile_mask(qp, kp, kv_valid, visit, causal: bool,
+               window: Optional[int]):
+    mask = kv_valid[:, None, :] & visit
+    if causal:
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
+    if window is not None:
+        mask = mask & (qp[:, :, None] - kp[:, None, :] < window)
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8, 9))
+def flash_attention(q, k, v, q_pos, k_pos, k_valid, causal: bool,
+                    window: Optional[int], bq: int, bk: int):
+    """q: (B,Sq,KH,G,dh); k,v: (B,Sk,KH,dh); positions: (B,S) int32;
+    k_valid: (B,Sk) bool (False = padding). Returns (B,Sq,KH,G,dh)."""
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, k_pos, k_valid, causal, window,
+                             bq, bk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, q_pos, k_pos, k_valid, causal, window, bq, bk):
+    B, Sq, KH, G, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    nq, nk = Sq // bq, Sk // bk
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+
+    qb = q.reshape(B, nq, bq, KH, G, dh).swapaxes(0, 1)
+    qpb = q_pos.reshape(B, nq, bq).swapaxes(0, 1)
+    kb = k.reshape(B, nk, bk, KH, dh)
+    vb = v.reshape(B, nk, bk, KH, dh)
+    kpb = k_pos.reshape(B, nk, bk)
+    kvb = k_valid.reshape(B, nk, bk)
+    n_win = _win_blocks(window, nk, bk)
+
+    def q_block(_, inp):
+        qi, qpi, i = inp
+        m0 = jnp.full((B, bq, KH, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, bq, KH, G), jnp.float32)
+        a0 = jnp.zeros((B, bq, KH, G, dh), jnp.float32)
+
+        def kv_step(acc, r):
+            m, l, a = acc
+            j, visit = _kv_index(i, r, bq, bk, nk, window)
+            kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+            kpj = jax.lax.dynamic_index_in_dim(kpb, j, 1, keepdims=False)
+            kvj = jax.lax.dynamic_index_in_dim(kvb, j, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.bfloat16),
+                           kj.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(qpi, kpj, kvj, visit, causal, window)
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alive = m_new > NEG_INF / 2
+            p = jnp.where(alive[..., None], jnp.exp(s - m_new[..., None]), 0.)
+            corr = jnp.where(alive, jnp.exp(m - m_new), 1.0)
+            l = l * corr + p.sum(-1)
+            a = a * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(jnp.bfloat16),
+                vj.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+            return (m_new, l, a), None
+
+        (m, l, a), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                    jnp.arange(n_win, dtype=jnp.int32))
+        out = (a / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(
+        q_block, None, (qb, qpb, jnp.arange(nq, dtype=jnp.int32)))
+    out = outs.swapaxes(0, 1).reshape(B, Sq, KH, G, dh)
+    lse = lses.swapaxes(0, 1).reshape(B, Sq, KH, G)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, k_valid, causal, window, bq, bk):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, k_pos, k_valid, causal,
+                               window, bq, bk)
+    return out, (q, k, v, q_pos, k_pos, k_valid, out, lse)
+
+
+def _flash_bwd(causal, window, bq, bk, res, do):
+    q, k, v, q_pos, k_pos, k_valid, out, lse = res
+    B, Sq, KH, G, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    nq, nk = Sq // bq, Sk // bk
+    n_win = _win_blocks(window, nk, bk)
+
+    # delta_i = Σ_d do·out  (FA2)
+    delta = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+
+    qb = q.reshape(B, nq, bq, KH, G, dh).swapaxes(0, 1)
+    qpb = q_pos.reshape(B, nq, bq).swapaxes(0, 1)
+    dob = do.reshape(B, nq, bq, KH, G, dh).swapaxes(0, 1)
+    lseb = lse.reshape(B, nq, bq, KH, G).swapaxes(0, 1)
+    deltab = delta.reshape(B, nq, bq, KH, G).swapaxes(0, 1)
+    kb = k.reshape(B, nk, bk, KH, dh)
+    vb = v.reshape(B, nk, bk, KH, dh)
+    kpb = k_pos.reshape(B, nk, bk)
+    kvb = k_valid.reshape(B, nk, bk)
+
+    dk0 = jnp.zeros((B, nk, bk, KH, dh), jnp.float32)
+    dv0 = jnp.zeros((B, nk, bk, KH, dh), jnp.float32)
+
+    def q_block(carry, inp):
+        dk, dv = carry
+        qi, qpi, doi, lsei, di, i = inp
+
+        def kv_step(acc, r):
+            dq_i, dk, dv = acc
+            j, visit = _kv_index(i, r, bq, bk, nk, window)
+            kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+            kpj = jax.lax.dynamic_index_in_dim(kpb, j, 1, keepdims=False)
+            kvj = jax.lax.dynamic_index_in_dim(kvb, j, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.bfloat16),
+                           kj.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(qpi, kpj, kvj, visit, causal, window)
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lsei[..., None])                     # (B,q,h,g,k)
+            p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+            dvj = jnp.einsum("bqhgk,bqhgd->bkhd", p.astype(jnp.bfloat16),
+                             doi.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhgd,bkhd->bqhgk", doi.astype(jnp.bfloat16),
+                            vj.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - di[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bqhgk,bkhd->bqhgd",
+                                     ds.astype(jnp.bfloat16),
+                                     kj.astype(jnp.bfloat16),
+                                     preferred_element_type=jnp.float32)
+            dkj = jnp.einsum("bqhgk,bqhgd->bkhd", ds.astype(jnp.bfloat16),
+                             qi.astype(jnp.bfloat16),
+                             preferred_element_type=jnp.float32)
+            dk = jax.lax.dynamic_update_index_in_dim(
+                dk, jax.lax.dynamic_index_in_dim(dk, j, 1, keepdims=False)
+                + dkj, j, 1)
+            dv = jax.lax.dynamic_update_index_in_dim(
+                dv, jax.lax.dynamic_index_in_dim(dv, j, 1, keepdims=False)
+                + dvj, j, 1)
+            return (dq_i, dk, dv), None
+
+        dq0 = jnp.zeros((B, bq, KH, G, dh), jnp.float32)
+        (dq_i, dk, dv), _ = jax.lax.scan(
+            kv_step, (dq0, dk, dv), jnp.arange(n_win, dtype=jnp.int32))
+        return (dk, dv), dq_i.astype(q.dtype)
+
+    (dk, dv), dqs = jax.lax.scan(
+        q_block, (dk0, dv0),
+        (qb, qpb, dob, lseb, deltab, jnp.arange(nq, dtype=jnp.int32)))
+    dq = dqs.swapaxes(0, 1).reshape(B, Sq, KH, G, dh)
+    dk = dk.reshape(B, Sk, KH, dh).astype(k.dtype)
+    dv = dv.reshape(B, Sk, KH, dh).astype(v.dtype)
+    return dq, dk, dv, None, None, None
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,30 @@
+"""Stub modality frontends (per task spec: ``[audio]``/``[vlm]`` entries are
+backbone-only; ``input_specs()`` provides precomputed frame/patch embeddings).
+
+* ``audio_frames`` (musicgen): EnCodec is NOT run — the model consumes
+  precomputed frame embeddings (B, S, D_FRONTEND) summed over codebooks,
+  projected to d_model.  Targets are next-frame codebook-0 codes (vocab 2048).
+* ``vision`` (llama-3.2-vision): the ViT tower is NOT run — precomputed patch
+  embeddings (B, N_PATCHES, D_FRONTEND) are projected and fed to the gated
+  cross-attention layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+D_FRONTEND = {"audio_frames": 512, "vision": 1280}
+
+
+def frontend_init(key, cfg: ModelConfig) -> dict:
+    if cfg.frontend is None:
+        return {}
+    d_in = D_FRONTEND[cfg.frontend]
+    return {"proj": Ly.dense_init(key, d_in, cfg.d_model)}
+
+
+def frontend_apply(p, cfg: ModelConfig, embeds: jax.Array) -> jax.Array:
+    return Ly.dense(p["proj"], embeds.astype(jnp.bfloat16))

@@ -1,0 +1,75 @@
+"""Primitive layers: norms, RoPE, initializers. Pure functions over pytrees."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BF16 = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=BF16, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def dense(w, x):
+    """x @ w with f32 accumulation, result in x.dtype."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def rmsnorm_init(d: int, dtype=BF16):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * g.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=BF16):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                  # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : dh // 2], x32[..., dh // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=BF16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)

@@ -1,0 +1,289 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Routing is top-k softmax (Mixtral: 8e top-2; Arctic: 128e top-2 with a dense
+residual branch in parallel).  Dispatch is capacity-bounded scatter into
+per-expert buffers — tokens over capacity are dropped (standard GShard
+semantics; tests use a generous capacity_factor to compare against the dense
+oracle).
+
+Expert parallelism: experts are sharded over the mesh's ``model`` axis.  When
+a MeshContext is active, the layer runs under ``shard_map``: every model-rank
+computes router scores for its (replicated-over-model) local tokens, scatters
+the tokens destined to *its* experts, runs the local expert matmuls, and the
+partial outputs are combined with one ``psum`` over the model axis — the same
+collective shape as a TP FFN all-reduce, with deterministic layout (no SPMD
+partitioner guessing on scatter ops).  The cheaper all-to-all dispatch
+variant is a recorded §Perf hillclimb candidate (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import meshctx
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale_in, scale_out = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    p = {
+        "router": Ly.dense_init(ks[0], D, E, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * scale_in).astype(Ly.BF16),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * scale_in).astype(Ly.BF16),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * scale_out).astype(Ly.BF16),
+    }
+    return p
+
+
+def _route(router_w, cfg: ModelConfig, x2d):
+    """Top-k routing. Returns (expert_ids (T,k), combine_w (T,k))."""
+    logits = jnp.dot(x2d.astype(jnp.float32), router_w)        # (T, E)
+    top_vals, top_ids = jax.lax.top_k(logits, cfg.top_k)
+    combine = jax.nn.softmax(top_vals, axis=-1)                # (T, k)
+    return top_ids, combine
+
+
+@jax.custom_vjp
+def _bf16_grad(w):
+    """Identity with BF16 cotangent — keeps per-layer expert weight grads
+    (stacked over periods by the layer scan) out of f32 (paper §4.1:
+    gradients live in BF16)."""
+    return w
+
+
+def _bf16_grad_fwd(w):
+    return w, None
+
+
+def _bf16_grad_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def _expert_compute(wg, wu, wd, buf):
+    """buf: (E, C, D) → (E, C, D) bf16 through per-expert SwiGLU."""
+    # barrier: the CPU backend emulates bf16 dots by converting operands to
+    # f32; without the barrier XLA hoists that convert out of the layer scan
+    # and keeps an f32 copy of ALL stacked expert weights resident (TPU has
+    # native bf16 MXU dots — no such copy).  See EXPERIMENTS.md §Dry-run.
+    wg, wu, wd = jax.lax.optimization_barrier((wg, wu, wd))
+    wg, wu, wd = _bf16_grad(wg), _bf16_grad(wu), _bf16_grad(wd)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg,
+                               preferred_element_type=jnp.float32))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("ecf,efd->ecd", h.astype(jnp.bfloat16), wd,
+                     preferred_element_type=jnp.float32)
+    return out.astype(jnp.bfloat16)
+
+
+def _dispatch_combine(cfg: ModelConfig, x2d, expert_ids, combine,
+                      wg, wu, wd, e_lo: jax.Array, e_local: int):
+    """Capacity-scatter tokens routed to experts [e_lo, e_lo+e_local),
+    compute, and combine back to (T, D) (zeros for foreign experts)."""
+    T, D = x2d.shape
+    k = cfg.top_k
+    cap = max(8, int(np.ceil(cfg.capacity_factor * k * T / cfg.n_experts)))
+
+    flat_ids = expert_ids.reshape(-1)                    # (T*k,)
+    local = flat_ids - e_lo
+    mine = (local >= 0) & (local < e_local)
+    safe_local = jnp.where(mine, local, 0)
+    # position of each routed copy within its expert's capacity buffer
+    onehot = jax.nn.one_hot(jnp.where(mine, safe_local, e_local),
+                            e_local + 1, dtype=jnp.int32)  # drop row e_local
+    pos = jnp.cumsum(onehot, axis=0) - 1                  # (T*k, E_local+1)
+    my_pos = jnp.take_along_axis(pos, safe_local[:, None], 1)[:, 0]
+    keep = mine & (my_pos < cap)
+    slot = jnp.where(keep, safe_local * cap + my_pos, e_local * cap)
+
+    src = jnp.repeat(x2d, k, axis=0).astype(jnp.bfloat16)  # (T*k, D)
+    buf = jnp.zeros((e_local * cap + 1, D), jnp.bfloat16)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], src, 0))
+    buf = buf[:-1].reshape(e_local, cap, D)
+
+    out_buf = _expert_compute(wg, wu, wd, buf)            # (E_l, C, D) bf16
+    out_flat = out_buf.reshape(e_local * cap, D)
+    gathered = jnp.where(keep[:, None],
+                         jnp.take(out_flat,
+                                  jnp.minimum(slot, e_local * cap - 1),
+                                  axis=0),
+                         jnp.bfloat16(0.0))               # (T*k, D) bf16
+    w = (combine.reshape(-1) * keep).astype(jnp.bfloat16)
+    y = (gathered * w[:, None]).reshape(T, k, D).sum(1)
+    return y.astype(jnp.bfloat16)
+
+
+def _a2a_ep_body(cfg: ModelConfig, ctx, router, wg, wu, wd, xl,
+                 n_data: int, n_model: int):
+    """a2a expert parallelism (EXPERIMENTS.md §Perf A2): experts live 2-D
+    sharded — E over the data axis (E/n_data local), F over the model axis
+    (F/n_model local) — and never move.  Local tokens are routed with one
+    ``all_to_all`` over data to their expert-owner rank, computed against
+    the resident F-slice, psum'd over model (down-proj partials), and
+    a2a'd back.  Wire bytes per layer ≈ tokens·k·D ≪ the weight-gather
+    bytes the FSDP-EP baseline pays (the structural fix for arctic)."""
+    T_l, D = xl.shape
+    k = cfg.top_k
+    e_per_data = cfg.n_experts // n_data
+    # per-destination send capacity (uniform routing + slack)
+    cap = max(8, int(np.ceil(cfg.capacity_factor * k * T_l / n_data)))
+
+    ids, combine = _route(router, cfg, xl)              # (T_l, k)
+    flat_e = ids.reshape(-1)                            # (T_l·k,)
+    dst = flat_e // e_per_data                          # owner data-rank
+    # position within each destination's send buffer
+    onehot = jax.nn.one_hot(dst, n_data, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    my_pos = jnp.take_along_axis(pos, dst[:, None], 1)[:, 0]
+    keep = my_pos < cap
+    slot = jnp.where(keep, dst * cap + my_pos, n_data * cap)
+
+    src_tok = jnp.repeat(xl, k, axis=0).astype(jnp.bfloat16)
+    send = jnp.zeros((n_data * cap + 1, D), jnp.bfloat16)
+    send = send.at[slot].set(jnp.where(keep[:, None], src_tok, 0))
+    send = send[:-1].reshape(n_data, cap, D)
+    send_eid = jnp.full((n_data * cap + 1,), -1, jnp.int32)
+    send_eid = send_eid.at[slot].set(jnp.where(keep, flat_e, -1))
+    send_eid = send_eid[:-1].reshape(n_data, cap)
+
+    # dispatch: tiled all_to_all over the data axis (split/concat axis 0)
+    rflat = jax.lax.all_to_all(send.reshape(n_data * cap, D),
+                               ctx.data_axes[0], 0, 0, tiled=True)
+    rid = jax.lax.all_to_all(send_eid.reshape(n_data * cap),
+                             ctx.data_axes[0], 0, 0, tiled=True)
+    # local expert index ∈ [0, e_per_data)
+    rank_d = jax.lax.axis_index(ctx.data_axes[0])
+    local_e = rid - rank_d * e_per_data
+    mine = (rid >= 0) & (local_e >= 0) & (local_e < e_per_data)
+    safe_e = jnp.where(mine, local_e, e_per_data)
+    cap_e = max(8, int(np.ceil(cfg.capacity_factor * k * T_l * 2
+                               / e_per_data / n_data)))
+    oh = jax.nn.one_hot(safe_e, e_per_data + 1, dtype=jnp.int32)
+    pos_e = jnp.cumsum(oh, axis=0) - 1
+    my_pe = jnp.take_along_axis(pos_e, safe_e[:, None], 1)[:, 0]
+    keep_e = mine & (my_pe < cap_e)
+    slot_e = jnp.where(keep_e, safe_e * cap_e + my_pe, e_per_data * cap_e)
+    buf = jnp.zeros((e_per_data * cap_e + 1, D), jnp.bfloat16)
+    buf = buf.at[slot_e].set(jnp.where(keep_e[:, None], rflat, 0))
+    buf = buf[:-1].reshape(e_per_data, cap_e, D)
+
+    # resident F-sliced expert compute; psum over model completes down-proj
+    out_buf = _expert_compute(wg, wu, wd, buf)          # partial over F
+    out_buf = jax.lax.psum(out_buf.astype(jnp.float32),
+                           ctx.model_axis).astype(jnp.bfloat16)
+
+    # route back: gather per-slot outputs, reverse a2a, combine on source
+    out_flat = out_buf.reshape(e_per_data * cap_e, D)
+    back = jnp.where(keep_e[:, None],
+                     jnp.take(out_flat,
+                              jnp.minimum(slot_e, e_per_data * cap_e - 1),
+                              axis=0), jnp.bfloat16(0.0))
+    ret_flat = jax.lax.all_to_all(back.reshape(n_data * cap, D),
+                                  ctx.data_axes[0], 0, 0, tiled=True)
+    gathered = jnp.where(keep[:, None],
+                         jnp.take(ret_flat,
+                                  jnp.minimum(slot, n_data * cap - 1),
+                                  axis=0), jnp.bfloat16(0.0))
+    w = (combine.reshape(-1) * keep).astype(jnp.bfloat16)
+    y = (gathered * w[:, None]).reshape(T_l, k, D).sum(1)
+    return y.astype(jnp.bfloat16)
+
+
+def moe_apply(p, cfg: ModelConfig, x) -> jax.Array:
+    """x: (B, S, D) → (B, S, D)."""
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+    ctx = meshctx.get()
+
+    if ctx is None or ctx.model_size == 1 or cfg.n_experts < 2:
+        ids, combine = _route(p["router"], cfg, x2d)
+        y = _dispatch_combine(cfg, x2d, ids, combine, p["w_gate"], p["w_up"],
+                              p["w_down"], jnp.int32(0), cfg.n_experts)
+        return y.astype(x.dtype).reshape(B, S, D)
+
+    if cfg.moe_mode == "a2a":
+        n_data = ctx.mesh.shape[ctx.data_axes[0]]
+        n_model = ctx.model_size
+        assert cfg.n_experts % n_data == 0 and cfg.d_ff % n_model == 0
+        spec_w_up = P(ctx.data_axes[0], None, ctx.model_axis)
+        spec_w_dn = P(ctx.data_axes[0], ctx.model_axis, None)
+        n_batch = 1
+        for a in ctx.batch_axes:
+            n_batch *= ctx.mesh.shape[a]
+        tok_spec = (P(ctx.batch_axes, None)
+                    if x2d.shape[0] % n_batch == 0 else P(None, None))
+
+        @functools.partial(
+            jax.shard_map, mesh=ctx.mesh,
+            in_specs=(P(None, None), spec_w_up, spec_w_up, spec_w_dn,
+                      tok_spec),
+            out_specs=tok_spec,
+            check_vma=False)
+        def a2a_body(router, wg, wu, wd, xl):
+            return _a2a_ep_body(cfg, ctx, router, wg, wu, wd, xl,
+                                n_data, n_model)
+
+        y = a2a_body(p["router"], p["w_gate"], p["w_up"], p["w_down"], x2d)
+        return y.astype(x.dtype).reshape(B, S, D)
+
+    n_model = ctx.model_size
+    if cfg.n_experts % n_model == 0:
+        # EP: experts sharded over the model axis (arctic: 128e / 16)
+        e_local = cfg.n_experts // n_model
+        wg_spec = wu_spec = P(ctx.model_axis, None, None)
+        wd_spec = P(ctx.model_axis, None, None)
+        ep_mode = True
+    else:
+        # TP-inside-expert: all experts local, FFN hidden dim sharded
+        # (mixtral: 8e with model=16 → F/16 slices, psum after down-proj)
+        assert cfg.d_ff % n_model == 0, \
+            f"{cfg.name}: neither E={cfg.n_experts} nor F={cfg.d_ff} " \
+            f"divisible by model axis {n_model}"
+        e_local = cfg.n_experts
+        wg_spec = wu_spec = P(None, None, ctx.model_axis)
+        wd_spec = P(None, ctx.model_axis, None)
+        ep_mode = False
+
+    # decode cells can have fewer tokens than data shards (batch=1 long-
+    # context): fall back to replicated tokens (compute is tiny there)
+    n_batch = 1
+    for a in ctx.batch_axes:
+        n_batch *= ctx.mesh.shape[a]
+    tok_spec = P(ctx.batch_axes, None) if x2d.shape[0] % n_batch == 0 \
+        else P(None, None)
+
+    @functools.partial(
+        jax.shard_map, mesh=ctx.mesh,
+        in_specs=(P(None, None),                    # router (replicated)
+                  wg_spec, wu_spec, wd_spec,
+                  tok_spec),                        # tokens
+        out_specs=tok_spec,
+        check_vma=False)
+    def moe_body(router, wg, wu, wd, xl):
+        ids, combine = _route(router, cfg, xl)
+        if ep_mode:
+            rank = jax.lax.axis_index(ctx.model_axis)
+            e_lo = rank * e_local
+        else:
+            e_lo = jnp.int32(0)
+        y = _dispatch_combine(cfg, xl, ids, combine, wg, wu, wd,
+                              e_lo, e_local)
+        # EP: sums expert-shard contributions; TP: sums F-slice partials
+        return jax.lax.psum(y, ctx.model_axis)
+
+    y = moe_body(p["router"], p["w_gate"], p["w_up"], p["w_down"], x2d)
+    return y.astype(x.dtype).reshape(B, S, D)

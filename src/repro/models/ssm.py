@@ -1,0 +1,145 @@
+"""Mamba selective SSM (for hymba's parallel SSM heads).
+
+Training uses a *chunked associative scan*: the sequence is split into
+chunks; within a chunk the linear recurrence h_t = a_t·h_{t-1} + b_t is
+solved with ``jax.lax.associative_scan`` (log-depth, parallel), and the chunk
+boundary state is carried sequentially.  Transient memory is O(chunk), which
+is what lets the 500k-token cells compile (DESIGN.md §3).
+
+Decode carries (h, conv window) — O(1) per token regardless of context
+length: the reason SSM/hybrid archs run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+CONV_K = 4
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    D, DI, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    R = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": Ly.dense_init(ks[0], D, 2 * DI),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, DI), jnp.float32)
+                   * (1.0 / np.sqrt(CONV_K))).astype(Ly.BF16),
+        "conv_b": jnp.zeros((DI,), Ly.BF16),
+        "x_proj": Ly.dense_init(ks[2], DI, R + 2 * N),
+        "dt_proj": Ly.dense_init(ks[3], R, DI, scale=1.0 / np.sqrt(R)),
+        "dt_bias": jnp.full((DI,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (DI, N))),
+        "D_skip": jnp.ones((DI,), jnp.float32),
+        "out_proj": Ly.dense_init(ks[4], DI, D, scale=1.0 / np.sqrt(DI)),
+    }
+
+
+def _causal_conv(w, b, x, state=None):
+    """Depthwise causal conv, kernel CONV_K. x: (B, S, DI)."""
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)     # (B, K-1+S, DI)
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S] * w[i][None, None, :] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1):]
+    return out + b[None, None, :], new_state
+
+
+def _ssm_inner(p, cfg: ModelConfig, x_c, h0, chunk: int):
+    """Selective scan over (B, S, DI) with initial state h0 (B, DI, N)."""
+    B, S, DI = x_c.shape
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    proj = jnp.dot(x_c, p["x_proj"], preferred_element_type=jnp.float32)
+    dt_in, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(jnp.dot(dt_in, p["dt_proj"],
+                                 preferred_element_type=jnp.float32)
+                         + p["dt_bias"])                       # (B,S,DI)
+    A = -jnp.exp(p["A_log"])                                   # (DI, N)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x_c2 = jnp.pad(x_c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_c2 = x_c
+    nc = (S + pad) // chunk
+
+    def chunk_body(h, inp):
+        xc_w, dt_w, b_w, c_w = inp                             # (B,W,·)
+        decay = jnp.exp(dt_w[..., None] * A)                   # (B,W,DI,N)
+        inc = (dt_w * xc_w.astype(jnp.float32))[..., None] * b_w[:, :, None, :]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_pref, b_pref = jax.lax.associative_scan(comb, (decay, inc), axis=1)
+        hs = a_pref * h[:, None] + b_pref                      # (B,W,DI,N)
+        y = (hs * c_w[:, :, None, :]).sum(-1)                  # (B,W,DI)
+        return hs[:, -1], y
+
+    xs = (x_c2.reshape(B, nc, chunk, DI).swapaxes(0, 1),
+          dt.reshape(B, nc, chunk, DI).swapaxes(0, 1),
+          Bm.reshape(B, nc, chunk, N).swapaxes(0, 1),
+          Cm.reshape(B, nc, chunk, N).swapaxes(0, 1))
+    # remat: without it, autodiff saves the (B,W,DI,N) decay/prefix tensors
+    # of EVERY chunk — the full-sequence state blow-up chunking exists to
+    # avoid.  Rematerializing keeps only the (B,DI,N) boundary carries.
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, nc * chunk, DI)[:, :S]
+    y = y + p["D_skip"] * x_c.astype(jnp.float32)
+    return y, h_last
+
+
+def ssm_apply(p, cfg: ModelConfig, x, chunk: int = 128) -> jax.Array:
+    """Training forward. x: (B, S, D) → (B, S, D)."""
+    B, S, D = x.shape
+    xz = Ly.dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, _ = _causal_conv(p["conv_w"], p["conv_b"], x_in)
+    x_c = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    y, _ = _ssm_inner(p, cfg, x_c, h0, chunk)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return Ly.dense(p["out_proj"], y)
+
+
+class SSMCache(NamedTuple):
+    h: jax.Array           # (B, DI, N)
+    conv: jax.Array        # (B, CONV_K-1, DI)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    return SSMCache(jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+                    jnp.zeros((batch, CONV_K - 1, cfg.d_inner), Ly.BF16))
+
+
+def ssm_decode(p, cfg: ModelConfig, x, cache: SSMCache
+               ) -> Tuple[jax.Array, SSMCache]:
+    """One-token step. x: (B, 1, D)."""
+    xz = Ly.dense(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = _causal_conv(p["conv_w"], p["conv_b"],
+                                      x_in, cache.conv.astype(x_in.dtype))
+    x_c = jax.nn.silu(x_conv.astype(jnp.float32)).astype(x.dtype)
+    y, h = _ssm_inner(p, cfg, x_c, cache.h, chunk=1)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return Ly.dense(p["out_proj"], y), SSMCache(h, conv_state.astype(Ly.BF16))

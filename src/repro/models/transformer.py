@@ -1,0 +1,275 @@
+"""Decoder backbone: assembles blocks from a ModelConfig pattern.
+
+Parameters for each pattern position are stacked over ``n_periods`` and the
+forward pass is a ``lax.scan`` over periods — HLO size stays O(period)
+regardless of depth (48-layer musicgen compiles as fast as 2 layers), and
+each period body is rematerialized (``jax.checkpoint``) so training
+activation memory is one period's boundary, not the full depth.
+
+The LM head is NOT part of the backbone: training composes
+``backbone_apply`` under ``jax.vjp`` with the ELMO head's chunked
+fwd/bwd/update (launch/train.py), reproducing the paper's computation
+ordering.  ``hidden_for_head`` below is that seam.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as Attn
+from repro.models import ffn as Ffn
+from repro.models import frontends as Fe
+from repro.models import layers as Ly
+from repro.models import moe as Moe
+from repro.models import ssm as Ssm
+from repro.models import xlstm as Xl
+from repro.models.config import BlockSpec, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, bs: BlockSpec) -> Dict[str, Any]:
+    ks = iter(jax.random.split(key, 12))
+    p: Dict[str, Any] = {"norm1": Ly.rmsnorm_init(cfg.d_model)}
+    if bs.kind == "attn":
+        p["attn"] = Attn.attn_init(next(ks), cfg)
+    elif bs.kind == "mamba":
+        p["ssm"] = Ssm.ssm_init(next(ks), cfg)
+    elif bs.kind == "hymba":
+        p["attn"] = Attn.attn_init(next(ks), cfg)
+        p["ssm"] = Ssm.ssm_init(next(ks), cfg)
+        p["norm_attn_out"] = Ly.rmsnorm_init(cfg.d_model)
+        p["norm_ssm_out"] = Ly.rmsnorm_init(cfg.d_model)
+    elif bs.kind == "mlstm":
+        p["mlstm"] = Xl.mlstm_init(next(ks), cfg)
+    elif bs.kind == "slstm":
+        p["slstm"] = Xl.slstm_init(next(ks), cfg)
+    else:
+        raise ValueError(bs.kind)
+    if bs.cross_attn:
+        p["norm_cross"] = Ly.rmsnorm_init(cfg.d_model)
+        p["cross"] = Attn.attn_init(next(ks), cfg, cross=True)
+    if bs.ffn != "none":
+        p["norm2"] = Ly.rmsnorm_init(cfg.d_model)
+        if bs.moe:
+            p["moe"] = Moe.moe_init(next(ks), cfg)
+            if cfg.moe_dense_residual:
+                p["ffn"] = Ffn.ffn_init(next(ks), cfg, bs.ffn)
+        else:
+            p["ffn"] = Ffn.ffn_init(next(ks), cfg, bs.ffn)
+    return p
+
+
+def _mixer_train(p, cfg: ModelConfig, bs: BlockSpec, x, positions):
+    if bs.kind == "attn":
+        return Attn.self_attention(p["attn"], cfg, x, positions)
+    if bs.kind == "mamba":
+        return Ssm.ssm_apply(p["ssm"], cfg, x)
+    if bs.kind == "hymba":
+        a = Attn.self_attention(p["attn"], cfg, x, positions)
+        m = Ssm.ssm_apply(p["ssm"], cfg, x)
+        return 0.5 * (Ly.rmsnorm(p["norm_attn_out"], a, cfg.norm_eps)
+                      + Ly.rmsnorm(p["norm_ssm_out"], m, cfg.norm_eps))
+    if bs.kind == "mlstm":
+        return Xl.mlstm_apply(p["mlstm"], cfg, x)
+    if bs.kind == "slstm":
+        return Xl.slstm_apply(p["slstm"], cfg, x)
+    raise ValueError(bs.kind)
+
+
+def _ffn_part(p, cfg: ModelConfig, bs: BlockSpec, x):
+    if bs.ffn == "none":
+        return jnp.zeros_like(x)
+    h = Ly.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if bs.moe:
+        y = Moe.moe_apply(p["moe"], cfg, h)
+        if cfg.moe_dense_residual:
+            y = y + Ffn.ffn_apply(p["ffn"], h, bs.ffn)
+        return y
+    return Ffn.ffn_apply(p["ffn"], h, bs.ffn)
+
+
+def block_apply(p, cfg: ModelConfig, bs: BlockSpec, x, positions,
+                ctx: Optional[jax.Array]) -> jax.Array:
+    h = Ly.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    x = x + _mixer_train(p, cfg, bs, h, positions)
+    if bs.cross_attn:
+        assert ctx is not None, f"{cfg.name}: cross-attn needs ctx embeddings"
+        x = x + Attn.cross_attention(
+            p["cross"], cfg, Ly.rmsnorm(p["norm_cross"], x, cfg.norm_eps), ctx)
+    return x + _ffn_part(p, cfg, bs, x)
+
+
+# ---------------------------------------------------------------------------
+# decode-step block (one token, stateful)
+# ---------------------------------------------------------------------------
+
+
+def block_cache_init(cfg: ModelConfig, bs: BlockSpec, batch: int,
+                     max_len: int):
+    c: Dict[str, Any] = {}
+    if bs.kind in ("attn", "hymba"):
+        c["kv"] = Attn.init_cache(cfg, batch, max_len)
+    if bs.kind in ("mamba", "hymba"):
+        c["ssm"] = Ssm.init_ssm_cache(cfg, batch)
+    if bs.kind == "mlstm":
+        c["mlstm"] = Xl.init_mlstm_cache(cfg, batch)
+    if bs.kind == "slstm":
+        c["slstm"] = Xl.init_slstm_cache(cfg, batch)
+    return c
+
+
+def block_decode(p, cfg: ModelConfig, bs: BlockSpec, x, cache,
+                 ctx: Optional[jax.Array]):
+    h = Ly.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    new_cache = dict(cache)
+    if bs.kind == "attn":
+        y, new_cache["kv"] = Attn.decode_self_attention(p["attn"], cfg, h,
+                                                        cache["kv"])
+    elif bs.kind == "mamba":
+        y, new_cache["ssm"] = Ssm.ssm_decode(p["ssm"], cfg, h, cache["ssm"])
+    elif bs.kind == "hymba":
+        a, new_cache["kv"] = Attn.decode_self_attention(p["attn"], cfg, h,
+                                                        cache["kv"])
+        m, new_cache["ssm"] = Ssm.ssm_decode(p["ssm"], cfg, h, cache["ssm"])
+        y = 0.5 * (Ly.rmsnorm(p["norm_attn_out"], a, cfg.norm_eps)
+                   + Ly.rmsnorm(p["norm_ssm_out"], m, cfg.norm_eps))
+    elif bs.kind == "mlstm":
+        y, new_cache["mlstm"] = Xl.mlstm_decode(p["mlstm"], cfg, h,
+                                                cache["mlstm"])
+    elif bs.kind == "slstm":
+        y, new_cache["slstm"] = Xl.slstm_decode(p["slstm"], cfg, h,
+                                                cache["slstm"])
+    else:
+        raise ValueError(bs.kind)
+    x = x + y
+    if bs.cross_attn:
+        x = x + Attn.cross_attention(
+            p["cross"], cfg, Ly.rmsnorm(p["norm_cross"], x, cfg.norm_eps), ctx)
+    return x + _ffn_part(p, cfg, bs, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# backbone
+# ---------------------------------------------------------------------------
+
+
+class Backbone(NamedTuple):
+    embed: jax.Array
+    frontend: Dict[str, Any]
+    periods: Tuple[Dict[str, Any], ...]   # one stacked tree per pattern slot
+    final_norm: jax.Array
+
+
+def backbone_init(key, cfg: ModelConfig) -> Backbone:
+    cfg.validate()
+    k_embed, k_front, k_layers = jax.random.split(key, 3)
+    embed = Ly.embed_init(k_embed, cfg.vocab, cfg.d_model)
+    frontend = Fe.frontend_init(k_front, cfg)
+
+    def init_slot(bs: BlockSpec, slot_key):
+        keys = jax.random.split(slot_key, cfg.n_periods)
+        return jax.vmap(lambda k: block_init(k, cfg, bs))(keys)
+
+    slot_keys = jax.random.split(k_layers, cfg.period)
+    periods = tuple(init_slot(bs, sk)
+                    for bs, sk in zip(cfg.pattern, slot_keys))
+    return Backbone(embed, frontend, periods, Ly.rmsnorm_init(cfg.d_model))
+
+
+def _embed_inputs(params: Backbone, cfg: ModelConfig, tokens,
+                  frontend_embeds):
+    if cfg.frontend == "audio_frames":
+        return Fe.frontend_apply(params.frontend, cfg, frontend_embeds), None
+    x = Ly.embed_lookup(params.embed, tokens)
+    ctx = None
+    if cfg.frontend == "vision":
+        ctx = Fe.frontend_apply(params.frontend, cfg, frontend_embeds)
+    return x, ctx
+
+
+def _seq_shard(x: jax.Array) -> jax.Array:
+    """Sequence parallelism (Megatron-SP style): period-boundary activations
+    — the tensors remat SAVES for the backward pass — are sharded over the
+    model axis along S, so saved-activation memory scales with the full
+    chip count instead of only the data axis.  XLA inserts the all-gather /
+    reduce-scatter pair around each block from this constraint alone."""
+    from repro.dist import meshctx
+    ctx = meshctx.get()
+    if ctx is None or ctx.model_size <= 1 or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    if ctx.model_axis in ctx.batch_axes:   # fsdp_pure: no SP, batch only
+        return jax.lax.with_sharding_constraint(
+            x, P(ctx.batch_axes, None, None))
+    if x.shape[1] % ctx.model_size != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(ctx.batch_axes, ctx.model_axis, None))
+
+
+def backbone_apply(params: Backbone, cfg: ModelConfig, tokens: jax.Array,
+                   frontend_embeds: Optional[jax.Array] = None,
+                   remat: bool = True) -> jax.Array:
+    """tokens: (B, S) int32 → hidden (B, S, D) bf16 (pre-head)."""
+    x, ctx = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def period_body(x, period_slice):
+        x = _seq_shard(x)
+        for bs, p in zip(cfg.pattern, period_slice):
+            x = block_apply(p, cfg, bs, x, positions, ctx)
+        return _seq_shard(x), None
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x = _seq_shard(x)
+    x, _ = jax.lax.scan(lambda c, xs: body(c, xs), x, params.periods)
+    return Ly.rmsnorm(params.final_norm, x, cfg.norm_eps)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    def stack(bs):
+        one = block_cache_init(cfg, bs, batch, max_len)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy()
+            if hasattr(a, "shape") else a, one)
+    return tuple(stack(bs) for bs in cfg.pattern)
+
+
+def backbone_decode_step(params: Backbone, cfg: ModelConfig,
+                         token: jax.Array, caches,
+                         frontend_embeds: Optional[jax.Array] = None):
+    """token: (B, 1) int32 (or (B,1,D_frontend) embeds for audio) → hidden
+    (B, 1, D) + updated caches.
+
+    Caches ride in the scan CARRY and are updated slice-in-place
+    (dynamic_update_index), so XLA aliases one cache buffer instead of
+    double-buffering xs→ys — at 32k context this halves decode memory."""
+    x, ctx = _embed_inputs(params, cfg, token, frontend_embeds)
+
+    def period_body(carry, inp):
+        x, caches = carry
+        param_slice, j = inp
+        cache_slice = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False),
+            caches)
+        new_slices = []
+        for bs, p, c in zip(cfg.pattern, param_slice, cache_slice):
+            x, c_new = block_decode(p, cfg, bs, x, c, ctx)
+            new_slices.append(c_new)
+        caches = jax.tree.map(
+            lambda a, s: jax.lax.dynamic_update_index_in_dim(
+                a, s.astype(a.dtype), j, 0),
+            caches, tuple(new_slices))
+        return (x, caches), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        period_body, (x, caches),
+        (params.periods, jnp.arange(cfg.n_periods, dtype=jnp.int32)))
+    return Ly.rmsnorm(params.final_norm, x, cfg.norm_eps), new_caches

@@ -1,0 +1,235 @@
+"""xLSTM blocks: chunk-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+mLSTM (Beck et al. 2024) is fully parallelizable: within a chunk the output
+is an attention-like einsum weighted by cumulative exponential gates, and
+only the (dh × dh) matrix memory crosses chunk boundaries.  Gate pre-
+activations are clamped so all exponentials stay in f32 range (in place of
+the paper's m-stabilizer state — the clamp bounds every exponent by
+construction).  sLSTM has genuine recurrence (gates see h_{t-1} through a
+per-head recurrent matrix), so it scans sequentially over time — that is its
+honest cost, noted in DESIGN.md.
+
+Decode carries (C, n) / (c, n, h) — O(1) state per token, which is why
+xlstm runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as Ly
+from repro.models.config import ModelConfig
+
+GATE_CLAMP = 5.0
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.mlstm_heads
+    assert cfg.d_model % H == 0
+    return H, cfg.d_model // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, _ = _heads(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_q": Ly.dense_init(ks[0], D, D),
+        "w_k": Ly.dense_init(ks[1], D, D),
+        "w_v": Ly.dense_init(ks[2], D, D),
+        "w_z": Ly.dense_init(ks[3], D, D),             # output gate branch
+        "w_i": Ly.dense_init(ks[4], D, H, dtype=jnp.float32),
+        "w_f": Ly.dense_init(ks[5], D, H, dtype=jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),    # start remembering
+        "w_o": Ly.dense_init(ks[6], D, D),
+    }
+
+
+def _mlstm_gates(p, x):
+    logf = jax.nn.log_sigmoid(
+        jnp.dot(x.astype(jnp.float32), p["w_f"]) + p["f_bias"])
+    logi = jnp.clip(jnp.dot(x.astype(jnp.float32), p["w_i"]),
+                    -GATE_CLAMP, GATE_CLAMP)
+    return logf, logi                                   # (B, S, H)
+
+
+def _mlstm_chunk(q, k, v, logf, logi, C0, n0, scale):
+    """One chunk of the mLSTM recurrence, fully parallel.
+
+    q,k,v: (B,W,H,dh); logf/logi: (B,W,H); C0: (B,H,dh,dh); n0: (B,H,dh).
+    """
+    F = jnp.cumsum(logf, axis=1)                        # (B,W,H) inclusive
+    # intra-chunk decay weights M_ij = exp(F_i − F_j + logi_j), j ≤ i
+    diff = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+    W = q.shape[1]
+    tri = jnp.tril(jnp.ones((W, W), bool))
+    M = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)  # (B,i,j,H)
+    s = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    sw = s * M
+    num_intra = jnp.einsum("bijh,bjhd->bihd", sw, v.astype(jnp.float32))
+    den_intra = sw.sum(2)                               # Σ_j weights·(q·k)
+    eF = jnp.exp(F)[..., None]                          # (B,W,H,1)
+    num_inter = jnp.einsum("bihd,bhde->bihe", q.astype(jnp.float32) * eF, C0)
+    den_inter = jnp.einsum("bihd,bhd->bih", q.astype(jnp.float32) * eF, n0)
+    num = num_intra + num_inter
+    den = jnp.abs(den_intra + den_inter)
+    h = num / jnp.maximum(den, 1.0)[..., None]          # (B,W,H,dh)
+
+    # state update to chunk end
+    last = F[:, -1:, :]                                  # (B,1,H)
+    wgt = jnp.exp(last - F + logi)[..., None]            # (B,W,H,1)
+    C1 = C0 * jnp.exp(last[..., None]).swapaxes(1, 2) \
+        + jnp.einsum("bjhd,bjhe->bhde", k.astype(jnp.float32) * wgt,
+                     v.astype(jnp.float32))
+    n1 = n0 * jnp.exp(last).swapaxes(1, 2)[..., 0][..., None] \
+        + (k.astype(jnp.float32) * wgt).sum(1)
+    return h, C1, n1
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, chunk: int = 64) -> jax.Array:
+    B, S, D = x.shape
+    H, dh = _heads(cfg)
+    q = Ly.dense(p["w_q"], x).reshape(B, S, H, dh)
+    k = Ly.dense(p["w_k"], x).reshape(B, S, H, dh)
+    v = Ly.dense(p["w_v"], x).reshape(B, S, H, dh)
+    logf, logi = _mlstm_gates(p, x)
+    scale = 1.0 / np.sqrt(dh)
+
+    Wc = min(chunk, S)
+    pad = (-S) % Wc
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-GATE_CLAMP * 10)
+    nc = (S + pad) // Wc
+
+    def body(carry, inp):
+        C0, n0 = carry
+        qc, kc, vc, lfc, lic = inp
+        h, C1, n1 = _mlstm_chunk(qc, kc, vc, lfc, lic, C0, n0, scale)
+        return (C1, n1), h
+
+    xs = (q.reshape(B, nc, Wc, H, dh).swapaxes(0, 1),
+          k.reshape(B, nc, Wc, H, dh).swapaxes(0, 1),
+          v.reshape(B, nc, Wc, H, dh).swapaxes(0, 1),
+          logf.reshape(B, nc, Wc, H).swapaxes(0, 1),
+          logi.reshape(B, nc, Wc, H).swapaxes(0, 1))
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    # remat: keep only (C, n) boundary states, not per-chunk (W,W) weights
+    _, hs = jax.lax.scan(jax.checkpoint(body), (C0, n0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, nc * Wc, H * dh)[:, :S]
+    z = jax.nn.silu(Ly.dense(p["w_z"], x).astype(jnp.float32))
+    return Ly.dense(p["w_o"], (h * z).astype(x.dtype))
+
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array    # (B, H, dh, dh)
+    n: jax.Array    # (B, H, dh)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    H, dh = _heads(cfg)
+    return MLSTMCache(jnp.zeros((batch, H, dh, dh), jnp.float32),
+                      jnp.zeros((batch, H, dh), jnp.float32))
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, cache: MLSTMCache):
+    B = x.shape[0]
+    H, dh = _heads(cfg)
+    q = Ly.dense(p["w_q"], x).reshape(B, 1, H, dh)
+    k = Ly.dense(p["w_k"], x).reshape(B, 1, H, dh)
+    v = Ly.dense(p["w_v"], x).reshape(B, 1, H, dh)
+    logf, logi = _mlstm_gates(p, x)
+    h, C1, n1 = _mlstm_chunk(q, k, v, logf, logi, cache.C, cache.n,
+                             1.0 / np.sqrt(dh))
+    z = jax.nn.silu(Ly.dense(p["w_z"], x).astype(jnp.float32))
+    y = Ly.dense(p["w_o"], (h.reshape(B, 1, H * dh) * z).astype(x.dtype))
+    return y, MLSTMCache(C1, n1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential (true recurrence through h_{t-1})
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, dh = _heads(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": Ly.dense_init(ks[0], D, 4 * D),        # z, i, f, o branches
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+              / np.sqrt(dh)).astype(jnp.float32),
+        "bias": jnp.concatenate([jnp.zeros((2 * D,), jnp.float32),
+                                 jnp.full((D,), 3.0, jnp.float32),
+                                 jnp.zeros((D,), jnp.float32)]),
+        "w_o": Ly.dense_init(ks[2], D, D),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array    # (B, H, dh)
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array    # stabilizer (B, H, dh)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    H, dh = _heads(cfg)
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return SLSTMCache(z, z + 1e-6, z, z - 10.0)
+
+
+def _slstm_step(p, cfg: ModelConfig, xt, cache: SLSTMCache):
+    """xt: (B, D) — one timestep."""
+    B = xt.shape[0]
+    H, dh = _heads(cfg)
+    pre = (jnp.dot(xt.astype(jnp.float32),
+                   p["w_in"].astype(jnp.float32)) + p["bias"])
+    pre = pre.reshape(B, 4, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", cache.h, p["r"])
+    z_t = jnp.tanh(pre[:, 0] + rec[:, 0])
+    i_t = jnp.clip(pre[:, 1] + rec[:, 1], -GATE_CLAMP * 3, GATE_CLAMP * 3)
+    f_t = pre[:, 2] + rec[:, 2]
+    o_t = jax.nn.sigmoid(pre[:, 3] + rec[:, 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + cache.m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + cache.m - m_new)
+    c_new = f_p * cache.c + i_p * z_t
+    n_new = f_p * cache.n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMCache(c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(p, cfg: ModelConfig, x) -> jax.Array:
+    B, S, D = x.shape
+    H, dh = _heads(cfg)
+
+    def body(cache, xt):
+        cache = _slstm_step(p, cfg, xt, cache)
+        return cache, cache.h
+
+    cache0 = init_slstm_cache(cfg, B)
+    _, hs = jax.lax.scan(body, cache0, x.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, D)
+    return Ly.dense(p["w_o"], h.astype(x.dtype))
+
+
+def slstm_decode(p, cfg: ModelConfig, x, cache: SLSTMCache):
+    B = x.shape[0]
+    cache = _slstm_step(p, cfg, x[:, 0], cache)
+    y = Ly.dense(p["w_o"], cache.h.reshape(B, 1, -1).astype(x.dtype))
+    return y, cache

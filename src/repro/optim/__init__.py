@@ -1,0 +1,16 @@
+"""Pure-pytree optimizers (no optax dependency).
+
+* ``kahan_adamw`` — pure-BF16 AdamW with Kahan-compensated parameter updates
+  (paper §4.1: the encoder optimizer; optimi-style).
+* ``sgd_sr``      — momentum-free SGD with stochastic rounding (paper §4.2:
+  the classifier optimizer, for non-fused tensors).
+* ``adamw``       — plain f32 AdamW (oracle/baseline) and an "mpt" variant
+  with f32 master weights + low-precision compute copies (Renee-style).
+"""
+from repro.optim.adamw import adamw, mpt_adamw
+from repro.optim.kahan_adamw import kahan_adamw
+from repro.optim.schedules import linear_warmup_cosine, linear_warmup_constant
+from repro.optim.sgd_sr import sgd_sr
+
+__all__ = ["adamw", "mpt_adamw", "kahan_adamw", "sgd_sr",
+           "linear_warmup_cosine", "linear_warmup_constant"]

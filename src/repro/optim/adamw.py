@@ -1,0 +1,107 @@
+"""f32 AdamW (oracle) and Renee-style mixed-precision AdamW (baseline).
+
+``mpt_adamw`` reproduces what the paper criticizes (§3, Fig. 1): f32 master
+weights + ephemeral low-precision compute copies + loss-scaled low-precision
+gradients upcast to f32 for the update.  It exists so benchmarks can measure
+the memory/stability gap against ELMO's pure-low-precision recipe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+class AdamWState(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        return jax.tree.map(
+            lambda p: AdamWState(jnp.zeros_like(p, jnp.float32),
+                                 jnp.zeros_like(p, jnp.float32)), params,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(params, state, grads, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        bc1, bc2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+        def upd(p, s, g):
+            g32 = g.astype(jnp.float32)
+            m = s.m * b1 + (1 - b1) * g32
+            v = s.v * b2 + (1 - b2) * g32 * g32
+            delta = -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) + delta).astype(p.dtype), \
+                AdamWState(m, v)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_s = treedef.flatten_up_to(state)
+        flat_g = treedef.flatten_up_to(grads)
+        out = [upd(p, s, g) for p, s, g in zip(flat_p, flat_s, flat_g)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+class MPTState(NamedTuple):
+    master: jax.Array        # f32 master copy (the memory cost Renee pays)
+    m: jax.Array
+    v: jax.Array
+    loss_scale: jax.Array    # dynamic loss scale (FP16-era machinery)
+    good_steps: jax.Array
+
+
+def mpt_adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+              weight_decay: float = 0.01, init_scale: float = 2.0 ** 16,
+              growth_interval: int = 2000) -> Optimizer:
+    """FP16-style MPT: params are the *low-precision* copies; the state holds
+    f32 masters.  ``grads`` are expected pre-multiplied by ``loss_scale``;
+    non-finite grads skip the step and halve the scale (torch.amp semantics).
+    """
+
+    def init(params):
+        def mk(p):
+            return MPTState(p.astype(jnp.float32),
+                            jnp.zeros(p.shape, jnp.float32),
+                            jnp.zeros(p.shape, jnp.float32),
+                            jnp.float32(init_scale), jnp.int32(0))
+        return jax.tree.map(mk, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(params, state, grads, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        bc1, bc2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+        def upd(p, s, g):
+            g32 = g.astype(jnp.float32) / s.loss_scale
+            finite = jnp.isfinite(g32).all()
+            m = jnp.where(finite, s.m * b1 + (1 - b1) * g32, s.m)
+            v = jnp.where(finite, s.v * b2 + (1 - b2) * g32 * g32, s.v)
+            delta = -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                           + weight_decay * s.master)
+            master = jnp.where(finite, s.master + delta, s.master)
+            good = jnp.where(finite, s.good_steps + 1, 0)
+            scale = jnp.where(
+                finite,
+                jnp.where(good >= growth_interval, s.loss_scale * 2.0,
+                          s.loss_scale),
+                s.loss_scale * 0.5)
+            good = jnp.where(good >= growth_interval, 0, good)
+            return master.astype(p.dtype), MPTState(master, m, v, scale, good)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_s = treedef.flatten_up_to(state)
+        flat_g = treedef.flatten_up_to(grads)
+        out = [upd(p, s, g) for p, s, g in zip(flat_p, flat_s, flat_g)]
+        return (treedef.unflatten([o[0] for o in out]),
+                treedef.unflatten([o[1] for o in out]))
+
+    return Optimizer(init=init, update=update, name="mpt_adamw")

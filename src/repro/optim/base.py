@@ -1,0 +1,36 @@
+"""Optimizer protocol: a pair of pure functions over parameter pytrees.
+
+    init(params)                          -> state
+    update(params, state, grads, step, lr) -> (new_params, new_state)
+
+``step`` is a 0-d int32; ``lr`` a 0-d f32 (schedules live outside).  All
+optimizers are jit/pjit-compatible and donate-friendly (states are pytrees of
+arrays with stable treedefs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+
+Params = Any
+State = Any
+Grads = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], State]
+    update: Callable[[Params, State, Grads, jax.Array, jax.Array],
+                     Tuple[Params, State]]
+    name: str = "optimizer"
+
+
+def leaf_seed(path_index: int, step: jax.Array) -> jax.Array:
+    """Deterministic per-leaf, per-step PRNG seed for SR optimizers."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import prng_utils as PR
+    return PR.mix32(step.astype(jnp.uint32) * np.uint32(0x9E3779B9)
+                    + np.uint32(path_index * 7919 + 1))

@@ -1,0 +1,60 @@
+"""Pure-BF16 AdamW with Kahan-compensated updates (paper §4.1).
+
+Parameters, moments, and the compensation buffer are all stored BF16 — no
+f32 master copy (that is the whole point vs. mixed-precision training).
+Arithmetic is f32 inside the step.  Memory per parameter: 2 (p) + 2 (m) +
+2 (v) + 2 (c) = 8 bytes, vs. 16 for f32 AdamW w/ bf16 copy (see
+core/memory_model.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as P
+from repro.optim.base import Optimizer
+
+
+class KahanAdamWState(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+    comp: jax.Array
+
+
+def kahan_adamw(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.01,
+                store_dtype=P.BF16) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, store_dtype)
+        return jax.tree.map(
+            lambda p: KahanAdamWState(zeros(p), zeros(p), zeros(p)), params,
+            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def update(params, state, grads, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, s, g):
+            g32 = g.astype(jnp.float32)
+            m32 = s.m.astype(jnp.float32) * b1 + (1.0 - b1) * g32
+            v32 = s.v.astype(jnp.float32) * b2 + (1.0 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+            p_new, c_new = P.kahan_update(p, s.comp, delta)
+            return p_new, KahanAdamWState(m32.astype(store_dtype),
+                                          v32.astype(store_dtype), c_new)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_s = treedef.flatten_up_to(state)
+        flat_g = treedef.flatten_up_to(grads)
+        out = [upd(p, s, g) for p, s, g in zip(flat_p, flat_s, flat_g)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, new_s
+
+    return Optimizer(init=init, update=update, name="kahan_adamw")

@@ -1,0 +1,79 @@
+"""Partitioned optimizer: route parameter subsets to different optimizers.
+
+Beyond-paper extension (DESIGN.md §3, arctic-480b): at 469B expert
+parameters, AdamW-with-Kahan costs 8 bytes/param of optimizer state.  The
+ELMO recipe for the *classifier* — momentum-free SGD + stochastic rounding,
+zero state (§4.2) — applies verbatim to any parameter block whose memory
+dominates, so expert weights get ``sgd_sr`` while the (tiny) attention /
+norm / router parameters keep Kahan-AdamW.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.optim.base import Optimizer
+
+
+def partitioned(route: Callable[[str], str], opts: dict[str, Optimizer]
+                ) -> Optimizer:
+    """``route(path_string) -> key in opts``; each group steps independently."""
+
+    def _paths(tree):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", getattr(
+            k, "name", k)))) for k in path) for path, _ in flat]
+        return paths, [leaf for _, leaf in flat], treedef
+
+    def _split(tree):
+        paths, leaves, treedef = _paths(tree)
+        groups = {name: [] for name in opts}
+        for p, leaf in zip(paths, leaves):
+            for name in opts:
+                groups[name].append(leaf if route(p) == name else None)
+        return groups, treedef
+
+    def _mask_tree(treedef, leaves):
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def init(params):
+        groups, treedef = _split(params)
+        states = {}
+        for name, opt in opts.items():
+            # masked leaves become empty states; store per-group full trees
+            masked = _mask_tree(
+                treedef, [l if l is not None else jax.numpy.zeros((0,))
+                          for l in groups[name]])
+            states[name] = opt.init(masked)
+        return states
+
+    def update(params, state, grads, step, lr):
+        paths, p_leaves, treedef = _paths(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        out_leaves = list(p_leaves)
+        new_states = {}
+        for name, opt in opts.items():
+            sel = [i for i, p in enumerate(paths) if route(p) == name]
+            if not sel:
+                new_states[name] = state[name]
+                continue
+            sub_p = _mask_tree(
+                treedef, [p_leaves[i] if i in set(sel)
+                          else jax.numpy.zeros((0,)) for i in range(len(paths))])
+            sub_g = _mask_tree(
+                treedef, [g_leaves[i] if i in set(sel)
+                          else jax.numpy.zeros((0,)) for i in range(len(paths))])
+            new_p, new_s = opt.update(sub_p, state[name], sub_g, step, lr)
+            new_p_leaves = treedef.flatten_up_to(new_p)
+            for i in sel:
+                out_leaves[i] = new_p_leaves[i]
+            new_states[name] = new_s
+        return jax.tree_util.tree_unflatten(treedef, out_leaves), new_states
+
+    return Optimizer(init=init, update=update, name="partitioned")
+
+
+def expert_route(path: str) -> str:
+    """arctic-480b routing: giant MoE expert tensors → ELMO SGD-SR."""
+    return "expert" if ("moe" in path and "router" not in path) else "base"

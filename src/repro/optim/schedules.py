@@ -1,0 +1,24 @@
+"""Learning-rate schedules (paper Table 9 uses linear warmup + constant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_constant(base_lr: float, warmup_steps: int):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        return jnp.float32(base_lr) * w
+    return schedule
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(base_lr) * w * cos
+    return schedule

@@ -1,0 +1,70 @@
+"""Momentum-free SGD with stochastic rounding (paper §4.1–4.2).
+
+The classifier-side optimizer: zero state (momentum removed, §4.2), updates
+applied with SR so sub-ulp steps make progress in BF16/E4M3 storage.  The
+ELMO head normally applies this *fused* inside the Pallas update kernel;
+this standalone version covers non-fused tensors (and the beyond-paper
+option of giving giant MoE expert weights the same treatment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as P
+from repro.kernels import prng_utils as PR
+from repro.optim.base import Optimizer, leaf_seed
+
+
+def _sr_apply(p_new32: jax.Array, dtype, seed: jax.Array) -> jax.Array:
+    # N-D hash: elementwise, preserves sharding (a flatten here would force
+    # XLA to gather giant sharded parameters — see EXPERIMENTS.md §Dry-run)
+    bits = PR.hash_bits_nd(seed, p_new32.shape)
+    if jnp.dtype(dtype) == jnp.dtype(P.BF16):
+        return P.sr_bits_bf16(p_new32, bits)
+    if jnp.dtype(dtype) == jnp.dtype(P.E4M3):
+        return P.sr_bits_e4m3(p_new32, bits)
+    return p_new32.astype(dtype)
+
+
+# leaves above this element count are updated chunk-by-chunk over their
+# leading (period-stack) axis — the paper's chunking idea applied to the
+# optimizer, bounding f32/bits temporaries to one slice at a time
+_CHUNKED_UPDATE_ELEMS = 1 << 27
+
+
+def sgd_sr(weight_decay: float = 0.0, use_sr: bool = True) -> Optimizer:
+    def init(params):
+        return ()  # stateless — the paper's memory point
+
+    def _one(p, g, lr, seed):
+        # barrier: stops XLA from commuting this convert with the chunk
+        # dynamic-slice and hoisting a full-tensor f32 copy out of the loop
+        p, g = jax.lax.optimization_barrier((p, g))
+        p32 = p.astype(jnp.float32)
+        p_new = p32 * (1.0 - lr * weight_decay) - lr * g.astype(jnp.float32)
+        if use_sr and p.dtype in (jnp.dtype(P.BF16), jnp.dtype(P.E4M3)):
+            return _sr_apply(p_new, p.dtype, seed)
+        return p_new.astype(p.dtype)
+
+    def update(params, state, grads, step, lr):
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        out = []
+        for i, (p, g) in enumerate(zip(flat_p, flat_g)):
+            seed = leaf_seed(i, step)
+            if p.size > _CHUNKED_UPDATE_ELEMS and p.ndim >= 2 \
+                    and p.shape[0] > 1:
+                def body(_, inp):
+                    pj, gj, j = inp
+                    return None, _one(pj, gj, lr,
+                                      seed + j.astype(jnp.uint32))
+                _, p_new = jax.lax.scan(
+                    body, None,
+                    (p, g, jnp.arange(p.shape[0], dtype=jnp.int32)))
+                out.append(p_new)
+            else:
+                out.append(_one(p, g, lr, seed))
+        return treedef.unflatten(out), state
+
+    return Optimizer(init=init, update=update, name="sgd_sr")

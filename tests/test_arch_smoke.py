@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests (task spec f): REDUCED same-family config,
+one forward/train step on CPU, asserting output shapes + no NaNs; plus a
+prefill→decode consistency pass for decoder archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.launch import steps as St
+from repro.models import transformer as T
+from repro.optim import kahan_adamw
+
+ALL = list(ARCHS)
+DECODERS = [a for a in ALL if not a.startswith("xmc-")]
+
+
+def _batch(cfg, B=2, S=16, key=jax.random.PRNGKey(0)):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab)}
+    if cfg.head_labels:
+        batch["targets"] = jax.random.randint(ks[1], (B, 5), 0,
+                                              cfg.head_labels)
+    else:
+        batch["targets"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    if cfg.frontend == "audio_frames":
+        batch["frontend_embeds"] = jax.random.normal(
+            ks[2], (B, S, 512), jnp.bfloat16)
+    elif cfg.frontend == "vision":
+        batch["frontend_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_frontend_tokens, 1280), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    cfg.validate()
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    opt = kahan_adamw(weight_decay=0.0)
+    state = St.init_train_state(jax.random.PRNGKey(1), cfg, opt, impl="xla")
+
+    hidden = T.backbone_apply(state.backbone, cfg, batch["tokens"],
+                              batch.get("frontend_embeds"))
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+
+    new_state, metrics = St.train_step(
+        cfg, opt, state, batch, head_lr=jnp.float32(0.05),
+        backbone_lr=jnp.float32(1e-3), impl="xla")
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert int(new_state.step) == 1
+    # some parameters actually moved (embed may be untouched for stub
+    # frontends whose inputs bypass the token embedding)
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.backbone),
+                        jax.tree.leaves(new_state.backbone)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", DECODERS)
+def test_smoke_prefill_then_decode(arch):
+    cfg = get_smoke(arch)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    sstate = St.init_serve_state(jax.random.PRNGKey(2), cfg, B,
+                                 max_len=S + 8, impl="xla")
+    tok, sstate = St.serve_prefill(cfg, sstate, batch["tokens"],
+                                   batch.get("frontend_embeds"), impl="xla")
+    assert tok.shape == (B,)
+    assert np.asarray(tok).max() < cfg.vocab
+    fe = None
+    if cfg.frontend == "audio_frames":
+        fe = jnp.zeros((B, 1, 512), jnp.bfloat16)
+    elif cfg.frontend == "vision":
+        fe = batch["frontend_embeds"]
+    for _ in range(3):
+        tok, sstate = St.serve_decode(cfg, sstate, tok[:, None], fe,
+                                      impl="xla")
+        assert tok.shape == (B,)
+        assert np.asarray(tok).max() < cfg.vocab
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "xlstm-125m"])
+def test_decode_matches_training_forward(arch):
+    """Greedy decode logits == training forward logits at the same prefix
+    (recurrent-state and KV-cache paths agree with the parallel path)."""
+    cfg = get_smoke(arch)
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    sstate = St.init_serve_state(jax.random.PRNGKey(2), cfg, B, max_len=S + 4,
+                                 impl="xla")
+    # training-style forward on the full prefix
+    hidden = T.backbone_apply(sstate.backbone, cfg, tokens)
+    # stateful prefill on the same prefix
+    tok_p, sstate2 = St.serve_prefill(cfg, sstate, tokens)
+    hcfg = St.make_head_cfg(cfg, impl="xla")
+    from repro.core import elmo_head as EH
+    _, topk_train = EH.head_topk(hcfg, sstate.head, hidden[:, -1, :], k=1)
+    assert int(tok_p[0]) == int(topk_train[0, 0])

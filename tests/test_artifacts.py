@@ -1,0 +1,44 @@
+"""Deliverable artifacts stay valid: the dry-run report covers every live
+(arch × shape × mesh) cell with 0 errors, and PSP@k behaves per the paper."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.registry import SHAPES, cell_applicable
+from repro.core import losses as L
+
+REPORT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "dryrun_report.json")
+
+
+@pytest.mark.skipif(not os.path.exists(REPORT),
+                    reason="run launch/dryrun.py --all first")
+def test_dryrun_report_complete_and_green():
+    rep = json.load(open(REPORT))
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in rep}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                rec = by_key.get((arch, shape, mesh))
+                assert rec is not None, (arch, shape, mesh)
+                assert "error" not in rec, rec
+                if cell_applicable(cfg, SHAPES[shape]):
+                    assert "skipped" in rec
+                else:
+                    assert "memory" in rec and "collectives" in rec
+                    assert rec["memory"]["peak_per_device_gib"] > 0
+
+
+def test_psp_at_k_weights_tail_hits_higher():
+    freq = jnp.array([1000.0, 1000.0, 2.0, 2.0])   # 2 head, 2 tail labels
+    prop = L.propensity_scores(freq)
+    assert float(prop[0]) > float(prop[2])          # head labels more likely
+    labels = jnp.array([[0, 2, -1]], jnp.int32)
+    head_hit = L.psp_at_k(jnp.array([[0]], jnp.int32), labels, prop, k=1)
+    tail_hit = L.psp_at_k(jnp.array([[2]], jnp.int32), labels, prop, k=1)
+    assert float(tail_hit) > float(head_hit) > 0

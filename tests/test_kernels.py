@@ -1,0 +1,219 @@
+"""Per-kernel tests: Pallas (interpret=True) vs pure-jnp oracle, shape/dtype
+sweeps, and statistical properties of the in-kernel SR path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision as P
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES_MM = [  # (B, L, D)
+    (8, 16, 32),
+    (128, 256, 256),      # exactly one block
+    (64, 300, 130),       # ragged → padding path
+    (256, 512, 384),      # multi-block all dims
+    (1, 7, 9),            # degenerate tiny
+]
+
+
+def _rand(key, shape, dtype=jnp.bfloat16, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# sr_cast
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("out_dtype", [P.BF16, P.E4M3])
+@pytest.mark.parametrize("shape", [(8, 8), (256, 256), (100, 300), (1, 513)])
+def test_sr_cast_kernel_matches_ref(shape, out_dtype):
+    x = jax.random.normal(KEY, shape, jnp.float32)
+    seed = jnp.uint32(1234)
+    k = ops.sr_cast_2d(x, seed, out_dtype=out_dtype, impl="interpret")
+    r = ref.sr_cast_2d_ref(x, seed, out_dtype=out_dtype)
+    np.testing.assert_array_equal(np.asarray(k, np.float32),
+                                  np.asarray(r, np.float32))
+
+
+def test_sr_cast_kernel_tiling_invariance():
+    """Same bits regardless of block size (hash is global-index based)."""
+    x = jax.random.normal(KEY, (512, 512), jnp.float32)
+    seed = jnp.uint32(7)
+    a = ops.sr_cast_2d(x, seed, out_dtype=P.E4M3, impl="interpret",
+                       block=(128, 128))
+    b = ops.sr_cast_2d(x, seed, out_dtype=P.E4M3, impl="interpret",
+                       block=(256, 512))
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))
+
+
+def test_sr_cast_unbiased_through_kernel():
+    x = jnp.full((64, 128), 0.0123, jnp.float32)
+    outs = []
+    for s in range(64):
+        outs.append(np.asarray(
+            ops.sr_cast_2d(x, jnp.uint32(s), out_dtype=P.E4M3,
+                           impl="interpret"), np.float32))
+    mean = np.stack(outs).mean()
+    assert abs(mean - 0.0123) < 0.0123 * 0.05, mean
+
+
+# ---------------------------------------------------------------------------
+# fp8 matmuls
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,L,D", SHAPES_MM)
+@pytest.mark.parametrize("w_dtype", [P.E4M3, P.BF16])
+def test_fp8_logits_matches_ref(B, L, D, w_dtype):
+    kx, kw = jax.random.split(KEY)
+    x = _rand(kx, (B, D))
+    w = _rand(kw, (L, D), w_dtype, scale=0.05)
+    k = ops.fp8_logits(x, w, impl="interpret")
+    r = ref.fp8_logits_ref(x, w)
+    np.testing.assert_allclose(np.asarray(k, np.float32),
+                               np.asarray(r, np.float32), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("B,L,D", SHAPES_MM)
+def test_fp8_input_grad_matches_ref(B, L, D):
+    kg, kw = jax.random.split(KEY, 2)
+    g = _rand(kg, (B, L), scale=0.1)
+    w = _rand(kw, (L, D), P.E4M3, scale=0.05)
+    k = ops.fp8_input_grad(g, w, impl="interpret")
+    r = ref.fp8_input_grad_ref(g, w)
+    np.testing.assert_allclose(np.asarray(k, np.float32),
+                               np.asarray(r, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_fp8_logits_vs_f32_oracle():
+    """Against a plain f32 matmul: fp8 quantization error stays bounded."""
+    kx, kw = jax.random.split(KEY)
+    x = _rand(kx, (64, 256))
+    w = _rand(kw, (128, 256), P.E4M3, scale=0.05)
+    z = np.asarray(ops.fp8_logits(x, w, impl="interpret"), np.float32)
+    z32 = np.asarray(x.astype(jnp.float32)) @ np.asarray(
+        w.astype(jnp.float32)).T
+    # e4m3 has ~2^-3 relative mantissa error on x; matmul averages it down
+    rel = np.abs(z - z32) / (np.abs(z32) + 1e-2)
+    assert np.median(rel) < 0.05, np.median(rel)
+
+
+def test_dropconnect_in_kernel():
+    kx, kw = jax.random.split(KEY)
+    x = _rand(kx, (32, 128))
+    w = _rand(kw, (64, 128), P.E4M3, scale=0.05)
+    seed = jnp.uint32(99)
+    k = ops.fp8_logits(x, w, seed, drop_rate=0.5, impl="interpret")
+    r = ref.fp8_logits_ref(x, w, seed, drop_rate=0.5)
+    np.testing.assert_allclose(np.asarray(k, np.float32),
+                               np.asarray(r, np.float32), rtol=2e-2, atol=2e-2)
+    # masks differ with a different seed
+    k2 = ops.fp8_logits(x, w, jnp.uint32(100), drop_rate=0.5, impl="interpret")
+    assert not np.allclose(np.asarray(k, np.float32),
+                           np.asarray(k2, np.float32))
+    # E[dropconnect logits] ≈ plain logits (inverted scaling)
+    acc = np.zeros((32, 64), np.float32)
+    for s in range(48):
+        acc += np.asarray(ops.fp8_logits(x, w, jnp.uint32(s), drop_rate=0.5,
+                                         impl="interpret"), np.float32)
+    plain = np.asarray(ops.fp8_logits(x, w, impl="interpret"), np.float32)
+    err = np.abs(acc / 48 - plain)
+    # σ of the 48-draw mean is ≈ 0.081 here; median |err| ≈ 0.054 (≈ 0.67 σ)
+    assert np.median(err) < 0.25 * (np.median(np.abs(plain)) + 0.1)
+
+
+# ---------------------------------------------------------------------------
+# fused head update
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,L,D", SHAPES_MM)
+@pytest.mark.parametrize("w_dtype", [P.E4M3, P.BF16])
+def test_fused_update_matches_ref(B, L, D, w_dtype):
+    kg, kx, kw = jax.random.split(KEY, 3)
+    g = _rand(kg, (B, L), scale=0.1)
+    x = _rand(kx, (B, D))
+    w = _rand(kw, (L, D), w_dtype, scale=0.05)
+    lr, wd, seed = jnp.float32(0.05), jnp.float32(1e-4), jnp.uint32(11)
+    k = ops.fused_head_update(g, x, w, lr, wd, seed, impl="interpret")
+    r = ref.fused_head_update_ref(g, x, w, lr, wd, seed)
+    assert k.dtype == w.dtype
+    # bitwise-identical only when no padding splits the reduction; allow a
+    # one-ulp SR disagreement from bf16 accumulation-order differences
+    kf, rf = np.asarray(k, np.float32), np.asarray(r, np.float32)
+    mism = np.mean(kf != rf)
+    assert mism < 0.02, mism
+    np.testing.assert_allclose(kf, rf, rtol=0.3, atol=0.05)
+
+
+def test_fused_update_no_sr_deterministic():
+    kg, kx, kw = jax.random.split(KEY, 3)
+    g = _rand(kg, (128, 256), scale=0.1)
+    x = _rand(kx, (128, 256))
+    w = _rand(kw, (256, 256), P.BF16, scale=0.05)
+    lr, wd = jnp.float32(0.01), jnp.float32(0.0)
+    k = ops.fused_head_update(g, x, w, lr, wd, jnp.uint32(0), use_sr=False,
+                              impl="interpret")
+    # plain f32 oracle
+    dw = np.asarray(g, np.float32).T @ np.asarray(x, np.float32)
+    w_new = np.asarray(w, np.float32) - 0.01 * dw
+    np.testing.assert_allclose(np.asarray(k, np.float32), w_new,
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fused_update_moves_weights_despite_tiny_update():
+    """The paper's point: SR lets tiny updates make progress in fp8."""
+    L, D, B = 256, 256, 128
+    w = jnp.full((L, D), 0.5, P.E4M3)  # grid step at 0.5 is 2^-4 = 0.0625
+    g = jnp.full((B, L), 1e-3, jnp.bfloat16)
+    x = jnp.full((B, D), 1e-2, jnp.bfloat16)
+    lr = jnp.float32(0.1)  # update = -lr * B * 1e-5 = -1.28e-4 << ulp
+    stepped = []
+    for s in range(16):
+        w_new = ops.fused_head_update(g, x, w, lr, jnp.float32(0),
+                                      jnp.uint32(s), impl="interpret")
+        stepped.append(np.asarray(w_new, np.float32))
+    mean_w = np.stack(stepped).mean()
+    # RN would leave all weights at exactly 0.5; SR moves the mean down
+    assert mean_w < 0.5 - 1e-5, mean_w
+    rn = ops.fused_head_update(g, x, w, lr, jnp.float32(0), jnp.uint32(0),
+                               use_sr=False, impl="interpret")
+    assert np.all(np.asarray(rn, np.float32) == 0.5)
+
+
+def test_fused_update_kahan_matches_ref():
+    kg, kx, kw = jax.random.split(KEY, 3)
+    g = _rand(kg, (128, 128), scale=0.1)
+    x = _rand(kx, (128, 128))
+    w = _rand(kw, (128, 128), P.BF16, scale=0.05)
+    c = jnp.zeros((128, 128), P.BF16)
+    lr, wd, seed = jnp.float32(0.05), jnp.float32(0.0), jnp.uint32(3)
+    kw_, kc_ = ops.fused_head_update_kahan(g, x, w, c, lr, wd, seed,
+                                           impl="interpret")
+    rw_, rc_ = ref.fused_head_update_kahan_ref(g, x, w, c, lr, wd, seed)
+    np.testing.assert_allclose(np.asarray(kw_, np.float32),
+                               np.asarray(rw_, np.float32), rtol=2e-2,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(kc_, np.float32),
+                               np.asarray(rc_, np.float32), rtol=0.5,
+                               atol=1e-3)
+
+
+def test_fused_update_kahan_accumulates_tiny_updates():
+    """Kahan hybrid (App. D): tiny deterministic updates accumulate in bf16."""
+    L = D = 128
+    w = jnp.full((L, D), 1.0, P.BF16)
+    c = jnp.zeros((L, D), P.BF16)
+    g = jnp.full((8, L), 1e-2, jnp.bfloat16)
+    x = jnp.full((8, D), -1e-2, jnp.bfloat16)  # dW = -8e-4, upd = +8e-5/step
+    lr = jnp.float32(0.1)
+    for s in range(100):
+        w, c = ops.fused_head_update_kahan(g, x, w, c, lr, jnp.float32(0),
+                                           jnp.uint32(s), impl="interpret")
+    target = 1.0 + 100 * 8e-4 * 0.1
+    assert abs(float(w[0, 0].astype(jnp.float32)) - target) < 3e-3

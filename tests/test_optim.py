@@ -1,0 +1,119 @@
+"""Optimizer tests: Kahan-AdamW vs f32 oracle, SGD-SR progress, MPT overflow
+handling, Renee baseline stability, analytic memory model vs paper numbers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import memory_model as MM
+from repro.core import renee_baseline as RB
+from repro.optim import adamw, kahan_adamw, mpt_adamw, sgd_sr
+
+
+def _rosenbrock_grads(p):
+    def f(p):
+        return ((1 - p["a"]) ** 2).sum() + 100 * ((p["b"] - p["a"] ** 2) ** 2).sum()
+    return jax.grad(f)(p)
+
+
+def test_kahan_adamw_tracks_f32_adamw():
+    """BF16+Kahan stays close to the f32 AdamW trajectory (paper §4.1)."""
+    p32 = {"a": jnp.zeros((64,), jnp.float32), "b": jnp.zeros((64,), jnp.float32)}
+    p16 = {"a": jnp.zeros((64,), jnp.bfloat16), "b": jnp.zeros((64,), jnp.bfloat16)}
+    opt32, opt16 = adamw(weight_decay=0.0), kahan_adamw(weight_decay=0.0)
+    s32, s16 = opt32.init(p32), opt16.init(p16)
+    lr = jnp.float32(1e-3)
+    for step in range(300):
+        st = jnp.int32(step)
+        g32 = _rosenbrock_grads({k: v.astype(jnp.float32) for k, v in p32.items()})
+        g16 = _rosenbrock_grads({k: v.astype(jnp.float32) for k, v in p16.items()})
+        p32, s32 = opt32.update(p32, s32, g32, st, lr)
+        p16, s16 = opt16.update(p16, s16, g16, st, lr)
+    for k in p32:
+        a = np.asarray(p32[k])
+        b = np.asarray(p16[k], np.float32)
+        np.testing.assert_allclose(a, b, atol=2e-2, rtol=0.1)
+
+
+def test_plain_bf16_adamw_stalls_but_kahan_does_not():
+    """Tiny constant gradient: bf16 RN cancels updates; Kahan accumulates."""
+    p = {"w": jnp.ones((16,), jnp.bfloat16)}
+    g = {"w": jnp.full((16,), 1.0, jnp.float32)}
+    opt = kahan_adamw(weight_decay=0.0)
+    s = opt.init(p)
+    lr = jnp.float32(3e-5)  # Adam step ≈ lr << bf16 ulp at 1.0 (0.0078)
+    for step in range(200):
+        p, s = opt.update(p, s, g, jnp.int32(step), lr)
+    moved = 1.0 - float(p["w"][0].astype(jnp.float32))
+    assert moved > 0.004, moved  # ≈ 200 × 3e-5 = 6e-3 net movement
+
+
+def test_sgd_sr_makes_progress_below_ulp():
+    p = {"w": jnp.full((256,), 1.0, jnp.bfloat16)}
+    g = {"w": jnp.full((256,), 1.0, jnp.float32)}
+    opt = sgd_sr()
+    s = opt.init(p)
+    lr = jnp.float32(1e-4)  # far below ulp(1.0)=0.0078
+    for step in range(400):
+        p, s = opt.update(p, s, g, jnp.int32(step), lr)
+    mean = float(np.asarray(p["w"], np.float32).mean())
+    assert abs((1.0 - mean) - 400 * 1e-4) < 0.01, mean
+
+
+def test_mpt_adamw_skips_on_overflow_and_halves_scale():
+    p = {"w": jnp.ones((8,), jnp.float16)}
+    opt = mpt_adamw()
+    s = opt.init(p)
+    g_bad = {"w": jnp.full((8,), np.inf, jnp.float16)}
+    p2, s2 = opt.update(p, s, g_bad, jnp.int32(0), jnp.float32(1e-3))
+    np.testing.assert_array_equal(np.asarray(p2["w"], np.float32),
+                                  np.asarray(p["w"], np.float32))
+    assert float(s2["w"].loss_scale) == float(s["w"].loss_scale) / 2
+
+
+def test_renee_baseline_trains_small():
+    cfg = RB.ReneeConfig(num_labels=128, d_model=32, init_loss_scale=8.0)
+    state = RB.init_renee(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 32), jnp.float32)
+    tg = jax.random.randint(jax.random.PRNGKey(2), (16, 3), 0, 128)
+    losses = []
+    for i in range(25):
+        state, xg, m = RB.renee_train_step(cfg, state, x, tg, jnp.float32(0.1))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_renee_overflows_with_huge_scale_elmo_does_not():
+    """The paper's instability claim: FP16 input-grad matmul overflows when
+    the loss scale × label count pushes the accumulation past FP16 range."""
+    cfg = RB.ReneeConfig(num_labels=4096, d_model=16,
+                         init_loss_scale=2.0 ** 24)
+    state = RB.init_renee(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16), jnp.float32) * 4
+    tg = jax.random.randint(jax.random.PRNGKey(2), (8, 3), 0, 4096)
+    _, _, m = RB.renee_train_step(cfg, state, x, tg, jnp.float32(0.05))
+    assert bool(m["overflow"])  # step skipped → instability/slowdown
+
+
+def test_memory_model_matches_paper_numbers():
+    """§4.4: Renee ≈ 39.7 GiB, ELMO-BF16 ≈ 10.3, ELMO-FP8 ≈ 6.6 at 3M."""
+    s = MM.MemScenario(num_labels=2_812_281)
+    renee = MM.renee_peak(s)["total"] / MM.GIB
+    bf16 = MM.elmo_peak(s, "bf16")["total"] / MM.GIB
+    fp8 = MM.elmo_peak(s, "e4m3")["total"] / MM.GIB
+    assert abs(renee - 39.7) < 2.5, renee
+    assert abs(bf16 - 10.3) < 1.5, bf16
+    assert abs(fp8 - 6.6) < 1.0, fp8
+    # 4–6× reduction claim
+    assert 3.5 < renee / bf16 < 5.5
+    assert 5.0 < renee / fp8 < 7.5
+
+
+def test_memory_model_sweep_monotone():
+    rows = MM.sweep_labels([131_072, 670_091, 3_000_000, 8_623_847])
+    for k in ("renee_gib", "elmo_bf16_gib", "elmo_fp8_gib"):
+        v = [r[k] for r in rows]
+        assert all(a < b for a, b in zip(v, v[1:]))
+    # ratio grows with label count (paper: 6× at 3M → 11× at 8.6M)
+    ratios = [r["renee_gib"] / r["elmo_fp8_gib"] for r in rows]
+    assert ratios[-1] > ratios[0]

@@ -1,0 +1,175 @@
+"""Property + statistical tests for core/precision.py (SR, Kahan, format sim)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision as P
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _neighbors(x32, dtype):
+    """Grid neighbours of x in target dtype, as f32 numpy arrays."""
+    y = np.asarray(jnp.asarray(x32, jnp.float32).astype(dtype).astype(jnp.float32))
+    # brute-force next up / next down by scanning the (tiny) fp8/bf16 grid
+    return y
+
+
+@pytest.mark.parametrize("dtype", [P.BF16, P.E4M3, P.E5M2])
+def test_sr_returns_grid_values(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4096,), jnp.float32) * 3.0
+    out = P.stochastic_round(x, dtype, jax.random.PRNGKey(1))
+    # output must be exactly representable: casting to f32 and back is identity
+    rt = out.astype(jnp.float32).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(rt, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [P.BF16, P.E4M3])
+def test_sr_neighbor_property(dtype):
+    """SR lands on one of the two bracketing grid points."""
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (2048,), jnp.float32)
+    out = np.asarray(P.stochastic_round(x, dtype, jax.random.PRNGKey(7))
+                     .astype(jnp.float32))
+    x_np = np.asarray(x)
+    err = np.abs(out - x_np)
+    # SR lands within one full grid step of x: step ≈ 2^(floor(log2|x|) - m)
+    m = {jnp.dtype(P.BF16): 7, jnp.dtype(P.E4M3): 3}[jnp.dtype(dtype)]
+    step = np.maximum(np.abs(x_np), 2.0 ** -6) * 2.0 ** (1 - m)
+    assert np.all(err <= step + 1e-9)
+
+
+@pytest.mark.parametrize("maker,dtype", [
+    (lambda x, b: P.sr_bits_bf16(x, b), P.BF16),
+    (lambda x, b: P.sr_bits_e4m3(x, b), P.E4M3),
+])
+def test_sr_unbiased(maker, dtype):
+    """E[SR(x)] == x to statistical tolerance (the paper's core property)."""
+    n_rep = 512
+    x = jnp.array([0.1, -0.3, 1.7, 0.017, -2.31, 0.0007, 3.3, -0.09],
+                  jnp.float32)
+    xs = jnp.tile(x[None, :], (n_rep, 1))
+    bits = jax.random.bits(jax.random.PRNGKey(3), xs.shape, jnp.uint32)
+    out = maker(xs, bits).astype(jnp.float32)
+    mean = np.asarray(out.mean(axis=0))
+    # tolerance: grid step / sqrt(n_rep) * few sigma
+    rn = np.asarray(jnp.asarray(x).astype(dtype).astype(jnp.float32))
+    step = np.maximum(np.abs(np.asarray(x) - rn) * 2, np.abs(np.asarray(x)) * 2.0 ** -9)
+    tol = 6.0 * (step + 1e-9) / np.sqrt(n_rep)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=float(tol.max()))
+
+
+def test_sr_bits_e4m3_subnormal_grid():
+    """Subnormal SR stays on the 2^-9 grid and is unbiased there."""
+    x = jnp.array([2.0 ** -8 * 1.3, -(2.0 ** -7) * 0.7, 2.0 ** -10], jnp.float32)
+    xs = jnp.tile(x[None, :], (2048, 1))
+    bits = jax.random.bits(jax.random.PRNGKey(5), xs.shape, jnp.uint32)
+    out = np.asarray(P.sr_bits_e4m3(xs, bits).astype(jnp.float32))
+    grid = out * 512.0
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-6)
+    np.testing.assert_allclose(out.mean(0), np.asarray(x), atol=2.0 ** -9)
+
+
+def test_sr_saturates_no_nan():
+    x = jnp.array([1e9, -1e9, 500.0, -460.0], jnp.float32)
+    out = P.stochastic_round(x, P.E4M3, jax.random.PRNGKey(0))
+    out_np = np.asarray(out.astype(jnp.float32))
+    assert np.all(np.isfinite(out_np))
+    np.testing.assert_array_equal(out_np, [448.0, -448.0, 448.0, -448.0])
+    bits = jax.random.bits(jax.random.PRNGKey(1), x.shape, jnp.uint32)
+    out2 = np.asarray(P.sr_bits_e4m3(x, bits).astype(jnp.float32))
+    assert np.all(np.isfinite(out2))
+    assert np.all(np.abs(out2) <= 448.0)
+
+
+def test_bit_trick_matches_oracle_distribution():
+    """Bit-trick SR and oracle SR agree in mean over many draws."""
+    x = jnp.array([0.123, -0.456, 7.89, 0.00123], jnp.float32)
+    xs = jnp.tile(x[None, :], (4096, 1))
+    keys = jax.random.split(jax.random.PRNGKey(9), 2)
+    bits = jax.random.bits(keys[0], xs.shape, jnp.uint32)
+    fast = np.asarray(P.sr_bits_e4m3(xs, bits).astype(jnp.float32)).mean(0)
+    oracle = np.asarray(
+        P.stochastic_round(xs, P.E4M3, keys[1]).astype(jnp.float32)).mean(0)
+    tol = np.abs(np.asarray(x)) * 0.02 + 1e-5
+    assert np.all(np.abs(fast - oracle) <= tol), (fast, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Kahan summation
+# ---------------------------------------------------------------------------
+
+
+def test_kahan_tracks_f32_sum():
+    """1e4 tiny updates: plain BF16 RN stalls, Kahan tracks the f32 oracle."""
+    n_steps = 10_000
+    upd = 1e-4  # far below bf16 ulp at 1.0 (≈ 0.0078)
+
+    def body(carry, _):
+        p, c, p_plain = carry
+        p, c = P.kahan_update(p, c, jnp.float32(upd))
+        p_plain = (p_plain.astype(jnp.float32) + upd).astype(jnp.bfloat16)
+        return (p, c, p_plain), None
+
+    init = (jnp.bfloat16(1.0), jnp.bfloat16(0.0), jnp.bfloat16(1.0))
+    (p, c, p_plain), _ = jax.lax.scan(body, init, None, length=n_steps)
+    oracle = 1.0 + n_steps * upd  # 2.0
+    # bf16-stored compensation leaks ≲ a few ulps over 1e4 adversarial
+    # constant updates (ulp(2.0) = 0.015625); plain RN never moves at all.
+    assert abs(float(p) - oracle) <= 3 * 0.015625, float(p)
+    assert abs(float(p_plain) - 1.0) < 1e-6  # plain RN never moves
+    assert abs(float(p) - oracle) < 0.1 * abs(float(p_plain) - oracle)
+
+
+@given(st.lists(st.floats(-1e-3, 1e-3, allow_nan=False), min_size=1, max_size=200))
+@settings(max_examples=25, deadline=None)
+def test_kahan_error_bound_property(updates):
+    """|kahan_sum - f32_sum| ≤ one bf16 ulp of the result, for any updates."""
+    p, c = jnp.bfloat16(1.0), jnp.bfloat16(0.0)
+    for u in updates:
+        p, c = P.kahan_update(p, c, jnp.float32(u))
+    oracle = 1.0 + float(np.sum(np.asarray(updates, np.float32)))
+    ulp = max(abs(oracle), 1.0) * 2.0 ** -8
+    assert abs(float(p) - float(c) * 0 - oracle) <= 2 * ulp
+
+
+# ---------------------------------------------------------------------------
+# simulate_format
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_format_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,), jnp.float32)
+    y = P.simulate_format(x, 4, 3)
+    y2 = P.simulate_format(y, 4, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=0, atol=0)
+
+
+def test_simulate_format_matches_e4m3_cast():
+    """Simulated (4,3) grid ≈ real e4m3 RN cast away from tie boundaries."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,), jnp.float32)
+    sim = np.asarray(P.simulate_format(x, 4, 3))
+    real = np.asarray(jnp.asarray(x).astype(P.E4M3).astype(jnp.float32))
+    # identical except possibly at round-half ties (different tie rules)
+    frac_diff = np.mean(sim != real)
+    assert frac_diff < 0.02, frac_diff
+
+
+@given(st.integers(2, 8), st.integers(1, 10))
+@settings(max_examples=20, deadline=None)
+def test_simulate_format_monotone(e_bits, m_bits):
+    x = jnp.linspace(-4.0, 4.0, 513, dtype=jnp.float32)
+    y = np.asarray(P.simulate_format(x, e_bits, m_bits))
+    assert np.all(np.diff(y) >= -1e-9)
+
+
+def test_sr_cast_dispatch():
+    x = jax.random.normal(jax.random.PRNGKey(2), (256,), jnp.float32)
+    for dt in (P.BF16, P.E4M3, P.E5M2):
+        out = P.sr_cast(x, dt, jax.random.PRNGKey(3))
+        assert out.dtype == jnp.dtype(dt)
+        assert np.all(np.isfinite(np.asarray(out.astype(jnp.float32))))

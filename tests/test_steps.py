@@ -1,0 +1,97 @@
+"""Train/serve step composition: gradient accumulation equivalence,
+paper-ordering seam, and end-to-end convergence parity (ELMO vs fp32)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import elmo_head as EH
+from repro.launch import steps as St
+from repro.models import transformer as T
+from repro.optim import kahan_adamw, sgd_sr
+
+
+def _batch(cfg, B=8, S=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab),
+            "targets": jax.random.randint(ks[1], (B, S), 0, cfg.vocab)}
+
+
+def test_grad_accum_matches_single_batch_loss():
+    """accum=4 over the same global batch ≈ accum=1 (head updates stream,
+    so weights differ slightly — losses and grads must stay close)."""
+    cfg1 = get_smoke("smollm-360m")
+    cfg4 = dataclasses.replace(cfg1, grad_accum=4)
+    opt = kahan_adamw(weight_decay=0.0)
+    state = St.init_train_state(jax.random.PRNGKey(1), cfg1, opt, impl="xla")
+    batch = _batch(cfg1)
+    s1, m1 = St.train_step(cfg1, opt, state, batch, jnp.float32(0.05),
+                           jnp.float32(1e-3), impl="xla")
+    s4, m4 = St.train_step(cfg4, opt, state, batch, jnp.float32(0.05),
+                           jnp.float32(1e-3), impl="xla")
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 0.05, (m1, m4)
+    # backbone params after update agree to bf16 tolerance
+    for a, b in zip(jax.tree.leaves(s1.backbone), jax.tree.leaves(s4.backbone)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.1, atol=2e-2)
+
+
+def test_head_never_in_autodiff_graph():
+    """Loss-skipping by construction: backbone grads must not depend on the
+    head entering autodiff — vjp sees only the (B·S, D) seam."""
+    cfg = get_smoke("smollm-360m")
+    opt = sgd_sr()
+    state = St.init_train_state(jax.random.PRNGKey(1), cfg, opt, impl="xla")
+    batch = _batch(cfg)
+    # jaxpr of the step must contain no sigmoid/softmax-grad on (·, vocab)…
+    # cheap proxy: the step runs with a head whose logits would overflow an
+    # O(B·S·V) autodiff buffer if it were differentiated through
+    new_state, metrics = St.train_step(cfg, opt, state, batch,
+                                       jnp.float32(0.1), jnp.float32(1e-3),
+                                       impl="xla")
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+
+
+def test_elmo_fp8_matches_fp32_training_quality():
+    """Convergence parity (paper Tables 2/3 in miniature): training the
+    same tiny model with an FP8+SR head reaches a loss within 5% of the
+    f32-head run after 40 steps."""
+    losses = {}
+    for name, wd in (("fp32", "f32"), ("fp8", "e4m3")):
+        cfg = get_smoke("smollm-360m", vocab=512)
+        cfg = dataclasses.replace(cfg, head_weight_dtype=wd)
+        opt = kahan_adamw(weight_decay=0.0)
+        state = St.init_train_state(jax.random.PRNGKey(1), cfg, opt,
+                                    impl="xla")
+        step = jax.jit(lambda s, t, y: St.train_step(
+            cfg, opt, s, {"tokens": t, "targets": y}, jnp.float32(0.3),
+            jnp.float32(2e-3), impl="xla"))
+        rng = np.random.default_rng(0)
+        for i in range(40):
+            toks = jnp.asarray(rng.integers(0, 512, (8, 17)), jnp.int32)
+            state, m = step(state, toks[:, :-1], toks[:, 1:])
+        losses[name] = float(m["loss"])
+    assert abs(losses["fp8"] - losses["fp32"]) < 0.05 * losses["fp32"] + 0.1, \
+        losses
+
+
+def test_serve_prefill_decode_roundtrip_greedy_consistency():
+    """decode(prefill(prompt)) == decode path applied token by token."""
+    cfg = get_smoke("smollm-360m")
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    st = St.init_serve_state(jax.random.PRNGKey(2), cfg, B, max_len=S + 4,
+                             impl="xla")
+    t1, st1 = St.serve_prefill(cfg, st, toks)
+    # pure step-by-step decode over the same prompt
+    st2 = St.init_serve_state(jax.random.PRNGKey(2), cfg, B, max_len=S + 4,
+                              impl="xla")
+    hidden = None
+    for i in range(S):
+        tok_out, st2 = St.serve_decode(cfg, st2, toks[:, i:i + 1])
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(tok_out))
