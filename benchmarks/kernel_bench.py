@@ -1,10 +1,12 @@
-"""Kernel microbenchmarks: fused vs unfused head update, fp8 vs bf16 matmul.
+"""Kernel microbenchmarks: fused vs unfused head update, fp8 vs bf16 matmul,
+and the single-launch fused chunk megakernel vs the legacy 3-launch path.
 
 On this CPU container the Pallas kernels run in interpret mode, so absolute
 times are meaningless for TPU; what IS meaningful here (and reported) is
-the *memory* side: the fused path materializes no (L, D) gradient and no
-weight copy — verified by jitting both and comparing peak temp bytes.
-Wall-times are reported for the XLA (production-fallback) paths.
+the *memory* side: the fused paths materialize no (B, L) logits, no (B, L)
+gradient and no weight copy — verified by jitting both and comparing XLA's
+``memory_analysis()`` temp bytes.  Wall-times are reported for the XLA
+(production-fallback) paths.
 """
 from __future__ import annotations
 
@@ -17,13 +19,16 @@ from repro.kernels import ref
 
 
 def _time(f, *args, n=10):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))          # warm up exactly once
     t0 = time.time()
     for _ in range(n):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / n * 1e6
+        jax.block_until_ready(f(*args))      # block per iteration: no
+    return (time.time() - t0) / n * 1e6      # async-dispatch pile-up
+
+
+def _temp_bytes(jitted, *args) -> int:
+    mem = jitted.lower(*args).compile().memory_analysis()
+    return int(mem.temp_size_in_bytes)
 
 
 def bench_fused_update(L=4096, D=256, B=256):
@@ -31,7 +36,7 @@ def bench_fused_update(L=4096, D=256, B=256):
     g = jax.random.normal(ks[0], (B, L), jnp.bfloat16) * 0.1
     x = jax.random.normal(ks[1], (B, D), jnp.bfloat16)
     w = (jax.random.normal(ks[2], (L, D)) * 0.05).astype(jnp.float8_e4m3fn)
-    lr, wd, seed = jnp.float32(0.05), jnp.float32(0.0), jnp.uint32(0)
+    seed = jnp.uint32(0)
 
     fused = jax.jit(lambda g, x, w: ref.fused_head_update_ref(
         g, x, w, 0.05, 0.0, seed))
@@ -50,13 +55,10 @@ def bench_fused_update(L=4096, D=256, B=256):
 
     t_f = _time(fused, g, x, w)
     t_u = _time(unfused, g, x, w)
-    m_f = jax.jit(lambda g, x, w: ref.fused_head_update_ref(
-        g, x, w, 0.05, 0.0, seed)).lower(g, x, w).compile().memory_analysis()
-    m_u = unfused.lower(g, x, w).compile().memory_analysis()
     return [{"name": "kernel/fused_update", "us_per_call": round(t_f),
-             "temp_mib": round(m_f.temp_size_in_bytes / 2**20, 1)},
+             "temp_mib": round(_temp_bytes(fused, g, x, w) / 2**20, 2)},
             {"name": "kernel/unfused_update", "us_per_call": round(t_u),
-             "temp_mib": round(m_u.temp_size_in_bytes / 2**20, 1)}]
+             "temp_mib": round(_temp_bytes(unfused, g, x, w) / 2**20, 2)}]
 
 
 def bench_fp8_logits(L=4096, D=256, B=256):
@@ -71,3 +73,62 @@ def bench_fp8_logits(L=4096, D=256, B=256):
              "w_bytes": w8.nbytes},
             {"name": "kernel/bf16_logits", "us_per_call": round(t16),
              "w_bytes": w16.nbytes}]
+
+
+def bench_fused_chunk(L=4096, D=256, B=256):
+    """Single-launch fused chunk step vs the legacy 3-launch composition.
+
+    Both run the Pallas interpret path so XLA cannot fuse across the kernel
+    boundaries — the unfused variant's (B, L) logits and BF16 gradient show
+    up as temp buffers, the megakernel's do not (they never leave VMEM).
+    µs/call is additionally reported for the jitted XLA-oracle variants,
+    which is what non-TPU backends execute in production.
+    """
+    from repro.core import losses as Lo
+    from repro.kernels import ops, tuning
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = (jax.random.normal(ks[0], (B, D)) * 0.5).astype(jnp.bfloat16)
+    w = (jax.random.normal(ks[1], (L, D)) * 0.05).astype(jnp.float8_e4m3fn)
+    xg = jnp.zeros((B, D), jnp.bfloat16)
+    tg = jax.random.randint(ks[2], (B, 8), 0, L)
+    lr, wd, scale = jnp.float32(0.05), jnp.float32(0.0), jnp.float32(1.0 / B)
+    c0, sd, su = jnp.int32(0), jnp.uint32(3), jnp.uint32(5)
+    args = (x, w, tg, xg, lr, wd, scale, c0, sd, su)
+    kw = dict(loss="bce", num_labels=L)
+
+    fused_k = jax.jit(lambda *a: ops.fused_chunk_step(
+        *a, impl="interpret", **kw))
+
+    def unfused_fn(x, w, tg, xg, lr, wd, scale, c0, sd, su):
+        # the seed path: 3 separate launches, z and g round-trip HBM.
+        # Includes the chunk loss so both variants do identical work.
+        z = ops.fp8_logits(x, w, sd, impl="interpret")
+        y = Lo.chunk_multi_hot(tg, c0, L)
+        g = (Lo.bce_logit_grad(z, y, scale)).astype(jnp.bfloat16)
+        loss = Lo.bce_chunk_loss(z, y)
+        xg = xg + ops.fp8_input_grad(g, w, impl="interpret")
+        w_new = ops.fused_head_update(g, x, w, lr, wd, su, impl="interpret")
+        return w_new, xg, loss
+
+    unfused_k = jax.jit(unfused_fn)
+    fused_x = jax.jit(lambda *a: ops.fused_chunk_step(*a, impl="xla", **kw))
+
+    def unfused_x_fn(x, w, tg, xg, lr, wd, scale, c0, sd, su):
+        z = ref.fp8_logits_ref(x, w, sd)
+        y = Lo.chunk_multi_hot(tg, c0, L)
+        g = (Lo.bce_logit_grad(z, y, scale)).astype(jnp.bfloat16)
+        loss = Lo.bce_chunk_loss(z, y)
+        xg = xg + ref.fp8_input_grad_ref(g, w)
+        return ref.fused_head_update_ref(g, x, w, lr, wd, su), xg, loss
+
+    unfused_x = jax.jit(unfused_x_fn)
+
+    b_f, b_u = _temp_bytes(fused_k, *args), _temp_bytes(unfused_k, *args)
+    return [{"name": "kernel/fused_chunk", "us_per_call": round(_time(
+                 fused_x, *args)),
+             "temp_mib": round(b_f / 2**20, 2), "temp_size_in_bytes": b_f,
+             "block_l": tuning.chunk_block_l(B, L, D, 1)},
+            {"name": "kernel/unfused_chunk", "us_per_call": round(_time(
+                 unfused_x, *args)),
+             "temp_mib": round(b_u / 2**20, 2), "temp_size_in_bytes": b_u}]

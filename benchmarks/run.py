@@ -3,21 +3,58 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only mem # one section
 
-Prints ``name,us_per_call,derived...`` CSV rows per section.
+Prints ``name,us_per_call,derived...`` CSV rows per section, and appends
+every section's rows (with a timestamp) to a ``BENCH_*.json`` trajectory
+file so successive runs build a perf history (fused-vs-unfused temp bytes
+and µs/call land there via the ``kernels`` section).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+_JSON_ROWS: list = []
 
 
 def _emit(rows):
     for r in rows:
+        _JSON_ROWS.append(dict(r))
+        r = dict(r)
         name = r.pop("name")
         us = r.pop("us_per_call", r.pop("us_per_step", ""))
         derived = ",".join(f"{k}={v}" for k, v in r.items())
         print(f"{name},{us},{derived}", flush=True)
+
+
+def _jsonable(v):
+    """Plain JSON value: numpy/jax scalars → python, non-finite → None."""
+    if hasattr(v, "item"):
+        v = v.item()
+    if isinstance(v, float) and (v != v or v in (float("inf"),
+                                                 float("-inf"))):
+        return None
+    return v
+
+
+def _append_trajectory(path: str, sections: list) -> None:
+    history = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            history = []
+    rows = [{k: _jsonable(v) for k, v in r.items()} for r in _JSON_ROWS]
+    history.append({"ts": round(time.time(), 1), "sections": sections,
+                    "rows": rows})
+    # serialize fully before touching the file: a dump error must not
+    # truncate the accumulated history
+    text = json.dumps(history, indent=1, allow_nan=False)
+    with open(path, "w") as f:
+        f.write(text)
 
 
 SECTIONS = {}
@@ -68,7 +105,9 @@ def _stability():
 
 @section("kernels")
 def _kernels():
-    from benchmarks.kernel_bench import bench_fp8_logits, bench_fused_update
+    from benchmarks.kernel_bench import (bench_fp8_logits, bench_fused_chunk,
+                                         bench_fused_update)
+    _emit(bench_fused_chunk())      # single-launch megakernel vs 3-launch
     _emit(bench_fused_update())
     _emit(bench_fp8_logits())
 
@@ -92,6 +131,9 @@ def _roofline():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=list(SECTIONS), default=None)
+    ap.add_argument("--json", default="BENCH_trajectory.json",
+                    help="append rows to this BENCH_*.json history file "
+                         "('' disables)")
     args = ap.parse_args()
     todo = [args.only] if args.only else list(SECTIONS)
     t0 = time.time()
@@ -101,6 +143,8 @@ def main() -> None:
             SECTIONS[name]()
         except Exception as e:  # noqa: BLE001 — keep the harness running
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    if args.json:
+        _append_trajectory(args.json, todo)
     print(f"# done in {time.time() - t0:.1f}s")
 
 

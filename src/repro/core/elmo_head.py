@@ -11,9 +11,12 @@ One ``head_train_step`` performs, for each label chunk (paper §4.2–4.3):
 as a ``lax.scan`` over chunks, so transient memory is 1/k of the full logits
 (paper §4.2, Table 10) and the weight/optimizer memory is W itself — SGD
 without momentum (§4.2), stochastic rounding instead of master weights
-(§4.1/4.3).  The softmax-CE variant (for LM heads, DESIGN.md §3) adds a
-streaming-LSE pre-pass.  Head-label chunks can use Kahan compensation
-instead of SR (paper App. D).
+(§4.1/4.3).  Steps 1–4 execute as ONE Pallas launch per chunk
+(``kernels/fused_chunk.py``, DESIGN.md §3): logits and the logit gradient
+live only in VMEM, and W updates in place via ``input_output_aliases``.
+The softmax-CE variant (for LM heads, DESIGN.md §3) adds a streaming-LSE
+pre-pass whose logits can be cached and reused by pass 2 (``cache_z``).
+Head-label chunks can use Kahan compensation instead of SR (paper App. D).
 
 The head never enters autodiff: the caller runs the backbone under
 ``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces the
@@ -33,6 +36,7 @@ from repro.core import losses as L
 from repro.core import precision as P
 from repro.kernels import ops
 from repro.kernels import prng_utils as PR
+from repro.kernels import tuning as _tuning
 
 _WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "f32": P.F32}
 
@@ -49,7 +53,13 @@ class ELMOHeadConfig:
     drop_rate: float = 0.0             # in-kernel DropConnect (App. H)
     quantize_x: Optional[bool] = None  # default: True iff weight is e4m3
     compute_loss: bool = True          # loss value is optional (loss-skip)
-    impl: str = "auto"                 # kernels: auto|kernel|interpret|xla
+    # impl: auto|kernel|interpret|xla run the single-launch fused chunk
+    # megakernel (kernels/fused_chunk.py); "unfused[_<inner>]" keeps the
+    # legacy multi-kernel path for A/B (e.g. "unfused", "unfused_xla")
+    impl: str = "auto"
+    # softmax-CE only: reuse the LSE pre-pass logits in pass 2 ("on"/"off",
+    # or "auto" = on when the z cache fits _CACHE_Z_BYTES)
+    cache_z: str = "auto"
 
     @property
     def wdtype(self):
@@ -81,6 +91,21 @@ class ELMOHeadConfig:
     def __post_init__(self):
         assert 0 <= self.kahan_chunks <= self.num_chunks
         assert self.loss in ("bce", "softmax_ce")
+        assert self.cache_z in ("auto", "on", "off")
+
+
+# z-cache budget for the CE cached-logits fast path (B·padded_labels bf16);
+# past this, recomputing pass-2 logits beats holding them (paper §4.2: the
+# whole point of chunking is not materializing (B, L))
+_CACHE_Z_BYTES = 32 * 2 ** 20
+
+
+def _impl_split(impl: str) -> Tuple[bool, str]:
+    """cfg.impl → (use fused megakernel?, inner kernel impl)."""
+    if impl.startswith("unfused"):
+        rest = impl[len("unfused"):].lstrip("_:")
+        return False, (rest or "auto")
+    return True, impl
 
 
 class HeadState(NamedTuple):
@@ -106,9 +131,10 @@ def _valid_cols(cfg: ELMOHeadConfig, cidx: jax.Array) -> jax.Array:
 
 
 def _chunk_logits(cfg: ELMOHeadConfig, wc: jax.Array, x: jax.Array,
-                  seed: jax.Array) -> jax.Array:
+                  seed: jax.Array, impl: str | None = None) -> jax.Array:
+    impl = _impl_split(cfg.impl)[1] if impl is None else impl
     return ops.fp8_logits(x, wc, seed, drop_rate=cfg.drop_rate,
-                          quantize_x=cfg.qx, impl=cfg.impl)
+                          quantize_x=cfg.qx, impl=impl)
 
 
 def _chunk_seed(seed: jax.Array, cidx: jax.Array, salt: int) -> jax.Array:
@@ -126,21 +152,9 @@ def _chunk_grad(cfg: ELMOHeadConfig, z: jax.Array, targets: jax.Array,
                 cidx: jax.Array, lse: Optional[jax.Array],
                 scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Loss-skip logit gradient + optional loss contribution for one chunk."""
-    c0 = cidx * cfg.chunk
-    valid = _valid_cols(cfg, cidx)[None, :]
-    if cfg.loss == "bce":
-        y = L.chunk_multi_hot(targets, c0, cfg.chunk)
-        g = L.bce_logit_grad(z, y, scale) * valid
-        loss_c = (L.bce_chunk_loss(z, y, mask=valid)
-                  if cfg.compute_loss else jnp.float32(0.0))
-    else:
-        onehot = L.chunk_one_hot(targets, c0, cfg.chunk)
-        tok_mask = (targets >= 0).astype(jnp.float32)[:, None]
-        g = L.ce_logit_grad(z, lse, onehot, scale) * valid * tok_mask
-        # CE loss needs the target logit; folded in by the caller via lse
-        loss_c = (L.ce_target_logit_chunk(z, targets, c0, cfg.chunk).sum()
-                  if cfg.compute_loss else jnp.float32(0.0))
-    return g.astype(jnp.bfloat16), loss_c
+    return L.chunk_loss_skip_grad(cfg.loss, z, targets, cidx * cfg.chunk,
+                                  cfg.chunk, cfg.num_labels, lse, scale,
+                                  cfg.compute_loss)
 
 
 def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
@@ -157,7 +171,133 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
     x: (B, D) bf16 backbone outputs (tokens flattened).
     targets: (B, P) int32 multi-label ids (bce) or (B,) int32 ids (ce).
     Returns (new_state, x_grad (B, D) bf16, metrics).
+
+    Default path: one ``fused_chunk_step`` launch per chunk (logits, loss-
+    skip gradient, x̄ accumulation and the in-place weight update never
+    leave VMEM — DESIGN.md §3).  ``cfg.impl="unfused*"`` selects the legacy
+    multi-kernel composition for A/B comparison; both paths are numerically
+    identical by construction.
     """
+    fused, impl = _impl_split(cfg.impl)
+    if (fused and ops.resolve_impl(impl) == "kernel"
+            and not _tuning.fused_chunk_viable(
+                x.shape[0], cfg.d_model,
+                jnp.dtype(cfg.wdtype).itemsize,
+                kahan=cfg.kahan_chunks > 0)):
+        fused = False   # megakernel working set exceeds VMEM at this B·S
+    if fused:
+        return _head_train_step_fused(cfg, state, x, targets, lr, wd, seed,
+                                      impl)
+    return _head_train_step_unfused(cfg, state, x, targets, lr, wd, seed,
+                                    impl)
+
+
+def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
+                           x: jax.Array, targets: jax.Array, lr: jax.Array,
+                           wd: jax.Array, seed: jax.Array, impl: str
+                           ) -> Tuple[HeadState, jax.Array, dict]:
+    B = x.shape[0]
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+
+    if cfg.loss == "bce":
+        scale = jnp.float32(1.0 / B)
+        lse, zs = None, None
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+        cache = cfg.cache_z == "on" or (
+            cfg.cache_z == "auto"
+            and B * cfg.padded_labels * 2 <= _CACHE_Z_BYTES)
+
+        # ----- pass 1: streaming LSE (optionally caching each chunk's z
+        # so pass 2 skips the forward matmul entirely)
+        def lse_body(carry, inp):
+            wc, cidx = inp
+            m, s = carry
+            z = _chunk_logits(cfg, wc, x, _chunk_seed(seed, cidx, 0), impl)
+            carry = L.lse_update(m, s, _masked_z(cfg, z, cidx))
+            return carry, (z if cache else None)
+
+        (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
+                                  (state.w, chunk_ids))
+        lse = L.lse_finalize(m, s)
+
+    def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+        out = ops.fused_chunk_step(
+            x, wc, targets, xg, lr, wd, scale, cidx * cfg.chunk,
+            _chunk_seed(seed, cidx, 0), _chunk_seed(seed, cidx, 1),
+            lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
+            num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+            quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+            compute_loss=cfg.compute_loss, impl=impl)
+        return out.xg, loss_acc + out.loss, out.w, out.comp
+
+    def kahan_body(carry, inp):
+        xg, loss = carry
+        wc, comp_c, cidx, z_c = (inp if zs is not None
+                                 else inp + (None,))
+        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
+                                                z_c)
+        return (xg, loss), (wc_new, comp_new)
+
+    def sr_body(carry, inp):
+        xg, loss = carry
+        wc, cidx, z_c = inp if zs is not None else inp + (None,)
+        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
+        return (xg, loss), wc_new
+
+    carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
+    ck = cfg.kahan_chunks
+    if ck:
+        xs = (state.w[:ck], state.comp, chunk_ids[:ck])
+        if zs is not None:
+            xs += (zs[:ck],)
+        carry, (w_k, comp_new) = jax.lax.scan(kahan_body, carry, xs)
+    else:
+        w_k, comp_new = state.w[:0], state.comp
+
+    if ck < cfg.num_chunks:
+        xs = (state.w[ck:], chunk_ids[ck:])
+        if zs is not None:
+            xs += (zs[ck:],)
+        carry, w_s = jax.lax.scan(sr_body, carry, xs)
+    else:
+        w_s = state.w[:0]
+
+    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
+                          scale, B)
+
+
+def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
+                   lse, scale, B: int) -> Tuple[HeadState, jax.Array, dict]:
+    """Shared epilogue of both train-step paths: reassemble the chunk
+    weights and fold the accumulated loss (the fused/unfused A/B guarantee
+    depends on this formula living in exactly one place)."""
+    (xg, loss_raw) = carry
+    w_new = jnp.concatenate([w_k, w_s], axis=0) if cfg.kahan_chunks else w_s
+
+    if cfg.loss == "bce":
+        loss = loss_raw / B
+    else:
+        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
+        tok_mask = (targets >= 0)
+        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
+            if cfg.compute_loss else loss_raw
+
+    metrics = {"loss": loss,
+               "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
+    return HeadState(w_new, comp_new), xg, metrics
+
+
+def _head_train_step_unfused(cfg: ELMOHeadConfig, state: HeadState,
+                             x: jax.Array, targets: jax.Array,
+                             lr: jax.Array, wd: jax.Array, seed: jax.Array,
+                             impl: str
+                             ) -> Tuple[HeadState, jax.Array, dict]:
+    """Legacy multi-kernel path (three launches + HBM logits/grad round
+    trips per chunk) — kept selectable for fused-vs-unfused A/B."""
     B = x.shape[0]
     x = x.astype(jnp.bfloat16)
     seed = seed.astype(jnp.uint32)
@@ -174,7 +314,8 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
             wc, cidx = inp
             m, s = carry
             z = _masked_z(cfg, _chunk_logits(cfg, wc, x,
-                                             _chunk_seed(seed, cidx, 0)), cidx)
+                                             _chunk_seed(seed, cidx, 0),
+                                             impl), cidx)
             return L.lse_update(m, s, z), None
 
         (m, s), _ = jax.lax.scan(
@@ -185,18 +326,18 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
     # ----- pass 2: per-chunk grad + fused update + x̄ accumulation
     def chunk_step(xg, loss_acc, wc, comp_c, cidx):
         sd = _chunk_seed(seed, cidx, 0)
-        z = _chunk_logits(cfg, wc, x, sd)
+        z = _chunk_logits(cfg, wc, x, sd, impl)
         g, loss_c = _chunk_grad(cfg, z, targets, cidx, lse, scale)
         # x̄ accumulates in BF16 (paper §4.1: gradients stay BF16) — halves
         # the accumulator and its cross-model all-reduce
-        xg = xg + ops.fp8_input_grad(g, wc, impl=cfg.impl)
+        xg = xg + ops.fp8_input_grad(g, wc, impl=impl)
         upd_seed = _chunk_seed(seed, cidx, 1)
         if comp_c is None:
             wc_new = ops.fused_head_update(g, x, wc, lr, wd, upd_seed,
-                                           use_sr=cfg.use_sr, impl=cfg.impl)
+                                           use_sr=cfg.use_sr, impl=impl)
             return xg, loss_acc + loss_c, wc_new, None
         wc_new, comp_new = ops.fused_head_update_kahan(
-            g, x, wc, comp_c, lr, wd, upd_seed, impl=cfg.impl)
+            g, x, wc, comp_c, lr, wd, upd_seed, impl=impl)
         return xg, loss_acc + loss_c, wc_new, comp_new
 
     xg0 = jnp.zeros((B, cfg.d_model), jnp.bfloat16)
@@ -230,20 +371,8 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
     else:
         w_s = state.w[:0]
 
-    (xg, loss_raw) = carry
-    w_new = jnp.concatenate([w_k, w_s], axis=0) if ck else w_s
-
-    if cfg.loss == "bce":
-        loss = loss_raw / B
-    else:
-        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
-        tok_mask = (targets >= 0)
-        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
-            if cfg.compute_loss else loss_raw
-
-    metrics = {"loss": loss,
-               "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
-    return HeadState(w_new, comp_new), xg, metrics
+    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
+                          scale, B)
 
 
 # ---------------------------------------------------------------------------

@@ -115,6 +115,34 @@ def ce_target_logit_chunk(z: jax.Array, ids: jax.Array, c0: jax.Array,
     return jnp.where(valid, picked, 0.0)
 
 
+def chunk_loss_skip_grad(loss: str, z: jax.Array, targets: jax.Array,
+                         c0: jax.Array, chunk: int, num_labels: int,
+                         lse: jax.Array | None, scale: jax.Array,
+                         compute_loss: bool = True
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Loss-skip logit gradient (BF16) + optional loss contribution for the
+    label window [c0, c0+chunk) of a ``num_labels``-wide output space.
+
+    The single jnp implementation shared by the unfused head path and the
+    fused-chunk oracle (``kernels/ref.py``) — their bit-exact A/B guarantee
+    depends on this formula living here and nowhere else."""
+    valid = ((c0 + jnp.arange(chunk)) < num_labels)[None, :]
+    if loss == "bce":
+        y = chunk_multi_hot(targets, c0, chunk)
+        g = bce_logit_grad(z, y, scale) * valid
+        loss_c = (bce_chunk_loss(z, y, mask=valid)
+                  if compute_loss else jnp.float32(0.0))
+    else:
+        assert lse is not None, "softmax_ce needs the streaming LSE"
+        onehot = chunk_one_hot(targets, c0, chunk)
+        tok_mask = (targets >= 0).astype(jnp.float32)[:, None]
+        g = ce_logit_grad(z, lse, onehot, scale) * valid * tok_mask
+        # CE loss needs the target logit; the caller folds Σ lse − this in
+        loss_c = (ce_target_logit_chunk(z, targets, c0, chunk).sum()
+                  if compute_loss else jnp.float32(0.0))
+    return g.astype(jnp.bfloat16), loss_c
+
+
 # ---------------------------------------------------------------------------
 # full-width oracles (tests / tiny eval only)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,13 @@
+"""Distribution substrate: mesh context, sharding specs, gradient
+compression, and pipeline parallelism.
+
+Submodules
+----------
+* ``meshctx``           — ambient MeshContext (thread-local, context-managed)
+* ``sharding``          — PartitionSpec factories for state/batch/cache trees
+* ``compression``       — FP8-E5M2 gradient compression (+ error feedback)
+* ``pipeline_parallel`` — GPipe-style microbatch pipeline over a mesh axis
+* ``compat``            — version shims (shard_map / make_mesh API drift)
+"""
+from repro.dist import compat, compression, meshctx, pipeline_parallel, sharding  # noqa: F401
+from repro.dist.meshctx import MeshContext  # noqa: F401

@@ -1,0 +1,63 @@
+"""JAX API drift shims.
+
+The codebase targets the modern ``jax.shard_map`` / ``jax.make_mesh``
+surface; this module maps those calls onto whatever the installed JAX
+provides so the same code runs on 0.4.x (``jax.experimental.shard_map``,
+``check_rep``) and on ≥0.6 (``jax.shard_map``, ``check_vma``,
+``axis_types``).
+"""
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+if not _NEW_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the ``check_vma`` knob mapped per JAX version."""
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma)
+
+
+@jax.custom_vjp
+def optimization_barrier(operands):
+    """``jax.lax.optimization_barrier`` with a gradient-passthrough VJP.
+
+    Older JAX has no differentiation rule for the barrier primitive; the
+    barrier is an identity, so its cotangent is the identity too (the
+    backward pass simply loses the scheduling hint)."""
+    return jax.lax.optimization_barrier(operands)
+
+
+def _barrier_fwd(operands):
+    return optimization_barrier(operands), None
+
+
+def _barrier_bwd(_, g):
+    return (g,)
+
+
+optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX version
+    (0.4.x returned a one-element list of per-device dicts)."""
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c or {})
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` requesting Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -1,0 +1,69 @@
+"""Ambient mesh context.
+
+A ``MeshContext`` names the mesh axes once; model code asks ``meshctx.get()``
+whether a distributed context is active instead of threading mesh arguments
+through every layer.  ``None`` (the default) means single-device semantics —
+the layers' local code paths.
+
+    ctx = make_context(...)            # launch/mesh.py
+    with meshctx.use(ctx):
+        out = jax.jit(step)(state, batch)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Mesh + axis roles.  ``data_axes`` shard the batch (FSDP axes during
+    training); ``model_axis`` is the TP/EP/vocab-parallel axis; ``pod_axis``
+    (multi-pod) is pure data parallelism on top."""
+    mesh: jax.sharding.Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    pod_axis: Optional[str] = None
+
+    @property
+    def model_size(self) -> int:
+        if self.model_axis is None or self.model_axis not in self.mesh.shape:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Axes the token batch is sharded over (pod is always a batch axis)."""
+        axes = tuple(self.data_axes)
+        if self.pod_axis is not None:
+            axes = (self.pod_axis,) + axes
+        return axes
+
+    @property
+    def n_batch(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+
+_state = threading.local()
+
+
+def get() -> Optional[MeshContext]:
+    """The active context, or None (single-device code paths)."""
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(ctx: MeshContext):
+    prev = get()
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev

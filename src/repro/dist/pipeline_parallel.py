@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism over one mesh axis.
+
+``pipeline_apply`` shards the per-stage parameters over ``axis`` (stage s
+lives on rank s) and streams ``n_micro`` microbatches through the stage
+chain with ``ppermute`` handoffs: at tick t, stage s runs microbatch
+t − s (when in range), so the pipeline reaches steady state after a
+``n_stages − 1``-tick fill and drains symmetrically.  Bubble fraction is
+(S−1)/(S−1+M) — callers pick ``n_micro ≫ n_stages``.
+
+This is the *inference/forward* building block (multi-pod dry-run and the
+multidevice checks); training composes it under ``jax.vjp`` like any other
+JAX function — ``ppermute`` transposes to the reverse permutation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat
+
+
+def pipeline_apply(mesh: jax.sharding.Mesh, axis: str, *, n_micro: int,
+                   stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_params: Any, x: jax.Array) -> jax.Array:
+    """Apply ``stage_fn`` for every stage in sequence, pipelined.
+
+    stage_params: pytree whose leaves are stacked over stages on axis 0
+                  (shape (n_stages, ...)).
+    x:            (B, D) with B divisible by n_micro.
+    Returns stage_{S-1}(... stage_0(x)) as a replicated (B, D) array.
+    """
+    n_stages = int(mesh.shape[axis])
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(ws, xf):
+        w = jax.tree.map(lambda a: a[0], ws)   # this rank's stage slice
+        sid = jax.lax.axis_index(axis)
+        micro = xf.reshape(n_micro, mb, *xf.shape[1:])
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t during the fill window
+            inj = micro[jnp.minimum(t, n_micro - 1)]
+            cur = jnp.where(sid == 0,
+                            jnp.where(t < n_micro, inj, jnp.zeros_like(inj)),
+                            buf)
+            y = stage_fn(w, cur)
+            # the last stage emits microbatch t − (n_stages − 1)
+            oidx = t - (n_stages - 1)
+            safe = jnp.clip(oidx, 0, n_micro - 1)
+            take = (sid == n_stages - 1) & (oidx >= 0)
+            outs = outs.at[safe].set(jnp.where(take, y, outs[safe]))
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outs
+
+        buf0 = jnp.zeros((mb,) + xf.shape[1:], xf.dtype)
+        outs0 = jnp.zeros((n_micro, mb) + xf.shape[1:], xf.dtype)
+        _, outs = jax.lax.fori_loop(0, n_micro + n_stages - 1, tick,
+                                    (buf0, outs0))
+        # only the last stage holds results; psum replicates them
+        outs = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs.reshape(B, *xf.shape[1:])
+
+    # stage params: sharded over `axis` on dim 0, replicated on the rest
+    param_specs = jax.tree.map(
+        lambda a: P(axis, *([None] * (a.ndim - 1))), stage_params)
+    run = compat.shard_map(body, mesh=mesh,
+                           in_specs=(param_specs, P(*([None] * x.ndim))),
+                           out_specs=P(*([None] * x.ndim)),
+                           check_vma=False)
+    return run(stage_params, x)

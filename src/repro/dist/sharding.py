@@ -1,0 +1,147 @@
+"""PartitionSpec factories for the dry-run / pjit entry points.
+
+Specs are *intentions*: every consumer routes them through ``sanitize_spec``
+which drops any axis that does not divide the concrete dimension (batch=1
+decode cells, tiny smoke shapes, ragged vocab), so the factories can state
+the ideal layout without case analysis.
+
+Layout policy (launch/dryrun.py, DESIGN.md §4):
+* backbone weights — TP over ``model`` on the last (output-feature) dim,
+  FSDP over ``data`` on the largest remaining dim; ``fsdp_pure`` strategies
+  shard the largest dim over (data, model) jointly and skip TP.
+* optimizer state — mirrors the parameter spec leaf-for-leaf (moments and
+  Kahan compensation are elementwise companions of the parameter).
+* ELMO head — vocab-parallel: label rows over ``model`` (the chunk dimension
+  is padded to 256 precisely so this always divides).
+* batches — sharded over the batch axes on dim 0, replicated elsewhere.
+* decode caches — stacked (period, batch, ...): batch axes on dim 1.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import elmo_head as EH
+
+
+def _is_speclike(x) -> bool:
+    return x is None or isinstance(x, P)
+
+
+def sanitize_spec(shape, spec, mesh) -> P:
+    """Trim ``spec`` to ``shape``'s rank and drop axes that don't divide."""
+    parts = list(spec) if spec is not None else []
+    parts = parts[:len(shape)]
+    parts += [None] * (len(shape) - len(parts))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        n = 1
+        for a in axes:
+            n *= int(mesh.shape[a])
+        out.append(part if (n > 0 and dim % n == 0) else None)
+    return P(*out)
+
+
+def _leaf_spec(shape, n_model: int, n_data: int, fsdp_pure: bool) -> P:
+    if len(shape) < 2:
+        return P()
+    parts = [None] * len(shape)
+    if fsdp_pure:
+        # params FSDP over (data, model) on the largest dim; no TP
+        big = max(range(len(shape)), key=lambda i: shape[i])
+        if shape[big] % max(1, n_data * n_model) == 0:
+            parts[big] = ("data", "model")
+        return P(*parts)
+    # TP on the last dim when divisible
+    if n_model > 1 and shape[-1] % n_model == 0:
+        parts[-1] = "model"
+    # FSDP over data on the largest remaining dim
+    cands = [i for i in range(len(shape)) if parts[i] is None]
+    cands.sort(key=lambda i: shape[i], reverse=True)
+    for i in cands:
+        if n_data > 1 and shape[i] % n_data == 0:
+            parts[i] = "data"
+            break
+    return P(*parts)
+
+
+def backbone_specs(cfg, backbone, n_model: int, n_data: int):
+    """Spec tree matching a (possibly abstract) backbone parameter tree."""
+    fsdp_pure = getattr(cfg, "sharding_strategy", "tp_sp") == "fsdp_pure"
+
+    def spec(leaf):
+        if leaf is None:
+            return None
+        return _leaf_spec(leaf.shape, n_model, n_data, fsdp_pure)
+
+    return jax.tree.map(spec, backbone,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
+def opt_state_specs(bspec, opt_state):
+    """Optimizer state inherits its parameter's spec (elementwise state).
+
+    ``opt_state`` may be any tree refinement of the parameter tree (e.g.
+    each param leaf replaced by a KahanAdamWState, or a dict of per-group
+    states from the partitioned optimizer); every array under a parameter
+    position gets that parameter's spec.  State leaves with no parameter
+    counterpart (empty placeholders) are replicated.
+    """
+    flat_spec, treedef = jax.tree.flatten(bspec, is_leaf=_is_speclike)
+
+    def _broadcast(s, sub):
+        def one(leaf):
+            if leaf is None:
+                return None
+            shape = getattr(leaf, "shape", ())
+            if s is None or len(shape) != len(s):
+                # rank mismatch (scalar counters, empty groups): replicate
+                return P()
+            return s
+        return jax.tree.map(one, sub,
+                            is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+    try:
+        subtrees = treedef.flatten_up_to(opt_state)
+    except ValueError:
+        # opt_state is not a refinement of the param tree (partitioned
+        # optimizer wraps groups in a dict) — fall back to per-leaf specs
+        return jax.tree.map(
+            lambda leaf: P() if leaf is None or not hasattr(leaf, "shape")
+            else _leaf_spec(leaf.shape, 1, 1, False),
+            opt_state, is_leaf=lambda x: x is None or hasattr(x, "shape"))
+    out = [_broadcast(s, sub) for s, sub in zip(flat_spec, subtrees)]
+    return treedef.unflatten(out)
+
+
+def head_specs(cfg, n_model: int):
+    """Vocab-parallel ELMO head: (chunks, rows, d_model) rows over model."""
+    w_spec = P(None, "model", None) if n_model > 1 else P()
+    comp_spec = w_spec if getattr(cfg, "head_kahan_chunks", 0) else None
+    return EH.HeadState(w=w_spec, comp=comp_spec)
+
+
+def batch_specs(cfg, batch_axes) -> dict:
+    """Specs for every possible step-function input key (dim 0 = batch)."""
+    b = tuple(batch_axes)
+    return {k: P(b) for k in ("tokens", "targets", "token",
+                              "frontend_embeds")}
+
+
+def cache_specs(cfg, caches, batch_axes, n_model: int):
+    """Decode caches are stacked (period, batch, ...): shard dim 1."""
+    b = tuple(batch_axes)
+
+    def spec(leaf):
+        if leaf is None or not hasattr(leaf, "shape"):
+            return P()
+        if len(leaf.shape) >= 2:
+            return P(None, b)
+        return P()
+
+    return jax.tree.map(spec, caches,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))

@@ -26,6 +26,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import prng_utils as PR
+from repro.kernels import tuning
 
 
 def _logits_kernel(seed_ref, x_ref, w_ref, o_ref, acc_ref, *,
@@ -74,22 +75,21 @@ def _input_grad_kernel(g_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-def _pad2(x, b0, b1):
-    p0, p1 = (-x.shape[0]) % b0, (-x.shape[1]) % b1
-    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
-
-
 @functools.partial(jax.jit, static_argnames=("drop_rate", "quantize_x",
                                              "blocks", "interpret"))
 def fp8_logits(x: jax.Array, w: jax.Array, seed: jax.Array | None = None, *,
                drop_rate: float = 0.0, quantize_x: bool = True,
-               blocks: tuple[int, int, int] = (128, 256, 256),
+               blocks: tuple[int, int, int] | None = None,
                interpret: bool = True) -> jax.Array:
-    """Z = q8(X) @ Wᵀ.  x: (B, D) bf16, w: (L, D) e4m3/bf16 → (B, L) bf16."""
+    """Z = q8(X) @ Wᵀ.  x: (B, D) bf16, w: (L, D) e4m3/bf16 → (B, L) bf16.
+
+    ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
     (B, D), (L, _) = x.shape, w.shape
+    if blocks is None:
+        blocks = tuning.logits_blocks(B, L, D, jnp.dtype(w.dtype).itemsize)
     bb, bl, bd = blocks
     bb, bl, bd = min(bb, B) or 8, min(bl, L) or 8, min(bd, D) or 8
-    xp, wp = _pad2(x, bb, bd), _pad2(w, bl, bd)
+    xp, wp = tuning.pad2(x, bb, bd), tuning.pad2(w, bl, bd)
     Bp, Dp = xp.shape
     Lp = wp.shape[0]
     if seed is None:
@@ -113,13 +113,18 @@ def fp8_logits(x: jax.Array, w: jax.Array, seed: jax.Array | None = None, *,
 
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
 def fp8_input_grad(g: jax.Array, w: jax.Array, *,
-                   blocks: tuple[int, int, int] = (128, 256, 256),
+                   blocks: tuple[int, int, int] | None = None,
                    interpret: bool = True) -> jax.Array:
-    """X̄ = G @ W.  g: (B, L) bf16, w: (L, D) e4m3/bf16 → (B, D) bf16."""
+    """X̄ = G @ W.  g: (B, L) bf16, w: (L, D) e4m3/bf16 → (B, D) bf16.
+
+    ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
     (B, L), (_, D) = g.shape, w.shape
+    if blocks is None:
+        blocks = tuning.input_grad_blocks(B, L, D,
+                                          jnp.dtype(w.dtype).itemsize)
     bb, bd, bl = blocks
     bb, bd, bl = min(bb, B) or 8, min(bd, D) or 8, min(bl, L) or 8
-    gp, wp = _pad2(g, bb, bl), _pad2(w, bl, bd)
+    gp, wp = tuning.pad2(g, bb, bl), tuning.pad2(w, bl, bd)
     Bp, Lp = gp.shape
     Dp = wp.shape[1]
     out = pl.pallas_call(

@@ -1,0 +1,290 @@
+"""Pallas TPU megakernel: one ELMO label-chunk step in a single launch.
+
+The seed implementation ran each chunk as three kernel launches with HBM
+round-trips between them (``fp8_logits`` → jnp loss-skip grad →
+``fp8_input_grad`` + ``fused_head_update``), so the (B, chunk) logits and
+the BF16 logit gradient each crossed HBM multiple times per chunk.  This
+kernel collapses the whole step (DESIGN.md §3):
+
+    grid = (chunk/bl,) over W row-blocks; X, x̄ stay fully resident
+
+    per tile l:
+      z_l  = q8(X) @ W_lᵀ                 (MXU, f32 accumulate, → BF16)
+      ḡ_l  = loss-skip grad(z_l)           (BCE multi-hot scatter, or
+                                            softmax-CE from the LSE operand)
+      x̄   += ḡ_l @ W_l                    (f32 VMEM accumulator)
+      dW_l = ḡ_lᵀ X                        (full-B, single pass)
+      W_l ← SR((1 − lr·wd) W_l − lr dW_l)  (in place via input_output_aliases)
+      or (W_l, C_l) ← KahanAdd(...)        (head-label hybrid, App. D)
+
+Neither logits nor gradients ever materialize in HBM; the only HBM traffic
+is X, W (1 byte/elem in + out), the aliased x̄, and a scalar loss.
+
+Numerics mirror the unfused path *operation for operation* (z truncated to
+BF16 before the gradient, ḡ cast to BF16 before both matmuls, counter-hash
+SR bits addressed by global element index), so with an unsplit tile
+(bl == chunk — the tuner's choice whenever VMEM allows) interpret-mode
+outputs are bit-identical to ``ref.fused_chunk_ref`` and to the legacy
+multi-kernel path.
+
+The CE path takes the streaming LSE as an operand; ``z`` may be passed in
+(cached from the LSE pre-pass) to skip the forward matmul entirely
+(``elmo_head`` enables this for small chunk counts where the z cache fits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import prng_utils as PR
+from repro.kernels import tuning
+from repro.kernels.fused_head_update import _apply_sr
+
+
+class ChunkOut(NamedTuple):
+    """Results of one fused chunk step (None for absent optional outputs)."""
+    w: jax.Array                     # updated chunk weights (L, D)
+    xg: jax.Array                    # x̄ accumulator after this chunk (B, D)
+    loss: jax.Array                  # f32 scalar chunk loss contribution
+    comp: Optional[jax.Array] = None  # updated Kahan buffer (kahan chunks)
+    z: Optional[jax.Array] = None    # chunk logits (only when return_z)
+
+
+def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
+                  loss: str, num_labels: int, n_b: int, n_l: int,
+                  use_sr: bool, quantize_x: bool, drop_rate: float,
+                  compute_loss: bool, cached_z: bool, kahan: bool,
+                  return_z: bool):
+    # ---- unpack the flag-dependent ref list ----
+    it = iter(refs)
+    lse_ref = next(it) if loss == "softmax_ce" else None
+    z_ref = next(it) if cached_z else None
+    x_ref, w_ref, xg_ref = next(it), next(it), next(it)
+    comp_ref = next(it) if kahan else None
+    w_out_ref, xg_out_ref, loss_ref = next(it), next(it), next(it)
+    comp_out_ref = next(it) if kahan else None
+    z_out_ref = next(it) if return_z else None
+    xg_acc, loss_acc = next(it), next(it)
+
+    li = pl.program_id(0)
+    nl = pl.num_programs(0)
+    Bp, Dp = x_ref.shape
+    bl = w_ref.shape[0]
+
+    @pl.when(li == 0)
+    def _init():
+        xg_acc[...] = jnp.zeros_like(xg_acc)
+        loss_acc[...] = jnp.zeros_like(loss_acc)
+
+    lr, wd, scale = hyper_ref[0], hyper_ref[1], hyper_ref[2]
+    row0 = (li * bl).astype(jnp.uint32)
+    w16 = w_ref[...].astype(jnp.bfloat16)
+    x16 = x_ref[...].astype(jnp.bfloat16)
+
+    # ---- forward: logits tile (or the cached pass-1 logits) ----
+    if cached_z:
+        z16 = z_ref[...]
+    else:
+        xq = x_ref[...]
+        if quantize_x:
+            # paper §4.3: inputs cast to E4M3 for the logits product
+            xq = xq.astype(jnp.float8_e4m3fn)
+        xq = xq.astype(jnp.bfloat16)
+        wmm = w16
+        if drop_rate > 0.0:
+            # in-kernel DropConnect (App. H) — same global-index hash as
+            # fp8_logits, so cached and recomputed z agree bit-for-bit
+            bits = PR.hash_bits_2d(seeds_ref[0], row0, jnp.uint32(0),
+                                   (bl, Dp))
+            keep = PR.uniform_from_bits(bits) >= drop_rate
+            wmm = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
+                / jnp.bfloat16(1.0 - drop_rate)
+        z32mm = jax.lax.dot_general(xq, wmm, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        z16 = z32mm.astype(jnp.bfloat16)
+    if return_z:
+        z_out_ref[...] = z16
+
+    # gradient math reads the BF16-truncated logits (= what the unfused
+    # path sees coming back from HBM)
+    z32 = z16.astype(jnp.float32)
+
+    # ---- loss-skip logit gradient, fully in-register ----
+    col_local = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 1) + li * bl
+    col_global = col_local + c0_ref[0]
+    valid = ((col_global < num_labels)
+             & (col_local < n_l)).astype(jnp.float32)
+    rowv = (jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 0)
+            < n_b).astype(jnp.float32)
+
+    if loss == "bce":
+        # multi-hot scatter of the (B, P) padded label ids: one compare per
+        # target slot; ids of −1 / other chunks never match a column
+        y = jnp.zeros((Bp, bl), jnp.float32)
+        for p in range(tgt_ref.shape[1]):
+            y = jnp.maximum(
+                y, (col_global == tgt_ref[:, p:p + 1]).astype(jnp.float32))
+        g32 = (jax.nn.sigmoid(z32) - y) * scale * valid * rowv
+        if compute_loss:
+            per = (jnp.maximum(z32, 0.0) - z32 * y
+                   + jnp.log1p(jnp.exp(-jnp.abs(z32))))
+            loss_acc[0, 0] += jnp.sum(per * valid * rowv)
+    else:
+        tid = tgt_ref[...]                                  # (Bp, 1) int32
+        onehot = (col_global == tid).astype(jnp.float32)
+        tokm = (tid >= 0).astype(jnp.float32)               # (Bp, 1)
+        prob = jnp.exp(z32 - lse_ref[...])
+        g32 = (prob - onehot) * scale * valid * tokm * rowv
+        if compute_loss:
+            # Σ target logits; the caller folds Σ lse − this into CE loss
+            loss_acc[0, 0] += jnp.sum(z32 * onehot * rowv)
+
+    g16 = g32.astype(jnp.bfloat16)
+
+    # ---- x̄ += ḡ @ W from the still-resident tiles ----
+    xg_acc[...] += jnp.dot(g16, w16, preferred_element_type=jnp.float32)
+
+    @pl.when(li == nl - 1)
+    def _flush():
+        xg_out_ref[...] = xg_ref[...] + xg_acc[...].astype(jnp.bfloat16)
+        loss_ref[0, 0] = loss_acc[0, 0]
+
+    # ---- fused weight update, in place (full B in one pass) ----
+    dw = jax.lax.dot_general(g16, x16, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w32 = w_ref[...].astype(jnp.float32)
+    if kahan:
+        upd = -lr * dw - (lr * wd) * w32
+        yk = upd - comp_ref[...].astype(jnp.float32)
+        t32 = w32 + yk
+        w_new = t32.astype(w_out_ref.dtype)
+        w_out_ref[...] = w_new
+        comp_out_ref[...] = ((w_new.astype(jnp.float32) - w32) - yk
+                             ).astype(comp_out_ref.dtype)
+    else:
+        w_new = w32 * (1.0 - lr * wd) - lr * dw
+        bits = PR.hash_bits_2d(seeds_ref[1], row0, jnp.uint32(0), (bl, Dp))
+        w_out_ref[...] = _apply_sr(w_new, w_out_ref.dtype, bits, use_sr)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "loss", "num_labels", "use_sr", "quantize_x", "drop_rate",
+    "compute_loss", "block_l", "interpret", "return_z"))
+def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
+                     xg: jax.Array, lr, wd, scale, c0: jax.Array,
+                     seed_drop: jax.Array, seed_upd: jax.Array,
+                     lse: jax.Array | None = None,
+                     z: jax.Array | None = None,
+                     comp: jax.Array | None = None, *,
+                     loss: str, num_labels: int, use_sr: bool = True,
+                     quantize_x: bool = True, drop_rate: float = 0.0,
+                     compute_loss: bool = True, block_l: int | None = None,
+                     interpret: bool = True,
+                     return_z: bool = False) -> ChunkOut:
+    """One fused chunk step.
+
+    x (B, D) bf16 · w (L, D) e4m3/bf16/f32 · targets (B, P) int32 (bce) or
+    (B,) int32 (softmax_ce) · xg (B, D) bf16 running x̄ · c0 int32 global
+    label offset of this chunk · lse (B,) f32 (softmax_ce only) · z (B, L)
+    bf16 cached chunk logits (optional) · comp (L, D) bf16 Kahan buffer
+    (optional — selects the compensated update, no SR).
+    """
+    (B, D), L = x.shape, w.shape[0]
+    kahan = comp is not None
+    cached_z = z is not None
+    assert not (cached_z and return_z), "z already in hand"
+    if loss == "softmax_ce":
+        assert lse is not None, "softmax_ce needs the streaming LSE"
+        targets = targets.reshape(B, 1)
+
+    wb = jnp.dtype(w.dtype).itemsize
+    if block_l is None:
+        block_l = tuning.chunk_block_l(B, L, D, wb, kahan=kahan,
+                                       cached_z=cached_z)
+    if interpret:
+        # exact shapes: alignment padding changes the K length of the f32
+        # dots, and the CPU backend's SIMD reduction reassociates under a
+        # different K — which would break bitwise parity with the oracle
+        Bp, Dp = B, D
+        bl = min(block_l, L)
+    else:
+        Bp = tuning._pad_up(B, 16)
+        Dp = tuning._pad_up(D, tuning.LANE)
+        bl = min(block_l, tuning._pad_up(L, tuning.LANE))
+    Lp = tuning._pad_up(L, bl)
+
+    xp = tuning.pad2(x, Bp, Dp)
+    wp = tuning.pad2(w, bl, Dp)
+    xgp = tuning.pad2(xg, Bp, Dp)
+    tp = tuning.pad2(targets, Bp, 1, value=-1)
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       jnp.asarray(wd, jnp.float32),
+                       jnp.asarray(scale, jnp.float32)])
+    seeds = jnp.stack([seed_drop.reshape(()).astype(jnp.uint32),
+                       seed_upd.reshape(()).astype(jnp.uint32)])
+    c0a = c0.reshape(1).astype(jnp.int32)
+
+    grid = (Lp // bl,)
+    operands = [seeds, hyper, c0a, tp]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec(tp.shape, lambda l: (0, 0))]
+    if loss == "softmax_ce":
+        operands.append(tuning.pad2(lse.reshape(B, 1).astype(jnp.float32), Bp, 1))
+        in_specs.append(pl.BlockSpec((Bp, 1), lambda l: (0, 0)))
+    if cached_z:
+        operands.append(tuning.pad2(z.astype(jnp.bfloat16), Bp, bl))
+        in_specs.append(pl.BlockSpec((Bp, bl), lambda l: (0, l)))
+    idx_x = len(operands)
+    operands += [xp, wp, xgp]
+    in_specs += [pl.BlockSpec((Bp, Dp), lambda l: (0, 0)),
+                 pl.BlockSpec((bl, Dp), lambda l: (l, 0)),
+                 pl.BlockSpec((Bp, Dp), lambda l: (0, 0))]
+    if kahan:
+        operands.append(tuning.pad2(comp, bl, Dp))
+        in_specs.append(pl.BlockSpec((bl, Dp), lambda l: (l, 0)))
+
+    out_shape = [jax.ShapeDtypeStruct((Lp, Dp), w.dtype),
+                 jax.ShapeDtypeStruct((Bp, Dp), jnp.bfloat16),
+                 jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+    out_specs = [pl.BlockSpec((bl, Dp), lambda l: (l, 0)),
+                 pl.BlockSpec((Bp, Dp), lambda l: (0, 0)),
+                 pl.BlockSpec((1, 1), lambda l: (0, 0))]
+    if kahan:
+        out_shape.append(jax.ShapeDtypeStruct((Lp, Dp), comp.dtype))
+        out_specs.append(pl.BlockSpec((bl, Dp), lambda l: (l, 0)))
+    if return_z:
+        out_shape.append(jax.ShapeDtypeStruct((Bp, Lp), jnp.bfloat16))
+        out_specs.append(pl.BlockSpec((Bp, bl), lambda l: (0, l)))
+
+    aliases = {idx_x + 1: 0, idx_x + 2: 1}     # W → w_new, x̄ → x̄'
+    if kahan:
+        aliases[idx_x + 3] = 3                 # comp → comp'
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _chunk_kernel, loss=loss, num_labels=num_labels, n_b=B, n_l=L,
+            use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
+            compute_loss=compute_loss, cached_z=cached_z, kahan=kahan,
+            return_z=return_z),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=[pltpu.VMEM((Bp, Dp), jnp.float32),
+                        pltpu.VMEM((1, 1), jnp.float32)],
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+
+    w_new, xg_new, loss_c = outs[0], outs[1], outs[2]
+    comp_new = outs[3][:L, :D] if kahan else None
+    z_out = outs[-1][:B, :L] if return_z else None
+    return ChunkOut(w_new[:L, :D], xg_new[:B, :D], loss_c[0, 0],
+                    comp_new, z_out)

@@ -25,6 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import precision as P
 from repro.kernels import prng_utils as PR
+from repro.kernels import tuning
 
 
 def _apply_sr(w_new32, out_dtype, bits, use_sr: bool):
@@ -87,22 +88,22 @@ def _update_kernel_kahan(seed_ref, hyper_ref, g_ref, x_ref, w_ref, c_ref,
         c_out_ref[...] = c_new.astype(c_out_ref.dtype)
 
 
-def _pad2(x, b0, b1):
-    p0, p1 = (-x.shape[0]) % b0, (-x.shape[1]) % b1
-    return jnp.pad(x, ((0, p0), (0, p1))) if (p0 or p1) else x
-
-
 @functools.partial(jax.jit, static_argnames=("use_sr", "blocks", "interpret"))
 def fused_head_update(g: jax.Array, x: jax.Array, w: jax.Array,
                       lr: jax.Array, wd: jax.Array, seed: jax.Array, *,
                       use_sr: bool = True,
-                      blocks: tuple[int, int, int] = (256, 256, 128),
+                      blocks: tuple[int, int, int] | None = None,
                       interpret: bool = True) -> jax.Array:
-    """W ← SR((1−lr·wd)·W − lr·GᵀX).  g:(B,L) x:(B,D) w:(L,D) → (L,D)."""
+    """W ← SR((1−lr·wd)·W − lr·GᵀX).  g:(B,L) x:(B,D) w:(L,D) → (L,D).
+
+    ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
     (B, L), (_, D) = g.shape, x.shape
+    if blocks is None:
+        blocks = tuning.update_blocks(B, L, D, jnp.dtype(w.dtype).itemsize)
     bl, bd, bb = blocks
     bl, bd, bb = min(bl, L) or 8, min(bd, D) or 8, min(bb, B) or 8
-    gp, xp, wp = _pad2(g, bb, bl), _pad2(x, bb, bd), _pad2(w, bl, bd)
+    gp, xp = tuning.pad2(g, bb, bl), tuning.pad2(x, bb, bd)
+    wp = tuning.pad2(w, bl, bd)
     Bp, Lp = gp.shape
     Dp = xp.shape[1]
     hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
@@ -130,15 +131,17 @@ def fused_head_update(g: jax.Array, x: jax.Array, w: jax.Array,
 def fused_head_update_kahan(g: jax.Array, x: jax.Array, w: jax.Array,
                             comp: jax.Array, lr: jax.Array, wd: jax.Array,
                             seed: jax.Array, *,
-                            blocks: tuple[int, int, int] = (256, 256, 128),
+                            blocks: tuple[int, int, int] | None = None,
                             interpret: bool = True
                             ) -> tuple[jax.Array, jax.Array]:
     """Head-label hybrid (paper App. D): Kahan-compensated fused update."""
     (B, L), (_, D) = g.shape, x.shape
+    if blocks is None:
+        blocks = tuning.update_blocks(B, L, D, jnp.dtype(w.dtype).itemsize)
     bl, bd, bb = blocks
     bl, bd, bb = min(bl, L) or 8, min(bd, D) or 8, min(bb, B) or 8
-    gp, xp = _pad2(g, bb, bl), _pad2(x, bb, bd)
-    wp, cp = _pad2(w, bl, bd), _pad2(comp, bl, bd)
+    gp, xp = tuning.pad2(g, bb, bl), tuning.pad2(x, bb, bd)
+    wp, cp = tuning.pad2(w, bl, bd), tuning.pad2(comp, bl, bd)
     Bp, Lp = gp.shape
     Dp = xp.shape[1]
     hyper = jnp.stack([jnp.asarray(lr, jnp.float32),

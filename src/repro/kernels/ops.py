@@ -18,9 +18,12 @@ import jax
 
 from repro.kernels import flash_attention_tpu as _fa
 from repro.kernels import fp8_matmul as _fp8
+from repro.kernels import fused_chunk as _fc
 from repro.kernels import fused_head_update as _fused
 from repro.kernels import ref as _ref
 from repro.kernels import sr_cast as _sr
+
+ChunkOut = _fc.ChunkOut
 
 
 def resolve_impl(impl: str) -> str:
@@ -72,6 +75,30 @@ def fused_head_update_kahan(g, x, w, comp, lr, wd, seed, *,
     return _fused.fused_head_update_kahan(g, x, w, comp, lr, wd, seed,
                                           interpret=(impl == "interpret"),
                                           **kw)
+
+
+def fused_chunk_step(x, w, targets, xg, lr, wd, scale, c0, seed_drop,
+                     seed_upd, lse=None, z=None, comp=None, *, loss: str,
+                     num_labels: int, use_sr: bool = True,
+                     quantize_x: bool = True, drop_rate: float = 0.0,
+                     compute_loss: bool = True, impl: str = "auto",
+                     **kw) -> "ChunkOut":
+    """Single-launch fused chunk step (logits + loss-skip grad + x̄ + W
+    update); see kernels/fused_chunk.py.  ``impl="xla"`` runs the oracle
+    composition (identical algorithm, XLA-fused)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.fused_chunk_ref(
+            x, w, targets, xg, lr, wd, scale, c0, seed_drop, seed_upd,
+            lse=lse, z=z, comp=comp, loss=loss, num_labels=num_labels,
+            use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
+            compute_loss=compute_loss,
+            return_z=kw.get("return_z", False))
+    return _fc.fused_chunk_step(
+        x, w, targets, xg, lr, wd, scale, c0, seed_drop, seed_upd,
+        lse=lse, z=z, comp=comp, loss=loss, num_labels=num_labels,
+        use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
+        compute_loss=compute_loss, interpret=(impl == "interpret"), **kw)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,

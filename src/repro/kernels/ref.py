@@ -83,6 +83,39 @@ def fused_head_update_kahan_ref(g: jax.Array, x: jax.Array, w: jax.Array,
     return P.kahan_update(w, comp, upd)
 
 
+def fused_chunk_ref(x: jax.Array, w: jax.Array, targets: jax.Array,
+                    xg: jax.Array, lr, wd, scale, c0: jax.Array,
+                    seed_drop: jax.Array, seed_upd: jax.Array,
+                    lse: jax.Array | None = None,
+                    z: jax.Array | None = None,
+                    comp: jax.Array | None = None, *,
+                    loss: str, num_labels: int, use_sr: bool = True,
+                    quantize_x: bool = True, drop_rate: float = 0.0,
+                    compute_loss: bool = True, return_z: bool = False):
+    """Oracle for the fused chunk megakernel — the exact composition of the
+    legacy multi-kernel chunk step (logits → loss-skip grad → input grad →
+    fused update), so fused and unfused paths agree bit-for-bit."""
+    from repro.core import losses as L  # local import: core imports kernels
+    from repro.kernels.fused_chunk import ChunkOut
+
+    Lc = w.shape[0]
+    if z is None:
+        z = fp8_logits_ref(x, w, seed_drop, drop_rate=drop_rate,
+                           quantize_x=quantize_x)
+    g, loss_c = L.chunk_loss_skip_grad(loss, z, targets, c0, Lc, num_labels,
+                                       lse, scale, compute_loss)
+    xg_new = xg + fp8_input_grad_ref(g, w)
+    if comp is None:
+        w_new = fused_head_update_ref(g, x, w, lr, wd, seed_upd,
+                                      use_sr=use_sr)
+        comp_new = None
+    else:
+        w_new, comp_new = fused_head_update_kahan_ref(g, x, w, comp, lr, wd,
+                                                      seed_upd)
+    return ChunkOut(w_new, xg_new, jnp.float32(loss_c), comp_new,
+                    z if return_z else None)
+
+
 def flash_attention_fwd_ref(q, k, v, causal: bool = True, window=None):
     """Dense softmax-attention oracle for the Pallas flash kernel.
     q: (B, H, Sq, dh); k, v: (B, KH, Sk, dh) — O(S²), tests/tiny only."""

@@ -1,0 +1,166 @@
+"""Roofline-guided block-size selection for the ELMO Pallas kernels.
+
+Replaces the historical hardcoded ``(128, 256, 256)`` / ``(256, 256, 128)``
+block tuples (DESIGN.md §5).  For a tiled GEMM with grid
+``(M/bm, N/bn, K/bk)`` the HBM traffic is
+
+    bytes(A)·(N/bn)  +  bytes(B)·(M/bm)  +  bytes(out)
+
+so the chooser enumerates MXU-aligned candidate tiles, discards those whose
+working set (with double buffering) exceeds the VMEM budget, and picks the
+minimum-traffic tile, preferring an **unsplit K** (single-pass f32
+accumulation: fewer partial-sum rounding steps, and the accumulator scratch
+is written exactly once).  Compute time only floors the roofline — it is
+identical across tilings — so traffic is the whole objective.
+
+Everything is a pure function of static shapes; results are memoized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+# TPU v5e (benchmarks/roofline.py): the numbers only steer *relative*
+# choices, so v4/v5p drift is harmless.
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+VMEM_BYTES = 16 * 2 ** 20
+VMEM_BUDGET = int(VMEM_BYTES * 0.9)
+LANE = 128          # MXU systolic edge / lane count
+SUBLANE = 8
+
+
+def _pad_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def pad2(x, b0: int, b1: int, value=0):
+    """Pad a 2-D array up to multiples of (b0, b1) — the shared tile-
+    alignment helper for every kernel wrapper in this package."""
+    p0, p1 = (-x.shape[0]) % b0, (-x.shape[1]) % b1
+    if p0 or p1:
+        return jnp.pad(x, ((0, p0), (0, p1)), constant_values=value)
+    return x
+
+
+def _cands(dim: int, cap: int = 1024) -> list[int]:
+    """MXU-aligned candidate tile sizes for one dimension."""
+    padded = _pad_up(max(dim, 1), SUBLANE)
+    if padded <= LANE:
+        return [padded]
+    out = {c for c in (128, 256, 512, 1024) if c <= min(cap, padded)}
+    if padded <= cap:
+        out.add(_pad_up(padded, LANE))   # the whole (padded) dimension
+    return sorted(out)
+
+
+@functools.lru_cache(maxsize=None)
+def matmul_blocks(M: int, N: int, K: int, a_bytes: int, b_bytes: int,
+                  o_bytes: int) -> tuple[int, int, int]:
+    """(bm, bn, bk) for out[M,N] = A[M,K] · B[N,K]ᵀ with f32 accumulation."""
+    Mp, Np, Kp = (_pad_up(d, SUBLANE) for d in (M, N, K))
+    best, best_key = None, None
+    for bk in _cands(K, cap=2048):
+        k_tiles = -(-Kp // bk)
+        for bm in _cands(M):
+            m_tiles = -(-Mp // bm)
+            for bn in _cands(N):
+                n_tiles = -(-Np // bn)
+                vmem = (2 * (bm * bk * a_bytes + bn * bk * b_bytes)
+                        + bm * bn * 4            # f32 accumulator scratch
+                        + 2 * bm * bn * o_bytes)
+                if vmem > VMEM_BUDGET:
+                    continue
+                traffic = (Mp * Kp * a_bytes * n_tiles
+                           + Np * Kp * b_bytes * m_tiles
+                           + Mp * Np * o_bytes)
+                # minimize traffic; prefer unsplit K, then fewer grid steps
+                key = (traffic, k_tiles, m_tiles * n_tiles * k_tiles)
+                if best_key is None or key < best_key:
+                    best, best_key = (bm, bn, bk), key
+    assert best is not None, (M, N, K)
+    return best
+
+
+def logits_blocks(B: int, L: int, D: int, w_bytes: int = 1
+                  ) -> tuple[int, int, int]:
+    """(bb, bl, bd) for Z[B, L] = q8(X)[B, D] · W[L, D]ᵀ."""
+    bb, bl, bd = matmul_blocks(B, L, D, 2, w_bytes, 2)
+    return bb, bl, bd
+
+
+def input_grad_blocks(B: int, L: int, D: int, w_bytes: int = 1
+                      ) -> tuple[int, int, int]:
+    """(bb, bd, bl) for X̄[B, D] = G[B, L] · W[L, D]."""
+    bb, bd, bl = matmul_blocks(B, D, L, 2, w_bytes, 2)
+    return bb, bd, bl
+
+
+def update_blocks(B: int, L: int, D: int, w_bytes: int = 1
+                  ) -> tuple[int, int, int]:
+    """(bl, bd, bb) for dW[L, D] = G[B, L]ᵀ · X[B, D] (+ aliased W in/out)."""
+    bl, bd, bb = matmul_blocks(L, D, B, 2, 2, w_bytes + w_bytes)
+    return bl, bd, bb
+
+
+def _chunk_vmem(B: int, D: int, bl: int, w_bytes: int, kahan: bool,
+                cached_z: bool) -> int:
+    """Megakernel working-set model at label tile ``bl`` — the single
+    source of truth for both the tile chooser and the viability gate."""
+    Bp = _pad_up(max(B, 1), 16)          # bf16 sublane
+    Dp = _pad_up(max(D, 1), LANE)
+    resident = (Bp * Dp * 2              # X bf16
+                + 2 * Bp * Dp * 2        # x̄ in + out (aliased) bf16
+                + Bp * Dp * 4)           # x̄ accumulator f32
+    per_tile = (2 * bl * Dp * w_bytes * 2          # W in+out, buffered
+                + (2 * bl * Dp * 2 * 2 if kahan else 0)
+                + Bp * bl * (2 if cached_z else 0)  # cached z stream
+                + Bp * bl * 10                      # z32 + g + g16 regs
+                + bl * Dp * 4)                      # dW f32 transient
+    return resident + per_tile
+
+
+@functools.lru_cache(maxsize=None)
+def chunk_block_l(B: int, L: int, D: int, w_bytes: int = 1,
+                  kahan: bool = False, cached_z: bool = False) -> int:
+    """Label-row tile for the fused chunk megakernel (grid = (L/bl,)).
+
+    X, the x̄ accumulator, and the aliased x̄ in/out stay fully resident;
+    only the W row-block (and the per-tile logits/grad transients) stream.
+    The largest fitting bl wins — bl == L (one tile) keeps every reduction
+    unsplit and makes the kernel bit-identical to the jnp oracle.  When no
+    tile fits the model, returns LANE — callers that compile for real TPU
+    must gate on ``fused_chunk_viable`` first (interpret/xla paths have no
+    VMEM and use the fallback freely)."""
+    for bl in sorted(set(_cands(L, cap=4096)), reverse=True):
+        if _chunk_vmem(B, D, bl, w_bytes, kahan, cached_z) <= VMEM_BUDGET:
+            return bl
+    return LANE
+
+
+@functools.lru_cache(maxsize=None)
+def fused_chunk_viable(B: int, D: int, w_bytes: int = 1,
+                       kahan: bool = False, cached_z: bool = False) -> bool:
+    """Whether the megakernel fits VMEM at even the smallest label tile —
+    the same model ``chunk_block_l`` minimizes over, so the gate and the
+    chooser cannot disagree.  When False (huge token counts — LM prefill
+    at B·S ≫ 10⁴), ``elmo_head`` falls back to the unfused path on the
+    compiled-kernel backend."""
+    return _chunk_vmem(B, D, LANE, w_bytes, kahan, cached_z) <= VMEM_BUDGET
+
+
+def tuning_table(shapes=((256, 512, 256), (256, 512, 768), (1024, 512, 256),
+                         (8192, 512, 1024), (256, 4096, 256))
+                 ) -> list[dict]:
+    """Chosen tiles for representative (B, chunk, D) shapes (DESIGN.md §5)."""
+    rows = []
+    for B, L, D in shapes:
+        rows.append({
+            "B": B, "chunk": L, "D": D,
+            "logits": logits_blocks(B, L, D),
+            "input_grad": input_grad_blocks(B, L, D),
+            "update": update_blocks(B, L, D),
+            "fused_chunk_bl": chunk_block_l(B, L, D),
+        })
+    return rows

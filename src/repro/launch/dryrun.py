@@ -35,6 +35,7 @@ from repro.configs import get_config                        # noqa: E402
 from repro.configs.registry import (ARCHS, SHAPES, cell_applicable,  # noqa: E402
                                     input_specs)
 from repro.core import elmo_head as EH                      # noqa: E402
+from repro.dist import compat as Compat                     # noqa: E402
 from repro.dist import meshctx, sharding as Sh              # noqa: E402
 from repro.launch import steps as St                        # noqa: E402
 from repro.launch.mesh import make_context                  # noqa: E402
@@ -262,7 +263,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                 (mem.argument_size_in_bytes + mem.output_size_in_bytes
                  + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / GIB,
         }
-        cost = compiled.cost_analysis() or {}
+        cost = Compat.cost_analysis(compiled)
         rec["cost"] = {k: cost.get(k, 0.0)
                        for k in ("flops", "bytes accessed", "transcendentals")}
         rec["collectives"] = collective_bytes(compiled.as_text())

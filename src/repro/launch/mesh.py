@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist.compat import make_mesh
 from repro.dist.meshctx import MeshContext
 
 
@@ -11,9 +12,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_context(*, multi_pod: bool = False) -> MeshContext:
@@ -24,6 +23,5 @@ def make_context(*, multi_pod: bool = False) -> MeshContext:
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1) -> MeshContext:
     """Small mesh over host devices (tests with forced device count)."""
-    mesh = jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((n_data, n_model), ("data", "model"))
     return MeshContext(mesh=mesh, data_axes=("data",), model_axis="model")

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.dist import meshctx
+from repro.dist import compat, meshctx
 from repro.models import layers as Ly
 from repro.models.config import ModelConfig
 
@@ -79,7 +79,7 @@ def _expert_compute(wg, wu, wd, buf):
     # f32; without the barrier XLA hoists that convert out of the layer scan
     # and keeps an f32 copy of ALL stacked expert weights resident (TPU has
     # native bf16 MXU dots — no such copy).  See EXPERIMENTS.md §Dry-run.
-    wg, wu, wd = jax.lax.optimization_barrier((wg, wu, wd))
+    wg, wu, wd = compat.optimization_barrier((wg, wu, wd))
     wg, wu, wd = _bf16_grad(wg), _bf16_grad(wu), _bf16_grad(wd)
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg,
                                preferred_element_type=jnp.float32))
@@ -228,7 +228,7 @@ def moe_apply(p, cfg: ModelConfig, x) -> jax.Array:
                     if x2d.shape[0] % n_batch == 0 else P(None, None))
 
         @functools.partial(
-            jax.shard_map, mesh=ctx.mesh,
+            compat.shard_map, mesh=ctx.mesh,
             in_specs=(P(None, None), spec_w_up, spec_w_up, spec_w_dn,
                       tok_spec),
             out_specs=tok_spec,
@@ -267,7 +267,7 @@ def moe_apply(p, cfg: ModelConfig, x) -> jax.Array:
         else P(None, None)
 
     @functools.partial(
-        jax.shard_map, mesh=ctx.mesh,
+        compat.shard_map, mesh=ctx.mesh,
         in_specs=(P(None, None),                    # router (replicated)
                   wg_spec, wu_spec, wd_spec,
                   tok_spec),                        # tokens

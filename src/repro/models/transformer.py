@@ -203,14 +203,14 @@ def _seq_shard(x: jax.Array) -> jax.Array:
     ctx = meshctx.get()
     if ctx is None or ctx.model_size <= 1 or x.ndim != 3:
         return x
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     if ctx.model_axis in ctx.batch_axes:   # fsdp_pure: no SP, batch only
         return jax.lax.with_sharding_constraint(
-            x, P(ctx.batch_axes, None, None))
+            x, NamedSharding(ctx.mesh, P(ctx.batch_axes, None, None)))
     if x.shape[1] % ctx.model_size != 0:
         return x
     return jax.lax.with_sharding_constraint(
-        x, P(ctx.batch_axes, ctx.model_axis, None))
+        x, NamedSharding(ctx.mesh, P(ctx.batch_axes, ctx.model_axis, None)))
 
 
 def backbone_apply(params: Backbone, cfg: ModelConfig, tokens: jax.Array,

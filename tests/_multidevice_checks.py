@@ -85,8 +85,8 @@ def check_train_step_sharded_matches_single():
 
 
 def check_pipeline_parallel():
-    mesh = jax.make_mesh((8,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.compat import make_mesh
+    mesh = make_mesh((8,), ("stage",))
     n_stages, D = 8, 16
     ws = jax.random.normal(jax.random.PRNGKey(0), (n_stages, D, D),
                            jnp.float32) * 0.3

@@ -1,4 +1,13 @@
+import os
+import sys
+
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container without hypothesis: deterministic stub
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub  # noqa: F401  (registers sys.modules entries)
 
 
 def pytest_configure(config):

@@ -1,0 +1,237 @@
+"""Fused chunk megakernel: interpret-mode parity vs the ref.py oracle
+(bit-exact logits / x-grad / weights for a fixed SR seed), the cached-z CE
+fast path, fused-vs-unfused head_train_step regression, and block-tuner
+sanity.
+
+The bit-exact comparisons target ``jax.jit(ref.fused_chunk_ref)``: the
+megakernel is one compiled computation, and on the CPU backend XLA's fusion
+of an *eagerly* dispatched op sequence can differ by one ULP from the same
+sequence compiled together — the jitted oracle is the apples-to-apples
+reference (and what production's "xla" fallback executes).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elmo_head as H
+from repro.core import losses as L
+from repro.kernels import ops, ref, tuning
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk(loss, B=32, Lc=256, D=64, w_dtype=jnp.float8_e4m3fn, num_labels=None,
+        c0=0):
+    num_labels = Lc if num_labels is None else num_labels
+    kx, kw, kt, kg = jax.random.split(KEY, 4)
+    x = (jax.random.normal(kx, (B, D)) * 0.5).astype(jnp.bfloat16)
+    w = (jax.random.normal(kw, (Lc, D)) * 0.05).astype(w_dtype)
+    xg = (jax.random.normal(kg, (B, D)) * 0.1).astype(jnp.bfloat16)
+    if loss == "bce":
+        tg = jax.random.randint(kt, (B, 5), 0, num_labels)
+        lse = None
+    else:
+        tg = jax.random.randint(kt, (B,), -1, num_labels)
+        z = ref.fp8_logits_ref(x, w)
+        zm = jnp.where((c0 + jnp.arange(Lc))[None, :] < num_labels,
+                       z.astype(jnp.float32), L.NEG_INF)
+        m, s = L.lse_update(*L.lse_init(B), zm)
+        lse = L.lse_finalize(m, s)
+    args = (x, w, tg, xg, jnp.float32(0.05), jnp.float32(1e-4),
+            jnp.float32(1.0 / B), jnp.int32(c0), jnp.uint32(7),
+            jnp.uint32(13))
+    return args, dict(loss=loss, num_labels=num_labels), lse
+
+
+def _ref_jit(kw):
+    return jax.jit(functools.partial(ref.fused_chunk_ref, return_z=True,
+                                     **kw))
+
+
+@pytest.mark.parametrize("w_dtype", [jnp.float8_e4m3fn, jnp.bfloat16])
+@pytest.mark.parametrize("loss", ["bce", "softmax_ce"])
+def test_fused_chunk_bitexact_vs_oracle(loss, w_dtype):
+    """Single-tile (the tuner default here): z, x̄, W and the loss scalar
+    are bit-identical to the oracle for a fixed SR seed."""
+    args, kw, lse = _mk(loss, w_dtype=w_dtype, num_labels=300, Lc=320,
+                        c0=0, D=70, B=24)
+    k = ops.fused_chunk_step(*args, lse=lse, impl="interpret",
+                             return_z=True, **kw)
+    r = _ref_jit(kw)(*args, lse=lse)
+    for name in ("z", "xg", "w"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(k, name), np.float32),
+            np.asarray(getattr(r, name), np.float32), err_msg=name)
+    assert float(k.loss) == float(r.loss)
+
+
+def test_fused_chunk_tiled_weights_bitexact():
+    """With a split label tile the per-tile W updates stay bit-exact (the
+    dW reduction is over B, never split); only x̄ and the loss reassociate."""
+    args, kw, _ = _mk("bce", Lc=512, num_labels=500)
+    k = ops.fused_chunk_step(*args, impl="interpret", block_l=128, **kw)
+    r = _ref_jit(kw)(*args)
+    np.testing.assert_array_equal(np.asarray(k.w, np.float32),
+                                  np.asarray(r.w, np.float32))
+    np.testing.assert_allclose(np.asarray(k.xg, np.float32),
+                               np.asarray(r.xg, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    assert abs(float(k.loss) - float(r.loss)) < 1e-3 * abs(float(r.loss))
+
+
+def test_fused_chunk_dropconnect_bitexact():
+    args, kw, _ = _mk("bce")
+    kw = dict(kw, drop_rate=0.5)
+    k = ops.fused_chunk_step(*args, impl="interpret", **kw)
+    r = jax.jit(functools.partial(ref.fused_chunk_ref, **kw))(*args)
+    np.testing.assert_array_equal(np.asarray(k.w, np.float32),
+                                  np.asarray(r.w, np.float32))
+    np.testing.assert_array_equal(np.asarray(k.xg, np.float32),
+                                  np.asarray(r.xg, np.float32))
+
+
+def test_fused_chunk_kahan_bitexact():
+    args, kw, _ = _mk("bce", w_dtype=jnp.bfloat16)
+    comp = (jax.random.normal(jax.random.PRNGKey(5), args[1].shape)
+            * 1e-4).astype(jnp.bfloat16)
+    k = ops.fused_chunk_step(*args, comp=comp, impl="interpret", **kw)
+    r = jax.jit(functools.partial(ref.fused_chunk_ref, **kw))(*args,
+                                                              comp=comp)
+    np.testing.assert_array_equal(np.asarray(k.w, np.float32),
+                                  np.asarray(r.w, np.float32))
+    np.testing.assert_array_equal(np.asarray(k.comp, np.float32),
+                                  np.asarray(r.comp, np.float32))
+
+
+def test_fused_chunk_cached_z_matches_recompute():
+    """CE cached-z fast path: passing the pass-1 logits must change nothing
+    (same DropConnect seed ⇒ identical z either way)."""
+    args, kw, lse = _mk("softmax_ce", num_labels=300, Lc=320)
+    x, w = args[0], args[1]
+    z = ref.fp8_logits_ref(x, w)
+    k_cached = ops.fused_chunk_step(*args, lse=lse, z=z, impl="interpret",
+                                    **kw)
+    k_fresh = ops.fused_chunk_step(*args, lse=lse, impl="interpret", **kw)
+    for name in ("w", "xg"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(k_cached, name), np.float32),
+            np.asarray(getattr(k_fresh, name), np.float32), err_msg=name)
+    assert float(k_cached.loss) == float(k_fresh.loss)
+
+
+# ---------------------------------------------------------------------------
+# head-level regression: fused vs legacy unfused path
+# ---------------------------------------------------------------------------
+
+
+def _head_setup(loss, impl, cache_z="auto", kahan_chunks=0,
+                weight_dtype="e4m3"):
+    cfg = H.ELMOHeadConfig(num_labels=300, d_model=64, num_chunks=4,
+                           weight_dtype=weight_dtype, loss=loss,
+                           use_sr=True, impl=impl, cache_z=cache_z,
+                           kahan_chunks=kahan_chunks)
+    state = H.init_head(jax.random.PRNGKey(1), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(2), (32, 64)) * 0.5
+         ).astype(jnp.bfloat16)
+    if loss == "bce":
+        tg = jax.random.randint(jax.random.PRNGKey(3), (32, 5), 0, 300)
+    else:
+        tg = jax.random.randint(jax.random.PRNGKey(3), (32,), -1, 300)
+    return cfg, state, x, tg
+
+
+@pytest.mark.parametrize("loss", ["bce", "softmax_ce"])
+def test_head_fused_xla_matches_unfused(loss):
+    """impl='xla' (fused oracle) vs impl='unfused_xla' (legacy 3-op path):
+    the fused step is the exact composition, so states/metrics agree."""
+    outs = {}
+    for impl in ("xla", "unfused_xla"):
+        cfg, state, x, tg = _head_setup(loss, impl)
+        new, xg, m = H.head_train_step(cfg, state, x, tg, jnp.float32(0.1),
+                                       jnp.float32(1e-4), jnp.uint32(9))
+        outs[impl] = (np.asarray(new.w, np.float32),
+                      np.asarray(xg, np.float32), float(m["loss"]))
+    np.testing.assert_array_equal(outs["xla"][0], outs["unfused_xla"][0])
+    np.testing.assert_array_equal(outs["xla"][1], outs["unfused_xla"][1])
+    assert outs["xla"][2] == outs["unfused_xla"][2]
+
+
+@pytest.mark.parametrize("loss", ["bce", "softmax_ce"])
+def test_head_fused_kernel_matches_unfused(loss):
+    """impl='interpret' (the megakernel) vs the legacy unfused path —
+    identical update values up to one-ULP XLA fusion differences."""
+    cfg, state, x, tg = _head_setup(loss, "interpret")
+    new_k, xg_k, m_k = H.head_train_step(cfg, state, x, tg, jnp.float32(0.1),
+                                         jnp.float32(1e-4), jnp.uint32(9))
+    cfg, state, x, tg = _head_setup(loss, "unfused_xla")
+    new_u, xg_u, m_u = H.head_train_step(cfg, state, x, tg, jnp.float32(0.1),
+                                         jnp.float32(1e-4), jnp.uint32(9))
+    # e4m3 weights: the coarse grid absorbs ULP noise except where an SR
+    # draw lands on a boundary — allow a vanishing mismatch fraction
+    wk = np.asarray(new_k.w, np.float32)
+    wu = np.asarray(new_u.w, np.float32)
+    assert (wk != wu).mean() < 5e-3, (wk != wu).mean()
+    np.testing.assert_allclose(np.asarray(xg_k, np.float32),
+                               np.asarray(xg_u, np.float32),
+                               rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(float(m_k["loss"]), float(m_u["loss"]),
+                               rtol=1e-5)
+
+
+def test_head_cache_z_invariant():
+    """cache_z on/off: identical CE training step (logits reuse is exact)."""
+    outs = []
+    for cache_z in ("on", "off"):
+        cfg, state, x, tg = _head_setup("softmax_ce", "xla", cache_z=cache_z)
+        new, xg, m = H.head_train_step(cfg, state, x, tg, jnp.float32(0.1),
+                                       jnp.float32(0.0), jnp.uint32(4))
+        outs.append((np.asarray(new.w, np.float32),
+                     np.asarray(xg, np.float32), float(m["loss"])))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    assert outs[0][2] == outs[1][2]
+
+
+def test_head_fused_kahan_chunks():
+    cfg, state, x, tg = _head_setup("bce", "interpret", kahan_chunks=2,
+                                    weight_dtype="bf16")
+    new, xg, m = H.head_train_step(cfg, state, x, tg, jnp.float32(0.1),
+                                   jnp.float32(0.0), jnp.uint32(0))
+    assert new.comp.shape == state.comp.shape
+    assert np.isfinite(float(m["loss"]))
+    assert not np.allclose(np.asarray(new.w, np.float32),
+                           np.asarray(state.w, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# block-size tuner
+# ---------------------------------------------------------------------------
+
+
+def test_tuning_blocks_divide_and_fit():
+    for B, Lc, D in ((256, 512, 256), (1024, 512, 768), (8, 16, 32),
+                     (256, 4096, 256)):
+        bb, bl, bd = tuning.logits_blocks(B, Lc, D)
+        assert all(v >= 8 for v in (bb, bl, bd))
+        # unsplit K whenever K fits a single tile candidate
+        if D <= 1024:
+            assert bd >= min(D, bd), (B, Lc, D, bd)
+            assert tuning._pad_up(D, 8) <= bd or bd >= 1024
+        blc = tuning.chunk_block_l(B, Lc, D)
+        assert blc >= 128 or blc >= tuning._pad_up(Lc, 8)
+
+
+def test_tuning_prefers_whole_chunk_when_it_fits():
+    assert tuning.chunk_block_l(256, 512, 256) == 512
+    # huge resident set: falls back to small tiles / non-viable
+    assert not tuning.fused_chunk_viable(8192 * 4, 1024)
+    assert tuning.fused_chunk_viable(256, 256)
+
+
+def test_tuning_table_shape():
+    rows = tuning.tuning_table()
+    assert {"logits", "input_grad", "update", "fused_chunk_bl"} <= set(
+        rows[0].keys())

@@ -89,7 +89,7 @@ def test_sr_saturates_no_nan():
 def test_bit_trick_matches_oracle_distribution():
     """Bit-trick SR and oracle SR agree in mean over many draws."""
     x = jnp.array([0.123, -0.456, 7.89, 0.00123], jnp.float32)
-    xs = jnp.tile(x[None, :], (4096, 1))
+    xs = jnp.tile(x[None, :], (16384, 1))
     keys = jax.random.split(jax.random.PRNGKey(9), 2)
     bits = jax.random.bits(keys[0], xs.shape, jnp.uint32)
     fast = np.asarray(P.sr_bits_e4m3(xs, bits).astype(jnp.float32)).mean(0)

@@ -21,6 +21,7 @@ from benchmarks import roofline as R                       # noqa: E402
 from repro.configs.registry import SHAPES, ShapeCell       # noqa: E402
 from repro.launch import steps as St                       # noqa: E402
 from repro.models import transformer as T                  # noqa: E402
+from repro.dist import compat
 from repro.models.config import BlockSpec, ModelConfig     # noqa: E402
 
 
@@ -34,7 +35,7 @@ def test_cost_analysis_counts_scan_body_once():
 
     x = jnp.ones((64, 128))
     w = jnp.ones((128, 128))
-    c = jax.jit(f_scan).lower(x, w).compile().cost_analysis()
+    c = compat.cost_analysis(jax.jit(f_scan).lower(x, w).compile())
     one_iter = 2 * 64 * 128 * 128
     assert c["flops"] < 2 * one_iter, c["flops"]   # ≪ 8 iterations
 
@@ -56,7 +57,7 @@ def test_analytic_fwd_flops_matches_compiled():
     comp = jax.jit(
         lambda bb, t: T.backbone_apply(bb, cfg, t, remat=False)
     ).lower(bb, toks).compile()
-    measured = comp.cost_analysis()["flops"]
+    measured = compat.cost_analysis(comp)["flops"]
 
     f = R.fwd_flops(cfg, B * S, S)
     analytic = sum(f.values())
