@@ -75,6 +75,48 @@ def bench_fp8_logits(L=4096, D=256, B=256):
              "w_bytes": w16.nbytes}]
 
 
+def bench_sharded_head(L=4096, D=256, B=256, shards=(1, 2, 4)):
+    """Per-device footprint of the label-sharded fused chunk step.
+
+    Under vocab parallelism every device runs the *same* program on its
+    L/n label rows (core/elmo_head.head_train_step_sharded), so the
+    per-device transient memory is exactly the single-device fused chunk
+    step compiled at the local width — measured here via XLA's
+    ``memory_analysis()`` temp bytes, without needing a forced multi-device
+    backend inside the bench process.  The tuner's local-shard tile
+    (``chunk_block_l(..., n_shards=n)``) is reported alongside.
+    """
+    from repro.kernels import ops, tuning
+
+    rows = []
+    for n in shards:
+        Lc = L // n
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = (jax.random.normal(ks[0], (B, D)) * 0.5).astype(jnp.bfloat16)
+        w = (jax.random.normal(ks[1], (Lc, D)) * 0.05
+             ).astype(jnp.float8_e4m3fn)
+        xg = jnp.zeros((B, D), jnp.bfloat16)
+        tg = jax.random.randint(ks[2], (B, 8), 0, L)
+        args = (x, w, tg, xg, jnp.float32(0.05), jnp.float32(0.0),
+                jnp.float32(1.0 / B), jnp.int32(0), jnp.uint32(3),
+                jnp.uint32(5))
+        kw = dict(loss="bce", num_labels=L)
+        fused_k = jax.jit(lambda *a: ops.fused_chunk_step(
+            *a, impl="interpret", **kw))
+        fused_x = jax.jit(lambda *a: ops.fused_chunk_step(
+            *a, impl="xla", **kw))
+        b = _temp_bytes(fused_k, *args)
+        rows.append({
+            "name": f"kernel/sharded_chunk_n{n}",
+            "us_per_call": round(_time(fused_x, *args)),
+            "per_device_temp_bytes": b,
+            "temp_mib": round(b / 2**20, 2),
+            "local_rows": Lc,
+            "block_l": tuning.chunk_block_l(B, L, D, 1, n_shards=n),
+        })
+    return rows
+
+
 def bench_fused_chunk(L=4096, D=256, B=256):
     """Single-launch fused chunk step vs the legacy 3-launch composition.
 

@@ -106,8 +106,10 @@ def _stability():
 @section("kernels")
 def _kernels():
     from benchmarks.kernel_bench import (bench_fp8_logits, bench_fused_chunk,
-                                         bench_fused_update)
+                                         bench_fused_update,
+                                         bench_sharded_head)
     _emit(bench_fused_chunk())      # single-launch megakernel vs 3-launch
+    _emit(bench_sharded_head())     # per-device temp bytes, label-sharded
     _emit(bench_fused_update())
     _emit(bench_fp8_logits())
 

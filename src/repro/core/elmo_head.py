@@ -22,6 +22,13 @@ The head never enters autodiff: the caller runs the backbone under
 ``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces the
 paper's reordered computation flow (encoder fwd → head fwd/bwd/update →
 encoder bwd) and its peak-memory profile by construction.
+
+When a mesh is active (``dist.meshctx``), ``head_train_step_sharded`` runs
+the same fused chunk kernel label-sharded over the model axis (every device
+owns ``chunk/n`` rows of each chunk, per ``dist.sharding.head_specs``), with
+a cross-device two-pass LSE for softmax-CE and a ``psum`` of the per-shard
+input gradients — DESIGN.md §6.  ``head_topk_sharded``/``head_logits_sharded``
+are the matching serving paths (local top-k → gather → global re-rank).
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as PS
 
 from repro.core import losses as L
 from repro.core import precision as P
@@ -38,7 +46,8 @@ from repro.kernels import ops
 from repro.kernels import prng_utils as PR
 from repro.kernels import tuning as _tuning
 
-_WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "f32": P.F32}
+_WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "e5m2": P.E5M2,
+                  "f32": P.F32}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,7 +55,7 @@ class ELMOHeadConfig:
     num_labels: int
     d_model: int
     num_chunks: int = 8
-    weight_dtype: str = "bf16"         # "bf16" | "e4m3" | "f32" (baseline)
+    weight_dtype: str = "bf16"         # "bf16" | "e4m3" | "e5m2" | "f32"
     loss: str = "bce"                  # "bce" (XMC) | "softmax_ce" (LM)
     use_sr: bool = True                # stochastic rounding in the update
     kahan_chunks: int = 0              # leading chunks w/ Kahan comp (App. D)
@@ -162,6 +171,46 @@ def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
     return jnp.where(valid, z.astype(jnp.float32), L.NEG_INF)
 
 
+def _scan_chunks(cfg: ELMOHeadConfig, w, comp, chunk_ids, zs, carry,
+                 chunk_step):
+    """The Kahan/SR chunk-scan split shared by every train-step path
+    (fused, unfused, sharded).  ``chunk_step(xg, loss, wc, comp_c, cidx,
+    z_c)`` is the per-chunk work; the documented fused-vs-unfused-vs-
+    sharded parity depends on this scaffolding living in exactly one
+    place.  Returns (carry, w_kahan, w_sr, comp_new)."""
+
+    def kahan_body(carry, inp):
+        xg, loss = carry
+        wc, comp_c, cidx, z_c = (inp if zs is not None else inp + (None,))
+        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
+                                                z_c)
+        return (xg, loss), (wc_new, comp_new)
+
+    def sr_body(carry, inp):
+        xg, loss = carry
+        wc, cidx, z_c = inp if zs is not None else inp + (None,)
+        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
+        return (xg, loss), wc_new
+
+    ck = cfg.kahan_chunks
+    if ck:
+        xs = (w[:ck], comp, chunk_ids[:ck])
+        if zs is not None:
+            xs += (zs[:ck],)
+        carry, (w_k, comp_new) = jax.lax.scan(kahan_body, carry, xs)
+    else:
+        w_k, comp_new = w[:0], comp
+
+    if ck < cfg.num_chunks:
+        xs = (w[ck:], chunk_ids[ck:])
+        if zs is not None:
+            xs += (zs[ck:],)
+        carry, w_s = jax.lax.scan(sr_body, carry, xs)
+    else:
+        w_s = w[:0]
+    return carry, w_k, w_s, comp_new
+
+
 def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
                     targets: jax.Array, lr: jax.Array, wd: jax.Array,
                     seed: jax.Array
@@ -234,38 +283,10 @@ def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
             compute_loss=cfg.compute_loss, impl=impl)
         return out.xg, loss_acc + out.loss, out.w, out.comp
 
-    def kahan_body(carry, inp):
-        xg, loss = carry
-        wc, comp_c, cidx, z_c = (inp if zs is not None
-                                 else inp + (None,))
-        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
-                                                z_c)
-        return (xg, loss), (wc_new, comp_new)
-
-    def sr_body(carry, inp):
-        xg, loss = carry
-        wc, cidx, z_c = inp if zs is not None else inp + (None,)
-        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
-        return (xg, loss), wc_new
-
     carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
-    ck = cfg.kahan_chunks
-    if ck:
-        xs = (state.w[:ck], state.comp, chunk_ids[:ck])
-        if zs is not None:
-            xs += (zs[:ck],)
-        carry, (w_k, comp_new) = jax.lax.scan(kahan_body, carry, xs)
-    else:
-        w_k, comp_new = state.w[:0], state.comp
-
-    if ck < cfg.num_chunks:
-        xs = (state.w[ck:], chunk_ids[ck:])
-        if zs is not None:
-            xs += (zs[ck:],)
-        carry, w_s = jax.lax.scan(sr_body, carry, xs)
-    else:
-        w_s = state.w[:0]
-
+    carry, w_k, w_s, comp_new = _scan_chunks(cfg, state.w, state.comp,
+                                             chunk_ids, zs, carry,
+                                             chunk_step)
     return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
                           scale, B)
 
@@ -324,7 +345,7 @@ def _head_train_step_unfused(cfg: ELMOHeadConfig, state: HeadState,
         lse = L.lse_finalize(m, s)
 
     # ----- pass 2: per-chunk grad + fused update + x̄ accumulation
-    def chunk_step(xg, loss_acc, wc, comp_c, cidx):
+    def chunk_step(xg, loss_acc, wc, comp_c, cidx, _z):
         sd = _chunk_seed(seed, cidx, 0)
         z = _chunk_logits(cfg, wc, x, sd, impl)
         g, loss_c = _chunk_grad(cfg, z, targets, cidx, lse, scale)
@@ -340,39 +361,269 @@ def _head_train_step_unfused(cfg: ELMOHeadConfig, state: HeadState,
             g, x, wc, comp_c, lr, wd, upd_seed, impl=impl)
         return xg, loss_acc + loss_c, wc_new, comp_new
 
-    xg0 = jnp.zeros((B, cfg.d_model), jnp.bfloat16)
-    loss0 = jnp.float32(0.0)
-    ck = cfg.kahan_chunks
-
-    def kahan_body(carry, inp):
-        xg, loss = carry
-        wc, comp_c, cidx = inp
-        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx)
-        return (xg, loss), (wc_new, comp_new)
-
-    def sr_body(carry, inp):
-        xg, loss = carry
-        wc, cidx = inp
-        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx)
-        return (xg, loss), wc_new
-
-    carry = (xg0, loss0)
-    if ck:
-        carry, (w_k, comp_new) = jax.lax.scan(
-            kahan_body, carry,
-            (state.w[:ck], state.comp, jnp.arange(ck, dtype=jnp.int32)))
-    else:
-        w_k, comp_new = state.w[:0], state.comp
-
-    if ck < cfg.num_chunks:
-        carry, w_s = jax.lax.scan(
-            sr_body, carry,
-            (state.w[ck:], jnp.arange(ck, cfg.num_chunks, dtype=jnp.int32)))
-    else:
-        w_s = state.w[:0]
-
+    carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
+    carry, w_k, w_s, comp_new = _scan_chunks(
+        cfg, state.w, state.comp,
+        jnp.arange(cfg.num_chunks, dtype=jnp.int32), None, carry,
+        chunk_step)
     return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
                           scale, B)
+
+
+# ---------------------------------------------------------------------------
+# label-sharded training (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_ctx(ctx):
+    """Active MeshContext (explicit arg wins) and its model-axis size."""
+    from repro.dist import meshctx as _meshctx  # lazy: dist imports core
+    ctx = _meshctx.get() if ctx is None else ctx
+    return ctx, (1 if ctx is None else ctx.model_size)
+
+
+def init_xg_err(cfg: ELMOHeadConfig, batch: int, ctx=None) -> jax.Array:
+    """Per-shard E5M2 error-feedback carry for the compressed x̄ reduction:
+    (model_size, B, D) BF16, row r owned by model rank r."""
+    _, n = _resolve_ctx(ctx)
+    return jnp.zeros((n, batch, cfg.d_model), P.BF16)
+
+
+def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
+                            x: jax.Array, targets: jax.Array, lr: jax.Array,
+                            wd: jax.Array, seed: jax.Array, ctx=None, *,
+                            ce_comm: str = "gather",
+                            compress_xg: bool = False,
+                            xg_err: Optional[jax.Array] = None):
+    """``head_train_step`` with the label dimension sharded over the mesh's
+    model axis (vocab parallelism, per ``dist.sharding.head_specs``).
+
+    Every model rank holds ``chunk/n`` rows of each chunk (W and the Kahan
+    buffer partitioned identically) and runs the fused chunk kernel on its
+    local shard; the batch is gathered over the data axes so the in-kernel
+    weight update sees full-B gradients — W updates stay deterministic and
+    need no cross-data all-reduce.  Per-shard x̄ partials are ``psum``-reduced
+    over the model axis (optionally E5M2-compressed, see ``compress_xg``).
+
+    Softmax-CE couples shards through the row normalizer; ``ce_comm`` picks
+    the cross-device LSE strategy (DESIGN.md §6):
+
+    * ``"gather"`` (default) — the pass-1 logits of each chunk are
+      all-gathered (BF16, column-tiled) and the streaming LSE + the loss
+      run on the full-width rows: weights, Kahan state and the loss are
+      **bit-identical** to single-device ``head_train_step`` for
+      deterministic updates (BF16 Kahan / no-SR).  Comm: B·L·2 bytes/step.
+    * ``"stats"`` — each shard folds a local (max, Σexp) over its label
+      windows, then one ``pmax`` + one rescaled ``psum`` form the global
+      log-normalizer: comm is O(B) but sums reassociate (parity to ~1e-6).
+
+    BCE is embarrassingly parallel; ``ce_comm`` only selects whether the
+    loss *value* is computed from gathered logits (bit-parity) or from
+    ``psum``-ed per-shard partials.
+
+    ``compress_xg`` sends each shard's x̄ over the wire as E5M2 (1 byte/elem,
+    ``dist.compression``); with ``xg_err`` (see ``init_xg_err``) the residual
+    is carried across steps as classic error feedback, and the updated carry
+    is returned as a fourth output.
+
+    Falls back to the single-device step when no mesh is active or the
+    chunk does not divide the model axis.  SR and DropConnect draws are
+    hashed per *local* tile, so low-precision SR runs match single-device
+    only distributionally (the paper's own guarantee, App. C).
+    """
+    from repro.dist.compat import shard_map as _shard_map
+
+    assert ce_comm in ("gather", "stats"), ce_comm
+    assert xg_err is None or compress_xg, "xg_err implies compress_xg"
+    ctx, n = _resolve_ctx(ctx)
+    if n == 1 or cfg.chunk % n != 0:
+        out = head_train_step(cfg, state, x, targets, lr, wd, seed)
+        return out if xg_err is None else out + (xg_err,)
+
+    mesh, axis = ctx.mesh, ctx.model_axis
+    batch_axes = tuple(a for a in ctx.batch_axes
+                      if a in mesh.shape and mesh.shape[a] > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= int(mesh.shape[a])
+    if x.shape[0] % n_batch != 0:
+        batch_axes, n_batch = (), 1      # ragged batch: replicate instead
+    b0 = batch_axes if batch_axes else None
+
+    inner = _impl_split(cfg.impl)[1]
+    if (ops.resolve_impl(inner) == "kernel"
+            and not _tuning.fused_chunk_viable(
+                x.shape[0], cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
+                kahan=cfg.kahan_chunks > 0)):
+        inner = "xla"    # sharded path is megakernel-shaped; oracle fallback
+
+    kahan = cfg.kahan_chunks > 0
+    lc = cfg.chunk // n
+    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+    has_err = xg_err is not None
+    impl = inner
+
+    def body(*args):
+        it = iter(args)
+        w = next(it)
+        comp = next(it) if kahan else None
+        xl, tgt = next(it), next(it)
+        lr_, wd_, seed_ = next(it), next(it), next(it)
+        err = next(it) if has_err else None          # (1, B, D) local slice
+
+        Bl = xl.shape[0]
+        for a in reversed(batch_axes):   # innermost batch axis first
+            xl = jax.lax.all_gather(xl, a, axis=0, tiled=True)
+            tgt = jax.lax.all_gather(tgt, a, axis=0, tiled=True)
+        x16 = xl.astype(jnp.bfloat16)
+        B = x16.shape[0]
+        r = jax.lax.axis_index(axis)
+        # independent SR/DropConnect stream per shard: kernel bits are
+        # hashed by the *local* tile index, so shards must not share seeds
+        seed_sh = PR.mix32(seed_.astype(jnp.uint32)
+                           + (r.astype(jnp.uint32) + 1)
+                           * np.uint32(0x85EBCA6B))
+
+        def c0_of(cidx):
+            return cidx * cfg.chunk + r.astype(jnp.int32) * lc
+
+        loss_pre = jnp.float32(0.0)
+        if cfg.loss == "bce":
+            scale = jnp.float32(1.0 / B)
+            lse, zs = None, None
+        else:
+            n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
+            scale = 1.0 / n_tok
+            cache = cfg.cache_z == "on" or (
+                cfg.cache_z == "auto"
+                and B * (cfg.padded_labels // n) * 2 <= _CACHE_Z_BYTES)
+
+            if ce_comm == "gather":
+                # pass 1: full-width streaming LSE on gathered chunk logits
+                # (identical op sequence to the single-device pass — the
+                # source of the bit-parity guarantee); the CE target-logit
+                # sum rides along so the loss is exact too
+                def lse_body(carry, inp):
+                    wc, cidx = inp
+                    m, s, lraw = carry
+                    zl = _chunk_logits(cfg, wc, x16,
+                                       _chunk_seed(seed_sh, cidx, 0), impl)
+                    zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+                    m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                    if cfg.compute_loss:
+                        lraw = lraw + L.ce_target_logit_chunk(
+                            zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                    return (m, s, lraw), (zl if cache else None)
+
+                (m, s, loss_pre), zs = jax.lax.scan(
+                    lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                    (w, chunk_ids))
+            else:
+                # pass 1 (stats): local (max, Σexp) over this shard's label
+                # windows, then pmax + one rescaled psum — O(B) comm
+                def lse_body(carry, inp):
+                    wc, cidx = inp
+                    m, s = carry
+                    zl = _chunk_logits(cfg, wc, x16,
+                                       _chunk_seed(seed_sh, cidx, 0), impl)
+                    validl = (c0_of(cidx) + jnp.arange(lc)) < cfg.num_labels
+                    zm = jnp.where(validl[None, :], zl.astype(jnp.float32),
+                                   L.NEG_INF)
+                    return L.lse_update(m, s, zm), (zl if cache else None)
+
+                (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
+                                          (w, chunk_ids))
+                m_g = jax.lax.pmax(m, axis)
+                s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
+                m, s = m_g, s_g
+            lse = L.lse_finalize(m, s)
+
+        kernel_loss = cfg.compute_loss and ce_comm == "stats"
+
+        def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+            if cfg.loss == "bce" and ce_comm == "gather":
+                z_c = _chunk_logits(cfg, wc, x16,
+                                    _chunk_seed(seed_sh, cidx, 0), impl)
+                if cfg.compute_loss:
+                    zf = jax.lax.all_gather(z_c, axis, axis=1, tiled=True)
+                    y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
+                    loss_acc = loss_acc + L.bce_chunk_loss(
+                        zf, y, mask=_valid_cols(cfg, cidx)[None, :])
+            out = ops.fused_chunk_step(
+                x16, wc, tgt, xg, lr_, wd_, scale, c0_of(cidx),
+                _chunk_seed(seed_sh, cidx, 0), _chunk_seed(seed_sh, cidx, 1),
+                lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
+                num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                compute_loss=kernel_loss, impl=impl)
+            return out.xg, loss_acc + out.loss, out.w, out.comp
+
+        carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
+        carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
+                                                 zs, carry, chunk_step)
+        xg_loc, loss_raw = carry
+        if ce_comm == "stats" and cfg.compute_loss:
+            loss_raw = jax.lax.psum(loss_raw, axis)
+
+        # ---- cross-shard x̄ reduction (optionally E5M2 on the wire) ----
+        err_new = err
+        if compress_xg:
+            from repro.dist import compression as C
+            if err is not None:
+                cpr, e = C.compress_with_feedback(xg_loc, err[0])
+                err_new = e[None]
+            else:
+                cpr = C.compress(xg_loc)
+            payloads = jax.lax.all_gather(cpr.payload, axis)   # (n, B·D) e5m2
+            scales = jax.lax.all_gather(cpr.scale, axis)       # (n,)
+            xg32 = (payloads.astype(jnp.float32) * scales[:, None]).sum(0)
+            xg_comb = xg32.reshape(B, cfg.d_model).astype(jnp.bfloat16)
+        else:
+            xg_comb = jax.lax.psum(xg_loc.astype(jnp.float32), axis
+                                   ).astype(jnp.bfloat16)
+
+        st_new, xg_full, metrics = _finalize_step(
+            cfg, (xg_comb, loss_raw), w_k, w_s, comp_new, tgt, lse, scale, B)
+
+        if batch_axes:   # hand back only this rank's batch rows
+            bidx = jnp.int32(0)
+            for a in batch_axes:
+                bidx = bidx * mesh.shape[a] + jax.lax.axis_index(a)
+            xg_out = jax.lax.dynamic_slice_in_dim(xg_full, bidx * Bl, Bl, 0)
+        else:
+            xg_out = xg_full
+
+        outs = [st_new.w]
+        if kahan:
+            outs.append(st_new.comp)
+        outs += [xg_out, metrics["loss"], metrics["xgrad_norm"]]
+        if has_err:
+            outs.append(err_new)
+        return tuple(outs)
+
+    wspec = PS(None, axis, None)
+    tgt_spec = PS(b0, None) if targets.ndim == 2 else PS(b0)
+    operands = [state.w] + ([state.comp] if kahan else []) + [
+        x, targets, jnp.asarray(lr, jnp.float32),
+        jnp.asarray(wd, jnp.float32), jnp.asarray(seed).astype(jnp.uint32)]
+    in_specs = [wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), tgt_spec, PS(), PS(), PS()]
+    out_specs = [wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), PS(), PS()]
+    if has_err:
+        operands.append(xg_err)
+        in_specs.append(PS(axis, None, None))
+        out_specs.append(PS(axis, None, None))
+
+    outs = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                      out_specs=tuple(out_specs), check_vma=False)(*operands)
+    it = iter(outs)
+    w_new = next(it)
+    comp_new = next(it) if kahan else None
+    xg, loss, xnorm = next(it), next(it), next(it)
+    metrics = {"loss": loss, "xgrad_norm": xnorm}
+    ret = (HeadState(w_new, comp_new), xg, metrics)
+    return ret + ((next(it),) if has_err else ())
 
 
 # ---------------------------------------------------------------------------
@@ -396,28 +647,115 @@ def head_logits(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array
     return z[:, :cfg.num_labels]
 
 
-def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
-              ) -> Tuple[jax.Array, jax.Array]:
-    """Streaming top-k over chunks — never materializes full logits."""
-    x = x.astype(jnp.bfloat16)
+def _topk_scan(cfg: ELMOHeadConfig, w: jax.Array, x: jax.Array, k: int,
+               width: int, c0_of) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over chunk slices of ``width`` label columns whose
+    global offset is ``c0_of(cidx)`` — never materializes full logits.
+
+    The single scan shared by the local and sharded serving paths: ties at
+    equal logits resolve to the earliest candidate (lowest label id), and
+    padded columns (≥ num_labels) are masked to NEG_INF so they can never
+    surface; the sharded merge's tie-break contract depends on this body
+    living in exactly one place."""
     B = x.shape[0]
 
     def body(carry, inp):
         vals, idx = carry
         wc, cidx = inp
-        z = _masked_z(cfg, _chunk_logits(cfg, wc, x, jnp.uint32(0)), cidx)
+        c0 = c0_of(cidx)
+        z = _chunk_logits(cfg, wc, x, jnp.uint32(0))  # no dropout at eval
+        valid = (c0 + jnp.arange(width)) < cfg.num_labels
+        z = jnp.where(valid[None, :], z.astype(jnp.float32), L.NEG_INF)
         cand = jnp.concatenate([vals, z], axis=1)
         cand_idx = jnp.concatenate(
-            [idx, jnp.broadcast_to(cidx * cfg.chunk + jnp.arange(cfg.chunk),
-                                   (B, cfg.chunk))], axis=1)
+            [idx, jnp.broadcast_to(c0 + jnp.arange(width), (B, width))],
+            axis=1)
         v, local = jax.lax.top_k(cand, k)
         return (v, jnp.take_along_axis(cand_idx, local, axis=1)), None
 
     init = (jnp.full((B, k), L.NEG_INF, jnp.float32),
             jnp.zeros((B, k), jnp.int32))
     (vals, idx), _ = jax.lax.scan(
-        body, init, (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        body, init, (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
     return vals, idx
+
+
+def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over chunks — never materializes full logits."""
+    return _topk_scan(cfg, state.w, x.astype(jnp.bfloat16), k, cfg.chunk,
+                      lambda cidx: cidx * cfg.chunk)
+
+
+def head_logits_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                        ctx=None) -> jax.Array:
+    """``head_logits`` with W label-sharded over the mesh's model axis.
+
+    Each rank computes its (B, C·chunk/n) logit columns; one BF16
+    ``all_gather`` per chunk restores the global column order — the op
+    sequence per column matches ``head_logits``, so values are bit-equal.
+    Falls back to the local path when no mesh is active."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    ctx, n = _resolve_ctx(ctx)
+    if n == 1 or cfg.chunk % n != 0:
+        return head_logits(cfg, state, x)
+    axis = ctx.model_axis
+    x = x.astype(jnp.bfloat16)
+
+    def body(w, x):
+        def scan_body(_, inp):
+            wc, cidx = inp
+            zl = _chunk_logits(cfg, wc, x, jnp.uint32(0))
+            return None, jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+
+        _, zs = jax.lax.scan(
+            scan_body, None,
+            (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        return jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
+
+    z = _shard_map(body, mesh=ctx.mesh,
+                   in_specs=(PS(None, axis, None), PS()),
+                   out_specs=PS(), check_vma=False)(state.w, x)
+    return z[:, :cfg.num_labels]
+
+
+def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                      k: int, ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """``head_topk`` with W label-sharded: local streaming top-k per rank,
+    gather of the n·k candidates, global re-rank (DESIGN.md §6).
+
+    Comm is O(B·k·n) instead of O(B·L); padded label columns are masked on
+    the *local* column window so they can never surface, and ids are global.
+    Falls back to the local path when no mesh is active."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    ctx, n = _resolve_ctx(ctx)
+    if n == 1 or cfg.chunk % n != 0:
+        return head_topk(cfg, state, x, k)
+    axis = ctx.model_axis
+    lc = cfg.chunk // n
+    x = x.astype(jnp.bfloat16)
+
+    def body(w, x):
+        r = jax.lax.axis_index(axis).astype(jnp.int32)
+        vals, idx = _topk_scan(cfg, w, x, k, lc,
+                               lambda cidx: cidx * cfg.chunk + r * lc)
+        # (n, B, k) candidates → (B, n·k) → global re-rank.  Sorting on
+        # (−value, id) reproduces head_topk's streaming tie-break (equal
+        # logits resolve to the lowest label id) so the merged ids match
+        # the single-device output exactly, not just the values.
+        vall = jax.lax.all_gather(vals, axis)
+        idxl = jax.lax.all_gather(idx, axis)
+        B = x.shape[0]
+        vall = jnp.moveaxis(vall, 0, 1).reshape(B, n * k)
+        idxl = jnp.moveaxis(idxl, 0, 1).reshape(B, n * k)
+        nv, ids = jax.lax.sort((-vall, idxl), dimension=1, num_keys=2)
+        return -nv[:, :k], ids[:, :k]
+
+    return _shard_map(body, mesh=ctx.mesh,
+                      in_specs=(PS(None, axis, None), PS()),
+                      out_specs=(PS(), PS()), check_vma=False)(state.w, x)
 
 
 def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,

@@ -20,6 +20,7 @@ class MemScenario:
     d_model: int = 768
     batch: int = 128
     num_chunks: int = 8
+    kahan_chunks: int = 0             # leading chunks w/ BF16 comp (App. D)
     encoder_gib: float = 1.2          # params + AdamW states (BERT-base)
     act_bf16_gib: float = 4.6         # paper §4.4
     act_fp8_gib: float = 3.0 + 0.5    # fp8 acts + scaling buffers
@@ -27,6 +28,33 @@ class MemScenario:
 
 def _w_bytes(s: MemScenario, bytes_per: float) -> float:
     return s.num_labels * s.d_model * bytes_per
+
+
+WEIGHT_BYTES = {"bf16": 2, "e4m3": 1, "e5m2": 1, "f32": 4}
+
+
+def head_components(s: MemScenario, weight_dtype: str = "bf16",
+                    n_label_shards: int = 1) -> dict:
+    """Per-device ELMO *head* memory (the paper's Fig. 3 head terms only).
+
+    ``n_label_shards`` is the mesh's model-axis size when the head is
+    vocab-parallel (``dist.sharding.head_specs``): W, the Kahan buffer and
+    the per-chunk logit/grad transients all live on the label axis, so every
+    component divides by the shard count — the encoder/activation terms are
+    data-parallel and excluded here."""
+    wb = WEIGHT_BYTES[weight_dtype]
+    frac = 1.0 / max(1, n_label_shards)
+    chunk_rows = s.num_labels / s.num_chunks
+    comp = {
+        f"W_{weight_dtype}": _w_bytes(s, wb) * frac,
+        "W_kahan_comp_bf16":
+            _w_bytes(s, 2) * (s.kahan_chunks / s.num_chunks) * frac,
+        "chunk_logits_bf16": s.batch * chunk_rows * 2 * frac,
+        "chunk_logit_grad_bf16": s.batch * chunk_rows * 2 * frac,
+        "W_grad": 0.0,                      # fused into the update kernel
+    }
+    comp["total"] = sum(comp.values())
+    return comp
 
 
 def renee_peak(s: MemScenario) -> dict:
@@ -46,19 +74,20 @@ def renee_peak(s: MemScenario) -> dict:
     return comp
 
 
-def elmo_peak(s: MemScenario, weight_dtype: str = "bf16") -> dict:
+def elmo_peak(s: MemScenario, weight_dtype: str = "bf16",
+              n_label_shards: int = 1) -> dict:
     """Paper Fig. 3 (right): W in 16/8-bit, no momentum, no grads (fused),
-    logits/grads divided by the chunk count."""
-    wb = {"bf16": 2, "e4m3": 1, "f32": 4}[weight_dtype]
-    act = s.act_fp8_gib if weight_dtype == "e4m3" else s.act_bf16_gib
-    comp = {
-        f"W_{weight_dtype}": _w_bytes(s, wb),
-        "chunk_logits_bf16": s.batch * (s.num_labels / s.num_chunks) * 2,
-        "chunk_logit_grad_bf16": s.batch * (s.num_labels / s.num_chunks) * 2,
-        "W_grad": 0.0,                      # fused into the update kernel
-        "encoder": s.encoder_gib * GIB,
-        "activations": act * GIB,
-    }
+    logits/grads divided by the chunk count.  With ``n_label_shards`` > 1
+    the head terms are per-device under label sharding (DESIGN.md §6);
+    encoder/activations are data-parallel and stay whole."""
+    act = s.act_fp8_gib if weight_dtype in ("e4m3", "e5m2") \
+        else s.act_bf16_gib
+    comp = head_components(s, weight_dtype, n_label_shards)
+    del comp["total"]
+    if not s.kahan_chunks:
+        del comp["W_kahan_comp_bf16"]
+    comp["encoder"] = s.encoder_gib * GIB
+    comp["activations"] = act * GIB
     comp["total"] = sum(comp.values())
     return comp
 

@@ -164,15 +164,62 @@ def sr_bits_e4m3(x32: jax.Array, rand_bits: jax.Array) -> jax.Array:
     return y.astype(E4M3)
 
 
+def sr_bits_e5m2(x32: jax.Array, rand_bits: jax.Array) -> jax.Array:
+    """SR f32→float8_e5m2 via the 21-low-mantissa-bit trick.
+
+    Normal range (|x| ≥ 2⁻¹⁴): the e5m2 grid equals the f32 grid truncated to
+    2 mantissa bits, so adding U[0, 2²¹) below bit 21 and truncating is exact
+    SR.  Subnormal range (|x| < 2⁻¹⁴): uniform grid with step 2⁻¹⁶; we SR on
+    that fixed grid explicitly.  Saturates at ±57344 (avoid rounding to inf —
+    e5m2 *has* an inf encoding, which training must never produce).
+    """
+    x32 = x32.astype(F32)
+    lim = max_finite(E5M2)
+    xc = jnp.clip(x32, -lim, lim)
+
+    # --- normal-range bit trick ---
+    mask = np.uint32((1 << 21) - 1)
+    bits = jax.lax.bitcast_convert_type(xc, jnp.uint32)
+    r = rand_bits.astype(jnp.uint32) & mask
+    trunc = (bits + r) & ~mask
+    y_norm = jax.lax.bitcast_convert_type(trunc, F32)
+    y_norm = jnp.clip(y_norm, -lim, lim)
+
+    # --- subnormal fixed grid (step 2⁻¹⁶) ---
+    scaled = xc * 65536.0  # 2¹⁶
+    lo = jnp.floor(scaled)
+    frac = scaled - lo
+    u = (rand_bits.astype(jnp.uint32) >> 8).astype(F32) * (1.0 / float(1 << 24))
+    y_sub = (lo + (u < frac).astype(F32)) * (1.0 / 65536.0)
+
+    y = jnp.where(jnp.abs(xc) < 2.0 ** -14, y_sub, y_norm)
+    y = jnp.where(jnp.isfinite(x32), y, x32)
+    return y.astype(E5M2)
+
+
+def sr_bits(x32: jax.Array, rand_bits: jax.Array, dtype) -> jax.Array:
+    """Dispatching bit-trick SR cast (the single dtype switch shared by the
+    kernels, their oracles, and the optimizers)."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(F32):
+        # every f32 value is exactly representable: SR degenerates to the
+        # identity (the seed code silently e4m3-cast f32 weights here)
+        return x32.astype(F32)
+    if dtype == jnp.dtype(BF16):
+        return sr_bits_bf16(x32, rand_bits)
+    if dtype == jnp.dtype(E4M3):
+        return sr_bits_e4m3(x32, rand_bits)
+    if dtype == jnp.dtype(E5M2):
+        return sr_bits_e5m2(x32, rand_bits)
+    raise ValueError(f"no bit-trick SR for dtype {dtype}")
+
+
 def sr_cast(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
     """Dispatching fast SR cast (bit trick where available, oracle otherwise)."""
     dtype = jnp.dtype(dtype)
-    if dtype == jnp.dtype(BF16):
+    if dtype in (jnp.dtype(BF16), jnp.dtype(E4M3), jnp.dtype(E5M2)):
         bits = jax.random.bits(key, x.shape, jnp.uint32)
-        return sr_bits_bf16(x.astype(F32), bits)
-    if dtype == jnp.dtype(E4M3):
-        bits = jax.random.bits(key, x.shape, jnp.uint32)
-        return sr_bits_e4m3(x.astype(F32), bits)
+        return sr_bits(x.astype(F32), bits, dtype)
     return stochastic_round(x, dtype, key)
 
 

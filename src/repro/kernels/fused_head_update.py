@@ -31,11 +31,7 @@ from repro.kernels import tuning
 def _apply_sr(w_new32, out_dtype, bits, use_sr: bool):
     if not use_sr:
         return w_new32.astype(out_dtype)
-    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
-        return P.sr_bits_bf16(w_new32, bits)
-    if jnp.dtype(out_dtype) == jnp.dtype(P.E4M3):
-        return P.sr_bits_e4m3(w_new32, bits)
-    raise ValueError(f"unsupported weight dtype {out_dtype}")
+    return P.sr_bits(w_new32, bits, out_dtype)
 
 
 def _update_kernel_sr(seed_ref, hyper_ref, g_ref, x_ref, w_ref, w_out_ref,

@@ -26,10 +26,7 @@ def _hash_full(seed: jax.Array, shape: tuple[int, int]) -> jax.Array:
 
 def sr_cast_2d_ref(x: jax.Array, seed: jax.Array, *, out_dtype) -> jax.Array:
     bits = _hash_full(seed, x.shape)
-    x32 = x.astype(jnp.float32)
-    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
-        return P.sr_bits_bf16(x32, bits)
-    return P.sr_bits_e4m3(x32, bits)
+    return P.sr_bits(x.astype(jnp.float32), bits, out_dtype)
 
 
 def fp8_logits_ref(x: jax.Array, w: jax.Array, seed: jax.Array | None = None,
@@ -67,9 +64,7 @@ def fused_head_update_ref(g: jax.Array, x: jax.Array, w: jax.Array,
     if not use_sr:
         return w_new.astype(w.dtype)
     bits = _hash_full(seed, w.shape)
-    if jnp.dtype(w.dtype) == jnp.dtype(P.BF16):
-        return P.sr_bits_bf16(w_new, bits)
-    return P.sr_bits_e4m3(w_new, bits)
+    return P.sr_bits(w_new, bits, w.dtype)
 
 
 def fused_head_update_kahan_ref(g: jax.Array, x: jax.Array, w: jax.Array,

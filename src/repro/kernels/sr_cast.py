@@ -24,10 +24,7 @@ def _sr_cast_kernel(seed_ref, x_ref, o_ref, *, out_dtype):
     col0 = (j * cols).astype(jnp.uint32)
     bits = PR.hash_bits_2d(seed_ref[0], row0, col0, (rows, cols))
     x32 = x_ref[...].astype(jnp.float32)
-    if jnp.dtype(out_dtype) == jnp.dtype(P.BF16):
-        o_ref[...] = P.sr_bits_bf16(x32, bits)
-    else:
-        o_ref[...] = P.sr_bits_e4m3(x32, bits)
+    o_ref[...] = P.sr_bits(x32, bits, out_dtype)
 
 
 @functools.partial(jax.jit,

@@ -121,9 +121,18 @@ def _chunk_vmem(B: int, D: int, bl: int, w_bytes: int, kahan: bool,
     return resident + per_tile
 
 
+def local_chunk(L: int, n_shards: int = 1) -> int:
+    """Per-device label rows when the chunk dimension is sharded ``n_shards``
+    ways over the mesh's model axis (``elmo_head.head_train_step_sharded``).
+    The chunk alignment (256) guarantees exact divisibility for power-of-two
+    meshes; ceil-divide so ragged hypothetical shardings stay conservative."""
+    return -(-L // max(1, n_shards))
+
+
 @functools.lru_cache(maxsize=None)
 def chunk_block_l(B: int, L: int, D: int, w_bytes: int = 1,
-                  kahan: bool = False, cached_z: bool = False) -> int:
+                  kahan: bool = False, cached_z: bool = False,
+                  n_shards: int = 1) -> int:
     """Label-row tile for the fused chunk megakernel (grid = (L/bl,)).
 
     X, the x̄ accumulator, and the aliased x̄ in/out stay fully resident;
@@ -132,7 +141,12 @@ def chunk_block_l(B: int, L: int, D: int, w_bytes: int = 1,
     unsplit and makes the kernel bit-identical to the jnp oracle.  When no
     tile fits the model, returns LANE — callers that compile for real TPU
     must gate on ``fused_chunk_viable`` first (interpret/xla paths have no
-    VMEM and use the fallback freely)."""
+    VMEM and use the fallback freely).
+
+    ``n_shards`` > 1 budgets against the *local* (label-sharded) chunk:
+    each device of a vocab-parallel head only ever streams L/n rows, so
+    tiles are chosen for that width, not the global label count."""
+    L = local_chunk(L, n_shards)
     for bl in sorted(set(_cands(L, cap=4096)), reverse=True):
         if _chunk_vmem(B, D, bl, w_bytes, kahan, cached_z) <= VMEM_BUDGET:
             return bl

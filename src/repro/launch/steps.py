@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import elmo_head as EH
+from repro.dist import meshctx
 from repro.kernels import prng_utils as PR
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -55,6 +56,25 @@ def init_train_state(key: jax.Array, cfg: ModelConfig, optimizer: Optimizer,
     return TrainState(backbone, optimizer.init(backbone), head, jnp.int32(0))
 
 
+def _head_step(head_cfg, head_state, x, targets, head_lr, head_wd, seed):
+    """Pick the label-sharded head step when a model-parallel mesh is
+    ambient (vocab-parallel W per ``dist.sharding.head_specs``); otherwise
+    the single-device fused path — identical weights/loss by design."""
+    ctx = meshctx.get()
+    if ctx is not None and ctx.model_size > 1:
+        return EH.head_train_step_sharded(head_cfg, head_state, x, targets,
+                                          head_lr, head_wd, seed, ctx)
+    return EH.head_train_step(head_cfg, head_state, x, targets, head_lr,
+                              head_wd, seed)
+
+
+def _head_topk(head_cfg, head, x, k: int):
+    ctx = meshctx.get()
+    if ctx is not None and ctx.model_size > 1:
+        return EH.head_topk_sharded(head_cfg, head, x, k, ctx)
+    return EH.head_topk(head_cfg, head, x, k)
+
+
 def _head_inputs(cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
     if cfg.pool == "first":        # XMC encoders: CLS pooling
         return hidden[:, 0, :]
@@ -74,7 +94,7 @@ def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
         return _head_inputs(cfg, hidden)
 
     x, pullback = jax.vjp(fwd, backbone)
-    head_new, x_grad, metrics = EH.head_train_step(
+    head_new, x_grad, metrics = _head_step(
         head_cfg, head_state, x, targets, head_lr, head_wd, seed)
     (bb_grads,) = pullback(x_grad.astype(x.dtype))
     return head_new, bb_grads, metrics
@@ -208,7 +228,7 @@ def serve_prefill(cfg: ModelConfig, state: ServeState, tokens: jax.Array,
     x, new_caches = jax.lax.scan(period_body, x,
                                  (state.backbone.periods, state.caches))
     hidden = T.Ly.rmsnorm(state.backbone.final_norm, x, cfg.norm_eps)
-    _, next_tok = EH.head_topk(head_cfg, state.head, hidden[:, -1, :], k=1)
+    _, next_tok = _head_topk(head_cfg, state.head, hidden[:, -1, :], k=1)
     return next_tok[:, 0], ServeState(state.backbone, state.head, new_caches)
 
 
@@ -275,5 +295,5 @@ def serve_decode(cfg: ModelConfig, state: ServeState, token: jax.Array,
     head_cfg = make_head_cfg(cfg, impl)
     hidden, new_caches = T.backbone_decode_step(state.backbone, cfg, token,
                                                 state.caches, frontend_embeds)
-    _, next_tok = EH.head_topk(head_cfg, state.head, hidden[:, 0, :], k=1)
+    _, next_tok = _head_topk(head_cfg, state.head, hidden[:, 0, :], k=1)
     return next_tok[:, 0], ServeState(state.backbone, state.head, new_caches)

@@ -18,12 +18,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import contextlib
+
 from repro.checkpoint import CheckpointManager, restore_checkpoint
 from repro.checkpoint.ckpt import latest_committed
 from repro.configs import get_config, get_smoke
 from repro.data import DataCursor, lm_batches, xmc_batches
+from repro.dist import meshctx, sharding
 from repro.fault import Heartbeat, StragglerMonitor
 from repro.launch import steps as St
+from repro.launch.mesh import make_host_mesh
 from repro.optim import kahan_adamw, linear_warmup_constant
 
 
@@ -36,14 +40,51 @@ def make_batches(cfg, global_batch: int, seq: int, cursor: DataCursor,
     return lm_batches(cfg.vocab, global_batch, seq, cursor, host_id, n_hosts)
 
 
+def _shard_head(state: St.TrainState, cfg, ctx) -> St.TrainState:
+    """Place the head per ``dist.sharding.head_specs`` (label rows over the
+    model axis) so the sharded step starts from a vocab-parallel layout
+    instead of resharding replicated weights every step."""
+    specs = sharding.head_specs(cfg, ctx.model_size)
+    mesh = ctx.mesh
+
+    def put(leaf, spec):
+        if leaf is None:
+            return None
+        spec = sharding.sanitize_spec(leaf.shape, spec, mesh)
+        return jax.device_put(leaf, jax.sharding.NamedSharding(mesh, spec))
+
+    head = jax.tree.map(put, state.head, specs,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+    return state._replace(head=head)
+
+
 def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
           head_lr: float = 0.05, backbone_lr: float = 2e-5,
           ckpt_every: int = 50, impl: str = "auto", log_every: int = 1,
-          host_id: int = 0, n_hosts: int = 1):
+          host_id: int = 0, n_hosts: int = 1, n_data: int = 1,
+          n_model: int = 1):
+    """``n_model`` > 1 runs the label-sharded head (vocab parallelism over a
+    host mesh — DESIGN.md §6); ``n_data`` shards the batch on top."""
+    ctx = (make_host_mesh(n_data, n_model)
+           if n_data * n_model > 1 else None)
+    with (meshctx.use(ctx) if ctx is not None else contextlib.nullcontext()):
+        return _train_inner(cfg, ctx, steps=steps, global_batch=global_batch,
+                            seq=seq, ckpt_dir=ckpt_dir, head_lr=head_lr,
+                            backbone_lr=backbone_lr, ckpt_every=ckpt_every,
+                            impl=impl, log_every=log_every, host_id=host_id,
+                            n_hosts=n_hosts)
+
+
+def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
+                 ckpt_dir: str, head_lr: float, backbone_lr: float,
+                 ckpt_every: int, impl: str, log_every: int,
+                 host_id: int, n_hosts: int):
     opt = kahan_adamw()
     sched = linear_warmup_constant(backbone_lr, warmup_steps=100)
 
     state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, impl=impl)
+    if ctx is not None and ctx.model_size > 1:
+        state = _shard_head(state, cfg, ctx)
     cursor = DataCursor(seed=1234, step=0)
     start = 0
     if ckpt_dir and latest_committed(ckpt_dir):
@@ -109,13 +150,18 @@ def main():
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--head-lr", type=float, default=0.05)
     ap.add_argument("--backbone-lr", type=float, default=2e-5)
+    ap.add_argument("--n-data", type=int, default=1,
+                    help="data-parallel mesh axis size")
+    ap.add_argument("--n-model", type=int, default=1,
+                    help="model mesh axis size (label-sharded head)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     _, losses = train(cfg, steps=args.steps, global_batch=args.global_batch,
                       seq=args.seq, ckpt_dir=args.ckpt_dir,
                       head_lr=args.head_lr, backbone_lr=args.backbone_lr,
-                      impl="xla" if args.smoke else "auto")
+                      impl="xla" if args.smoke else "auto",
+                      n_data=args.n_data, n_model=args.n_model)
     print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
 
 

@@ -3,8 +3,10 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 (tests/test_distributed.py).
 Exit code 0 = all checks passed."""
 import os
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=8")
+_N_DEV = int(os.environ.get("REPRO_FORCE_DEVICES", "8"))
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={_N_DEV}")
 
 import jax                      # noqa: E402
 import jax.numpy as jnp        # noqa: E402
@@ -20,7 +22,7 @@ from repro.models import moe as Moe                  # noqa: E402
 from repro.models import transformer as T            # noqa: E402
 from repro.optim import kahan_adamw                  # noqa: E402
 
-assert len(jax.devices()) == 8, jax.devices()
+assert len(jax.devices()) == _N_DEV, jax.devices()
 
 
 def check_moe_ep_matches_local():

@@ -1,4 +1,5 @@
 import os
+import subprocess
 import sys
 
 import pytest
@@ -9,7 +10,33 @@ except ImportError:  # container without hypothesis: deterministic stub
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     import _hypothesis_stub  # noqa: F401  (registers sys.modules entries)
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running integration tests (subprocess suites)")
+
+
+@pytest.fixture
+def multidevice_runner():
+    """Run a ``tests/_*.py`` check script in a subprocess with a forced
+    host-device count (``--xla_force_host_platform_device_count``).
+
+    The script reads ``REPRO_FORCE_DEVICES`` and sets XLA_FLAGS itself
+    *before* importing jax — the flag only takes effect at backend init, so
+    it cannot be applied in-process once the parent's jax is live."""
+
+    def run(script_name: str, device_count: int, timeout: int = 540) -> str:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        env["REPRO_FORCE_DEVICES"] = str(device_count)
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tests", script_name)],
+            env=env, capture_output=True, text=True, timeout=timeout)
+        assert proc.returncode == 0, \
+            proc.stdout[-3000:] + proc.stderr[-3000:]
+        return proc.stdout
+
+    return run

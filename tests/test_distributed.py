@@ -3,8 +3,6 @@ gradient compression, fault-tolerance primitives, data-pipeline determinism,
 and the multi-device suite (MoE EP/TP, sharded train step, pipeline
 parallelism, sequence parallelism) in a forced-8-device subprocess."""
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +14,6 @@ from repro.checkpoint.ckpt import CheckpointManager, latest_committed
 from repro.data import DataCursor, lm_batches, xmc_batches
 from repro.dist import compression as C
 from repro.fault import ElasticController, Heartbeat, StragglerMonitor, retry
-
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 # ---------------------------------------------------------------------------
@@ -178,13 +174,6 @@ def test_xmc_labels_power_law():
 
 
 @pytest.mark.slow
-def test_multidevice_suite():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    env.pop("XLA_FLAGS", None)
-    proc = subprocess.run(
-        [sys.executable, os.path.join(REPO, "tests",
-                                      "_multidevice_checks.py")],
-        env=env, capture_output=True, text=True, timeout=540)
-    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-3000:]
-    assert "ALL MULTIDEVICE CHECKS PASSED" in proc.stdout
+def test_multidevice_suite(multidevice_runner):
+    out = multidevice_runner("_multidevice_checks.py", device_count=8)
+    assert "ALL MULTIDEVICE CHECKS PASSED" in out

@@ -1,0 +1,170 @@
+"""Property-based parity sweeps (hypothesis, or the deterministic stub).
+
+PR 1's contract is that three implementations of the chunked head step are
+the *same algorithm*:
+
+  * fused      — one ``ops.fused_chunk_step`` launch per chunk
+                 (``ref.fused_chunk_ref`` on the XLA path)
+  * unfused    — the legacy 3-kernel composition
+  * composed   — the hand-rolled jnp pipeline (logits → loss-skip grad →
+                 x̄ → SR/Kahan update) the refs are built from
+
+These sweeps drive random (B, D, L, chunking, dtype, loss, SR/Kahan) draws
+through all of them — L deliberately not divisible by the chunk so the
+padded-column masking is always live — and require bit-equality, plus the
+cached-z fast-path boundary behavior around the VMEM budget constant.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import elmo_head as H
+from repro.core import losses as L
+from repro.kernels import ref
+
+_DTYPES = ("bf16", "e4m3", "e5m2")
+_LOSSES = ("bce", "softmax_ce")
+
+
+def _draw_case(B, D, num_chunks, l_frac, dtype_i, loss_i, kahan_i, sr):
+    """Materialize one random head-step case from integer draws."""
+    dtype, loss = _DTYPES[dtype_i], _LOSSES[loss_i]
+    cfg0 = H.ELMOHeadConfig(num_labels=64, d_model=D, num_chunks=num_chunks,
+                            weight_dtype=dtype, loss=loss)
+    # L strictly inside (chunk·(C−1), chunk·C): never divisible by the
+    # chunk, so the final chunk always carries masked padded columns
+    chunk_guess = max(2, cfg0.chunk)
+    lo, hi = chunk_guess * (num_chunks - 1) + 1, chunk_guess * num_chunks - 1
+    num_labels = max(2, lo + int(l_frac * (hi - lo)))
+    kahan = (0, num_chunks, max(1, num_chunks // 2))[kahan_i]
+    cfg = H.ELMOHeadConfig(num_labels=num_labels, d_model=D,
+                           num_chunks=num_chunks, weight_dtype=dtype,
+                           loss=loss, use_sr=sr, kahan_chunks=kahan,
+                           impl="xla")
+    k = jax.random.PRNGKey(B * 7919 + D * 31 + num_labels)
+    kw, kx, kt = jax.random.split(k, 3)
+    state = H.init_head(kw, cfg)
+    x = (jax.random.normal(kx, (B, D)) * 0.5).astype(jnp.bfloat16)
+    if loss == "bce":
+        tgt = jax.random.randint(kt, (B, 4), 0, num_labels)
+    else:
+        tgt = jax.random.randint(kt, (B,), -1, num_labels)
+    return cfg, state, x, tgt
+
+
+def _run(cfg, state, x, tgt, impl):
+    cfg = dataclasses.replace(cfg, impl=impl)
+    st2, xg, m = H.head_train_step(cfg, state, x, tgt, jnp.float32(0.07),
+                                   jnp.float32(1e-4), jnp.uint32(11))
+    return (np.asarray(st2.w, np.float32),
+            None if st2.comp is None else np.asarray(st2.comp, np.float32),
+            np.asarray(xg, np.float32), float(m["loss"]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 12), D=st.integers(2, 48),
+       num_chunks=st.integers(2, 5), l_frac=st.floats(0.0, 1.0),
+       dtype_i=st.integers(0, 2), loss_i=st.integers(0, 1),
+       kahan_i=st.integers(0, 2), sr=st.integers(0, 1))
+def test_property_fused_matches_unfused(B, D, num_chunks, l_frac, dtype_i,
+                                        loss_i, kahan_i, sr):
+    """head_train_step: fused (megakernel oracle) == unfused (legacy
+    3-kernel path) bit-for-bit across the whole config space — including
+    SR draws (same per-chunk seed hash on both paths)."""
+    cfg, state, x, tgt = _draw_case(B, D, num_chunks, l_frac, dtype_i,
+                                    loss_i, kahan_i, bool(sr))
+    w_f, c_f, xg_f, l_f = _run(cfg, state, x, tgt, "xla")
+    w_u, c_u, xg_u, l_u = _run(cfg, state, x, tgt, "unfused_xla")
+    np.testing.assert_array_equal(w_f, w_u)
+    if c_f is not None:
+        np.testing.assert_array_equal(c_f, c_u)
+    np.testing.assert_array_equal(xg_f, xg_u)
+    assert l_f == l_u
+
+
+@settings(max_examples=12, deadline=None)
+@given(B=st.integers(1, 16), D=st.integers(2, 40), Lc=st.integers(2, 96),
+       pad=st.integers(0, 20), dtype_i=st.integers(0, 2),
+       loss_i=st.integers(0, 1), sr=st.integers(0, 1),
+       kahan=st.integers(0, 1))
+def test_property_chunk_ref_is_exact_composition(B, D, Lc, pad, dtype_i,
+                                                 loss_i, sr, kahan):
+    """ref.fused_chunk_ref == the hand-composed jnp pipeline, bitwise, for
+    one random chunk with a random number of padded (masked) columns."""
+    dtype = {"bf16": jnp.bfloat16, "e4m3": jnp.float8_e4m3fn,
+             "e5m2": jnp.float8_e5m2}[_DTYPES[dtype_i]]
+    loss = _LOSSES[loss_i]
+    num_labels = max(1, Lc - pad)
+    qx = dtype == jnp.float8_e4m3fn
+    k = jax.random.PRNGKey(B * 131 + D * 17 + Lc)
+    kx, kw, kt, kg = jax.random.split(k, 4)
+    x = (jax.random.normal(kx, (B, D)) * 0.5).astype(jnp.bfloat16)
+    w = (jax.random.normal(kw, (Lc, D)) * 0.05).astype(dtype)
+    xg0 = (jax.random.normal(kg, (B, D)) * 0.1).astype(jnp.bfloat16)
+    comp = jnp.zeros((Lc, D), jnp.bfloat16) if kahan else None
+    if loss == "bce":
+        tgt, lse = jax.random.randint(kt, (B, 4), 0, num_labels), None
+    else:
+        tgt = jax.random.randint(kt, (B,), -1, num_labels)
+        z0 = ref.fp8_logits_ref(x, w, jnp.uint32(7), quantize_x=qx)
+        zm = jnp.where(jnp.arange(Lc)[None, :] < num_labels,
+                       z0.astype(jnp.float32), L.NEG_INF)
+        lse = L.lse_finalize(*L.lse_update(*L.lse_init(B), zm))
+    hp = (jnp.float32(0.07), jnp.float32(1e-4), jnp.float32(1.0 / B),
+          jnp.int32(0), jnp.uint32(7), jnp.uint32(13))
+    out = ref.fused_chunk_ref(x, w, tgt, xg0, *hp, lse=lse, comp=comp,
+                              loss=loss, num_labels=num_labels,
+                              use_sr=bool(sr), quantize_x=qx)
+    # hand-composed pipeline
+    z = ref.fp8_logits_ref(x, w, jnp.uint32(7), quantize_x=qx)
+    g, loss_c = L.chunk_loss_skip_grad(loss, z, tgt, jnp.int32(0), Lc,
+                                       num_labels, lse, jnp.float32(1.0 / B))
+    xg = xg0 + ref.fp8_input_grad_ref(g, w)
+    if kahan:
+        w_new, _ = ref.fused_head_update_kahan_ref(
+            g, x, w, comp, jnp.float32(0.07), jnp.float32(1e-4),
+            jnp.uint32(13))
+    else:
+        w_new = ref.fused_head_update_ref(g, x, w, jnp.float32(0.07),
+                                          jnp.float32(1e-4), jnp.uint32(13),
+                                          use_sr=bool(sr))
+    np.testing.assert_array_equal(np.asarray(out.w, np.float32),
+                                  np.asarray(w_new, np.float32))
+    np.testing.assert_array_equal(np.asarray(out.xg, np.float32),
+                                  np.asarray(xg, np.float32))
+    assert float(out.loss) == float(jnp.float32(loss_c))
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 10), D=st.integers(2, 32),
+       num_chunks=st.integers(2, 4), l_frac=st.floats(0.0, 1.0),
+       side=st.integers(0, 2))
+def test_property_cached_z_boundary(B, D, num_chunks, l_frac, side,
+                                    monkeypatch=None):
+    """softmax-CE cached-z fast path: 'on', 'off' and 'auto' produce
+    bit-identical steps on either side of the cache-budget boundary (the
+    cache is a *reuse* of exact pass-1 logits, never an approximation).
+
+    ``side`` pins the auto decision: budget below / exactly at / above the
+    z-cache footprint B·padded·2."""
+    cfg, state, x, tgt = _draw_case(B, D, num_chunks, l_frac, 0, 1, 1,
+                                    False)
+    zbytes = B * cfg.padded_labels * 2
+    budget = (zbytes - 1, zbytes, zbytes + 1)[side]
+    orig = H._CACHE_Z_BYTES
+    H._CACHE_Z_BYTES = budget
+    try:
+        outs = {}
+        for mode in ("on", "off", "auto"):
+            c = dataclasses.replace(cfg, cache_z=mode)
+            outs[mode] = _run(c, state, x, tgt, "xla")
+    finally:
+        H._CACHE_Z_BYTES = orig
+    for mode in ("off", "auto"):
+        np.testing.assert_array_equal(outs["on"][0], outs[mode][0])
+        np.testing.assert_array_equal(outs["on"][2], outs[mode][2])
+        assert outs["on"][3] == outs[mode][3]
