@@ -117,6 +117,73 @@ def bench_sharded_head(L=4096, D=256, B=256, shards=(1, 2, 4)):
     return rows
 
 
+def bench_grid_head(L=4096, D=256, B=256, num_chunks=8, shard_widths=(1, 4)):
+    """Whole-head grid megakernel (one launch/step, DESIGN.md §7) vs the
+    PR-1 per-chunk scan, at the head level.
+
+    Reported per path: wall-clock per step of the jitted *interpret
+    lowering* (both rows run the same backend, so the number is honest
+    only relative — absolute CPU-interpret µs say nothing about TPU), the
+    *statically counted* runtime launch count (``kernels/introspect.py``),
+    and XLA's ``memory_analysis()`` temp bytes of the same lowerings —
+    the acceptance metric: the grid step's transients must not exceed the
+    per-chunk scan's.
+
+    ``shard_widths`` emulates label sharding exactly like
+    ``bench_sharded_head``: every device of an n-way vocab-parallel head
+    runs the same program at ``L/n`` label rows, so the per-device numbers
+    are the single-device numbers at the local width.
+    """
+    import dataclasses
+
+    from repro.core import elmo_head as H
+    from repro.kernels import introspect, tuning
+
+    rows = []
+    for n in shard_widths:
+        cfg = H.ELMOHeadConfig(num_labels=L // n, d_model=D,
+                               num_chunks=num_chunks, weight_dtype="e4m3",
+                               loss="bce", impl="grid_interpret")
+        state = H.init_head(jax.random.PRNGKey(0), cfg)
+        x = (jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+             ).astype(jnp.bfloat16)
+        tg = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0,
+                                cfg.num_labels)
+        hp = (jnp.float32(0.05), jnp.float32(0.0), jnp.uint32(7))
+
+        def step(c):
+            return jax.jit(lambda s, xx, t: H.head_train_step(
+                c, s, xx, t, *hp))
+
+        variants = {"grid": cfg,
+                    "fused_scan": dataclasses.replace(
+                        cfg, impl="fused_interpret")}
+        temp = {}
+        for name, c in variants.items():
+            f = step(c)
+            temp[name] = _temp_bytes(f, state, x, tg)
+            launches = introspect.count_pallas_launches(
+                lambda s, xx, t: H.head_train_step(c, s, xx, t, *hp),
+                state, x, tg)
+            t_us = _time(f, state, x, tg, n=3)
+            rows.append({
+                "name": f"kernel/head_{name}_n{n}",
+                "us_per_call": round(t_us),
+                "launches_per_step": launches,
+                "temp_mib": round(temp[name] / 2**20, 2),
+                "temp_size_in_bytes": temp[name],
+                "local_labels": cfg.num_labels,
+                # the block the measured (interpret, exact-shape) runs use
+                "block_l": cfg.chunk,
+                # the tile the compiled launch would pick, sized with the
+                # benchmarked step's real target-slot count
+                "tuned_block_l": tuning.head_grid_block_l(
+                    B, cfg.chunk, D, 1, n_chunks=num_chunks, p_slots=8),
+            })
+        assert temp["grid"] <= temp["fused_scan"], temp   # acceptance
+    return rows
+
+
 def bench_fused_chunk(L=4096, D=256, B=256):
     """Single-launch fused chunk step vs the legacy 3-launch composition.
 

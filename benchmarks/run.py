@@ -107,7 +107,9 @@ def _stability():
 def _kernels():
     from benchmarks.kernel_bench import (bench_fp8_logits, bench_fused_chunk,
                                          bench_fused_update,
+                                         bench_grid_head,
                                          bench_sharded_head)
+    _emit(bench_grid_head())        # whole-head 1-launch grid vs chunk scan
     _emit(bench_fused_chunk())      # single-launch megakernel vs 3-launch
     _emit(bench_sharded_head())     # per-device temp bytes, label-sharded
     _emit(bench_fused_update())

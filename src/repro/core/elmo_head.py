@@ -8,15 +8,22 @@ One ``head_train_step`` performs, for each label chunk (paper §4.2–4.3):
     3. input grad X̄  += ḡ_c @ W_c
     4. fused upd  W_c ← SR((1 − lr·wd) W_c − lr ḡ_cᵀ X)   (grad never in HBM)
 
-as a ``lax.scan`` over chunks, so transient memory is 1/k of the full logits
-(paper §4.2, Table 10) and the weight/optimizer memory is W itself — SGD
-without momentum (§4.2), stochastic rounding instead of master weights
-(§4.1/4.3).  Steps 1–4 execute as ONE Pallas launch per chunk
-(``kernels/fused_chunk.py``, DESIGN.md §3): logits and the logit gradient
-live only in VMEM, and W updates in place via ``input_output_aliases``.
-The softmax-CE variant (for LM heads, DESIGN.md §3) adds a streaming-LSE
-pre-pass whose logits can be cached and reused by pass 2 (``cache_z``).
-Head-label chunks can use Kahan compensation instead of SR (paper App. D).
+so transient memory is 1/k of the full logits (paper §4.2, Table 10) and
+the weight/optimizer memory is W itself — SGD without momentum (§4.2),
+stochastic rounding instead of master weights (§4.1/4.3).
+
+On the default ``impl="grid"`` path the *entire* label loop runs inside
+ONE Pallas launch (``kernels/fused_head.py``, DESIGN.md §7): the grid
+iterates over every label block of every chunk, W streams through
+double-buffered DMA, and x, x̄, the streaming-LSE statistics and the loss
+stay resident in VMEM scratch across all grid steps.  BCE is one launch
+per train step; softmax-CE runs its LSE pre-pass and update as the two
+passes of a single 2-D grid, with the pass-1 logits optionally kept
+grid-resident for pass 2 (``cache_z``).  ``impl="fused"`` keeps the PR-1
+per-chunk ``lax.scan`` of ``kernels/fused_chunk.py`` — the grid path's
+bit-parity oracle — and ``impl="unfused"`` the original multi-kernel
+composition.  Head-label chunks can use Kahan compensation instead of SR
+(paper App. D; the mixed hybrid runs on the per-chunk scan).
 
 The head never enters autodiff: the caller runs the backbone under
 ``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces the
@@ -24,11 +31,14 @@ paper's reordered computation flow (encoder fwd → head fwd/bwd/update →
 encoder bwd) and its peak-memory profile by construction.
 
 When a mesh is active (``dist.meshctx``), ``head_train_step_sharded`` runs
-the same fused chunk kernel label-sharded over the model axis (every device
-owns ``chunk/n`` rows of each chunk, per ``dist.sharding.head_specs``), with
-a cross-device two-pass LSE for softmax-CE and a ``psum`` of the per-shard
-input gradients — DESIGN.md §6.  ``head_topk_sharded``/``head_logits_sharded``
-are the matching serving paths (local top-k → gather → global re-rank).
+the same step label-sharded over the model axis (every device owns
+``chunk/n`` rows of each chunk, per ``dist.sharding.head_specs``), with a
+cross-device two-pass LSE for softmax-CE and a ``psum`` of the per-shard
+input gradients — DESIGN.md §6.  On the grid path each shard runs the
+whole-head megakernel on its local rows: one launch for BCE, two for
+softmax-CE (the normalizer collective sits between the LSE and update
+launches).  ``head_topk_sharded``/``head_logits_sharded`` are the matching
+serving paths (local top-k → gather → global re-rank).
 """
 from __future__ import annotations
 
@@ -62,9 +72,18 @@ class ELMOHeadConfig:
     drop_rate: float = 0.0             # in-kernel DropConnect (App. H)
     quantize_x: Optional[bool] = None  # default: True iff weight is e4m3
     compute_loss: bool = True          # loss value is optional (loss-skip)
-    # impl: auto|kernel|interpret|xla run the single-launch fused chunk
-    # megakernel (kernels/fused_chunk.py); "unfused[_<inner>]" keeps the
-    # legacy multi-kernel path for A/B (e.g. "unfused", "unfused_xla")
+    # impl selects "<path>[_<inner>]" where path is one of
+    #   grid    — whole-head grid megakernel, ONE launch per step
+    #             (kernels/fused_head.py, DESIGN.md §7) — the default
+    #   fused   — PR-1 per-chunk scan of the single-launch chunk kernel
+    #             (kernels/fused_chunk.py) — the grid path's bit-parity
+    #             oracle
+    #   unfused — legacy 3-kernel composition, kept for A/B
+    # and inner is auto|kernel|interpret|xla.  Bare inner names ("auto",
+    # "xla", "interpret", …) select the grid path with that inner impl;
+    # a grid path whose inner resolves to "xla" runs the fused scan (the
+    # two are the same algorithm — the grid kernel has no jnp oracle of
+    # its own).
     impl: str = "auto"
     # softmax-CE only: reuse the LSE pre-pass logits in pass 2 ("on"/"off",
     # or "auto" = on when the z cache fits _CACHE_Z_BYTES)
@@ -109,12 +128,58 @@ class ELMOHeadConfig:
 _CACHE_Z_BYTES = 32 * 2 ** 20
 
 
-def _impl_split(impl: str) -> Tuple[bool, str]:
-    """cfg.impl → (use fused megakernel?, inner kernel impl)."""
-    if impl.startswith("unfused"):
-        rest = impl[len("unfused"):].lstrip("_:")
-        return False, (rest or "auto")
-    return True, impl
+def _want_cache_z(cfg: "ELMOHeadConfig", z_bytes: int) -> bool:
+    """The ONE CE z-cache policy shared by the grid, fused-scan and
+    sharded paths: explicit on/off wins; "auto" caches iff this path's
+    z footprint (``z_bytes``, local to the device) fits the budget."""
+    return cfg.cache_z == "on" or (cfg.cache_z == "auto"
+                                   and z_bytes <= _CACHE_Z_BYTES)
+
+
+def _impl_split(impl: str) -> Tuple[str, str]:
+    """cfg.impl → (path, inner kernel impl).
+
+    path ∈ {"grid", "fused", "unfused"} (see ``ELMOHeadConfig.impl``).
+    Bare inner names keep their historical meaning of "the default fast
+    path with this inner impl" — which is now the grid path."""
+    for path in ("grid", "fused", "unfused"):
+        if impl == path or impl.startswith(path + "_") \
+                or impl.startswith(path + ":"):
+            rest = impl[len(path):].lstrip("_:")
+            return path, (rest or "auto")
+    return "grid", impl
+
+
+def _grid_ok(cfg: ELMOHeadConfig, batch: int, rimpl: str,
+             p_slots: int = 1) -> bool:
+    """Whether the whole-head grid megakernel can run this step.
+
+    The grid kernel has no jnp oracle (inner "xla" routes to the fused
+    scan, which *is* the oracle), the mixed Kahan hybrid keeps the
+    per-chunk scan (a homogeneous update rule lets one grid cover every
+    block), and the compiled path must fit the §7 VMEM residency model —
+    gated with the same ``p_slots`` (resident target columns) the launch
+    will size the kernel with, so gate and tile chooser agree."""
+    if rimpl not in ("kernel", "interpret"):
+        return False
+    if cfg.kahan_chunks not in (0, cfg.num_chunks):
+        return False
+    if rimpl == "kernel" and not _tuning.fused_head_viable(
+            batch, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
+            kahan=cfg.kahan_chunks > 0, p_slots=p_slots):
+        return False
+    return True
+
+
+def _target_slots(targets: jax.Array) -> int:
+    return targets.shape[-1] if targets.ndim == 2 else 1
+
+
+def _grid_seeds(cfg: ELMOHeadConfig, seed: jax.Array):
+    """Per-chunk DropConnect/SR seed vectors — elementwise identical to the
+    scalar ``_chunk_seed`` draws of the per-chunk scan."""
+    cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+    return _chunk_seed(seed, cids, 0), _chunk_seed(seed, cids, 1), cids
 
 
 class HeadState(NamedTuple):
@@ -221,14 +286,21 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
     targets: (B, P) int32 multi-label ids (bce) or (B,) int32 ids (ce).
     Returns (new_state, x_grad (B, D) bf16, metrics).
 
-    Default path: one ``fused_chunk_step`` launch per chunk (logits, loss-
-    skip gradient, x̄ accumulation and the in-place weight update never
-    leave VMEM — DESIGN.md §3).  ``cfg.impl="unfused*"`` selects the legacy
-    multi-kernel composition for A/B comparison; both paths are numerically
-    identical by construction.
+    Default path: the whole-head grid megakernel — ONE Pallas launch for
+    every label chunk (two grid passes sharing that launch for softmax-CE),
+    with x/x̄/LSE stats resident in VMEM across the grid (DESIGN.md §7).
+    ``cfg.impl="fused*"`` keeps the PR-1 per-chunk scan (the grid path's
+    bit-parity oracle), ``"unfused*"`` the legacy multi-kernel composition;
+    all three are numerically identical by construction.
     """
-    fused, impl = _impl_split(cfg.impl)
-    if (fused and ops.resolve_impl(impl) == "kernel"
+    path, impl = _impl_split(cfg.impl)
+    rimpl = ops.resolve_impl(impl)
+    if path == "grid" and _grid_ok(cfg, x.shape[0], rimpl,
+                                   _target_slots(targets)):
+        return _head_train_step_grid(cfg, state, x, targets, lr, wd, seed,
+                                     impl)
+    fused = path != "unfused"
+    if (fused and rimpl == "kernel"
             and not _tuning.fused_chunk_viable(
                 x.shape[0], cfg.d_model,
                 jnp.dtype(cfg.wdtype).itemsize,
@@ -241,6 +313,54 @@ def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
                                     impl)
 
 
+def _head_train_step_grid(cfg: ELMOHeadConfig, state: HeadState,
+                          x: jax.Array, targets: jax.Array, lr: jax.Array,
+                          wd: jax.Array, seed: jax.Array, impl: str
+                          ) -> Tuple[HeadState, jax.Array, dict]:
+    """One whole-head grid-megakernel launch (DESIGN.md §7): the label loop
+    runs inside the Pallas grid, so BCE is exactly one launch per step and
+    softmax-CE one two-pass launch (the z-cache spills through a
+    grid-mapped HBM buffer instead of a second launch)."""
+    B = x.shape[0]
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+    seeds_d, seeds_u, cids = _grid_seeds(cfg, seed)
+    base = cids * cfg.chunk
+    kahan = cfg.kahan_chunks > 0
+    comp = state.comp if kahan else None
+    common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                  quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                  compute_loss=cfg.compute_loss, impl=impl)
+
+    if cfg.loss == "bce":
+        scale, lse = jnp.float32(1.0 / B), None
+        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
+                                  seeds_d, seeds_u, base, comp=comp,
+                                  mode="bce", **common)
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+        # same cache budget rule as the per-chunk scan — but the grid
+        # cache is VMEM-resident (fused_head.py), so the compiled path
+        # additionally requires it to fit the §7 residency model
+        cache = _want_cache_z(cfg, B * cfg.padded_labels * 2)
+        if cache and ops.resolve_impl(impl) == "kernel" \
+                and not _tuning.fused_head_viable(
+                    B, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
+                    kahan=kahan, cache_z=True, lc=cfg.chunk,
+                    n_chunks=cfg.num_chunks):
+            cache = False       # recompute pass-2 logits in-kernel instead
+        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
+                                  seeds_d, seeds_u, base, comp=comp,
+                                  mode="ce_full", cache_z=cache, **common)
+        lse = out.lse
+
+    w_k = out.w if kahan else state.w[:0]
+    w_s = state.w[:0] if kahan else out.w
+    return _finalize_step(cfg, (out.xg, out.loss), w_k, w_s, out.comp,
+                          targets, lse, scale, B)
+
+
 def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
                            x: jax.Array, targets: jax.Array, lr: jax.Array,
                            wd: jax.Array, seed: jax.Array, impl: str
@@ -251,14 +371,34 @@ def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
     chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
 
     if cfg.loss == "bce":
+        n_tok = None
         scale = jnp.float32(1.0 / B)
-        lse, zs = None, None
     else:
         n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
         scale = 1.0 / n_tok
-        cache = cfg.cache_z == "on" or (
-            cfg.cache_z == "auto"
-            and B * cfg.padded_labels * 2 <= _CACHE_Z_BYTES)
+
+    # hoisted tile-alignment padding: the compiled-kernel path pads
+    # x/x̄/targets ONCE per step here (the chunk kernel's own pad2 calls
+    # become no-ops), instead of re-padding the loop-invariant operands at
+    # every chunk of the scan.  ``n_b`` tells the kernel the logical batch
+    # so its masking ignores the padded rows.  interpret/xla inners keep
+    # exact shapes (their bitwise-parity contract forbids padding).
+    n_b = None
+    if ops.resolve_impl(impl) == "kernel":
+        n_b = B
+        Bp = _tuning._pad_up(B, 16)
+        Dp = _tuning._pad_up(cfg.d_model, _tuning.LANE)
+        x = _tuning.pad2(x, Bp, Dp)
+        targets = _tuning.pad2(
+            targets if targets.ndim == 2 else targets.reshape(B, 1),
+            Bp, 1, value=-1)
+        if cfg.loss == "softmax_ce":
+            targets = targets.reshape(-1)
+
+    if cfg.loss == "bce":
+        lse, zs = None, None
+    else:
+        cache = _want_cache_z(cfg, B * cfg.padded_labels * 2)
 
         # ----- pass 1: streaming LSE (optionally caching each chunk's z
         # so pass 2 skips the forward matmul entirely)
@@ -269,7 +409,7 @@ def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
             carry = L.lse_update(m, s, _masked_z(cfg, z, cidx))
             return carry, (z if cache else None)
 
-        (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
+        (m, s), zs = jax.lax.scan(lse_body, L.lse_init(x.shape[0]),
                                   (state.w, chunk_ids))
         lse = L.lse_finalize(m, s)
 
@@ -280,13 +420,15 @@ def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
             lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
             num_labels=cfg.num_labels, use_sr=cfg.use_sr,
             quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-            compute_loss=cfg.compute_loss, impl=impl)
+            compute_loss=cfg.compute_loss, impl=impl,
+            **({"n_b": n_b} if n_b is not None else {}))
         return out.xg, loss_acc + out.loss, out.w, out.comp
 
-    carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
+    carry = (jnp.zeros(x.shape, jnp.bfloat16), jnp.float32(0.0))
     carry, w_k, w_s, comp_new = _scan_chunks(cfg, state.w, state.comp,
                                              chunk_ids, zs, carry,
                                              chunk_step)
+    carry = (carry[0][:B, :cfg.d_model], carry[1])
     return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
                           scale, B)
 
@@ -399,11 +541,14 @@ def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
     model axis (vocab parallelism, per ``dist.sharding.head_specs``).
 
     Every model rank holds ``chunk/n`` rows of each chunk (W and the Kahan
-    buffer partitioned identically) and runs the fused chunk kernel on its
-    local shard; the batch is gathered over the data axes so the in-kernel
-    weight update sees full-B gradients — W updates stay deterministic and
-    need no cross-data all-reduce.  Per-shard x̄ partials are ``psum``-reduced
-    over the model axis (optionally E5M2-compressed, see ``compress_xg``).
+    buffer partitioned identically) and runs the whole-head grid megakernel
+    (DESIGN.md §7 — one launch for BCE, two for softmax-CE whose normalizer
+    collective sits between them) or, off the grid path, the per-chunk
+    fused kernel scan on its local shard; the batch is gathered over the
+    data axes so the in-kernel weight update sees full-B gradients — W
+    updates stay deterministic and need no cross-data all-reduce.
+    Per-shard x̄ partials are ``psum``-reduced over the model axis
+    (optionally E5M2-compressed, see ``compress_xg``).
 
     Softmax-CE couples shards through the row normalizer; ``ce_comm`` picks
     the cross-device LSE strategy (DESIGN.md §6):
@@ -450,15 +595,26 @@ def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
         batch_axes, n_batch = (), 1      # ragged batch: replicate instead
     b0 = batch_axes if batch_axes else None
 
-    inner = _impl_split(cfg.impl)[1]
-    if (ops.resolve_impl(inner) == "kernel"
-            and not _tuning.fused_chunk_viable(
-                x.shape[0], cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
-                kahan=cfg.kahan_chunks > 0)):
+    path, inner = _impl_split(cfg.impl)
+    rimpl = ops.resolve_impl(inner)
+    lc = cfg.chunk // n
+    B_g = x.shape[0]                 # global batch (the body re-gathers it)
+    # grid path: ONE whole-head launch per collective-free pass (BCE = 1
+    # launch; CE = LSE launch + collective + update launch, ≤ 2).  The
+    # gather-mode losses/LSE read the local logits back, so those paths
+    # additionally need the local z to fit the cache budget.
+    grid = path == "grid" and _grid_ok(cfg, B_g, rimpl,
+                                       _target_slots(targets))
+    z_fits = B_g * (cfg.padded_labels // n) * 2 <= _CACHE_Z_BYTES
+    if ce_comm == "gather" and (cfg.loss == "softmax_ce"
+                                or cfg.compute_loss):
+        grid = grid and z_fits
+    if not grid and rimpl == "kernel" and not _tuning.fused_chunk_viable(
+            B_g, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
+            kahan=cfg.kahan_chunks > 0):
         inner = "xla"    # sharded path is megakernel-shaped; oracle fallback
 
     kahan = cfg.kahan_chunks > 0
-    lc = cfg.chunk // n
     chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
     has_err = xg_err is not None
     impl = inner
@@ -487,81 +643,172 @@ def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
         def c0_of(cidx):
             return cidx * cfg.chunk + r.astype(jnp.int32) * lc
 
-        loss_pre = jnp.float32(0.0)
-        if cfg.loss == "bce":
-            scale = jnp.float32(1.0 / B)
-            lse, zs = None, None
-        else:
-            n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
-            scale = 1.0 / n_tok
-            cache = cfg.cache_z == "on" or (
-                cfg.cache_z == "auto"
-                and B * (cfg.padded_labels // n) * 2 <= _CACHE_Z_BYTES)
-
-            if ce_comm == "gather":
-                # pass 1: full-width streaming LSE on gathered chunk logits
-                # (identical op sequence to the single-device pass — the
-                # source of the bit-parity guarantee); the CE target-logit
-                # sum rides along so the loss is exact too
-                def lse_body(carry, inp):
-                    wc, cidx = inp
-                    m, s, lraw = carry
-                    zl = _chunk_logits(cfg, wc, x16,
-                                       _chunk_seed(seed_sh, cidx, 0), impl)
-                    zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
-                    m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
-                    if cfg.compute_loss:
-                        lraw = lraw + L.ce_target_logit_chunk(
-                            zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
-                    return (m, s, lraw), (zl if cache else None)
-
-                (m, s, loss_pre), zs = jax.lax.scan(
-                    lse_body, L.lse_init(B) + (jnp.float32(0.0),),
-                    (w, chunk_ids))
-            else:
-                # pass 1 (stats): local (max, Σexp) over this shard's label
-                # windows, then pmax + one rescaled psum — O(B) comm
-                def lse_body(carry, inp):
-                    wc, cidx = inp
-                    m, s = carry
-                    zl = _chunk_logits(cfg, wc, x16,
-                                       _chunk_seed(seed_sh, cidx, 0), impl)
-                    validl = (c0_of(cidx) + jnp.arange(lc)) < cfg.num_labels
-                    zm = jnp.where(validl[None, :], zl.astype(jnp.float32),
-                                   L.NEG_INF)
-                    return L.lse_update(m, s, zm), (zl if cache else None)
-
-                (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
-                                          (w, chunk_ids))
-                m_g = jax.lax.pmax(m, axis)
-                s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
-                m, s = m_g, s_g
-            lse = L.lse_finalize(m, s)
-
         kernel_loss = cfg.compute_loss and ce_comm == "stats"
 
-        def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
-            if cfg.loss == "bce" and ce_comm == "gather":
-                z_c = _chunk_logits(cfg, wc, x16,
-                                    _chunk_seed(seed_sh, cidx, 0), impl)
-                if cfg.compute_loss:
-                    zf = jax.lax.all_gather(z_c, axis, axis=1, tiled=True)
-                    y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
-                    loss_acc = loss_acc + L.bce_chunk_loss(
-                        zf, y, mask=_valid_cols(cfg, cidx)[None, :])
-            out = ops.fused_chunk_step(
-                x16, wc, tgt, xg, lr_, wd_, scale, c0_of(cidx),
-                _chunk_seed(seed_sh, cidx, 0), _chunk_seed(seed_sh, cidx, 1),
-                lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
-                num_labels=cfg.num_labels, use_sr=cfg.use_sr,
-                quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                compute_loss=kernel_loss, impl=impl)
-            return out.xg, loss_acc + out.loss, out.w, out.comp
+        if grid:
+            # ---- whole-head grid-megakernel branch (DESIGN.md §7) ----
+            seeds_d = _chunk_seed(seed_sh, chunk_ids, 0)
+            seeds_u = _chunk_seed(seed_sh, chunk_ids, 1)
+            base = chunk_ids * cfg.chunk + r.astype(jnp.int32) * lc
+            gkw = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                       quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                       impl=impl)
+            lse = None
+            if cfg.loss == "bce":
+                scale = jnp.float32(1.0 / B)
+                # gather-mode loss needs the (pre-update) local logits:
+                # the single launch emits them alongside the update
+                want_z = cfg.compute_loss and ce_comm == "gather"
+                out = ops.fused_head_step(
+                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
+                    comp=comp, mode="bce", cache_z=want_z,
+                    compute_loss=kernel_loss, **gkw)
+                loss_raw = out.loss
+                if want_z:
+                    z3 = jnp.moveaxis(
+                        out.z.reshape(B, cfg.num_chunks, lc), 1, 0)
 
-        carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
-        carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
-                                                 zs, carry, chunk_step)
-        xg_loc, loss_raw = carry
+                    def loss_body(acc, inp):
+                        zl, cidx = inp
+                        zf = jax.lax.all_gather(zl, axis, axis=1,
+                                                tiled=True)
+                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk,
+                                              cfg.chunk)
+                        return acc + L.bce_chunk_loss(
+                            zf, y, mask=_valid_cols(cfg, cidx)[None, :]), \
+                            None
+
+                    loss_raw, _ = jax.lax.scan(
+                        loss_body, jnp.float32(0.0), (z3, chunk_ids))
+            else:
+                n_tok = jnp.maximum((tgt >= 0).sum(), 1
+                                    ).astype(jnp.float32)
+                scale = 1.0 / n_tok
+                loss_pre = jnp.float32(0.0)
+                if ce_comm == "gather":
+                    # launch 1: all local logits; LSE + exact loss on the
+                    # per-chunk gathered rows, op-for-op the single-device
+                    # sequence (the bit-parity contract)
+                    zflat = ops.fused_head_logits(
+                        x16, w, seeds_d, quantize_x=cfg.qx,
+                        drop_rate=cfg.drop_rate, impl=impl)
+                    z3 = jnp.moveaxis(
+                        zflat.reshape(B, cfg.num_chunks, lc), 1, 0)
+
+                    def lse_body(carry, inp):
+                        zl, cidx = inp
+                        m, s, lraw = carry
+                        zf = jax.lax.all_gather(zl, axis, axis=1,
+                                                tiled=True)
+                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                        if cfg.compute_loss:
+                            lraw = lraw + L.ce_target_logit_chunk(
+                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                        return (m, s, lraw), None
+
+                    (m, s, loss_pre), _ = jax.lax.scan(
+                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                        (z3, chunk_ids))
+                    lse = L.lse_finalize(m, s)
+                else:
+                    # launch 1: in-kernel local streaming (max, Σexp),
+                    # then the O(B) pmax/psum normalizer collective
+                    cache = _want_cache_z(
+                        cfg, B * (cfg.padded_labels // n) * 2)
+                    st = ops.fused_head_lse(
+                        x16, w, seeds_d, base, num_labels=cfg.num_labels,
+                        quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                        cache_z=cache, impl=impl)
+                    m_g = jax.lax.pmax(st.m, axis)
+                    s_g = jax.lax.psum(st.s * jnp.exp(st.m - m_g), axis)
+                    lse = L.lse_finalize(m_g, s_g)
+                    zflat = st.z
+                # launch 2: the whole-head update against the global LSE
+                out = ops.fused_head_step(
+                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
+                    lse=lse, z=zflat, comp=comp, mode="ce_update",
+                    cache_z=zflat is not None, compute_loss=kernel_loss,
+                    **gkw)
+                loss_raw = loss_pre + out.loss
+            xg_loc = out.xg
+            w_k = out.w if kahan else w[:0]
+            w_s = w[:0] if kahan else out.w
+            comp_new = out.comp
+        else:
+            # ---- legacy per-chunk scan branch (fused_chunk_step per chunk) ----
+            loss_pre = jnp.float32(0.0)
+            if cfg.loss == "bce":
+                scale = jnp.float32(1.0 / B)
+                lse, zs = None, None
+            else:
+                n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
+                scale = 1.0 / n_tok
+                cache = _want_cache_z(cfg,
+                                      B * (cfg.padded_labels // n) * 2)
+
+                if ce_comm == "gather":
+                    # pass 1: full-width streaming LSE on gathered chunk logits
+                    # (identical op sequence to the single-device pass — the
+                    # source of the bit-parity guarantee); the CE target-logit
+                    # sum rides along so the loss is exact too
+                    def lse_body(carry, inp):
+                        wc, cidx = inp
+                        m, s, lraw = carry
+                        zl = _chunk_logits(cfg, wc, x16,
+                                           _chunk_seed(seed_sh, cidx, 0), impl)
+                        zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                        if cfg.compute_loss:
+                            lraw = lraw + L.ce_target_logit_chunk(
+                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                        return (m, s, lraw), (zl if cache else None)
+
+                    (m, s, loss_pre), zs = jax.lax.scan(
+                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                        (w, chunk_ids))
+                else:
+                    # pass 1 (stats): local (max, Σexp) over this shard's label
+                    # windows, then pmax + one rescaled psum — O(B) comm
+                    def lse_body(carry, inp):
+                        wc, cidx = inp
+                        m, s = carry
+                        zl = _chunk_logits(cfg, wc, x16,
+                                           _chunk_seed(seed_sh, cidx, 0), impl)
+                        validl = (c0_of(cidx) + jnp.arange(lc)) < cfg.num_labels
+                        zm = jnp.where(validl[None, :], zl.astype(jnp.float32),
+                                       L.NEG_INF)
+                        return L.lse_update(m, s, zm), (zl if cache else None)
+
+                    (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
+                                              (w, chunk_ids))
+                    m_g = jax.lax.pmax(m, axis)
+                    s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
+                    m, s = m_g, s_g
+                lse = L.lse_finalize(m, s)
+
+            def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+                if cfg.loss == "bce" and ce_comm == "gather":
+                    z_c = _chunk_logits(cfg, wc, x16,
+                                        _chunk_seed(seed_sh, cidx, 0), impl)
+                    if cfg.compute_loss:
+                        zf = jax.lax.all_gather(z_c, axis, axis=1, tiled=True)
+                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
+                        loss_acc = loss_acc + L.bce_chunk_loss(
+                            zf, y, mask=_valid_cols(cfg, cidx)[None, :])
+                out = ops.fused_chunk_step(
+                    x16, wc, tgt, xg, lr_, wd_, scale, c0_of(cidx),
+                    _chunk_seed(seed_sh, cidx, 0), _chunk_seed(seed_sh, cidx, 1),
+                    lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
+                    num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                    quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                    compute_loss=kernel_loss, impl=impl)
+                return out.xg, loss_acc + out.loss, out.w, out.comp
+
+            carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
+            carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
+                                                     zs, carry, chunk_step)
+            xg_loc, loss_raw = carry
+
         if ce_comm == "stats" and cfg.compute_loss:
             loss_raw = jax.lax.psum(loss_raw, axis)
 
@@ -631,10 +878,38 @@ def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
 # ---------------------------------------------------------------------------
 
 
+def _grid_serving_ok(cfg: ELMOHeadConfig, batch: int) -> Tuple[bool, str]:
+    """(use the single-launch logits grid kernel?, inner impl) for the
+    serving paths — gated on the logits-only VMEM model (the serving grid
+    allocates none of the train step's resident accumulators)."""
+    path, inner = _impl_split(cfg.impl)
+    rimpl = ops.resolve_impl(inner)
+    ok = (path == "grid" and rimpl in ("kernel", "interpret")
+          and (rimpl != "kernel" or _tuning.head_logits_viable(
+              batch, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize)))
+    return ok, inner
+
+
+def _eval_seeds(cfg: ELMOHeadConfig) -> jax.Array:
+    """The chunk-scan serving paths draw every chunk's DropConnect mask
+    from the constant seed 0; the grid kernel reproduces that exactly."""
+    return jnp.zeros((cfg.num_chunks,), jnp.uint32)
+
+
 def head_logits(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array
                 ) -> jax.Array:
-    """Full (B, L) logits — O(B·L) memory; eval/serve at modest B only."""
+    """Full (B, L) logits — O(B·L) memory; eval/serve at modest B only.
+
+    On the grid path this is ONE Pallas launch over every label block
+    (``kernels/fused_head.fused_head_logits``) instead of one per chunk;
+    the per-column op sequence is unchanged, so values are bit-equal."""
     x = x.astype(jnp.bfloat16)
+    grid, inner = _grid_serving_ok(cfg, x.shape[0])
+    if grid:
+        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
+                                  quantize_x=cfg.qx,
+                                  drop_rate=cfg.drop_rate, impl=inner)
+        return z[:, :cfg.num_labels]
 
     def body(_, inp):
         wc, cidx = inp
@@ -680,10 +955,50 @@ def _topk_scan(cfg: ELMOHeadConfig, w: jax.Array, x: jax.Array, k: int,
     return vals, idx
 
 
+def _topk_materialized(z: jax.Array, col_ids: jax.Array, num_labels: int,
+                       k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over single-launch logits, reproducing ``_topk_scan``'s
+    tie-break contract exactly: ``col_ids`` must be in the scan's visit
+    order (ascending label id), padded ids (≥ num_labels) are masked to
+    NEG_INF, and k NEG_INF sentinel candidates with id 0 — the scan's
+    initial carry — precede the label columns, so overflow slots surface
+    (NEG_INF, 0) and ties at equal logits resolve to the earliest (lowest
+    label id) candidate; ``lax.top_k`` is stable, which seals the match."""
+    B, W = z.shape
+    zm = jnp.where((col_ids < num_labels)[None, :], z.astype(jnp.float32),
+                   L.NEG_INF)
+    cand = jnp.concatenate(
+        [jnp.full((B, k), L.NEG_INF, jnp.float32), zm], axis=1)
+    cand_ids = jnp.concatenate(
+        [jnp.zeros((B, k), jnp.int32), jnp.broadcast_to(col_ids, (B, W))],
+        axis=1)
+    vals, local = jax.lax.top_k(cand, k)
+    return vals, jnp.take_along_axis(cand_ids, local, axis=1)
+
+
+# serving z-materialization budget for the single-launch top-k fast path —
+# its own knob (initialized to the training z-cache default; retuning one
+# at runtime deliberately does not move the other): past it, streaming wins
+_TOPK_Z_BYTES = 32 * 2 ** 20
+
+
 def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
               ) -> Tuple[jax.Array, jax.Array]:
-    """Streaming top-k over chunks — never materializes full logits."""
-    return _topk_scan(cfg, state.w, x.astype(jnp.bfloat16), k, cfg.chunk,
+    """Streaming top-k over chunks — never materializes full logits.
+
+    On the grid path, heads whose full logits fit ``_TOPK_Z_BYTES`` use
+    ONE logits launch + one global ``top_k`` (bit-identical values *and*
+    ids — see ``_topk_materialized``); larger heads keep the per-chunk
+    streaming scan."""
+    x = x.astype(jnp.bfloat16)
+    grid, inner = _grid_serving_ok(cfg, x.shape[0])
+    if grid and x.shape[0] * cfg.padded_labels * 2 <= _TOPK_Z_BYTES:
+        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
+                                  quantize_x=cfg.qx,
+                                  drop_rate=cfg.drop_rate, impl=inner)
+        return _topk_materialized(z, jnp.arange(cfg.padded_labels),
+                                  cfg.num_labels, k)
+    return _topk_scan(cfg, state.w, x, k, cfg.chunk,
                       lambda cidx: cidx * cfg.chunk)
 
 
@@ -702,17 +1017,29 @@ def head_logits_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
         return head_logits(cfg, state, x)
     axis = ctx.model_axis
     x = x.astype(jnp.bfloat16)
+    grid, inner = _grid_serving_ok(cfg, x.shape[0])
+    lc = cfg.chunk // n
 
     def body(w, x):
-        def scan_body(_, inp):
-            wc, cidx = inp
-            zl = _chunk_logits(cfg, wc, x, jnp.uint32(0))
-            return None, jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+        B = x.shape[0]
+        if grid:
+            # one launch for every local label block, then one chunk-tiled
+            # gather — same per-column values as the per-chunk scan
+            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
+                                       quantize_x=cfg.qx,
+                                       drop_rate=cfg.drop_rate, impl=inner)
+            z3 = jnp.moveaxis(zl.reshape(B, cfg.num_chunks, lc), 1, 0)
+            zs = jax.lax.all_gather(z3, axis, axis=2, tiled=True)
+        else:
+            def scan_body(_, inp):
+                wc, cidx = inp
+                zc = _chunk_logits(cfg, wc, x, jnp.uint32(0))
+                return None, jax.lax.all_gather(zc, axis, axis=1, tiled=True)
 
-        _, zs = jax.lax.scan(
-            scan_body, None,
-            (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
-        return jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
+            _, zs = jax.lax.scan(
+                scan_body, None,
+                (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        return jnp.moveaxis(zs, 0, 1).reshape(B, cfg.padded_labels)
 
     z = _shard_map(body, mesh=ctx.mesh,
                    in_specs=(PS(None, axis, None), PS()),
@@ -736,11 +1063,28 @@ def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
     axis = ctx.model_axis
     lc = cfg.chunk // n
     x = x.astype(jnp.bfloat16)
+    grid, inner = _grid_serving_ok(cfg, x.shape[0])
+    grid = grid and x.shape[0] * (cfg.padded_labels // n) * 2 \
+        <= _TOPK_Z_BYTES
 
     def body(w, x):
         r = jax.lax.axis_index(axis).astype(jnp.int32)
-        vals, idx = _topk_scan(cfg, w, x, k, lc,
-                               lambda cidx: cidx * cfg.chunk + r * lc)
+        if grid:
+            # local candidates from one logits launch; the local column
+            # visit order (chunk-major, then row) is ascending global id
+            # for a fixed rank, so _topk_materialized's tie-break matches
+            # the streaming scan's
+            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
+                                       quantize_x=cfg.qx,
+                                       drop_rate=cfg.drop_rate, impl=inner)
+            cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+            col_ids = ((cids * cfg.chunk + r * lc)[:, None]
+                       + jnp.arange(lc, dtype=jnp.int32)[None, :]
+                       ).reshape(-1)
+            vals, idx = _topk_materialized(zl, col_ids, cfg.num_labels, k)
+        else:
+            vals, idx = _topk_scan(cfg, w, x, k, lc,
+                                   lambda cidx: cidx * cfg.chunk + r * lc)
         # (n, B, k) candidates → (B, n·k) → global re-rank.  Sorting on
         # (−value, id) reproduces head_topk's streaming tie-break (equal
         # logits resolve to the lowest label id) so the merged ids match

@@ -34,14 +34,23 @@ WEIGHT_BYTES = {"bf16": 2, "e4m3": 1, "e5m2": 1, "f32": 4}
 
 
 def head_components(s: MemScenario, weight_dtype: str = "bf16",
-                    n_label_shards: int = 1) -> dict:
+                    n_label_shards: int = 1,
+                    grid_block_l: int | None = None) -> dict:
     """Per-device ELMO *head* memory (the paper's Fig. 3 head terms only).
 
     ``n_label_shards`` is the mesh's model-axis size when the head is
     vocab-parallel (``dist.sharding.head_specs``): W, the Kahan buffer and
     the per-chunk logit/grad transients all live on the label axis, so every
     component divides by the shard count — the encoder/activation terms are
-    data-parallel and excluded here."""
+    data-parallel and excluded here.
+
+    ``grid_block_l`` models the grid-resident whole-head megakernel
+    (DESIGN.md §7, ``kernels/fused_head.py``): logits and their gradient
+    only ever exist as one (batch, block_l) VMEM tile of the grid, so the
+    transient terms shrink from the chunk width to the label-block width —
+    and stop depending on the shard count (the tile is chosen per device).
+    The residency the kernel adds instead (x, x̄, LSE stats — a few B·D
+    buffers) is accounted as ``grid_resident_bf16``."""
     wb = WEIGHT_BYTES[weight_dtype]
     frac = 1.0 / max(1, n_label_shards)
     chunk_rows = s.num_labels / s.num_chunks
@@ -49,10 +58,18 @@ def head_components(s: MemScenario, weight_dtype: str = "bf16",
         f"W_{weight_dtype}": _w_bytes(s, wb) * frac,
         "W_kahan_comp_bf16":
             _w_bytes(s, 2) * (s.kahan_chunks / s.num_chunks) * frac,
-        "chunk_logits_bf16": s.batch * chunk_rows * 2 * frac,
-        "chunk_logit_grad_bf16": s.batch * chunk_rows * 2 * frac,
         "W_grad": 0.0,                      # fused into the update kernel
     }
+    if grid_block_l is None:
+        comp["chunk_logits_bf16"] = s.batch * chunk_rows * 2 * frac
+        comp["chunk_logit_grad_bf16"] = s.batch * chunk_rows * 2 * frac
+    else:
+        tile = min(grid_block_l, chunk_rows * frac)
+        comp["chunk_logits_bf16"] = s.batch * tile * 2
+        comp["chunk_logit_grad_bf16"] = s.batch * tile * 2
+        # x (bf16) + x̄ f32 accumulator + x̄ bf16 carry + LSE stats,
+        # resident in VMEM for the whole launch
+        comp["grid_resident_bf16"] = s.batch * s.d_model * (2 + 4 + 2)
     comp["total"] = sum(comp.values())
     return comp
 

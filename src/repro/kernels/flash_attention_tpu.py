@@ -88,11 +88,13 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_fwd_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
                             causal: bool = True, window=None,
                             bq: int = 256, bk: int = 256,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Sq, dh); k, v: (B, KH, Sk, dh), H % KH == 0 → (B, H, Sq, dh).
 
     Sq/Sk must be multiples of bq/bk (the caller pads — see
     models/attention.py for the padding contract)."""
+    from repro.kernels import tuning
+    interpret = tuning.interpret_default(interpret)
     B, H, Sq, dh = q.shape
     KH, Sk = k.shape[1], k.shape[2]
     assert H % KH == 0 and Sq % bq == 0 and Sk % bk == 0

@@ -80,10 +80,11 @@ def _input_grad_kernel(g_ref, w_ref, o_ref, acc_ref):
 def fp8_logits(x: jax.Array, w: jax.Array, seed: jax.Array | None = None, *,
                drop_rate: float = 0.0, quantize_x: bool = True,
                blocks: tuple[int, int, int] | None = None,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """Z = q8(X) @ Wᵀ.  x: (B, D) bf16, w: (L, D) e4m3/bf16 → (B, L) bf16.
 
     ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
+    interpret = tuning.interpret_default(interpret)
     (B, D), (L, _) = x.shape, w.shape
     if blocks is None:
         blocks = tuning.logits_blocks(B, L, D, jnp.dtype(w.dtype).itemsize)
@@ -114,10 +115,11 @@ def fp8_logits(x: jax.Array, w: jax.Array, seed: jax.Array | None = None, *,
 @functools.partial(jax.jit, static_argnames=("blocks", "interpret"))
 def fp8_input_grad(g: jax.Array, w: jax.Array, *,
                    blocks: tuple[int, int, int] | None = None,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None) -> jax.Array:
     """X̄ = G @ W.  g: (B, L) bf16, w: (L, D) e4m3/bf16 → (B, D) bf16.
 
     ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
+    interpret = tuning.interpret_default(interpret)
     (B, L), (_, D) = g.shape, w.shape
     if blocks is None:
         blocks = tuning.input_grad_blocks(B, L, D,

@@ -174,7 +174,7 @@ def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
 
 @functools.partial(jax.jit, static_argnames=(
     "loss", "num_labels", "use_sr", "quantize_x", "drop_rate",
-    "compute_loss", "block_l", "interpret", "return_z"))
+    "compute_loss", "block_l", "interpret", "return_z", "n_b", "n_l"))
 def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                      xg: jax.Array, lr, wd, scale, c0: jax.Array,
                      seed_drop: jax.Array, seed_upd: jax.Array,
@@ -184,8 +184,9 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                      loss: str, num_labels: int, use_sr: bool = True,
                      quantize_x: bool = True, drop_rate: float = 0.0,
                      compute_loss: bool = True, block_l: int | None = None,
-                     interpret: bool = True,
-                     return_z: bool = False) -> ChunkOut:
+                     interpret: bool | None = None,
+                     return_z: bool = False, n_b: int | None = None,
+                     n_l: int | None = None) -> ChunkOut:
     """One fused chunk step.
 
     x (B, D) bf16 · w (L, D) e4m3/bf16/f32 · targets (B, P) int32 (bce) or
@@ -193,8 +194,18 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
     label offset of this chunk · lse (B,) f32 (softmax_ce only) · z (B, L)
     bf16 cached chunk logits (optional) · comp (L, D) bf16 Kahan buffer
     (optional — selects the compensated update, no SR).
+
+    ``interpret=None`` resolves from the backend (interpret everywhere but
+    TPU) so a direct call on real hardware always compiles.  ``n_b``/``n_l``
+    declare the *logical* batch / label-row counts when the caller hands in
+    operands it already padded to tile alignment (the step level pads once
+    per step instead of once per chunk); masking then targets the logical
+    extent while outputs keep the padded operand shapes.
     """
     (B, D), L = x.shape, w.shape[0]
+    n_b = B if n_b is None else n_b
+    n_l = L if n_l is None else n_l
+    interpret = tuning.interpret_default(interpret)
     kahan = comp is not None
     cached_z = z is not None
     assert not (cached_z and return_z), "z already in hand"
@@ -269,7 +280,8 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
 
     outs = pl.pallas_call(
         functools.partial(
-            _chunk_kernel, loss=loss, num_labels=num_labels, n_b=B, n_l=L,
+            _chunk_kernel, loss=loss, num_labels=num_labels, n_b=n_b,
+            n_l=n_l,
             use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
             compute_loss=compute_loss, cached_z=cached_z, kahan=kahan,
             return_z=return_z),

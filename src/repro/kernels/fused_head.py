@@ -1,0 +1,566 @@
+"""Pallas TPU megakernel: the ENTIRE ELMO head train step in one launch.
+
+PR 1 fused one label-chunk step into a single ``pallas_call`` but still
+drove one launch per chunk from a ``lax.scan`` (``elmo_head._scan_chunks``
+→ ``fused_chunk.fused_chunk_step``), paying per-chunk launch overhead,
+per-chunk alignment copies of x/x̄/targets, redundant HBM round-trips of
+the carried x̄, and — for softmax-CE — a second full sweep of W in a
+separate LSE scan.  This kernel moves the label loop *into the Pallas
+grid* (DESIGN.md §7): the grid iterates over all label blocks of all
+chunks, Pallas double-buffers the W (and Kahan ``comp``) stream so DMA
+overlaps the MXU dots, and everything the scan used to carry through HBM
+— x, the running x̄, the streaming-LSE statistics, the loss accumulator —
+stays resident in VMEM scratch across every grid step.
+
+    BCE (and CE-with-LSE-operand):   grid = (C·lcp/bl,)
+    softmax-CE ("ce_full"):          grid = (2, C·lcp/bl)   pass 0 = LSE
+                                                            pass 1 = update
+
+    per label block (chunk c, rows [off, off+bl) of that chunk):
+      z    = q8(X) @ W_blᵀ                  (MXU, f32 acc, → BF16)
+      pass 0 (CE):  (m, s) ← online-LSE(m, s, mask(z))   [VMEM scratch]
+                    optionally spill z to the grid-mapped HBM cache
+      update pass:  ḡ  = loss-skip grad(z)                (BCE scatter /
+                                                           exp(z − LSE) − 1y)
+                    x̄_f32 += ḡ @ W_bl          x̄_bf16 += x̄_f32 at chunk ends
+                    dW = ḡᵀ X;  W_bl ← SR(…) or KahanAdd(…)  (in place via
+                                                       input_output_aliases)
+
+The CE z-cache stays *grid-resident*: pass 0 stores each logits block
+into a VMEM scratch buffer that persists across every grid step, and
+pass 1 reloads it instead of re-running the forward matmul — replacing
+the PR-1 second launch.  (A single launch cannot spill the cache through
+an aliased HBM operand: Pallas defines no write→read ordering between an
+output block and its aliased input within one launch — the sharded path,
+which must cross a collective anyway, passes the z buffer between its two
+launches instead, where that ordering *is* defined.)  With the cache off
+— the tuner's choice whenever B·L·2 exceeds the VMEM residency budget —
+pass 1 recomputes z in-register from the same per-chunk DropConnect
+seed: bit-identical either way.
+
+Numerics mirror the per-chunk scan *operation for operation*: the same
+per-chunk seed hash, the same SR-bit addressing by (row-in-chunk, col),
+the same per-chunk BF16 rounding of the carried x̄, and the same per-chunk
+LSE/loss accumulation order — so with one block per chunk (``bl == lc``,
+the tuner's preference) the whole-head step is bit-identical to scanning
+``fused_chunk_step`` over chunks, which is itself bit-identical to the
+legacy unfused path.  ``fused_head_lse`` / ``fused_head_logits`` expose
+the LSE-only and logits-only grids for the label-sharded CE path (whose
+cross-device normalizer needs a collective between the passes) and for
+serving.
+
+Pipelining note: the two-pass grid revisits the aliased W/comp streams;
+pass 0 writes them back *unchanged* (a mapped output block must be
+written at every step that visits it), so whether pass 1's re-fetch
+observes the flushed copy or a stale buffer is immaterial — the bytes
+are identical.  Only the update pass mutates them, and each block exactly
+once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.losses import NEG_INF
+from repro.kernels import prng_utils as PR
+from repro.kernels import tuning
+from repro.kernels.fused_head_update import _apply_sr
+
+_UPDATE_MODES = ("bce", "ce_full", "ce_update")
+
+
+class HeadStepOut(NamedTuple):
+    """Results of one whole-head grid step (None for absent outputs)."""
+    w: jax.Array                      # updated weights (C, lc, D)
+    xg: jax.Array                     # x̄ (B, D) bf16
+    loss: jax.Array                   # f32 scalar raw loss accumulator
+    comp: Optional[jax.Array] = None  # updated Kahan buffer (C, lc, D)
+    lse: Optional[jax.Array] = None   # (B,) f32 (mode="ce_full" only)
+    z: Optional[jax.Array] = None     # (B, C·lc) bf16 logits (cache_z, bce)
+
+
+class LseOut(NamedTuple):
+    """Streaming-LSE statistics of one ``fused_head_lse`` launch."""
+    m: jax.Array                      # (B,) f32 running max
+    s: jax.Array                      # (B,) f32 running Σexp
+    z: Optional[jax.Array] = None     # (B, C·lc) bf16 logits (cache_z)
+
+
+def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
+                 n_b: int, kahan: bool, cache_z: bool, use_sr: bool,
+                 quantize_x: bool, drop_rate: float, compute_loss: bool):
+    # ---- unpack the mode-dependent ref list ----
+    update = mode in _UPDATE_MODES
+    it = iter(refs)
+    sd_ref = next(it)
+    su_ref = next(it) if update else None
+    hyper_ref = next(it) if update else None
+    base_ref = next(it) if mode != "logits" else None
+    tgt_ref = next(it) if update else None
+    lse_in_ref = next(it) if mode == "ce_update" else None
+    z_in_ref = next(it) if (cache_z and mode == "ce_update") else None
+    x_ref, w_ref = next(it), next(it)
+    comp_ref = next(it) if (kahan and update) else None
+    if update:
+        w_out_ref = next(it)
+        comp_out_ref = next(it) if kahan else None
+        z_out_ref = next(it) if (cache_z and mode == "bce") else None
+        xg_out_ref, loss_ref = next(it), next(it)
+        lse_out_ref = next(it) if mode == "ce_full" else None
+    elif mode == "ce_lse":
+        z_out_ref = next(it) if cache_z else None
+        m_out_ref, s_out_ref = next(it), next(it)
+    else:                                   # logits
+        z_out_ref = next(it)
+    if update:
+        xg_acc, xg_b16, loss_acc = next(it), next(it), next(it)
+    if mode in ("ce_full", "ce_lse"):
+        m_acc, s_acc = next(it), next(it)
+    if mode == "ce_full":
+        lse_v = next(it)
+        z_sc = next(it) if cache_z else None    # grid-resident z cache
+
+    if mode == "ce_full":
+        pss, li = pl.program_id(0), pl.program_id(1)
+        nb = pl.num_programs(1)
+    else:
+        pss, li = None, pl.program_id(0)
+        nb = pl.num_programs(0)
+
+    Bp, Dp = x_ref.shape
+    bl = w_ref.shape[0]
+    cidx = li // bpc                         # chunk of this label block
+    off = (li % bpc) * bl                    # row offset inside the chunk
+    w16 = w_ref[...].astype(jnp.bfloat16)
+    x16 = x_ref[...].astype(jnp.bfloat16)
+
+    # masks in the *global* label coordinate (same construction as the
+    # per-chunk kernel: local-row validity × real-label validity)
+    col_local = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 1) + off
+    rowv = (jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 0)
+            < n_b).astype(jnp.float32)
+    if mode != "logits":
+        col_global = col_local + base_ref[cidx]
+        valid = ((col_global < num_labels)
+                 & (col_local < lc)).astype(jnp.float32)
+
+    def compute_z16():
+        """q8(X) @ Wᵀ with in-kernel DropConnect — op-for-op the per-chunk
+        kernel's forward, seeded per chunk and addressed per row-in-chunk,
+        so cached and recomputed logits agree bit-for-bit."""
+        xq = x_ref[...]
+        if quantize_x:
+            xq = xq.astype(jnp.float8_e4m3fn)
+        xq = xq.astype(jnp.bfloat16)
+        wmm = w16
+        if drop_rate > 0.0:
+            bits = PR.hash_bits_2d(sd_ref[cidx], off.astype(jnp.uint32),
+                                   jnp.uint32(0), (bl, Dp))
+            keep = PR.uniform_from_bits(bits) >= drop_rate
+            wmm = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
+                / jnp.bfloat16(1.0 - drop_rate)
+        z32mm = jax.lax.dot_general(xq, wmm, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        return z32mm.astype(jnp.bfloat16)
+
+    if mode == "logits":
+        z_out_ref[...] = compute_z16()
+        return
+
+    # ---- pass 0 / LSE-only work: streaming (max, Σexp) in VMEM scratch ----
+    def lse_work():
+        z16 = compute_z16()
+        if cache_z:
+            if mode == "ce_full":
+                z_sc[:, pl.ds(li * bl, bl)] = z16
+            else:
+                z_out_ref[...] = z16
+        zm = jnp.where(valid > 0, z16.astype(jnp.float32), NEG_INF)
+
+        @pl.when(li == 0)
+        def _init():
+            m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+            s_acc[...] = jnp.zeros_like(s_acc)
+
+        m = m_acc[...]
+        m_new = jnp.maximum(m, zm.max(axis=-1, keepdims=True))
+        s_acc[...] = (s_acc[...] * jnp.exp(m - m_new)
+                      + jnp.exp(zm - m_new).sum(-1, keepdims=True))
+        m_acc[...] = m_new
+
+    # ---- update-pass work: grad, x̄, in-place W/comp update, loss ----
+    def update_work():
+        first = (li == 0)
+
+        @pl.when(first)
+        def _init():
+            xg_acc[...] = jnp.zeros_like(xg_acc)
+            xg_b16[...] = jnp.zeros_like(xg_b16)
+            loss_acc[...] = jnp.zeros_like(loss_acc)
+
+        if cache_z and mode == "ce_full":
+            z16 = z_sc[:, pl.ds(li * bl, bl)]
+        elif cache_z and mode == "ce_update":
+            z16 = z_in_ref[...]
+        else:
+            z16 = compute_z16()
+            if cache_z and mode == "bce":
+                z_out_ref[...] = z16
+        z32 = z16.astype(jnp.float32)
+        lr, wd, scale = hyper_ref[0], hyper_ref[1], hyper_ref[2]
+
+        if mode == "bce":
+            y = jnp.zeros((Bp, bl), jnp.float32)
+            for slot in range(tgt_ref.shape[1]):
+                y = jnp.maximum(
+                    y, (col_global == tgt_ref[:, slot:slot + 1]
+                        ).astype(jnp.float32))
+            g32 = (jax.nn.sigmoid(z32) - y) * scale * valid * rowv
+            if compute_loss:
+                per = (jnp.maximum(z32, 0.0) - z32 * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(z32))))
+                loss_acc[0, 0] += jnp.sum(per * valid * rowv)
+        else:
+            tid = tgt_ref[...]                              # (Bp, 1) int32
+            onehot = (col_global == tid).astype(jnp.float32)
+            tokm = (tid >= 0).astype(jnp.float32)           # (Bp, 1)
+            lse_row = (lse_in_ref[...] if mode == "ce_update"
+                       else lse_v[...])
+            prob = jnp.exp(z32 - lse_row)
+            g32 = (prob - onehot) * scale * valid * tokm * rowv
+            if compute_loss:
+                loss_acc[0, 0] += jnp.sum(z32 * onehot * rowv)
+
+        g16 = g32.astype(jnp.bfloat16)
+        xg_acc[...] += jnp.dot(g16, w16, preferred_element_type=jnp.float32)
+
+        # the per-chunk scan rounded the carried x̄ to BF16 between chunks;
+        # replay that rounding at every chunk's last block so the grid step
+        # is bit-identical to the scan
+        @pl.when((li + 1) % bpc == 0)
+        def _chunk_flush():
+            xg_b16[...] = (xg_b16[...]
+                           + xg_acc[...].astype(jnp.bfloat16))
+            xg_acc[...] = jnp.zeros_like(xg_acc)
+
+        @pl.when(li == nb - 1)
+        def _final_flush():
+            xg_out_ref[...] = xg_b16[...]
+            loss_ref[0, 0] = loss_acc[0, 0]
+
+        dw = jax.lax.dot_general(g16, x16, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        w32 = w_ref[...].astype(jnp.float32)
+        if kahan:
+            upd = -lr * dw - (lr * wd) * w32
+            yk = upd - comp_ref[...].astype(jnp.float32)
+            t32 = w32 + yk
+            w_new = t32.astype(w_out_ref.dtype)
+            w_out_ref[...] = w_new
+            comp_out_ref[...] = ((w_new.astype(jnp.float32) - w32) - yk
+                                 ).astype(comp_out_ref.dtype)
+        else:
+            w_new = w32 * (1.0 - lr * wd) - lr * dw
+            bits = PR.hash_bits_2d(su_ref[cidx], off.astype(jnp.uint32),
+                                   jnp.uint32(0), (bl, Dp))
+            w_out_ref[...] = _apply_sr(w_new, w_out_ref.dtype, bits, use_sr)
+
+    if mode == "ce_lse":
+        lse_work()
+
+        @pl.when(li == nb - 1)
+        def _emit_stats():
+            m_out_ref[...] = m_acc[...]
+            s_out_ref[...] = s_acc[...]
+    elif mode == "ce_full":
+        @pl.when(pss == 0)
+        def _pass0():
+            lse_work()
+            # every mapped output block must be written each step it is
+            # visited: write the (aliased) W/comp streams back unchanged
+            w_out_ref[...] = w_ref[...]
+            if kahan:
+                comp_out_ref[...] = comp_ref[...]
+
+            @pl.when(li == nb - 1)
+            def _finalize_lse():
+                lse_v[...] = m_acc[...] + jnp.log(s_acc[...])
+                lse_out_ref[...] = lse_v[...]
+
+        @pl.when(pss == 1)
+        def _pass1():
+            update_work()
+    else:                                   # bce / ce_update
+        update_work()
+
+
+def _head_shapes(B, D, lc, block_l, interpret):
+    """(Bp, Dp, lcp, bl): interpret mode keeps exact shapes (alignment
+    padding would change the K length of the f32 dots and break bitwise
+    parity with the oracle scan — same rule as ``fused_chunk_step``)."""
+    if interpret:
+        bl = lc if block_l is None else min(block_l, lc)
+        if lc % bl != 0:
+            bl = lc
+        return B, D, lc, bl
+    Bp = tuning._pad_up(B, 16)
+    Dp = tuning._pad_up(D, tuning.LANE)
+    # sublane-align only (same rule as fused_chunk_step): the tuner's
+    # candidates are already sublane-padded, so the compiled tile equals
+    # the one the VMEM model validated — rounding further (e.g. to LANE)
+    # would inflate the real footprint past the model
+    bl = min(block_l or lc, tuning._pad_up(lc, tuning.LANE))
+    bl = tuning._pad_up(bl, tuning.SUBLANE)
+    return Bp, Dp, tuning._pad_up(lc, bl), bl
+
+
+def _pad_w3(w, lcp, Dp):
+    C, lc, D = w.shape
+    if (lcp, Dp) != (lc, D):
+        w = jnp.pad(w, ((0, 0), (0, lcp - lc), (0, Dp - D)))
+    return w.reshape(C * lcp, Dp)
+
+
+def _slice_w3(wflat, C, lcp, lc, D):
+    return wflat.reshape(C, lcp, -1)[:, :lc, :D]
+
+
+def _slice_z(zp, B, C, lcp, lc):
+    return zp.reshape(-1, C, lcp)[:B, :, :lc].reshape(B, C * lc)
+
+
+def _launch(mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
+            lse, z, comp, num_labels, use_sr, quantize_x, drop_rate,
+            compute_loss, cache_z, block_l, interpret):
+    """Shared spec/operand assembly for every grid-kernel entry point."""
+    (B, D), (C, lc, _) = x.shape, w.shape
+    update = mode in _UPDATE_MODES
+    kahan = comp is not None
+    interpret = tuning.interpret_default(interpret)
+    if block_l is None and not interpret:
+        block_l = tuning.head_grid_block_l(
+            B, lc, D, jnp.dtype(w.dtype).itemsize, kahan=kahan,
+            cache_z=cache_z and mode == "ce_full", n_chunks=C,
+            p_slots=targets.shape[-1] if (update and targets.ndim == 2)
+            else 1)
+    Bp, Dp, lcp, bl = _head_shapes(B, D, lc, block_l, interpret)
+    bpc = lcp // bl
+    nb = C * bpc
+    xp = tuning.pad2(x.astype(jnp.bfloat16), Bp, Dp)
+    wflat = _pad_w3(w, lcp, Dp)
+
+    if mode == "ce_full":
+        def full(p, l):
+            return (0, 0)
+
+        def wmap(p, l):
+            return (l, 0)
+
+        def zmap(p, l):
+            return (0, l)
+        grid = (2, nb)
+    else:
+        def full(l):
+            return (0, 0)
+
+        def wmap(l):
+            return (l, 0)
+
+        def zmap(l):
+            return (0, l)
+        grid = (nb,)
+
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    operands = [jnp.asarray(seeds_drop).astype(jnp.uint32)]
+    in_specs = [smem]
+    if update:
+        operands.append(jnp.asarray(seeds_upd).astype(jnp.uint32))
+        in_specs.append(smem)
+        hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                           jnp.asarray(wd, jnp.float32),
+                           jnp.asarray(scale, jnp.float32)])
+        operands.append(hyper)
+        in_specs.append(smem)
+    if mode != "logits":
+        operands.append(jnp.asarray(base).astype(jnp.int32))
+        in_specs.append(smem)
+    if update:
+        tgt = targets if targets.ndim == 2 else targets.reshape(B, 1)
+        tp = tuning.pad2(tgt, Bp, 1, value=-1)
+        operands.append(tp)
+        in_specs.append(pl.BlockSpec(tp.shape, full))
+    if mode == "ce_update":
+        operands.append(
+            tuning.pad2(lse.reshape(B, 1).astype(jnp.float32), Bp, 1))
+        in_specs.append(pl.BlockSpec((Bp, 1), full))
+    if cache_z and mode == "ce_update":
+        zp = jnp.pad(z.astype(jnp.bfloat16).reshape(B, C, lc),
+                     ((0, Bp - B), (0, 0), (0, lcp - lc))
+                     ).reshape(Bp, C * lcp)
+        operands.append(zp)
+        in_specs.append(pl.BlockSpec((Bp, bl), zmap))
+    w_idx = len(operands) + 1
+    operands += [xp, wflat]
+    in_specs += [pl.BlockSpec((Bp, Dp), full),
+                 pl.BlockSpec((bl, Dp), wmap)]
+    if kahan and update:
+        operands.append(_pad_w3(comp, lcp, Dp))
+        in_specs.append(pl.BlockSpec((bl, Dp), wmap))
+
+    out_shape, out_specs = [], []
+    if update:
+        out_shape += [jax.ShapeDtypeStruct((C * lcp, Dp), w.dtype)]
+        out_specs += [pl.BlockSpec((bl, Dp), wmap)]
+        if kahan:
+            out_shape.append(jax.ShapeDtypeStruct((C * lcp, Dp), comp.dtype))
+            out_specs.append(pl.BlockSpec((bl, Dp), wmap))
+        if cache_z and mode == "bce":
+            out_shape.append(jax.ShapeDtypeStruct((Bp, C * lcp),
+                                                  jnp.bfloat16))
+            out_specs.append(pl.BlockSpec((Bp, bl), zmap))
+        out_shape += [jax.ShapeDtypeStruct((Bp, Dp), jnp.bfloat16),
+                      jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+        out_specs += [pl.BlockSpec((Bp, Dp), full),
+                      pl.BlockSpec((1, 1), full)]
+        if mode == "ce_full":
+            out_shape.append(jax.ShapeDtypeStruct((Bp, 1), jnp.float32))
+            out_specs.append(pl.BlockSpec((Bp, 1), full))
+    elif mode == "ce_lse":
+        if cache_z:
+            out_shape.append(jax.ShapeDtypeStruct((Bp, C * lcp),
+                                                  jnp.bfloat16))
+            out_specs.append(pl.BlockSpec((Bp, bl), zmap))
+        out_shape += [jax.ShapeDtypeStruct((Bp, 1), jnp.float32),
+                      jax.ShapeDtypeStruct((Bp, 1), jnp.float32)]
+        out_specs += [pl.BlockSpec((Bp, 1), full),
+                      pl.BlockSpec((Bp, 1), full)]
+    else:                                   # logits
+        out_shape.append(jax.ShapeDtypeStruct((Bp, C * lcp), jnp.bfloat16))
+        out_specs.append(pl.BlockSpec((Bp, bl), zmap))
+
+    aliases = {}
+    if update:
+        aliases[w_idx] = 0
+        if kahan:
+            aliases[w_idx + 1] = 1
+
+    scratch = []
+    if update:
+        scratch += [pltpu.VMEM((Bp, Dp), jnp.float32),
+                    pltpu.VMEM((Bp, Dp), jnp.bfloat16),
+                    pltpu.VMEM((1, 1), jnp.float32)]
+    if mode in ("ce_full", "ce_lse"):
+        scratch += [pltpu.VMEM((Bp, 1), jnp.float32),
+                    pltpu.VMEM((Bp, 1), jnp.float32)]
+    if mode == "ce_full":
+        scratch.append(pltpu.VMEM((Bp, 1), jnp.float32))
+        if cache_z:     # grid-resident z cache (persists across both passes)
+            scratch.append(pltpu.VMEM((Bp, C * lcp), jnp.bfloat16))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _head_kernel, mode=mode, num_labels=num_labels, lc=lc, bpc=bpc,
+            n_b=B, kahan=kahan and update, cache_z=cache_z, use_sr=use_sr,
+            quantize_x=quantize_x, drop_rate=drop_rate,
+            compute_loss=compute_loss),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=scratch,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    return outs, (B, D, C, lc, lcp, kahan)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "num_labels", "use_sr", "quantize_x", "drop_rate",
+    "compute_loss", "cache_z", "block_l", "interpret"))
+def fused_head_step(x: jax.Array, w: jax.Array, targets: jax.Array,
+                    lr, wd, scale, seeds_drop: jax.Array,
+                    seeds_upd: jax.Array, base: jax.Array,
+                    lse: jax.Array | None = None,
+                    z: jax.Array | None = None,
+                    comp: jax.Array | None = None, *,
+                    mode: str, num_labels: int, use_sr: bool = True,
+                    quantize_x: bool = True, drop_rate: float = 0.0,
+                    compute_loss: bool = True, cache_z: bool = False,
+                    block_l: int | None = None,
+                    interpret: bool | None = None) -> HeadStepOut:
+    """One whole-head train step in a single launch.
+
+    x (B, D) bf16 · w (C, lc, D) storage dtype · targets (B, P)/(B,) int32 ·
+    seeds_drop/seeds_upd (C,) uint32 per-chunk DropConnect/SR seeds ·
+    base (C,) int32 global label id of each chunk's local row 0 · comp
+    (C, lc, D) BF16 Kahan buffer (all-chunks Kahan; the mixed hybrid runs
+    on the per-chunk scan).  ``mode``:
+
+    * ``"bce"``       — 1 launch; ``cache_z`` additionally emits the (B,
+      C·lc) logits (the sharded gather-loss path reads them back).
+    * ``"ce_full"``   — 1 launch, 2-pass grid; returns the finalized LSE;
+      ``cache_z`` keeps the pass-0 logits grid-resident in VMEM scratch
+      so pass 1 skips the forward matmul (gate on
+      ``tuning.fused_head_viable(..., cache_z=True)`` when compiling).
+    * ``"ce_update"`` — 1 launch, LSE passed in (the sharded CE path, whose
+      normalizer needs a collective between the passes); ``z`` optionally
+      feeds pre-computed logits back in.
+    """
+    assert mode in _UPDATE_MODES, mode
+    if mode == "ce_update":
+        assert lse is not None, "ce_update needs the finalized LSE"
+    outs, (B, D, C, lc, lcp, kahan) = _launch(
+        mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
+        lse, z, comp, num_labels, use_sr, quantize_x, drop_rate,
+        compute_loss, cache_z, block_l, interpret)
+    it = iter(outs)
+    w_new = _slice_w3(next(it), C, lcp, lc, D)
+    comp_new = _slice_w3(next(it), C, lcp, lc, D) if kahan else None
+    z_out = None
+    if cache_z and mode == "bce":
+        z_out = _slice_z(next(it), B, C, lcp, lc)
+    xg = next(it)[:B, :D]
+    loss = next(it)[0, 0]
+    lse_out = next(it)[:B, 0] if mode == "ce_full" else None
+    return HeadStepOut(w_new, xg, loss, comp_new, lse_out, z_out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_labels", "quantize_x", "drop_rate", "cache_z", "block_l",
+    "interpret"))
+def fused_head_lse(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
+                   base: jax.Array, *, num_labels: int,
+                   quantize_x: bool = True, drop_rate: float = 0.0,
+                   cache_z: bool = False, block_l: int | None = None,
+                   interpret: bool | None = None) -> LseOut:
+    """Streaming (max, Σexp) over every label block in one launch — the
+    local half of the sharded CE normalizer (``ce_comm="stats"``); the
+    caller folds the cross-device pmax/psum and finalizes."""
+    outs, (B, D, C, lc, lcp, _) = _launch(
+        "ce_lse", x, w, None, None, None, None, seeds_drop, None, base,
+        None, None, None, num_labels, False, quantize_x, drop_rate, False,
+        cache_z, block_l, interpret)
+    it = iter(outs)
+    z_out = _slice_z(next(it), B, C, lcp, lc) if cache_z else None
+    return LseOut(next(it)[:B, 0], next(it)[:B, 0], z_out)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "quantize_x", "drop_rate", "block_l", "interpret"))
+def fused_head_logits(x: jax.Array, w: jax.Array, seeds_drop: jax.Array, *,
+                      quantize_x: bool = True, drop_rate: float = 0.0,
+                      block_l: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """All (B, C·lc) head logits in one launch (serving: ``head_logits``
+    and the materialized-top-k fast path) — replaces one ``fp8_logits``
+    launch per chunk."""
+    outs, (B, D, C, lc, lcp, _) = _launch(
+        "logits", x, w, None, None, None, None, seeds_drop, None, None,
+        None, None, None, 0, False, quantize_x, drop_rate, False, False,
+        block_l, interpret)
+    return _slice_z(outs[0], B, C, lcp, lc)

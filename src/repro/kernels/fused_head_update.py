@@ -89,10 +89,11 @@ def fused_head_update(g: jax.Array, x: jax.Array, w: jax.Array,
                       lr: jax.Array, wd: jax.Array, seed: jax.Array, *,
                       use_sr: bool = True,
                       blocks: tuple[int, int, int] | None = None,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """W ← SR((1−lr·wd)·W − lr·GᵀX).  g:(B,L) x:(B,D) w:(L,D) → (L,D).
 
     ``blocks=None`` → roofline-tuned tiles (kernels/tuning.py)."""
+    interpret = tuning.interpret_default(interpret)
     (B, L), (_, D) = g.shape, x.shape
     if blocks is None:
         blocks = tuning.update_blocks(B, L, D, jnp.dtype(w.dtype).itemsize)
@@ -128,7 +129,7 @@ def fused_head_update_kahan(g: jax.Array, x: jax.Array, w: jax.Array,
                             comp: jax.Array, lr: jax.Array, wd: jax.Array,
                             seed: jax.Array, *,
                             blocks: tuple[int, int, int] | None = None,
-                            interpret: bool = True
+                            interpret: bool | None = None
                             ) -> tuple[jax.Array, jax.Array]:
     """Head-label hybrid (paper App. D): Kahan-compensated fused update."""
     (B, L), (_, D) = g.shape, x.shape
@@ -137,6 +138,7 @@ def fused_head_update_kahan(g: jax.Array, x: jax.Array, w: jax.Array,
     bl, bd, bb = blocks
     bl, bd, bb = min(bl, L) or 8, min(bd, D) or 8, min(bb, B) or 8
     gp, xp = tuning.pad2(g, bb, bl), tuning.pad2(x, bb, bd)
+    interpret = tuning.interpret_default(interpret)
     wp, cp = tuning.pad2(w, bl, bd), tuning.pad2(comp, bl, bd)
     Bp, Lp = gp.shape
     Dp = xp.shape[1]

@@ -1,0 +1,61 @@
+"""Jaxpr inspection helpers: count kernel launches without running code.
+
+The grid-resident head (DESIGN.md §7) exists to collapse the per-chunk
+launch loop into one ``pallas_call``; this module makes that property
+*testable* by statically counting the runtime Pallas launches a function
+would perform, via recursive jaxpr traversal:
+
+* a ``pallas_call`` equation counts once (its kernel-body jaxpr cannot
+  launch again);
+* a ``scan`` multiplies its body's count by the trip count — which is
+  exactly how the legacy per-chunk path turns one lowered kernel into
+  ``num_chunks`` runtime launches;
+* ``while`` bodies have data-dependent trip counts and are counted once
+  (a lower bound — none of the head paths loop kernels that way);
+* every other sub-jaxpr (pjit, cond branches, custom_vjp calls, shard_map
+  bodies, …) recurses with multiplicity 1; ``cond`` therefore counts the
+  *sum* of its branches, an upper bound on any single execution.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _sub_jaxprs(params: dict):
+    """Yield every (Closed)Jaxpr reachable from an equation's params."""
+    for v in params.values():
+        items = v if isinstance(v, (tuple, list)) else (v,)
+        for u in items:
+            if hasattr(u, "eqns"):                    # raw Jaxpr
+                yield u
+            elif hasattr(u, "jaxpr") and hasattr(u.jaxpr, "eqns"):
+                yield u.jaxpr                          # ClosedJaxpr
+
+
+def count_in_jaxpr(jaxpr) -> int:
+    """Runtime Pallas launches performed by one (raw) jaxpr."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            continue
+        inner = sum(count_in_jaxpr(j) for j in _sub_jaxprs(eqn.params))
+        if not inner:
+            continue
+        mult = 1
+        if eqn.primitive.name == "scan":
+            mult = int(eqn.params["length"])
+        total += mult * inner
+    return total
+
+
+def count_pallas_launches(fn, *args, **kwargs) -> int:
+    """Number of Pallas launches one call of ``fn(*args, **kwargs)`` runs.
+
+    Traces ``fn`` with ``jax.make_jaxpr`` (abstract — nothing executes)
+    and counts as above.  This is what the launch-count acceptance tests
+    assert: 1 launch/step for the grid BCE head, ≤ 2 for softmax-CE, vs
+    O(num_chunks) on the legacy per-chunk scan.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return count_in_jaxpr(closed.jaxpr)

@@ -19,17 +19,33 @@ import jax
 from repro.kernels import flash_attention_tpu as _fa
 from repro.kernels import fp8_matmul as _fp8
 from repro.kernels import fused_chunk as _fc
+from repro.kernels import fused_head as _fh
 from repro.kernels import fused_head_update as _fused
 from repro.kernels import ref as _ref
 from repro.kernels import sr_cast as _sr
 
 ChunkOut = _fc.ChunkOut
+HeadStepOut = _fh.HeadStepOut
+LseOut = _fh.LseOut
 
 
 def resolve_impl(impl: str) -> str:
     if impl == "auto":
         return "kernel" if jax.default_backend() == "tpu" else "xla"
     return impl
+
+
+def _interpret_of(impl: str) -> bool:
+    """Kernel-family impl → interpret flag, resolved at this dispatch layer
+    (never a hardcoded keyword default): "kernel" compiles, "interpret"
+    interprets, anything else defers to the single backend-resolution
+    policy in ``tuning.interpret_default``."""
+    from repro.kernels import tuning as _tuning
+    if impl == "kernel":
+        return False
+    if impl == "interpret":
+        return True
+    return _tuning.interpret_default(None)
 
 
 def sr_cast_2d(x, seed, *, out_dtype, impl: str = "auto", **kw):
@@ -99,6 +115,40 @@ def fused_chunk_step(x, w, targets, xg, lr, wd, scale, c0, seed_drop,
         lse=lse, z=z, comp=comp, loss=loss, num_labels=num_labels,
         use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
         compute_loss=compute_loss, interpret=(impl == "interpret"), **kw)
+
+
+def fused_head_step(x, w, targets, lr, wd, scale, seeds_drop, seeds_upd,
+                    base, lse=None, z=None, comp=None, *, mode: str,
+                    num_labels: int, impl: str = "auto",
+                    **kw) -> "HeadStepOut":
+    """Whole-head grid megakernel train step (kernels/fused_head.py): the
+    entire label loop inside one Pallas grid.  There is no jnp oracle at
+    this granularity — ``impl="xla"`` callers route to the per-chunk scan
+    (``elmo_head``), which is the grid kernel's bit-parity reference."""
+    impl = resolve_impl(impl)
+    assert impl != "xla", "grid head has no XLA path; use the chunk scan"
+    return _fh.fused_head_step(
+        x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
+        lse=lse, z=z, comp=comp, mode=mode, num_labels=num_labels,
+        interpret=_interpret_of(impl), **kw)
+
+
+def fused_head_lse(x, w, seeds_drop, base, *, num_labels: int,
+                   impl: str = "auto", **kw) -> "LseOut":
+    """Single-launch streaming-LSE statistics over every label block (the
+    sharded CE pass 1 under ``ce_comm="stats"``)."""
+    impl = resolve_impl(impl)
+    assert impl != "xla", "grid head has no XLA path; use the chunk scan"
+    return _fh.fused_head_lse(x, w, seeds_drop, base, num_labels=num_labels,
+                              interpret=_interpret_of(impl), **kw)
+
+
+def fused_head_logits(x, w, seeds_drop, *, impl: str = "auto", **kw):
+    """All head logits in one launch (serving fast path)."""
+    impl = resolve_impl(impl)
+    assert impl != "xla", "grid head has no XLA path; use the chunk scan"
+    return _fh.fused_head_logits(x, w, seeds_drop,
+                                 interpret=_interpret_of(impl), **kw)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,

@@ -31,8 +31,10 @@ def _sr_cast_kernel(seed_ref, x_ref, o_ref, *, out_dtype):
                    static_argnames=("out_dtype", "block", "interpret"))
 def sr_cast_2d(x: jax.Array, seed: jax.Array, *, out_dtype,
                block: tuple[int, int] = (256, 256),
-               interpret: bool = True) -> jax.Array:
+               interpret: bool | None = None) -> jax.Array:
     """SR-cast a 2-D array. Pads to block multiples, slices back."""
+    from repro.kernels import tuning
+    interpret = tuning.interpret_default(interpret)
     assert x.ndim == 2, x.shape
     m, n = x.shape
     bm, bn = block

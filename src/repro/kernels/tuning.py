@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 
 # TPU v5e (benchmarks/roofline.py): the numbers only steer *relative*
@@ -33,6 +34,20 @@ SUBLANE = 8
 
 def _pad_up(n: int, m: int) -> int:
     return -(-n // m) * m
+
+
+def interpret_default(interpret: bool | None) -> bool:
+    """Resolve a kernel wrapper's ``interpret=None`` from the backend.
+
+    Pallas TPU kernels only compile on TPU; everywhere else interpret mode
+    is the correct (and only) execution path.  Resolving here — at the
+    launch-configuration layer, per call — replaces the old hardcoded
+    ``interpret=True`` keyword defaults, which made a *real-TPU* run that
+    called a kernel wrapper directly silently fall back to interpret mode.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def pad2(x, b0: int, b1: int, value=0):
@@ -164,6 +179,90 @@ def fused_chunk_viable(B: int, D: int, w_bytes: int = 1,
     return _chunk_vmem(B, D, LANE, w_bytes, kahan, cached_z) <= VMEM_BUDGET
 
 
+def _head_grid_vmem(B: int, D: int, bl: int, w_bytes: int, kahan: bool,
+                    z_cols: int, p_slots: int) -> int:
+    """Whole-head grid-megakernel working-set model at label tile ``bl`` —
+    the single source of truth for the grid tile chooser and its viability
+    gate (``kernels/fused_head.py``, DESIGN.md §7).
+
+    Versus the per-chunk model (``_chunk_vmem``) the *persistent* set grows:
+    the BF16 running x̄ and the streaming-LSE / loss statistics stay in VMEM
+    scratch across every grid step (they used to be ``lax.scan`` carries in
+    HBM), the targets block is resident for the whole launch, and — when
+    the CE z-cache is on — so are all ``z_cols`` cached logit columns
+    (Pallas defines no in-launch ordering for an HBM spill through an
+    aliased operand, so the cache must live in VMEM)."""
+    Bp = _pad_up(max(B, 1), 16)          # bf16 sublane
+    Dp = _pad_up(max(D, 1), LANE)
+    resident = (Bp * Dp * 2              # X bf16
+                + Bp * Dp * 4            # per-chunk x̄ accumulator f32
+                + Bp * Dp * 2            # running x̄ bf16 (was a scan carry)
+                + 2 * Bp * Dp * 2        # x̄ out block, buffered
+                + 3 * Bp * 4             # LSE (m, s) + finalized lse f32
+                + Bp * max(1, p_slots) * 4    # resident targets block
+                + Bp * z_cols * 2)       # grid-resident z cache bf16
+    per_tile = (2 * bl * Dp * w_bytes * 2          # W in+out, buffered
+                + (2 * bl * Dp * 2 * 2 if kahan else 0)
+                + Bp * bl * 10                      # z32 + g + g16 regs
+                + bl * Dp * 4)                      # dW f32 transient
+    return resident + per_tile
+
+
+def _grid_z_cols(lc: int, bl: int, n_chunks: int, cache_z: bool) -> int:
+    return n_chunks * _pad_up(lc, bl) if cache_z else 0
+
+
+@functools.lru_cache(maxsize=None)
+def head_grid_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
+                      kahan: bool = False, cache_z: bool = False,
+                      p_slots: int = 1, n_chunks: int = 1) -> int:
+    """Label-row tile for the whole-head grid megakernel.
+
+    ``lc`` is the (local) rows *per chunk*; the grid iterates
+    ``num_chunks · lc/bl`` label blocks in one launch, so the tile must
+    tile a chunk exactly — every candidate ``bl`` pads ``lc`` up to a
+    multiple of itself, and the largest fitting candidate wins
+    (``bl == lc``, one block per chunk, keeps the in-kernel LSE/x̄
+    recurrences bit-identical to the per-chunk scan).  Returns LANE when
+    nothing fits; compiled callers must gate on ``fused_head_viable``."""
+    for bl in sorted(set(_cands(lc, cap=4096)), reverse=True):
+        if _head_grid_vmem(B, D, bl, w_bytes, kahan,
+                           _grid_z_cols(lc, bl, n_chunks, cache_z),
+                           p_slots) <= VMEM_BUDGET:
+            return bl
+    return LANE
+
+
+@functools.lru_cache(maxsize=None)
+def head_logits_viable(B: int, D: int, w_bytes: int = 1) -> bool:
+    """Whether the logits-only grid kernel (serving: ``fused_head_logits``)
+    fits VMEM at the smallest tile.  Much looser than ``fused_head_viable``
+    — the logits grid allocates none of the update pass's resident set
+    (x̄ accumulators, running x̄, loss/LSE scratch, targets): just X, one
+    double-buffered W tile and one double-buffered z output tile."""
+    Bp = _pad_up(max(B, 1), 16)
+    Dp = _pad_up(max(D, 1), LANE)
+    return (Bp * Dp * 2                    # X bf16, resident
+            + 2 * LANE * Dp * w_bytes      # W tile, buffered
+            + 2 * Bp * LANE * 2            # z out tile, buffered
+            + Bp * LANE * 4) <= VMEM_BUDGET   # f32 matmul accumulator
+
+
+@functools.lru_cache(maxsize=None)
+def fused_head_viable(B: int, D: int, w_bytes: int = 1, kahan: bool = False,
+                      cache_z: bool = False, p_slots: int = 1,
+                      lc: int = 0, n_chunks: int = 1) -> bool:
+    """Whether the whole-head grid megakernel fits VMEM at even the smallest
+    label tile — same model ``head_grid_block_l`` minimizes over, so gate
+    and chooser cannot disagree.  ``cache_z`` asks for the grid-resident
+    CE z-cache too (pass ``lc``/``n_chunks`` so its footprint is real).
+    When False the head falls back to the per-chunk fused scan (which has
+    its own ``fused_chunk_viable`` gate)."""
+    return _head_grid_vmem(B, D, LANE, w_bytes, kahan,
+                           _grid_z_cols(lc, LANE, n_chunks, cache_z),
+                           p_slots) <= VMEM_BUDGET
+
+
 def tuning_table(shapes=((256, 512, 256), (256, 512, 768), (1024, 512, 256),
                          (8192, 512, 1024), (256, 4096, 256))
                  ) -> list[dict]:
@@ -176,5 +275,6 @@ def tuning_table(shapes=((256, 512, 256), (256, 512, 768), (1024, 512, 256),
             "input_grad": input_grad_blocks(B, L, D),
             "update": update_blocks(B, L, D),
             "fused_chunk_bl": chunk_block_l(B, L, D),
+            "head_grid_bl": head_grid_block_l(B, L, D),
         })
     return rows
