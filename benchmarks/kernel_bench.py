@@ -86,11 +86,21 @@ def bench_sharded_head(L=4096, D=256, B=256, shards=(1, 2, 4)):
     backend inside the bench process.  The tuner's local-shard tile
     (``chunk_block_l(..., n_shards=n)``) is reported alongside.
     """
+    from repro.head import ELMOHeadConfig, resolve_plan
     from repro.kernels import ops, tuning
 
     rows = []
     for n in shards:
         Lc = L // n
+        # the HeadPlan this geometry resolves to (one chunk of L rows,
+        # label-sharded n ways) — predicted bytes ride along with the
+        # measured ones so drift shows in the trajectory
+        plan = resolve_plan(
+            ELMOHeadConfig(num_labels=L, d_model=D, num_chunks=1,
+                           weight_dtype="e4m3", loss="bce",
+                           impl="fused_interpret"),
+            batch=B, target_slots=8, model_size=n,
+            model_axis="model" if n > 1 else None)
         ks = jax.random.split(jax.random.PRNGKey(0), 4)
         x = (jax.random.normal(ks[0], (B, D)) * 0.5).astype(jnp.bfloat16)
         w = (jax.random.normal(ks[1], (Lc, D)) * 0.05
@@ -113,6 +123,9 @@ def bench_sharded_head(L=4096, D=256, B=256, shards=(1, 2, 4)):
             "temp_mib": round(b / 2**20, 2),
             "local_rows": Lc,
             "block_l": tuning.chunk_block_l(B, L, D, 1, n_shards=n),
+            "plan_path": plan.path,
+            "plan_block_l": plan.block_l,
+            "plan_temp_bytes": plan.temp_bytes,
         })
     return rows
 
@@ -136,7 +149,8 @@ def bench_grid_head(L=4096, D=256, B=256, num_chunks=8, shard_widths=(1, 4)):
     """
     import dataclasses
 
-    from repro.core import elmo_head as H
+    from repro import head as H
+    from repro.head import resolve_plan
     from repro.kernels import introspect, tuning
 
     rows = []
@@ -166,6 +180,9 @@ def bench_grid_head(L=4096, D=256, B=256, num_chunks=8, shard_widths=(1, 4)):
                 lambda s, xx, t: H.head_train_step(c, s, xx, t, *hp),
                 state, x, tg)
             t_us = _time(f, state, x, tg, n=3)
+            # the plan this variant resolves to — its predicted transient
+            # bytes land next to the measured temp bytes (drift tracking)
+            plan = resolve_plan(c, batch=B, target_slots=8)
             rows.append({
                 "name": f"kernel/head_{name}_n{n}",
                 "us_per_call": round(t_us),
@@ -179,6 +196,10 @@ def bench_grid_head(L=4096, D=256, B=256, num_chunks=8, shard_widths=(1, 4)):
                 # benchmarked step's real target-slot count
                 "tuned_block_l": tuning.head_grid_block_l(
                     B, cfg.chunk, D, 1, n_chunks=num_chunks, p_slots=8),
+                "plan_path": plan.path,
+                "plan_block_l": plan.block_l,
+                "plan_temp_bytes": plan.temp_bytes,
+                "plan_vmem_bytes": plan.vmem_bytes,
             })
         assert temp["grid"] <= temp["fused_scan"], temp   # acceptance
     return rows

@@ -116,6 +116,29 @@ def _kernels():
     _emit(bench_fp8_logits())
 
 
+@section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows
+def _plan():
+    from repro.configs import get_config
+    from repro.head import default_target_slots, head_config_for, resolve_plan
+    rows = []
+    for arch, batch, n in (("xmc-bert-3m", 128, 1), ("xmc-bert-3m", 128, 4),
+                           ("smollm-360m", 8 * 32, 1)):
+        cfg = get_config(arch)
+        hcfg = head_config_for(cfg)
+        plan = resolve_plan(
+            hcfg, batch=batch, target_slots=default_target_slots(cfg),
+            model_size=n, model_axis="model" if n > 1 else None)
+        rows.append({
+            "name": f"plan/{arch}/n{n}",
+            "us_per_call": 0,              # resolution is trace-time only
+            "path": plan.path, "inner": plan.train_inner,
+            "block_l": plan.block_l, "cache_z": plan.cache_z,
+            "temp_bytes": plan.temp_bytes, "vmem_bytes": plan.vmem_bytes,
+            "fallback": plan.fallback_reason or "none",
+        })
+    _emit(rows)
+
+
 @section("roofline")    # §Roofline table (analytic; dry-run mem separate)
 def _roofline():
     from benchmarks.roofline import full_table

@@ -5,15 +5,16 @@
 Demonstrates the paper's full pipeline at laptop scale: a small bidirectional
 encoder + an FP8-E4M3 chunked classifier head trained with loss-skipping,
 fused stochastic-rounding SGD (no momentum, no master weights), and
-Kahan-AdamW for the encoder — then reports Precision@k.
+Kahan-AdamW for the encoder — then reports Precision@k through the
+``repro.head.ELMOHead`` facade, whose ``HeadPlan`` (execution path, block
+sizes, byte budgets) is resolved once at construction and printed below.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import elmo_head as EH
 from repro.data import DataCursor, xmc_batches
+from repro.head import ELMOHead
 from repro.launch import steps as St
 from repro.optim import kahan_adamw
 
@@ -25,6 +26,11 @@ def main():
           f"head={cfg.head_weight_dtype} chunks={cfg.head_chunks}")
     opt = kahan_adamw()
     state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, impl="xla")
+
+    # one facade, one resolved plan — inspectable before any step runs
+    head = ELMOHead(St.make_head_cfg(cfg, impl="xla"), batch=32,
+                    target_slots=5)
+    print(head.plan.explain())
 
     batches = xmc_batches(cfg.vocab, cfg.head_labels, global_batch=32,
                           seq=16, max_pos=5, cursor=DataCursor(0, 0))
@@ -38,14 +44,13 @@ def main():
         if i % 10 == 0:
             print(f"step {i:3d}  loss {float(m['loss']):.4f}")
 
-    # evaluate P@1 on fresh data through the chunked streaming top-k
+    # evaluate P@1 on fresh data through the facade's top-k path
     b = next(batches)
     from repro.models import transformer as T
     hidden = T.backbone_apply(state.backbone, cfg,
                               jnp.asarray(b["tokens"]))
-    hcfg = St.make_head_cfg(cfg, impl="xla")
-    p1 = EH.precision_at_k(hcfg, state.head, hidden[:, 0, :],
-                           jnp.asarray(b["targets"]), k=1)
+    p1 = head.precision_at_k(state.head, hidden[:, 0, :],
+                             jnp.asarray(b["targets"]), k=1)
     print(f"P@1 (synthetic): {float(p1):.3f}")
     print("quickstart OK")
 

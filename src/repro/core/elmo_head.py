@@ -1,1144 +1,68 @@
-"""ELMO head: the paper's chunked, low-precision large output layer.
+"""DEPRECATED shim — the ELMO head moved to the ``repro.head`` package.
 
-This module is the paper's primary contribution as a composable JAX unit.
-One ``head_train_step`` performs, for each label chunk (paper §4.2–4.3):
+The monolithic free-function module was split into a layered package
+fronted by one mesh-aware facade (DESIGN.md §8):
 
-    1. forward    z_c = q8(X) @ W_cᵀ            (FP8-storage matmul)
-    2. loss-skip  ḡ_c = σ(z_c) − Y_c   |  softmax(z_c) − onehot      (App. B)
-    3. input grad X̄  += ḡ_c @ W_c
-    4. fused upd  W_c ← SR((1 − lr·wd) W_c − lr ḡ_cᵀ X)   (grad never in HBM)
+    repro/head/config.py         ELMOHeadConfig, HeadHparams
+    repro/head/state.py          HeadState, init_head, init_xg_err
+    repro/head/plan.py           HeadPlan (all residency/dispatch decisions,
+                                 resolved once), the plan-stability CLI
+    repro/head/train.py          single-device train step
+    repro/head/train_sharded.py  label-sharded train step (DESIGN.md §6)
+    repro/head/serving.py        logits / top-k / P@k (+ sharded)
+    repro/head/convert.py        re-typing + post-hoc refinement
+    repro/head/__init__.py       the ``ELMOHead`` facade
 
-so transient memory is 1/k of the full logits (paper §4.2, Table 10) and
-the weight/optimizer memory is W itself — SGD without momentum (§4.2),
-stochastic rounding instead of master weights (§4.1/4.3).
-
-On the default ``impl="grid"`` path the *entire* label loop runs inside
-ONE Pallas launch (``kernels/fused_head.py``, DESIGN.md §7): the grid
-iterates over every label block of every chunk, W streams through
-double-buffered DMA, and x, x̄, the streaming-LSE statistics and the loss
-stay resident in VMEM scratch across all grid steps.  BCE is one launch
-per train step; softmax-CE runs its LSE pre-pass and update as the two
-passes of a single 2-D grid, with the pass-1 logits optionally kept
-grid-resident for pass 2 (``cache_z``).  ``impl="fused"`` keeps the PR-1
-per-chunk ``lax.scan`` of ``kernels/fused_chunk.py`` — the grid path's
-bit-parity oracle — and ``impl="unfused"`` the original multi-kernel
-composition.  Head-label chunks can use Kahan compensation instead of SR
-(paper App. D; the mixed hybrid runs on the per-chunk scan).
-
-The head never enters autodiff: the caller runs the backbone under
-``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces the
-paper's reordered computation flow (encoder fwd → head fwd/bwd/update →
-encoder bwd) and its peak-memory profile by construction.
-
-When a mesh is active (``dist.meshctx``), ``head_train_step_sharded`` runs
-the same step label-sharded over the model axis (every device owns
-``chunk/n`` rows of each chunk, per ``dist.sharding.head_specs``), with a
-cross-device two-pass LSE for softmax-CE and a ``psum`` of the per-shard
-input gradients — DESIGN.md §6.  On the grid path each shard runs the
-whole-head megakernel on its local rows: one launch for BCE, two for
-softmax-CE (the normalizer collective sits between the LSE and update
-launches).  ``head_topk_sharded``/``head_logits_sharded`` are the matching
-serving paths (local top-k → gather → global re-rank).
+This module re-exports the historical names unchanged — including the
+mutable ``_CACHE_Z_BYTES`` / ``_TOPK_Z_BYTES`` budget knobs, whose reads
+AND writes are forwarded to ``repro.head.plan`` (tests monkeypatch them
+here) — so every legacy entry point is the same code as the facade and
+bit-parity between the two surfaces holds by construction.  New code
+should import from ``repro.head``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import NamedTuple, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as PS
-
-from repro.core import losses as L
-from repro.core import precision as P
-from repro.kernels import ops
-from repro.kernels import prng_utils as PR
-from repro.kernels import tuning as _tuning
-
-_WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "e5m2": P.E5M2,
-                  "f32": P.F32}
-
-
-@dataclasses.dataclass(frozen=True)
-class ELMOHeadConfig:
-    num_labels: int
-    d_model: int
-    num_chunks: int = 8
-    weight_dtype: str = "bf16"         # "bf16" | "e4m3" | "e5m2" | "f32"
-    loss: str = "bce"                  # "bce" (XMC) | "softmax_ce" (LM)
-    use_sr: bool = True                # stochastic rounding in the update
-    kahan_chunks: int = 0              # leading chunks w/ Kahan comp (App. D)
-    drop_rate: float = 0.0             # in-kernel DropConnect (App. H)
-    quantize_x: Optional[bool] = None  # default: True iff weight is e4m3
-    compute_loss: bool = True          # loss value is optional (loss-skip)
-    # impl selects "<path>[_<inner>]" where path is one of
-    #   grid    — whole-head grid megakernel, ONE launch per step
-    #             (kernels/fused_head.py, DESIGN.md §7) — the default
-    #   fused   — PR-1 per-chunk scan of the single-launch chunk kernel
-    #             (kernels/fused_chunk.py) — the grid path's bit-parity
-    #             oracle
-    #   unfused — legacy 3-kernel composition, kept for A/B
-    # and inner is auto|kernel|interpret|xla.  Bare inner names ("auto",
-    # "xla", "interpret", …) select the grid path with that inner impl;
-    # a grid path whose inner resolves to "xla" runs the fused scan (the
-    # two are the same algorithm — the grid kernel has no jnp oracle of
-    # its own).
-    impl: str = "auto"
-    # softmax-CE only: reuse the LSE pre-pass logits in pass 2 ("on"/"off",
-    # or "auto" = on when the z cache fits _CACHE_Z_BYTES)
-    cache_z: str = "auto"
-
-    @property
-    def wdtype(self):
-        return _WEIGHT_DTYPES[self.weight_dtype]
-
-    @property
-    def qx(self) -> bool:
-        return self.weight_dtype == "e4m3" if self.quantize_x is None \
-            else self.quantize_x
-
-    # label rows per chunk are padded to a multiple of _CHUNK_ALIGN so the
-    # chunk dimension stays divisible by the mesh's model axis (vocab-
-    # parallel sharding) and by MXU tile sizes
-    _CHUNK_ALIGN = 256
-
-    @property
-    def chunk(self) -> int:
-        c = self.num_chunks
-        per = (self.num_labels + c - 1) // c
-        if self.num_labels >= self._CHUNK_ALIGN:
-            per = ((per + self._CHUNK_ALIGN - 1) // self._CHUNK_ALIGN
-                   ) * self._CHUNK_ALIGN
-        return per
-
-    @property
-    def padded_labels(self) -> int:
-        return self.chunk * self.num_chunks
-
-    def __post_init__(self):
-        assert 0 <= self.kahan_chunks <= self.num_chunks
-        assert self.loss in ("bce", "softmax_ce")
-        assert self.cache_z in ("auto", "on", "off")
-
-
-# z-cache budget for the CE cached-logits fast path (B·padded_labels bf16);
-# past this, recomputing pass-2 logits beats holding them (paper §4.2: the
-# whole point of chunking is not materializing (B, L))
-_CACHE_Z_BYTES = 32 * 2 ** 20
-
-
-def _want_cache_z(cfg: "ELMOHeadConfig", z_bytes: int) -> bool:
-    """The ONE CE z-cache policy shared by the grid, fused-scan and
-    sharded paths: explicit on/off wins; "auto" caches iff this path's
-    z footprint (``z_bytes``, local to the device) fits the budget."""
-    return cfg.cache_z == "on" or (cfg.cache_z == "auto"
-                                   and z_bytes <= _CACHE_Z_BYTES)
-
-
-def _impl_split(impl: str) -> Tuple[str, str]:
-    """cfg.impl → (path, inner kernel impl).
-
-    path ∈ {"grid", "fused", "unfused"} (see ``ELMOHeadConfig.impl``).
-    Bare inner names keep their historical meaning of "the default fast
-    path with this inner impl" — which is now the grid path."""
-    for path in ("grid", "fused", "unfused"):
-        if impl == path or impl.startswith(path + "_") \
-                or impl.startswith(path + ":"):
-            rest = impl[len(path):].lstrip("_:")
-            return path, (rest or "auto")
-    return "grid", impl
-
-
-def _grid_ok(cfg: ELMOHeadConfig, batch: int, rimpl: str,
-             p_slots: int = 1) -> bool:
-    """Whether the whole-head grid megakernel can run this step.
-
-    The grid kernel has no jnp oracle (inner "xla" routes to the fused
-    scan, which *is* the oracle), the mixed Kahan hybrid keeps the
-    per-chunk scan (a homogeneous update rule lets one grid cover every
-    block), and the compiled path must fit the §7 VMEM residency model —
-    gated with the same ``p_slots`` (resident target columns) the launch
-    will size the kernel with, so gate and tile chooser agree."""
-    if rimpl not in ("kernel", "interpret"):
-        return False
-    if cfg.kahan_chunks not in (0, cfg.num_chunks):
-        return False
-    if rimpl == "kernel" and not _tuning.fused_head_viable(
-            batch, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
-            kahan=cfg.kahan_chunks > 0, p_slots=p_slots):
-        return False
-    return True
-
-
-def _target_slots(targets: jax.Array) -> int:
-    return targets.shape[-1] if targets.ndim == 2 else 1
-
-
-def _grid_seeds(cfg: ELMOHeadConfig, seed: jax.Array):
-    """Per-chunk DropConnect/SR seed vectors — elementwise identical to the
-    scalar ``_chunk_seed`` draws of the per-chunk scan."""
-    cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
-    return _chunk_seed(seed, cids, 0), _chunk_seed(seed, cids, 1), cids
-
-
-class HeadState(NamedTuple):
-    """w: (C, Lc, D) in storage dtype; comp: (Ck, Lc, D) BF16 (App. D)."""
-    w: jax.Array
-    comp: Optional[jax.Array]
-
-
-def init_head(key: jax.Array, cfg: ELMOHeadConfig, scale: float | None = None
-              ) -> HeadState:
-    scale = scale if scale is not None else 1.0 / np.sqrt(cfg.d_model)
-    w = (jax.random.normal(key, (cfg.num_chunks, cfg.chunk, cfg.d_model),
-                           jnp.float32) * scale).astype(cfg.wdtype)
-    comp = (jnp.zeros((cfg.kahan_chunks, cfg.chunk, cfg.d_model), P.BF16)
-            if cfg.kahan_chunks else None)
-    return HeadState(w, comp)
-
-
-def _valid_cols(cfg: ELMOHeadConfig, cidx: jax.Array) -> jax.Array:
-    """(chunk,) bool — masks padded label columns in the final chunk."""
-    c0 = cidx * cfg.chunk
-    return (c0 + jnp.arange(cfg.chunk)) < cfg.num_labels
-
-
-def _chunk_logits(cfg: ELMOHeadConfig, wc: jax.Array, x: jax.Array,
-                  seed: jax.Array, impl: str | None = None) -> jax.Array:
-    impl = _impl_split(cfg.impl)[1] if impl is None else impl
-    return ops.fp8_logits(x, wc, seed, drop_rate=cfg.drop_rate,
-                          quantize_x=cfg.qx, impl=impl)
-
-
-def _chunk_seed(seed: jax.Array, cidx: jax.Array, salt: int) -> jax.Array:
-    return PR.mix32(seed.astype(jnp.uint32)
-                    + cidx.astype(jnp.uint32) * np.uint32(2654435761)
-                    + np.uint32(salt))
-
-
-# ---------------------------------------------------------------------------
-# training step
-# ---------------------------------------------------------------------------
-
-
-def _chunk_grad(cfg: ELMOHeadConfig, z: jax.Array, targets: jax.Array,
-                cidx: jax.Array, lse: Optional[jax.Array],
-                scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Loss-skip logit gradient + optional loss contribution for one chunk."""
-    return L.chunk_loss_skip_grad(cfg.loss, z, targets, cidx * cfg.chunk,
-                                  cfg.chunk, cfg.num_labels, lse, scale,
-                                  cfg.compute_loss)
-
-
-def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
-    valid = _valid_cols(cfg, cidx)[None, :]
-    return jnp.where(valid, z.astype(jnp.float32), L.NEG_INF)
-
-
-def _scan_chunks(cfg: ELMOHeadConfig, w, comp, chunk_ids, zs, carry,
-                 chunk_step):
-    """The Kahan/SR chunk-scan split shared by every train-step path
-    (fused, unfused, sharded).  ``chunk_step(xg, loss, wc, comp_c, cidx,
-    z_c)`` is the per-chunk work; the documented fused-vs-unfused-vs-
-    sharded parity depends on this scaffolding living in exactly one
-    place.  Returns (carry, w_kahan, w_sr, comp_new)."""
-
-    def kahan_body(carry, inp):
-        xg, loss = carry
-        wc, comp_c, cidx, z_c = (inp if zs is not None else inp + (None,))
-        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
-                                                z_c)
-        return (xg, loss), (wc_new, comp_new)
-
-    def sr_body(carry, inp):
-        xg, loss = carry
-        wc, cidx, z_c = inp if zs is not None else inp + (None,)
-        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
-        return (xg, loss), wc_new
-
-    ck = cfg.kahan_chunks
-    if ck:
-        xs = (w[:ck], comp, chunk_ids[:ck])
-        if zs is not None:
-            xs += (zs[:ck],)
-        carry, (w_k, comp_new) = jax.lax.scan(kahan_body, carry, xs)
-    else:
-        w_k, comp_new = w[:0], comp
-
-    if ck < cfg.num_chunks:
-        xs = (w[ck:], chunk_ids[ck:])
-        if zs is not None:
-            xs += (zs[ck:],)
-        carry, w_s = jax.lax.scan(sr_body, carry, xs)
-    else:
-        w_s = w[:0]
-    return carry, w_k, w_s, comp_new
-
-
-def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                    targets: jax.Array, lr: jax.Array, wd: jax.Array,
-                    seed: jax.Array
-                    ) -> Tuple[HeadState, jax.Array, dict]:
-    """One fused forward/backward/update pass over all label chunks.
-
-    x: (B, D) bf16 backbone outputs (tokens flattened).
-    targets: (B, P) int32 multi-label ids (bce) or (B,) int32 ids (ce).
-    Returns (new_state, x_grad (B, D) bf16, metrics).
-
-    Default path: the whole-head grid megakernel — ONE Pallas launch for
-    every label chunk (two grid passes sharing that launch for softmax-CE),
-    with x/x̄/LSE stats resident in VMEM across the grid (DESIGN.md §7).
-    ``cfg.impl="fused*"`` keeps the PR-1 per-chunk scan (the grid path's
-    bit-parity oracle), ``"unfused*"`` the legacy multi-kernel composition;
-    all three are numerically identical by construction.
-    """
-    path, impl = _impl_split(cfg.impl)
-    rimpl = ops.resolve_impl(impl)
-    if path == "grid" and _grid_ok(cfg, x.shape[0], rimpl,
-                                   _target_slots(targets)):
-        return _head_train_step_grid(cfg, state, x, targets, lr, wd, seed,
-                                     impl)
-    fused = path != "unfused"
-    if (fused and rimpl == "kernel"
-            and not _tuning.fused_chunk_viable(
-                x.shape[0], cfg.d_model,
-                jnp.dtype(cfg.wdtype).itemsize,
-                kahan=cfg.kahan_chunks > 0)):
-        fused = False   # megakernel working set exceeds VMEM at this B·S
-    if fused:
-        return _head_train_step_fused(cfg, state, x, targets, lr, wd, seed,
-                                      impl)
-    return _head_train_step_unfused(cfg, state, x, targets, lr, wd, seed,
-                                    impl)
-
-
-def _head_train_step_grid(cfg: ELMOHeadConfig, state: HeadState,
-                          x: jax.Array, targets: jax.Array, lr: jax.Array,
-                          wd: jax.Array, seed: jax.Array, impl: str
-                          ) -> Tuple[HeadState, jax.Array, dict]:
-    """One whole-head grid-megakernel launch (DESIGN.md §7): the label loop
-    runs inside the Pallas grid, so BCE is exactly one launch per step and
-    softmax-CE one two-pass launch (the z-cache spills through a
-    grid-mapped HBM buffer instead of a second launch)."""
-    B = x.shape[0]
-    x = x.astype(jnp.bfloat16)
-    seed = seed.astype(jnp.uint32)
-    seeds_d, seeds_u, cids = _grid_seeds(cfg, seed)
-    base = cids * cfg.chunk
-    kahan = cfg.kahan_chunks > 0
-    comp = state.comp if kahan else None
-    common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
-                  quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                  compute_loss=cfg.compute_loss, impl=impl)
-
-    if cfg.loss == "bce":
-        scale, lse = jnp.float32(1.0 / B), None
-        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
-                                  seeds_d, seeds_u, base, comp=comp,
-                                  mode="bce", **common)
-    else:
-        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
-        scale = 1.0 / n_tok
-        # same cache budget rule as the per-chunk scan — but the grid
-        # cache is VMEM-resident (fused_head.py), so the compiled path
-        # additionally requires it to fit the §7 residency model
-        cache = _want_cache_z(cfg, B * cfg.padded_labels * 2)
-        if cache and ops.resolve_impl(impl) == "kernel" \
-                and not _tuning.fused_head_viable(
-                    B, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
-                    kahan=kahan, cache_z=True, lc=cfg.chunk,
-                    n_chunks=cfg.num_chunks):
-            cache = False       # recompute pass-2 logits in-kernel instead
-        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
-                                  seeds_d, seeds_u, base, comp=comp,
-                                  mode="ce_full", cache_z=cache, **common)
-        lse = out.lse
-
-    w_k = out.w if kahan else state.w[:0]
-    w_s = state.w[:0] if kahan else out.w
-    return _finalize_step(cfg, (out.xg, out.loss), w_k, w_s, out.comp,
-                          targets, lse, scale, B)
-
-
-def _head_train_step_fused(cfg: ELMOHeadConfig, state: HeadState,
-                           x: jax.Array, targets: jax.Array, lr: jax.Array,
-                           wd: jax.Array, seed: jax.Array, impl: str
-                           ) -> Tuple[HeadState, jax.Array, dict]:
-    B = x.shape[0]
-    x = x.astype(jnp.bfloat16)
-    seed = seed.astype(jnp.uint32)
-    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
-
-    if cfg.loss == "bce":
-        n_tok = None
-        scale = jnp.float32(1.0 / B)
-    else:
-        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
-        scale = 1.0 / n_tok
-
-    # hoisted tile-alignment padding: the compiled-kernel path pads
-    # x/x̄/targets ONCE per step here (the chunk kernel's own pad2 calls
-    # become no-ops), instead of re-padding the loop-invariant operands at
-    # every chunk of the scan.  ``n_b`` tells the kernel the logical batch
-    # so its masking ignores the padded rows.  interpret/xla inners keep
-    # exact shapes (their bitwise-parity contract forbids padding).
-    n_b = None
-    if ops.resolve_impl(impl) == "kernel":
-        n_b = B
-        Bp = _tuning._pad_up(B, 16)
-        Dp = _tuning._pad_up(cfg.d_model, _tuning.LANE)
-        x = _tuning.pad2(x, Bp, Dp)
-        targets = _tuning.pad2(
-            targets if targets.ndim == 2 else targets.reshape(B, 1),
-            Bp, 1, value=-1)
-        if cfg.loss == "softmax_ce":
-            targets = targets.reshape(-1)
-
-    if cfg.loss == "bce":
-        lse, zs = None, None
-    else:
-        cache = _want_cache_z(cfg, B * cfg.padded_labels * 2)
-
-        # ----- pass 1: streaming LSE (optionally caching each chunk's z
-        # so pass 2 skips the forward matmul entirely)
-        def lse_body(carry, inp):
-            wc, cidx = inp
-            m, s = carry
-            z = _chunk_logits(cfg, wc, x, _chunk_seed(seed, cidx, 0), impl)
-            carry = L.lse_update(m, s, _masked_z(cfg, z, cidx))
-            return carry, (z if cache else None)
-
-        (m, s), zs = jax.lax.scan(lse_body, L.lse_init(x.shape[0]),
-                                  (state.w, chunk_ids))
-        lse = L.lse_finalize(m, s)
-
-    def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
-        out = ops.fused_chunk_step(
-            x, wc, targets, xg, lr, wd, scale, cidx * cfg.chunk,
-            _chunk_seed(seed, cidx, 0), _chunk_seed(seed, cidx, 1),
-            lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
-            num_labels=cfg.num_labels, use_sr=cfg.use_sr,
-            quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-            compute_loss=cfg.compute_loss, impl=impl,
-            **({"n_b": n_b} if n_b is not None else {}))
-        return out.xg, loss_acc + out.loss, out.w, out.comp
-
-    carry = (jnp.zeros(x.shape, jnp.bfloat16), jnp.float32(0.0))
-    carry, w_k, w_s, comp_new = _scan_chunks(cfg, state.w, state.comp,
-                                             chunk_ids, zs, carry,
-                                             chunk_step)
-    carry = (carry[0][:B, :cfg.d_model], carry[1])
-    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
-                          scale, B)
-
-
-def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
-                   lse, scale, B: int) -> Tuple[HeadState, jax.Array, dict]:
-    """Shared epilogue of both train-step paths: reassemble the chunk
-    weights and fold the accumulated loss (the fused/unfused A/B guarantee
-    depends on this formula living in exactly one place)."""
-    (xg, loss_raw) = carry
-    w_new = jnp.concatenate([w_k, w_s], axis=0) if cfg.kahan_chunks else w_s
-
-    if cfg.loss == "bce":
-        loss = loss_raw / B
-    else:
-        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
-        tok_mask = (targets >= 0)
-        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
-            if cfg.compute_loss else loss_raw
-
-    metrics = {"loss": loss,
-               "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
-    return HeadState(w_new, comp_new), xg, metrics
-
-
-def _head_train_step_unfused(cfg: ELMOHeadConfig, state: HeadState,
-                             x: jax.Array, targets: jax.Array,
-                             lr: jax.Array, wd: jax.Array, seed: jax.Array,
-                             impl: str
-                             ) -> Tuple[HeadState, jax.Array, dict]:
-    """Legacy multi-kernel path (three launches + HBM logits/grad round
-    trips per chunk) — kept selectable for fused-vs-unfused A/B."""
-    B = x.shape[0]
-    x = x.astype(jnp.bfloat16)
-    seed = seed.astype(jnp.uint32)
-
-    if cfg.loss == "bce":
-        scale = jnp.float32(1.0 / B)
-        lse = None
-    else:
-        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
-        scale = 1.0 / n_tok
-
-        # ----- pass 1: streaming LSE over chunks (paper §4.2 chunking + CE)
-        def lse_body(carry, inp):
-            wc, cidx = inp
-            m, s = carry
-            z = _masked_z(cfg, _chunk_logits(cfg, wc, x,
-                                             _chunk_seed(seed, cidx, 0),
-                                             impl), cidx)
-            return L.lse_update(m, s, z), None
-
-        (m, s), _ = jax.lax.scan(
-            lse_body, L.lse_init(B),
-            (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
-        lse = L.lse_finalize(m, s)
-
-    # ----- pass 2: per-chunk grad + fused update + x̄ accumulation
-    def chunk_step(xg, loss_acc, wc, comp_c, cidx, _z):
-        sd = _chunk_seed(seed, cidx, 0)
-        z = _chunk_logits(cfg, wc, x, sd, impl)
-        g, loss_c = _chunk_grad(cfg, z, targets, cidx, lse, scale)
-        # x̄ accumulates in BF16 (paper §4.1: gradients stay BF16) — halves
-        # the accumulator and its cross-model all-reduce
-        xg = xg + ops.fp8_input_grad(g, wc, impl=impl)
-        upd_seed = _chunk_seed(seed, cidx, 1)
-        if comp_c is None:
-            wc_new = ops.fused_head_update(g, x, wc, lr, wd, upd_seed,
-                                           use_sr=cfg.use_sr, impl=impl)
-            return xg, loss_acc + loss_c, wc_new, None
-        wc_new, comp_new = ops.fused_head_update_kahan(
-            g, x, wc, comp_c, lr, wd, upd_seed, impl=impl)
-        return xg, loss_acc + loss_c, wc_new, comp_new
-
-    carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
-    carry, w_k, w_s, comp_new = _scan_chunks(
-        cfg, state.w, state.comp,
-        jnp.arange(cfg.num_chunks, dtype=jnp.int32), None, carry,
-        chunk_step)
-    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
-                          scale, B)
-
-
-# ---------------------------------------------------------------------------
-# label-sharded training (DESIGN.md §6)
-# ---------------------------------------------------------------------------
-
-
-def _resolve_ctx(ctx):
-    """Active MeshContext (explicit arg wins) and its model-axis size."""
-    from repro.dist import meshctx as _meshctx  # lazy: dist imports core
-    ctx = _meshctx.get() if ctx is None else ctx
-    return ctx, (1 if ctx is None else ctx.model_size)
-
-
-def init_xg_err(cfg: ELMOHeadConfig, batch: int, ctx=None) -> jax.Array:
-    """Per-shard E5M2 error-feedback carry for the compressed x̄ reduction:
-    (model_size, B, D) BF16, row r owned by model rank r."""
-    _, n = _resolve_ctx(ctx)
-    return jnp.zeros((n, batch, cfg.d_model), P.BF16)
-
-
-def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
-                            x: jax.Array, targets: jax.Array, lr: jax.Array,
-                            wd: jax.Array, seed: jax.Array, ctx=None, *,
-                            ce_comm: str = "gather",
-                            compress_xg: bool = False,
-                            xg_err: Optional[jax.Array] = None):
-    """``head_train_step`` with the label dimension sharded over the mesh's
-    model axis (vocab parallelism, per ``dist.sharding.head_specs``).
-
-    Every model rank holds ``chunk/n`` rows of each chunk (W and the Kahan
-    buffer partitioned identically) and runs the whole-head grid megakernel
-    (DESIGN.md §7 — one launch for BCE, two for softmax-CE whose normalizer
-    collective sits between them) or, off the grid path, the per-chunk
-    fused kernel scan on its local shard; the batch is gathered over the
-    data axes so the in-kernel weight update sees full-B gradients — W
-    updates stay deterministic and need no cross-data all-reduce.
-    Per-shard x̄ partials are ``psum``-reduced over the model axis
-    (optionally E5M2-compressed, see ``compress_xg``).
-
-    Softmax-CE couples shards through the row normalizer; ``ce_comm`` picks
-    the cross-device LSE strategy (DESIGN.md §6):
-
-    * ``"gather"`` (default) — the pass-1 logits of each chunk are
-      all-gathered (BF16, column-tiled) and the streaming LSE + the loss
-      run on the full-width rows: weights, Kahan state and the loss are
-      **bit-identical** to single-device ``head_train_step`` for
-      deterministic updates (BF16 Kahan / no-SR).  Comm: B·L·2 bytes/step.
-    * ``"stats"`` — each shard folds a local (max, Σexp) over its label
-      windows, then one ``pmax`` + one rescaled ``psum`` form the global
-      log-normalizer: comm is O(B) but sums reassociate (parity to ~1e-6).
-
-    BCE is embarrassingly parallel; ``ce_comm`` only selects whether the
-    loss *value* is computed from gathered logits (bit-parity) or from
-    ``psum``-ed per-shard partials.
-
-    ``compress_xg`` sends each shard's x̄ over the wire as E5M2 (1 byte/elem,
-    ``dist.compression``); with ``xg_err`` (see ``init_xg_err``) the residual
-    is carried across steps as classic error feedback, and the updated carry
-    is returned as a fourth output.
-
-    Falls back to the single-device step when no mesh is active or the
-    chunk does not divide the model axis.  SR and DropConnect draws are
-    hashed per *local* tile, so low-precision SR runs match single-device
-    only distributionally (the paper's own guarantee, App. C).
-    """
-    from repro.dist.compat import shard_map as _shard_map
-
-    assert ce_comm in ("gather", "stats"), ce_comm
-    assert xg_err is None or compress_xg, "xg_err implies compress_xg"
-    ctx, n = _resolve_ctx(ctx)
-    if n == 1 or cfg.chunk % n != 0:
-        out = head_train_step(cfg, state, x, targets, lr, wd, seed)
-        return out if xg_err is None else out + (xg_err,)
-
-    mesh, axis = ctx.mesh, ctx.model_axis
-    batch_axes = tuple(a for a in ctx.batch_axes
-                      if a in mesh.shape and mesh.shape[a] > 1)
-    n_batch = 1
-    for a in batch_axes:
-        n_batch *= int(mesh.shape[a])
-    if x.shape[0] % n_batch != 0:
-        batch_axes, n_batch = (), 1      # ragged batch: replicate instead
-    b0 = batch_axes if batch_axes else None
-
-    path, inner = _impl_split(cfg.impl)
-    rimpl = ops.resolve_impl(inner)
-    lc = cfg.chunk // n
-    B_g = x.shape[0]                 # global batch (the body re-gathers it)
-    # grid path: ONE whole-head launch per collective-free pass (BCE = 1
-    # launch; CE = LSE launch + collective + update launch, ≤ 2).  The
-    # gather-mode losses/LSE read the local logits back, so those paths
-    # additionally need the local z to fit the cache budget.
-    grid = path == "grid" and _grid_ok(cfg, B_g, rimpl,
-                                       _target_slots(targets))
-    z_fits = B_g * (cfg.padded_labels // n) * 2 <= _CACHE_Z_BYTES
-    if ce_comm == "gather" and (cfg.loss == "softmax_ce"
-                                or cfg.compute_loss):
-        grid = grid and z_fits
-    if not grid and rimpl == "kernel" and not _tuning.fused_chunk_viable(
-            B_g, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
-            kahan=cfg.kahan_chunks > 0):
-        inner = "xla"    # sharded path is megakernel-shaped; oracle fallback
-
-    kahan = cfg.kahan_chunks > 0
-    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
-    has_err = xg_err is not None
-    impl = inner
-
-    def body(*args):
-        it = iter(args)
-        w = next(it)
-        comp = next(it) if kahan else None
-        xl, tgt = next(it), next(it)
-        lr_, wd_, seed_ = next(it), next(it), next(it)
-        err = next(it) if has_err else None          # (1, B, D) local slice
-
-        Bl = xl.shape[0]
-        for a in reversed(batch_axes):   # innermost batch axis first
-            xl = jax.lax.all_gather(xl, a, axis=0, tiled=True)
-            tgt = jax.lax.all_gather(tgt, a, axis=0, tiled=True)
-        x16 = xl.astype(jnp.bfloat16)
-        B = x16.shape[0]
-        r = jax.lax.axis_index(axis)
-        # independent SR/DropConnect stream per shard: kernel bits are
-        # hashed by the *local* tile index, so shards must not share seeds
-        seed_sh = PR.mix32(seed_.astype(jnp.uint32)
-                           + (r.astype(jnp.uint32) + 1)
-                           * np.uint32(0x85EBCA6B))
-
-        def c0_of(cidx):
-            return cidx * cfg.chunk + r.astype(jnp.int32) * lc
-
-        kernel_loss = cfg.compute_loss and ce_comm == "stats"
-
-        if grid:
-            # ---- whole-head grid-megakernel branch (DESIGN.md §7) ----
-            seeds_d = _chunk_seed(seed_sh, chunk_ids, 0)
-            seeds_u = _chunk_seed(seed_sh, chunk_ids, 1)
-            base = chunk_ids * cfg.chunk + r.astype(jnp.int32) * lc
-            gkw = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
-                       quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                       impl=impl)
-            lse = None
-            if cfg.loss == "bce":
-                scale = jnp.float32(1.0 / B)
-                # gather-mode loss needs the (pre-update) local logits:
-                # the single launch emits them alongside the update
-                want_z = cfg.compute_loss and ce_comm == "gather"
-                out = ops.fused_head_step(
-                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
-                    comp=comp, mode="bce", cache_z=want_z,
-                    compute_loss=kernel_loss, **gkw)
-                loss_raw = out.loss
-                if want_z:
-                    z3 = jnp.moveaxis(
-                        out.z.reshape(B, cfg.num_chunks, lc), 1, 0)
-
-                    def loss_body(acc, inp):
-                        zl, cidx = inp
-                        zf = jax.lax.all_gather(zl, axis, axis=1,
-                                                tiled=True)
-                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk,
-                                              cfg.chunk)
-                        return acc + L.bce_chunk_loss(
-                            zf, y, mask=_valid_cols(cfg, cidx)[None, :]), \
-                            None
-
-                    loss_raw, _ = jax.lax.scan(
-                        loss_body, jnp.float32(0.0), (z3, chunk_ids))
-            else:
-                n_tok = jnp.maximum((tgt >= 0).sum(), 1
-                                    ).astype(jnp.float32)
-                scale = 1.0 / n_tok
-                loss_pre = jnp.float32(0.0)
-                if ce_comm == "gather":
-                    # launch 1: all local logits; LSE + exact loss on the
-                    # per-chunk gathered rows, op-for-op the single-device
-                    # sequence (the bit-parity contract)
-                    zflat = ops.fused_head_logits(
-                        x16, w, seeds_d, quantize_x=cfg.qx,
-                        drop_rate=cfg.drop_rate, impl=impl)
-                    z3 = jnp.moveaxis(
-                        zflat.reshape(B, cfg.num_chunks, lc), 1, 0)
-
-                    def lse_body(carry, inp):
-                        zl, cidx = inp
-                        m, s, lraw = carry
-                        zf = jax.lax.all_gather(zl, axis, axis=1,
-                                                tiled=True)
-                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
-                        if cfg.compute_loss:
-                            lraw = lraw + L.ce_target_logit_chunk(
-                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
-                        return (m, s, lraw), None
-
-                    (m, s, loss_pre), _ = jax.lax.scan(
-                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
-                        (z3, chunk_ids))
-                    lse = L.lse_finalize(m, s)
-                else:
-                    # launch 1: in-kernel local streaming (max, Σexp),
-                    # then the O(B) pmax/psum normalizer collective
-                    cache = _want_cache_z(
-                        cfg, B * (cfg.padded_labels // n) * 2)
-                    st = ops.fused_head_lse(
-                        x16, w, seeds_d, base, num_labels=cfg.num_labels,
-                        quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                        cache_z=cache, impl=impl)
-                    m_g = jax.lax.pmax(st.m, axis)
-                    s_g = jax.lax.psum(st.s * jnp.exp(st.m - m_g), axis)
-                    lse = L.lse_finalize(m_g, s_g)
-                    zflat = st.z
-                # launch 2: the whole-head update against the global LSE
-                out = ops.fused_head_step(
-                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
-                    lse=lse, z=zflat, comp=comp, mode="ce_update",
-                    cache_z=zflat is not None, compute_loss=kernel_loss,
-                    **gkw)
-                loss_raw = loss_pre + out.loss
-            xg_loc = out.xg
-            w_k = out.w if kahan else w[:0]
-            w_s = w[:0] if kahan else out.w
-            comp_new = out.comp
+import sys
+import types
+
+from repro.head import plan as _planmod
+from repro.head.config import (_WEIGHT_DTYPES, ELMOHeadConfig,  # noqa: F401
+                               HeadHparams)
+from repro.head.convert import convert_head, posthoc_refine     # noqa: F401
+from repro.head.plan import (_grid_ok, _grid_serving_ok,        # noqa: F401
+                             _impl_split, _target_slots, _want_cache_z,
+                             HeadPlan, resolve_plan)
+from repro.head.serving import (_eval_seeds, _topk_materialized,  # noqa: F401
+                                _topk_scan, head_logits,
+                                head_logits_sharded, head_topk,
+                                head_topk_sharded, precision_at_k)
+from repro.head.state import (HeadState, _resolve_ctx, init_head,  # noqa: F401
+                              init_xg_err)
+from repro.head.train import (_chunk_grad, _chunk_logits,       # noqa: F401
+                              _chunk_seed, _finalize_step, _grid_seeds,
+                              _masked_z, _scan_chunks, _valid_cols,
+                              head_train_step)
+from repro.head.train_sharded import head_train_step_sharded    # noqa: F401
+
+
+class _DeprecatedShim(types.ModuleType):
+    """Forward the mutable budget knobs to their new home so legacy
+    monkeypatching (``elmo_head._CACHE_Z_BYTES = …``) keeps steering the
+    one true policy in ``repro.head.plan``."""
+
+    _FORWARDED = ("_CACHE_Z_BYTES", "_TOPK_Z_BYTES")
+
+    def __getattr__(self, name):        # only reached for missing attrs
+        if name in self._FORWARDED:
+            return getattr(_planmod, name)
+        raise AttributeError(
+            f"module {self.__name__!r} has no attribute {name!r}")
+
+    def __setattr__(self, name, value):
+        if name in self._FORWARDED:
+            setattr(_planmod, name, value)
         else:
-            # ---- legacy per-chunk scan branch (fused_chunk_step per chunk) ----
-            loss_pre = jnp.float32(0.0)
-            if cfg.loss == "bce":
-                scale = jnp.float32(1.0 / B)
-                lse, zs = None, None
-            else:
-                n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
-                scale = 1.0 / n_tok
-                cache = _want_cache_z(cfg,
-                                      B * (cfg.padded_labels // n) * 2)
-
-                if ce_comm == "gather":
-                    # pass 1: full-width streaming LSE on gathered chunk logits
-                    # (identical op sequence to the single-device pass — the
-                    # source of the bit-parity guarantee); the CE target-logit
-                    # sum rides along so the loss is exact too
-                    def lse_body(carry, inp):
-                        wc, cidx = inp
-                        m, s, lraw = carry
-                        zl = _chunk_logits(cfg, wc, x16,
-                                           _chunk_seed(seed_sh, cidx, 0), impl)
-                        zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
-                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
-                        if cfg.compute_loss:
-                            lraw = lraw + L.ce_target_logit_chunk(
-                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
-                        return (m, s, lraw), (zl if cache else None)
-
-                    (m, s, loss_pre), zs = jax.lax.scan(
-                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
-                        (w, chunk_ids))
-                else:
-                    # pass 1 (stats): local (max, Σexp) over this shard's label
-                    # windows, then pmax + one rescaled psum — O(B) comm
-                    def lse_body(carry, inp):
-                        wc, cidx = inp
-                        m, s = carry
-                        zl = _chunk_logits(cfg, wc, x16,
-                                           _chunk_seed(seed_sh, cidx, 0), impl)
-                        validl = (c0_of(cidx) + jnp.arange(lc)) < cfg.num_labels
-                        zm = jnp.where(validl[None, :], zl.astype(jnp.float32),
-                                       L.NEG_INF)
-                        return L.lse_update(m, s, zm), (zl if cache else None)
-
-                    (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
-                                              (w, chunk_ids))
-                    m_g = jax.lax.pmax(m, axis)
-                    s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
-                    m, s = m_g, s_g
-                lse = L.lse_finalize(m, s)
-
-            def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
-                if cfg.loss == "bce" and ce_comm == "gather":
-                    z_c = _chunk_logits(cfg, wc, x16,
-                                        _chunk_seed(seed_sh, cidx, 0), impl)
-                    if cfg.compute_loss:
-                        zf = jax.lax.all_gather(z_c, axis, axis=1, tiled=True)
-                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
-                        loss_acc = loss_acc + L.bce_chunk_loss(
-                            zf, y, mask=_valid_cols(cfg, cidx)[None, :])
-                out = ops.fused_chunk_step(
-                    x16, wc, tgt, xg, lr_, wd_, scale, c0_of(cidx),
-                    _chunk_seed(seed_sh, cidx, 0), _chunk_seed(seed_sh, cidx, 1),
-                    lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
-                    num_labels=cfg.num_labels, use_sr=cfg.use_sr,
-                    quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                    compute_loss=kernel_loss, impl=impl)
-                return out.xg, loss_acc + out.loss, out.w, out.comp
-
-            carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
-            carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
-                                                     zs, carry, chunk_step)
-            xg_loc, loss_raw = carry
-
-        if ce_comm == "stats" and cfg.compute_loss:
-            loss_raw = jax.lax.psum(loss_raw, axis)
-
-        # ---- cross-shard x̄ reduction (optionally E5M2 on the wire) ----
-        err_new = err
-        if compress_xg:
-            from repro.dist import compression as C
-            if err is not None:
-                cpr, e = C.compress_with_feedback(xg_loc, err[0])
-                err_new = e[None]
-            else:
-                cpr = C.compress(xg_loc)
-            payloads = jax.lax.all_gather(cpr.payload, axis)   # (n, B·D) e5m2
-            scales = jax.lax.all_gather(cpr.scale, axis)       # (n,)
-            xg32 = (payloads.astype(jnp.float32) * scales[:, None]).sum(0)
-            xg_comb = xg32.reshape(B, cfg.d_model).astype(jnp.bfloat16)
-        else:
-            xg_comb = jax.lax.psum(xg_loc.astype(jnp.float32), axis
-                                   ).astype(jnp.bfloat16)
-
-        st_new, xg_full, metrics = _finalize_step(
-            cfg, (xg_comb, loss_raw), w_k, w_s, comp_new, tgt, lse, scale, B)
-
-        if batch_axes:   # hand back only this rank's batch rows
-            bidx = jnp.int32(0)
-            for a in batch_axes:
-                bidx = bidx * mesh.shape[a] + jax.lax.axis_index(a)
-            xg_out = jax.lax.dynamic_slice_in_dim(xg_full, bidx * Bl, Bl, 0)
-        else:
-            xg_out = xg_full
-
-        outs = [st_new.w]
-        if kahan:
-            outs.append(st_new.comp)
-        outs += [xg_out, metrics["loss"], metrics["xgrad_norm"]]
-        if has_err:
-            outs.append(err_new)
-        return tuple(outs)
-
-    wspec = PS(None, axis, None)
-    tgt_spec = PS(b0, None) if targets.ndim == 2 else PS(b0)
-    operands = [state.w] + ([state.comp] if kahan else []) + [
-        x, targets, jnp.asarray(lr, jnp.float32),
-        jnp.asarray(wd, jnp.float32), jnp.asarray(seed).astype(jnp.uint32)]
-    in_specs = [wspec] + ([wspec] if kahan else []) + [
-        PS(b0, None), tgt_spec, PS(), PS(), PS()]
-    out_specs = [wspec] + ([wspec] if kahan else []) + [
-        PS(b0, None), PS(), PS()]
-    if has_err:
-        operands.append(xg_err)
-        in_specs.append(PS(axis, None, None))
-        out_specs.append(PS(axis, None, None))
-
-    outs = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
-                      out_specs=tuple(out_specs), check_vma=False)(*operands)
-    it = iter(outs)
-    w_new = next(it)
-    comp_new = next(it) if kahan else None
-    xg, loss, xnorm = next(it), next(it), next(it)
-    metrics = {"loss": loss, "xgrad_norm": xnorm}
-    ret = (HeadState(w_new, comp_new), xg, metrics)
-    return ret + ((next(it),) if has_err else ())
+            super().__setattr__(name, value)
 
 
-# ---------------------------------------------------------------------------
-# inference
-# ---------------------------------------------------------------------------
-
-
-def _grid_serving_ok(cfg: ELMOHeadConfig, batch: int) -> Tuple[bool, str]:
-    """(use the single-launch logits grid kernel?, inner impl) for the
-    serving paths — gated on the logits-only VMEM model (the serving grid
-    allocates none of the train step's resident accumulators)."""
-    path, inner = _impl_split(cfg.impl)
-    rimpl = ops.resolve_impl(inner)
-    ok = (path == "grid" and rimpl in ("kernel", "interpret")
-          and (rimpl != "kernel" or _tuning.head_logits_viable(
-              batch, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize)))
-    return ok, inner
-
-
-def _eval_seeds(cfg: ELMOHeadConfig) -> jax.Array:
-    """The chunk-scan serving paths draw every chunk's DropConnect mask
-    from the constant seed 0; the grid kernel reproduces that exactly."""
-    return jnp.zeros((cfg.num_chunks,), jnp.uint32)
-
-
-def head_logits(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array
-                ) -> jax.Array:
-    """Full (B, L) logits — O(B·L) memory; eval/serve at modest B only.
-
-    On the grid path this is ONE Pallas launch over every label block
-    (``kernels/fused_head.fused_head_logits``) instead of one per chunk;
-    the per-column op sequence is unchanged, so values are bit-equal."""
-    x = x.astype(jnp.bfloat16)
-    grid, inner = _grid_serving_ok(cfg, x.shape[0])
-    if grid:
-        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
-                                  quantize_x=cfg.qx,
-                                  drop_rate=cfg.drop_rate, impl=inner)
-        return z[:, :cfg.num_labels]
-
-    def body(_, inp):
-        wc, cidx = inp
-        z = _chunk_logits(cfg, wc, x, jnp.uint32(0))  # no dropout at eval
-        return None, z
-
-    _, zs = jax.lax.scan(
-        body, None, (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
-    z = jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
-    return z[:, :cfg.num_labels]
-
-
-def _topk_scan(cfg: ELMOHeadConfig, w: jax.Array, x: jax.Array, k: int,
-               width: int, c0_of) -> Tuple[jax.Array, jax.Array]:
-    """Streaming top-k over chunk slices of ``width`` label columns whose
-    global offset is ``c0_of(cidx)`` — never materializes full logits.
-
-    The single scan shared by the local and sharded serving paths: ties at
-    equal logits resolve to the earliest candidate (lowest label id), and
-    padded columns (≥ num_labels) are masked to NEG_INF so they can never
-    surface; the sharded merge's tie-break contract depends on this body
-    living in exactly one place."""
-    B = x.shape[0]
-
-    def body(carry, inp):
-        vals, idx = carry
-        wc, cidx = inp
-        c0 = c0_of(cidx)
-        z = _chunk_logits(cfg, wc, x, jnp.uint32(0))  # no dropout at eval
-        valid = (c0 + jnp.arange(width)) < cfg.num_labels
-        z = jnp.where(valid[None, :], z.astype(jnp.float32), L.NEG_INF)
-        cand = jnp.concatenate([vals, z], axis=1)
-        cand_idx = jnp.concatenate(
-            [idx, jnp.broadcast_to(c0 + jnp.arange(width), (B, width))],
-            axis=1)
-        v, local = jax.lax.top_k(cand, k)
-        return (v, jnp.take_along_axis(cand_idx, local, axis=1)), None
-
-    init = (jnp.full((B, k), L.NEG_INF, jnp.float32),
-            jnp.zeros((B, k), jnp.int32))
-    (vals, idx), _ = jax.lax.scan(
-        body, init, (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
-    return vals, idx
-
-
-def _topk_materialized(z: jax.Array, col_ids: jax.Array, num_labels: int,
-                       k: int) -> Tuple[jax.Array, jax.Array]:
-    """Top-k over single-launch logits, reproducing ``_topk_scan``'s
-    tie-break contract exactly: ``col_ids`` must be in the scan's visit
-    order (ascending label id), padded ids (≥ num_labels) are masked to
-    NEG_INF, and k NEG_INF sentinel candidates with id 0 — the scan's
-    initial carry — precede the label columns, so overflow slots surface
-    (NEG_INF, 0) and ties at equal logits resolve to the earliest (lowest
-    label id) candidate; ``lax.top_k`` is stable, which seals the match."""
-    B, W = z.shape
-    zm = jnp.where((col_ids < num_labels)[None, :], z.astype(jnp.float32),
-                   L.NEG_INF)
-    cand = jnp.concatenate(
-        [jnp.full((B, k), L.NEG_INF, jnp.float32), zm], axis=1)
-    cand_ids = jnp.concatenate(
-        [jnp.zeros((B, k), jnp.int32), jnp.broadcast_to(col_ids, (B, W))],
-        axis=1)
-    vals, local = jax.lax.top_k(cand, k)
-    return vals, jnp.take_along_axis(cand_ids, local, axis=1)
-
-
-# serving z-materialization budget for the single-launch top-k fast path —
-# its own knob (initialized to the training z-cache default; retuning one
-# at runtime deliberately does not move the other): past it, streaming wins
-_TOPK_Z_BYTES = 32 * 2 ** 20
-
-
-def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
-              ) -> Tuple[jax.Array, jax.Array]:
-    """Streaming top-k over chunks — never materializes full logits.
-
-    On the grid path, heads whose full logits fit ``_TOPK_Z_BYTES`` use
-    ONE logits launch + one global ``top_k`` (bit-identical values *and*
-    ids — see ``_topk_materialized``); larger heads keep the per-chunk
-    streaming scan."""
-    x = x.astype(jnp.bfloat16)
-    grid, inner = _grid_serving_ok(cfg, x.shape[0])
-    if grid and x.shape[0] * cfg.padded_labels * 2 <= _TOPK_Z_BYTES:
-        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
-                                  quantize_x=cfg.qx,
-                                  drop_rate=cfg.drop_rate, impl=inner)
-        return _topk_materialized(z, jnp.arange(cfg.padded_labels),
-                                  cfg.num_labels, k)
-    return _topk_scan(cfg, state.w, x, k, cfg.chunk,
-                      lambda cidx: cidx * cfg.chunk)
-
-
-def head_logits_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                        ctx=None) -> jax.Array:
-    """``head_logits`` with W label-sharded over the mesh's model axis.
-
-    Each rank computes its (B, C·chunk/n) logit columns; one BF16
-    ``all_gather`` per chunk restores the global column order — the op
-    sequence per column matches ``head_logits``, so values are bit-equal.
-    Falls back to the local path when no mesh is active."""
-    from repro.dist.compat import shard_map as _shard_map
-
-    ctx, n = _resolve_ctx(ctx)
-    if n == 1 or cfg.chunk % n != 0:
-        return head_logits(cfg, state, x)
-    axis = ctx.model_axis
-    x = x.astype(jnp.bfloat16)
-    grid, inner = _grid_serving_ok(cfg, x.shape[0])
-    lc = cfg.chunk // n
-
-    def body(w, x):
-        B = x.shape[0]
-        if grid:
-            # one launch for every local label block, then one chunk-tiled
-            # gather — same per-column values as the per-chunk scan
-            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
-                                       quantize_x=cfg.qx,
-                                       drop_rate=cfg.drop_rate, impl=inner)
-            z3 = jnp.moveaxis(zl.reshape(B, cfg.num_chunks, lc), 1, 0)
-            zs = jax.lax.all_gather(z3, axis, axis=2, tiled=True)
-        else:
-            def scan_body(_, inp):
-                wc, cidx = inp
-                zc = _chunk_logits(cfg, wc, x, jnp.uint32(0))
-                return None, jax.lax.all_gather(zc, axis, axis=1, tiled=True)
-
-            _, zs = jax.lax.scan(
-                scan_body, None,
-                (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
-        return jnp.moveaxis(zs, 0, 1).reshape(B, cfg.padded_labels)
-
-    z = _shard_map(body, mesh=ctx.mesh,
-                   in_specs=(PS(None, axis, None), PS()),
-                   out_specs=PS(), check_vma=False)(state.w, x)
-    return z[:, :cfg.num_labels]
-
-
-def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                      k: int, ctx=None) -> Tuple[jax.Array, jax.Array]:
-    """``head_topk`` with W label-sharded: local streaming top-k per rank,
-    gather of the n·k candidates, global re-rank (DESIGN.md §6).
-
-    Comm is O(B·k·n) instead of O(B·L); padded label columns are masked on
-    the *local* column window so they can never surface, and ids are global.
-    Falls back to the local path when no mesh is active."""
-    from repro.dist.compat import shard_map as _shard_map
-
-    ctx, n = _resolve_ctx(ctx)
-    if n == 1 or cfg.chunk % n != 0:
-        return head_topk(cfg, state, x, k)
-    axis = ctx.model_axis
-    lc = cfg.chunk // n
-    x = x.astype(jnp.bfloat16)
-    grid, inner = _grid_serving_ok(cfg, x.shape[0])
-    grid = grid and x.shape[0] * (cfg.padded_labels // n) * 2 \
-        <= _TOPK_Z_BYTES
-
-    def body(w, x):
-        r = jax.lax.axis_index(axis).astype(jnp.int32)
-        if grid:
-            # local candidates from one logits launch; the local column
-            # visit order (chunk-major, then row) is ascending global id
-            # for a fixed rank, so _topk_materialized's tie-break matches
-            # the streaming scan's
-            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
-                                       quantize_x=cfg.qx,
-                                       drop_rate=cfg.drop_rate, impl=inner)
-            cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
-            col_ids = ((cids * cfg.chunk + r * lc)[:, None]
-                       + jnp.arange(lc, dtype=jnp.int32)[None, :]
-                       ).reshape(-1)
-            vals, idx = _topk_materialized(zl, col_ids, cfg.num_labels, k)
-        else:
-            vals, idx = _topk_scan(cfg, w, x, k, lc,
-                                   lambda cidx: cidx * cfg.chunk + r * lc)
-        # (n, B, k) candidates → (B, n·k) → global re-rank.  Sorting on
-        # (−value, id) reproduces head_topk's streaming tie-break (equal
-        # logits resolve to the lowest label id) so the merged ids match
-        # the single-device output exactly, not just the values.
-        vall = jax.lax.all_gather(vals, axis)
-        idxl = jax.lax.all_gather(idx, axis)
-        B = x.shape[0]
-        vall = jnp.moveaxis(vall, 0, 1).reshape(B, n * k)
-        idxl = jnp.moveaxis(idxl, 0, 1).reshape(B, n * k)
-        nv, ids = jax.lax.sort((-vall, idxl), dimension=1, num_keys=2)
-        return -nv[:, :k], ids[:, :k]
-
-    return _shard_map(body, mesh=ctx.mesh,
-                      in_specs=(PS(None, axis, None), PS()),
-                      out_specs=(PS(), PS()), check_vma=False)(state.w, x)
-
-
-def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                   label_ids: jax.Array, k: int) -> jax.Array:
-    """P@k for multi-label targets (paper's headline metric)."""
-    _, pred = head_topk(cfg, state, x, k)
-    hits = (pred[:, :, None] == label_ids[:, None, :]) \
-        & (label_ids >= 0)[:, None, :]
-    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k
-
-
-# ---------------------------------------------------------------------------
-# post-hoc classifier refinement (paper App. D.1)
-# ---------------------------------------------------------------------------
-
-
-def convert_head(state: HeadState, from_cfg: ELMOHeadConfig,
-                 to_cfg: ELMOHeadConfig) -> HeadState:
-    """Re-type the head weights (e.g. FP8 checkpoint → BF16 for refinement).
-
-    Shapes must match (same labels/chunks); the Kahan buffer is created or
-    dropped per the target config."""
-    assert from_cfg.padded_labels == to_cfg.padded_labels
-    assert from_cfg.num_chunks == to_cfg.num_chunks
-    w = state.w.astype(jnp.float32).astype(to_cfg.wdtype)
-    comp = (jnp.zeros((to_cfg.kahan_chunks, to_cfg.chunk, to_cfg.d_model),
-                      P.BF16) if to_cfg.kahan_chunks else None)
-    return HeadState(w, comp)
-
-
-def posthoc_refine(to_cfg: ELMOHeadConfig, state: HeadState,
-                   batches, steps: int, lr: float, seed: int = 0
-                   ) -> HeadState:
-    """App. D.1: fine-tune the head in higher precision on FROZEN encoder
-    features.  ``batches`` yields (x, targets) with x already encoded —
-    only head memory is resident, so this stays within the low-precision
-    run's budget (label chunks stream exactly as in training)."""
-    for i, (x, targets) in zip(range(steps), batches):
-        state, _, _ = head_train_step(to_cfg, state, x, targets,
-                                      jnp.float32(lr), jnp.float32(0.0),
-                                      jnp.uint32(seed + i))
-    return state
+sys.modules[__name__].__class__ = _DeprecatedShim

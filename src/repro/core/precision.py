@@ -235,17 +235,19 @@ def kahan_update(param: jax.Array, comp: jax.Array, update: jax.Array
         y ← v − c;  s ← s + y;  c ← (s_new − s_old) − y      (paper §3)
 
     ``param``/``comp`` are stored low-precision (BF16); arithmetic is f32.
-    Returns (new_param, new_comp) in the storage dtype of the inputs.
+    Returns (new_param, new_comp), each in its OWN input's storage dtype —
+    an FP8 parameter keeps its BF16 compensation buffer (App. D pairs
+    8-bit weights with 16-bit comp; the in-kernel Kahan paths alias the
+    BF16 comp buffer in place, so the oracle must not narrow it).
     """
-    store = param.dtype
     p32 = param.astype(F32)
     c32 = comp.astype(F32)
     y = update.astype(F32) - c32
     t32 = p32 + y
-    p_new = t32.astype(store)
+    p_new = t32.astype(param.dtype)
     # what actually landed in the parameter, minus what we meant to add
     c_new = (p_new.astype(F32) - p32) - y
-    return p_new, c_new.astype(store)
+    return p_new, c_new.astype(comp.dtype)
 
 
 # ---------------------------------------------------------------------------

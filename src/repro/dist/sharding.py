@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import elmo_head as EH
+from repro.head.state import HeadState
 
 
 def _is_speclike(x) -> bool:
@@ -122,7 +122,7 @@ def head_specs(cfg, n_model: int):
     """Vocab-parallel ELMO head: (chunks, rows, d_model) rows over model."""
     w_spec = P(None, "model", None) if n_model > 1 else P()
     comp_spec = w_spec if getattr(cfg, "head_kahan_chunks", 0) else None
-    return EH.HeadState(w=w_spec, comp=comp_spec)
+    return HeadState(w=w_spec, comp=comp_spec)
 
 
 def batch_specs(cfg, batch_axes) -> dict:

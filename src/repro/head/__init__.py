@@ -1,0 +1,212 @@
+"""``repro.head`` — the ELMO large-output-space head as one mesh-aware
+object (DESIGN.md §8).
+
+The paper's contribution is a *system* of residency/precision decisions:
+chunked low-precision training whose viability depends on Kahan-vs-SR,
+z-cache budgets, grid block sizes and label sharding.  This package makes
+those decisions the product:
+
+    from repro.head import ELMOHead, ELMOHeadConfig, HeadHparams
+
+    cfg = ELMOHeadConfig(num_labels=3_000_000, d_model=768,
+                         weight_dtype="e4m3")
+    head = ELMOHead(cfg, batch=128, target_slots=40)   # plan resolved HERE
+    print(head.plan.explain())                          # and inspectable
+
+    state = head.init(jax.random.PRNGKey(0))
+    state, x_grad, metrics = head.train_step(
+        state, x, targets, HeadHparams(lr=0.05, wd=1e-4, seed=step))
+    values, ids = head.topk(state, x, k=5)
+
+``ELMOHead`` auto-dispatches single-device vs label-sharded from the
+ambient (or explicit) ``MeshContext`` and grid/fused/unfused from a
+``HeadPlan`` resolved ONCE at construction — no ``_impl_split`` /
+``_grid_ok`` / ``_want_cache_z`` re-resolution inside traced step
+functions.  The legacy free functions (``head_train_step`` & friends)
+survive as deprecated wrappers that resolve the same plan per call, and
+``repro.core.elmo_head`` re-exports them, so the historical surface is
+bit-identical to the facade by construction.
+
+Layering (import order is strictly downward):
+
+    config.py         ELMOHeadConfig, HeadHparams, head_config_for
+    state.py          HeadState, init_head, init_xg_err
+    plan.py           HeadPlan, resolve_plan, the CI plan-stability CLI
+    train.py          single-device planned step (+ legacy wrapper)
+    train_sharded.py  label-sharded planned step (+ legacy wrapper)
+    serving.py        logits / top-k / P@k, local + sharded (+ wrappers)
+    convert.py        checkpoint re-typing, post-hoc refinement
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.head import plan as plan_mod
+from repro.head import serving as _serving
+from repro.head import train as _train
+from repro.head import train_sharded as _train_sharded
+from repro.head.config import (ELMOHeadConfig, HeadHparams,
+                               default_target_slots, head_config_for)
+from repro.head.convert import convert_head, posthoc_refine
+from repro.head.plan import HeadPlan, resolve_plan
+from repro.head.serving import (head_logits, head_logits_sharded, head_topk,
+                                head_topk_sharded, precision_at_k)
+from repro.head.state import HeadState, init_head, init_xg_err
+from repro.head.train import head_train_step
+from repro.head.train_sharded import head_train_step_sharded
+
+__all__ = [
+    "ELMOHead", "ELMOHeadConfig", "HeadHparams", "HeadPlan", "HeadState",
+    "convert_head", "default_target_slots", "get_head", "head_config_for",
+    "head_logits",
+    "head_logits_sharded", "head_topk", "head_topk_sharded",
+    "head_train_step", "head_train_step_sharded", "init_head",
+    "init_xg_err", "posthoc_refine", "precision_at_k", "resolve_plan",
+]
+
+_AMBIENT = object()   # sentinel: "capture the ambient mesh at construction"
+
+
+class ELMOHead:
+    """The mesh-aware facade over the ELMO head (DESIGN.md §8).
+
+    Construction resolves the ``HeadPlan`` exactly once for the declared
+    ``batch`` / ``target_slots`` / mesh; every method then executes the
+    planned path with zero per-call resolution.  Calls at *other* shapes
+    re-plan through the memoized resolver (still trace-time Python, never
+    traced ops) — declare the shapes you train at for strict
+    once-per-construction behavior.
+
+    ``ctx`` defaults to the ambient ``dist.meshctx`` at construction time;
+    pass an explicit ``MeshContext`` (or ``None`` for single-device
+    semantics under an active mesh) to pin it.
+    """
+
+    def __init__(self, cfg: ELMOHeadConfig, *, batch: int,
+                 target_slots: Optional[int] = None, ctx=_AMBIENT,
+                 ce_comm: str = "gather", compress_xg: bool = False):
+        if ctx is _AMBIENT:
+            from repro.dist import meshctx
+            ctx = meshctx.get()
+        self.cfg = cfg
+        self.ctx = ctx
+        self.ce_comm = ce_comm
+        self.compress_xg = compress_xg
+        if target_slots is None:
+            target_slots = 1
+        self._model_size = 1 if ctx is None else ctx.model_size
+        self._model_axis = None if ctx is None else ctx.model_axis
+        self._plans: dict = {}
+        self.plan: HeadPlan = self._resolve(batch, target_slots)
+        self._plans[self._plan_key(batch, target_slots)] = self.plan
+
+    def _resolve(self, batch: int, target_slots: int) -> HeadPlan:
+        return plan_mod.resolve_plan(
+            self.cfg, batch=batch, target_slots=target_slots,
+            model_size=self._model_size, model_axis=self._model_axis,
+            ce_comm=self.ce_comm)
+
+    def _plan_key(self, batch: int, target_slots: int):
+        # the mutable budgets and the backend are part of the key so an
+        # instance can never serve a stale plan after they move (the same
+        # invariant resolve_plan/get_head keep via their memo keys)
+        return (batch, target_slots, plan_mod._CACHE_Z_BYTES,
+                plan_mod._TOPK_Z_BYTES, jax.default_backend())
+
+    def _plan_for(self, batch: int, target_slots: int = 1) -> HeadPlan:
+        key = self._plan_key(batch, target_slots)
+        p = self._plans.get(key)
+        if p is None:   # undeclared shape (or moved knobs): re-plan once
+            p = self._plans[key] = self._resolve(batch, target_slots)
+        return p
+
+    # ---- state ----
+
+    def init(self, key: jax.Array, scale: float | None = None) -> HeadState:
+        return init_head(key, self.cfg, scale)
+
+    def init_xg_err(self, batch: int) -> jax.Array:
+        return init_xg_err(self.cfg, batch, self.ctx)
+
+    # ---- training ----
+
+    def train_step(self, state: HeadState, x: jax.Array, targets: jax.Array,
+                   hp: HeadHparams, *, xg_err=None):
+        """One fused fwd/loss-skip-grad/update pass over all label chunks;
+        label-sharded over the mesh's model axis when the plan says so.
+        Returns (new_state, x_grad, metrics)[, xg_err']."""
+        plan = self._plan_for(x.shape[0], plan_mod._target_slots(targets))
+        if plan.sharded:
+            return _train_sharded.train_step_sharded_planned(
+                plan, self.cfg, self.ctx, state, x, targets, hp.lr, hp.wd,
+                hp.seed, ce_comm=self.ce_comm, compress_xg=self.compress_xg,
+                xg_err=xg_err)
+        out = _train.train_step_planned(plan, self.cfg, state, x, targets,
+                                        hp.lr, hp.wd, hp.seed)
+        return out if xg_err is None else out + (xg_err,)
+
+    # ---- serving ----
+
+    def logits(self, state: HeadState, x: jax.Array) -> jax.Array:
+        plan = self._plan_for(x.shape[0])
+        if plan.sharded:
+            return _serving.logits_sharded_planned(plan, self.cfg, self.ctx,
+                                                   state, x)
+        return _serving.logits_planned(plan, self.cfg, state, x)
+
+    def topk(self, state: HeadState, x: jax.Array, k: int
+             ) -> Tuple[jax.Array, jax.Array]:
+        plan = self._plan_for(x.shape[0])
+        if plan.sharded:
+            return _serving.topk_sharded_planned(plan, self.cfg, self.ctx,
+                                                 state, x, k)
+        return _serving.topk_planned(plan, self.cfg, state, x, k)
+
+    def precision_at_k(self, state: HeadState, x: jax.Array,
+                       label_ids: jax.Array, k: int) -> jax.Array:
+        plan = self._plan_for(x.shape[0])
+        return _serving.precision_at_k_planned(plan, self.cfg, self.ctx,
+                                               state, x, label_ids, k)
+
+    # ---- conversion ----
+
+    def convert_from(self, state: HeadState,
+                     from_cfg: ELMOHeadConfig) -> HeadState:
+        """Re-type ``state`` (trained under ``from_cfg``) to this head's
+        precision (e.g. FP8 checkpoint → BF16 for post-hoc refinement)."""
+        return convert_head(state, from_cfg, self.cfg)
+
+    def posthoc_refine(self, state: HeadState, batches, steps: int,
+                       lr: float, seed: int = 0) -> HeadState:
+        return posthoc_refine(self.cfg, state, batches, steps, lr, seed)
+
+    def __repr__(self) -> str:
+        return (f"ELMOHead({self.cfg.num_labels}×{self.cfg.d_model}, "
+                f"{self.cfg.weight_dtype}, {self.cfg.loss}, "
+                f"path={self.plan.path}, model_size={self.plan.model_size})")
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_head(cfg, batch, target_slots, ctx, ce_comm, compress_xg,
+                 _cache_budget, _topk_budget, _backend) -> ELMOHead:
+    return ELMOHead(cfg, batch=batch, target_slots=target_slots, ctx=ctx,
+                    ce_comm=ce_comm, compress_xg=compress_xg)
+
+
+def get_head(cfg: ELMOHeadConfig, *, batch: int, target_slots: int = 1,
+             ctx=_AMBIENT, ce_comm: str = "gather",
+             compress_xg: bool = False) -> ELMOHead:
+    """Memoized facade factory: one ``ELMOHead`` (and so one plan
+    resolution) per distinct (config, shape, mesh, comm) — what hot call
+    sites like ``launch.steps`` use so repeated traces never re-plan.
+    The cache key includes the mutable byte budgets and the backend, so a
+    cached head can never carry a stale plan."""
+    if ctx is _AMBIENT:
+        from repro.dist import meshctx
+        ctx = meshctx.get()
+    return _cached_head(cfg, batch, target_slots, ctx, ce_comm, compress_xg,
+                        plan_mod._CACHE_Z_BYTES, plan_mod._TOPK_Z_BYTES,
+                        jax.default_backend())

@@ -1,0 +1,118 @@
+"""Head configuration types: ``ELMOHeadConfig`` and ``HeadHparams``.
+
+``ELMOHeadConfig`` is the *statement of intent* — label geometry, storage
+precision, loss, residency knobs.  How that intent executes on a given
+(batch, mesh, backend) is decided exactly once by ``repro.head.plan``
+(DESIGN.md §8); nothing in this module inspects the runtime.
+
+``HeadHparams`` replaces the historical ``(lr, wd, seed)`` positional
+threading through every step function with one typed, jit-transparent
+pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+
+from repro.core import precision as P
+
+_WEIGHT_DTYPES = {"bf16": P.BF16, "e4m3": P.E4M3, "e5m2": P.E5M2,
+                  "f32": P.F32}
+
+
+@dataclasses.dataclass(frozen=True)
+class ELMOHeadConfig:
+    num_labels: int
+    d_model: int
+    num_chunks: int = 8
+    weight_dtype: str = "bf16"         # "bf16" | "e4m3" | "e5m2" | "f32"
+    loss: str = "bce"                  # "bce" (XMC) | "softmax_ce" (LM)
+    use_sr: bool = True                # stochastic rounding in the update
+    kahan_chunks: int = 0              # leading chunks w/ Kahan comp (App. D)
+    drop_rate: float = 0.0             # in-kernel DropConnect (App. H)
+    quantize_x: Optional[bool] = None  # default: True iff weight is e4m3
+    compute_loss: bool = True          # loss value is optional (loss-skip)
+    # impl selects "<path>[_<inner>]" where path is one of
+    #   grid    — whole-head grid megakernel, ONE launch per step
+    #             (kernels/fused_head.py, DESIGN.md §7) — the default
+    #   fused   — PR-1 per-chunk scan of the single-launch chunk kernel
+    #             (kernels/fused_chunk.py) — the grid path's bit-parity
+    #             oracle
+    #   unfused — legacy 3-kernel composition, kept for A/B
+    # and inner is auto|kernel|interpret|xla.  Bare inner names ("auto",
+    # "xla", "interpret", …) select the grid path with that inner impl;
+    # a grid path whose inner resolves to "xla" runs the fused scan (the
+    # two are the same algorithm — the grid kernel has no jnp oracle of
+    # its own).  ``repro.head.plan.resolve_plan`` turns this string into
+    # an executed path exactly once per (config, batch, mesh, backend).
+    impl: str = "auto"
+    # softmax-CE only: reuse the LSE pre-pass logits in pass 2 ("on"/"off",
+    # or "auto" = on when the z cache fits plan._CACHE_Z_BYTES)
+    cache_z: str = "auto"
+
+    @property
+    def wdtype(self):
+        return _WEIGHT_DTYPES[self.weight_dtype]
+
+    @property
+    def qx(self) -> bool:
+        return self.weight_dtype == "e4m3" if self.quantize_x is None \
+            else self.quantize_x
+
+    # label rows per chunk are padded to a multiple of _CHUNK_ALIGN so the
+    # chunk dimension stays divisible by the mesh's model axis (vocab-
+    # parallel sharding) and by MXU tile sizes
+    _CHUNK_ALIGN = 256
+
+    @property
+    def chunk(self) -> int:
+        c = self.num_chunks
+        per = (self.num_labels + c - 1) // c
+        if self.num_labels >= self._CHUNK_ALIGN:
+            per = ((per + self._CHUNK_ALIGN - 1) // self._CHUNK_ALIGN
+                   ) * self._CHUNK_ALIGN
+        return per
+
+    @property
+    def padded_labels(self) -> int:
+        return self.chunk * self.num_chunks
+
+    def __post_init__(self):
+        assert 0 <= self.kahan_chunks <= self.num_chunks
+        assert self.loss in ("bce", "softmax_ce")
+        assert self.cache_z in ("auto", "on", "off")
+
+
+class HeadHparams(NamedTuple):
+    """Typed train-step hyperparameters (a jit-transparent pytree).
+
+    ``seed`` is the *step* seed: per-chunk / per-microbatch streams are
+    derived from it inside the step (``train._chunk_seed``,
+    ``launch.steps._micro_seed``)."""
+    lr: jax.Array | float
+    wd: jax.Array | float = 0.0
+    seed: jax.Array | int = 0
+
+
+def default_target_slots(model_cfg) -> int:
+    """The target-column count plan resolution should assume for a model:
+    the sparse multi-label width P for BCE heads, 1 for LM (CE) heads.
+    One derivation shared by the train/dryrun/bench/CLI call sites."""
+    return (model_cfg.max_labels_per_example
+            if model_cfg.head_loss == "bce" else 1)
+
+
+def head_config_for(model_cfg, impl: str = "auto") -> ELMOHeadConfig:
+    """The one ModelConfig → ELMOHeadConfig mapping (formerly re-derived at
+    every call site as ``launch.steps.make_head_cfg``)."""
+    return ELMOHeadConfig(
+        num_labels=model_cfg.head_size,
+        d_model=model_cfg.d_model,
+        num_chunks=model_cfg.head_chunks,
+        weight_dtype=model_cfg.head_weight_dtype,
+        loss=model_cfg.head_loss,
+        kahan_chunks=model_cfg.head_kahan_chunks,
+        impl=impl,
+    )

@@ -1,0 +1,37 @@
+"""Checkpoint re-typing + post-hoc classifier refinement (paper App. D.1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import precision as P
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState
+from repro.head.train import head_train_step
+
+
+def convert_head(state: HeadState, from_cfg: ELMOHeadConfig,
+                 to_cfg: ELMOHeadConfig) -> HeadState:
+    """Re-type the head weights (e.g. FP8 checkpoint → BF16 for refinement).
+
+    Shapes must match (same labels/chunks); the Kahan buffer is created or
+    dropped per the target config."""
+    assert from_cfg.padded_labels == to_cfg.padded_labels
+    assert from_cfg.num_chunks == to_cfg.num_chunks
+    w = state.w.astype(jnp.float32).astype(to_cfg.wdtype)
+    comp = (jnp.zeros((to_cfg.kahan_chunks, to_cfg.chunk, to_cfg.d_model),
+                      P.BF16) if to_cfg.kahan_chunks else None)
+    return HeadState(w, comp)
+
+
+def posthoc_refine(to_cfg: ELMOHeadConfig, state: HeadState,
+                   batches, steps: int, lr: float, seed: int = 0
+                   ) -> HeadState:
+    """App. D.1: fine-tune the head in higher precision on FROZEN encoder
+    features.  ``batches`` yields (x, targets) with x already encoded —
+    only head memory is resident, so this stays within the low-precision
+    run's budget (label chunks stream exactly as in training)."""
+    for i, (x, targets) in zip(range(steps), batches):
+        state, _, _ = head_train_step(to_cfg, state, x, targets,
+                                      jnp.float32(lr), jnp.float32(0.0),
+                                      jnp.uint32(seed + i))
+    return state

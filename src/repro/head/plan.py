@@ -1,0 +1,401 @@
+"""``HeadPlan``: every residency/precision/dispatch decision, resolved ONCE.
+
+ELMO's viability rests on a web of static decisions — which execution path
+(grid megakernel / fused chunk scan / legacy unfused), which inner kernel
+impl, whether the CE z-cache fits, which label tile the launch will use,
+how the label axis shards over the mesh.  Historically each free function
+in ``core/elmo_head.py`` re-derived them ad hoc at every call
+(``_impl_split`` / ``_grid_ok`` / ``_want_cache_z`` per trace); this module
+makes the decision a first-class, inspectable value:
+
+    plan = resolve_plan(cfg, batch=128, target_slots=40, model_size=4)
+    print(plan.explain())        # path, blocks, bytes, why any fallback
+
+``ELMOHead`` (the facade) resolves its plan at construction and hands it
+to the planned step functions in ``train`` / ``train_sharded`` /
+``serving`` — which contain *no* resolution logic of their own.  The
+legacy free functions resolve a plan per call through the same (memoized)
+resolver, so facade and legacy paths are bit-identical by construction.
+
+Resolution is memoized on every input that can change the answer —
+including the mutable byte budgets below and the JAX backend — so a plan
+can never go stale, and ``_RESOLVE_CALLS`` counts resolver entries so
+tests can assert construction-time-only resolution (DESIGN.md §8).
+
+CLI (the CI ``plan-stability`` gate)::
+
+    PYTHONPATH=src python -m repro.head.plan --arch xmc-bert-3m --explain \
+        --expect-path grid,fused
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import memory_model as MM
+from repro.head.config import ELMOHeadConfig
+from repro.kernels import ops
+from repro.kernels import tuning as _tuning
+
+# z-cache budget for the CE cached-logits fast path (B·padded_labels bf16);
+# past this, recomputing pass-2 logits beats holding them (paper §4.2: the
+# whole point of chunking is not materializing (B, L))
+_CACHE_Z_BYTES = 32 * 2 ** 20
+
+# serving z-materialization budget for the single-launch top-k fast path —
+# its own knob (initialized to the training z-cache default; retuning one
+# at runtime deliberately does not move the other): past it, streaming wins
+_TOPK_Z_BYTES = 32 * 2 ** 20
+
+# entries into resolve_plan() — the facade contract is that this stops
+# moving once an ELMOHead is constructed and used at its declared shapes
+_RESOLVE_CALLS = 0
+
+
+def _want_cache_z(cfg: ELMOHeadConfig, z_bytes: int,
+                  budget: int | None = None) -> bool:
+    """The ONE CE z-cache policy shared by the grid, fused-scan and
+    sharded paths: explicit on/off wins; "auto" caches iff this path's
+    z footprint (``z_bytes``, local to the device) fits the budget."""
+    budget = _CACHE_Z_BYTES if budget is None else budget
+    return cfg.cache_z == "on" or (cfg.cache_z == "auto"
+                                   and z_bytes <= budget)
+
+
+def _impl_split(impl: str) -> Tuple[str, str]:
+    """cfg.impl → (path, inner kernel impl).
+
+    path ∈ {"grid", "fused", "unfused"} (see ``ELMOHeadConfig.impl``).
+    Bare inner names keep their historical meaning of "the default fast
+    path with this inner impl" — which is now the grid path."""
+    for path in ("grid", "fused", "unfused"):
+        if impl == path or impl.startswith(path + "_") \
+                or impl.startswith(path + ":"):
+            rest = impl[len(path):].lstrip("_:")
+            return path, (rest or "auto")
+    return "grid", impl
+
+
+def _grid_ok(cfg: ELMOHeadConfig, batch: int, rimpl: str,
+             p_slots: int = 1) -> Tuple[bool, str]:
+    """Whether the whole-head grid megakernel can run this step, and (for
+    ``HeadPlan.fallback_reason``) why not.
+
+    The grid kernel has no jnp oracle (inner "xla" routes to the fused
+    scan, which *is* the oracle), the mixed Kahan hybrid keeps the
+    per-chunk scan (a homogeneous update rule lets one grid cover every
+    block), and the compiled path must fit the §7 VMEM residency model —
+    gated with the same ``p_slots`` (resident target columns) the launch
+    will size the kernel with, so gate and tile chooser agree."""
+    if rimpl not in ("kernel", "interpret"):
+        return False, (f"inner resolves to {rimpl!r} — the grid kernel has "
+                       "no jnp oracle; the fused scan is the oracle")
+    if cfg.kahan_chunks not in (0, cfg.num_chunks):
+        return False, (f"mixed Kahan hybrid ({cfg.kahan_chunks}/"
+                       f"{cfg.num_chunks} chunks) keeps the per-chunk scan")
+    if rimpl == "kernel" and not _tuning.fused_head_viable(
+            batch, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize,
+            kahan=cfg.kahan_chunks > 0, p_slots=p_slots):
+        return False, ("grid residency model exceeds VMEM at "
+                       f"B={batch} D={cfg.d_model}")
+    return True, ""
+
+
+def _target_slots(targets: jax.Array) -> int:
+    return targets.shape[-1] if targets.ndim == 2 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlan:
+    """One resolved execution plan for the ELMO head (DESIGN.md §8).
+
+    Immutable, hashable, safe to close over in jitted step functions: every
+    field is a static Python value decided at resolution time."""
+    # ---- resolution inputs (snapshot) ----
+    batch: int                 # (global) token rows the step sees
+    target_slots: int          # P of (B, P) multi-label targets, else 1
+    model_size: int            # label shards (1 = single-device semantics)
+    model_axis: Optional[str]  # mesh axis name when model_size > 1
+    ce_comm: str               # sharded CE normalizer strategy
+    backend: str               # jax.default_backend() at resolution
+    # ---- train-step decision ----
+    requested_path: str        # from cfg.impl ("grid" | "fused" | "unfused")
+    inner: str                 # raw inner impl token from cfg.impl
+    rimpl: str                 # resolved inner: kernel | interpret | xla
+    path: str                  # EXECUTED path: grid | fused | unfused
+    train_inner: str           # inner the step hands to kernels.ops (the
+    #                            sharded scan may downgrade kernel → xla)
+    cache_z: bool              # CE z-cache decision for the executed path
+    fallback_reason: str       # "" when the requested path runs
+    # ---- geometry ----
+    lc: int                    # local label rows per chunk (chunk / n)
+    block_l: int               # label tile of the executed path's launch
+    # ---- shard layout (trivial specs when model_size == 1) ----
+    w_spec: PS                 # (C, Lc, D) weights / Kahan comp
+    xg_err_spec: PS            # (n, B, D) error-feedback carry
+    # ---- byte estimates (tuning VMEM model + memory_model transients) ----
+    vmem_bytes: int            # kernel working set at block_l (0 = n/a)
+    temp_bytes: int            # predicted per-device logit/grad transients
+    # ---- serving decision (same batch) ----
+    serve_grid: bool           # single-launch logits kernel usable
+    topk_materialize: bool     # one-top_k fast path fits _TOPK_Z_BYTES
+
+    @property
+    def sharded(self) -> bool:
+        return self.model_size > 1
+
+    def launches_per_step(self) -> str:
+        if self.path != "grid":
+            return "O(num_chunks)"
+        if self.sharded:
+            return "1 (bce) / ≤2 (softmax-ce: collective between passes)"
+        return "1"
+
+    def explain(self) -> str:
+        """Human-readable resolution trace for logs and benches."""
+        mib = 2 ** 20
+        lines = [
+            f"HeadPlan: B={self.batch} P={self.target_slots} "
+            f"backend={self.backend} model_size={self.model_size}"
+            + (f" axis={self.model_axis!r} ce_comm={self.ce_comm}"
+               if self.sharded else ""),
+            f"  requested  path={self.requested_path} inner={self.inner!r} "
+            f"(resolves to {self.rimpl!r})",
+            f"  executed   path={self.path} inner={self.train_inner!r} "
+            f"launches/step={self.launches_per_step()}",
+        ]
+        if self.fallback_reason:
+            lines.append(f"  fallback   {self.fallback_reason}")
+        lines += [
+            f"  geometry   lc={self.lc} block_l={self.block_l} "
+            f"cache_z={'on' if self.cache_z else 'off'}",
+            f"  estimates  vmem≈{self.vmem_bytes / mib:.2f} MiB "
+            f"transients≈{self.temp_bytes / mib:.2f} MiB "
+            f"(budgets: cache_z {_CACHE_Z_BYTES / mib:.0f} MiB, "
+            f"topk_z {_TOPK_Z_BYTES / mib:.0f} MiB)",
+            f"  serving    grid={self.serve_grid} "
+            f"topk={'materialize' if self.topk_materialize else 'stream'}",
+            f"  sharding   w/comp={self.w_spec} xg_err={self.xg_err_spec}",
+        ]
+        return "\n".join(lines)
+
+
+def resolve_plan(cfg: ELMOHeadConfig, *, batch: int, target_slots: int = 1,
+                 model_size: int = 1, model_axis: Optional[str] = None,
+                 ce_comm: str = "gather") -> HeadPlan:
+    """Resolve every static head decision for one (config, shape, mesh).
+
+    Memoized on all inputs *plus* the mutable byte budgets and the JAX
+    backend; the un-memoized entry count is tracked in ``_RESOLVE_CALLS``
+    so tests can pin construction-time-only resolution."""
+    global _RESOLVE_CALLS
+    _RESOLVE_CALLS += 1
+    if model_size > 1 and cfg.chunk % model_size != 0:
+        # indivisible chunk: sharded entry points fall back to the
+        # single-device step — plan with single-device semantics
+        model_size, model_axis = 1, None
+    if model_size <= 1:
+        model_axis = None
+    return _resolve_cached(cfg, batch, target_slots, model_size, model_axis,
+                           ce_comm, _CACHE_Z_BYTES, _TOPK_Z_BYTES,
+                           jax.default_backend())
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
+                    cache_budget, topk_budget, backend) -> HeadPlan:
+    requested_path, inner = _impl_split(cfg.impl)
+    rimpl = ops.resolve_impl(inner)
+    wb = jnp.dtype(cfg.wdtype).itemsize
+    kahan = cfg.kahan_chunks > 0
+    lc = cfg.chunk // n
+    local_padded = cfg.padded_labels // n
+
+    grid, reason = False, ""
+    if requested_path == "grid":
+        grid, reason = _grid_ok(cfg, batch, rimpl, target_slots)
+
+    train_inner = inner
+    if n > 1:
+        # ---- label-sharded decision block (was inline in
+        # head_train_step_sharded) ----
+        z_fits = batch * local_padded * 2 <= cache_budget
+        if grid and ce_comm == "gather" and (cfg.loss == "softmax_ce"
+                                             or cfg.compute_loss):
+            if not z_fits:
+                grid = False
+                reason = ("gather-mode loss/LSE reads the local logits "
+                          "back; their footprint exceeds the z budget")
+        if not grid and rimpl == "kernel" and not _tuning.fused_chunk_viable(
+                batch, cfg.d_model, wb, kahan=kahan):
+            train_inner = "xla"   # sharded scan is megakernel-shaped;
+            #                       oracle fallback
+            reason = reason or ("fused chunk working set exceeds VMEM at "
+                                f"B={batch}")
+        if requested_path == "unfused":
+            reason = reason or ("sharded step has no unfused branch; the "
+                                "per-chunk fused scan runs instead")
+        path = "grid" if grid else "fused"
+    else:
+        if grid:
+            path = "grid"
+        else:
+            fused = requested_path != "unfused"
+            if (fused and rimpl == "kernel"
+                    and not _tuning.fused_chunk_viable(
+                        batch, cfg.d_model, wb, kahan=kahan)):
+                fused = False   # megakernel working set exceeds VMEM
+                reason = ("fused chunk working set exceeds VMEM at "
+                          f"B={batch} — unfused 3-kernel path")
+            path = "fused" if fused else "unfused"
+
+    # ---- CE z-cache decision for the executed path ----
+    cache_z = False
+    if cfg.loss == "softmax_ce" and path != "unfused":
+        if n > 1:
+            # grid/gather passes z between its two launches (no budget);
+            # grid/stats and the scan branch cache against the LOCAL width
+            if not (path == "grid" and ce_comm == "gather"):
+                cache_z = _want_cache_z(cfg, batch * local_padded * 2,
+                                        cache_budget)
+        elif path == "grid":
+            cache_z = _want_cache_z(cfg, batch * cfg.padded_labels * 2,
+                                    cache_budget)
+            if cache_z and rimpl == "kernel" and not _tuning.fused_head_viable(
+                    batch, cfg.d_model, wb, kahan=kahan, cache_z=True,
+                    lc=cfg.chunk, n_chunks=cfg.num_chunks):
+                cache_z = False   # recompute pass-2 logits in-kernel
+        else:
+            cache_z = _want_cache_z(cfg, batch * cfg.padded_labels * 2,
+                                    cache_budget)
+
+    # ---- label tile + VMEM working set of the executed path ----
+    if path == "grid":
+        if rimpl == "kernel":
+            block_l = _tuning.head_grid_block_l(
+                batch, lc, cfg.d_model, wb, kahan=kahan,
+                cache_z=cache_z and n == 1, p_slots=target_slots,
+                n_chunks=cfg.num_chunks)
+        else:
+            block_l = lc       # interpret mode keeps exact shapes
+        vmem = _tuning._head_grid_vmem(
+            batch, cfg.d_model, block_l, wb, kahan,
+            _tuning._grid_z_cols(lc, block_l, cfg.num_chunks,
+                                 cache_z and n == 1), target_slots)
+    elif path == "fused":
+        if train_inner != "xla" and rimpl == "kernel":
+            block_l = _tuning.chunk_block_l(batch, cfg.chunk, cfg.d_model,
+                                            wb, kahan=kahan,
+                                            cached_z=cache_z, n_shards=n)
+        else:
+            block_l = lc
+        vmem = (0 if rimpl == "xla" or train_inner == "xla"   # no VMEM model
+                else _tuning._chunk_vmem(batch, cfg.d_model, block_l, wb,
+                                         kahan, cache_z))
+    else:
+        block_l, vmem = lc, 0
+
+    # ---- memory_model transients (the paper-style per-device estimate) ----
+    s = MM.MemScenario(num_labels=cfg.num_labels, d_model=cfg.d_model,
+                       batch=batch, num_chunks=cfg.num_chunks,
+                       kahan_chunks=cfg.kahan_chunks)
+    comp = MM.head_components(s, cfg.weight_dtype, n_label_shards=n,
+                              grid_block_l=block_l if path == "grid"
+                              else None)
+    temp_bytes = int(comp["chunk_logits_bf16"]
+                     + comp["chunk_logit_grad_bf16"]
+                     + comp.get("grid_resident_bf16", 0.0))
+
+    # ---- serving decision (same batch) ----
+    serve_grid = (requested_path == "grid"
+                  and rimpl in ("kernel", "interpret")
+                  and (rimpl != "kernel" or _tuning.head_logits_viable(
+                      batch, cfg.d_model, wb)))
+    topk_mat = serve_grid and batch * local_padded * 2 <= topk_budget
+
+    axis_spec = axis if n > 1 else None
+    return HeadPlan(
+        batch=batch, target_slots=target_slots, model_size=n,
+        model_axis=axis, ce_comm=ce_comm, backend=backend,
+        requested_path=requested_path, inner=inner, rimpl=rimpl,
+        path=path, train_inner=train_inner, cache_z=cache_z,
+        fallback_reason=reason, lc=lc, block_l=int(block_l),
+        w_spec=PS(None, axis_spec, None),
+        xg_err_spec=PS(axis_spec, None, None),
+        vmem_bytes=int(vmem), temp_bytes=temp_bytes,
+        serve_grid=serve_grid, topk_materialize=topk_mat)
+
+
+def _grid_serving_ok(cfg: ELMOHeadConfig, batch: int) -> Tuple[bool, str]:
+    """(use the single-launch logits grid kernel?, inner impl) for the
+    serving paths — gated on the logits-only VMEM model (the serving grid
+    allocates none of the train step's resident accumulators).  Kept as a
+    thin wrapper over ``resolve_plan`` for the legacy free functions."""
+    plan = resolve_plan(cfg, batch=batch)
+    return plan.serve_grid, plan.inner
+
+
+# ---------------------------------------------------------------------------
+# CLI: the CI plan-stability gate
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    import argparse
+    import dataclasses as _dc
+
+    from repro.configs import get_config, get_smoke
+    from repro.head.config import default_target_slots, head_config_for
+
+    ap = argparse.ArgumentParser(
+        description="Resolve and print the ELMO HeadPlan for an arch")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced (CPU-runnable) config")
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--impl", default=None,
+                    help="override the head impl string (e.g. grid_interpret)")
+    ap.add_argument("--model-size", type=int, default=1,
+                    help="label shards (mesh model-axis size)")
+    ap.add_argument("--ce-comm", default="gather",
+                    choices=["gather", "stats"])
+    ap.add_argument("--explain", action="store_true")
+    ap.add_argument("--expect-path", default=None,
+                    help="comma-separated allowed executed paths; exit 1 "
+                         "on a silent fallback outside this set")
+    args = ap.parse_args(argv)
+
+    mcfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    hcfg = head_config_for(mcfg)
+    if args.impl:
+        hcfg = _dc.replace(hcfg, impl=args.impl)
+    plan = resolve_plan(hcfg, batch=args.batch,
+                        target_slots=default_target_slots(mcfg),
+                        model_size=args.model_size,
+                        model_axis="model" if args.model_size > 1 else None,
+                        ce_comm=args.ce_comm)
+    print(f"# {mcfg.name}: {hcfg.num_labels} labels × {hcfg.d_model}, "
+          f"{hcfg.num_chunks} chunks of {hcfg.chunk} "
+          f"({hcfg.weight_dtype}, {hcfg.loss}, impl={hcfg.impl!r})")
+    if args.explain:
+        print(plan.explain())
+    else:
+        print(f"path={plan.path} inner={plan.train_inner} "
+              f"block_l={plan.block_l} cache_z={plan.cache_z}")
+    if args.expect_path:
+        allowed = {p.strip() for p in args.expect_path.split(",")}
+        if plan.path not in allowed:
+            print(f"PLAN REGRESSION: executed path {plan.path!r} not in "
+                  f"{sorted(allowed)} (fallback: "
+                  f"{plan.fallback_reason or 'none'})")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

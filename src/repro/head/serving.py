@@ -1,0 +1,302 @@
+"""ELMO head inference: full logits, streaming/materialized top-k, P@k —
+single-device and label-sharded, plan-driven (DESIGN.md §6/§7/§8).
+
+The serving grid kernel (one launch for every label block) and the
+materialized-top-k fast path are *decisions*, not call-site branches: the
+``HeadPlan`` resolves them once per (config, batch, mesh) and the planned
+functions here execute without re-deriving anything.  Bit-parity contracts
+(tie-breaks, padded-id sentinels, sharded merge order) are unchanged from
+the free-function era and pinned by tests/test_fused_head.py and the
+multi-device suite.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import losses as L
+from repro.head import plan as _plan
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState, _resolve_ctx
+from repro.head.train import _chunk_logits
+from repro.kernels import ops
+
+
+def _eval_seeds(cfg: ELMOHeadConfig) -> jax.Array:
+    """The chunk-scan serving paths draw every chunk's DropConnect mask
+    from the constant seed 0; the grid kernel reproduces that exactly."""
+    return jnp.zeros((cfg.num_chunks,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# logits
+# ---------------------------------------------------------------------------
+
+
+def logits_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                   state: HeadState, x: jax.Array) -> jax.Array:
+    """Full (B, L) logits — O(B·L) memory; eval/serve at modest B only.
+
+    On the grid path this is ONE Pallas launch over every label block
+    (``kernels/fused_head.fused_head_logits``) instead of one per chunk;
+    the per-column op sequence is unchanged, so values are bit-equal."""
+    x = x.astype(jnp.bfloat16)
+    if plan.serve_grid:
+        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
+                                  quantize_x=cfg.qx,
+                                  drop_rate=cfg.drop_rate, impl=plan.inner)
+        return z[:, :cfg.num_labels]
+
+    def body(_, inp):
+        wc, cidx = inp
+        z = _chunk_logits(cfg, wc, x, jnp.uint32(0),
+                          plan.inner)  # no dropout at eval
+        return None, z
+
+    _, zs = jax.lax.scan(
+        body, None, (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+    z = jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
+    return z[:, :cfg.num_labels]
+
+
+def head_logits(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array
+                ) -> jax.Array:
+    """Deprecated free-function form of ``ELMOHead.logits``."""
+    plan = _plan.resolve_plan(cfg, batch=x.shape[0])
+    return logits_planned(plan, cfg, state, x)
+
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+
+def _topk_scan(cfg: ELMOHeadConfig, w: jax.Array, x: jax.Array, k: int,
+               width: int, c0_of, impl: str
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over chunk slices of ``width`` label columns whose
+    global offset is ``c0_of(cidx)`` — never materializes full logits.
+
+    The single scan shared by the local and sharded serving paths: ties at
+    equal logits resolve to the earliest candidate (lowest label id), and
+    padded columns (≥ num_labels) are masked to NEG_INF so they can never
+    surface; the sharded merge's tie-break contract depends on this body
+    living in exactly one place."""
+    B = x.shape[0]
+
+    def body(carry, inp):
+        vals, idx = carry
+        wc, cidx = inp
+        c0 = c0_of(cidx)
+        z = _chunk_logits(cfg, wc, x, jnp.uint32(0), impl)  # no drop at eval
+        valid = (c0 + jnp.arange(width)) < cfg.num_labels
+        z = jnp.where(valid[None, :], z.astype(jnp.float32), L.NEG_INF)
+        cand = jnp.concatenate([vals, z], axis=1)
+        cand_idx = jnp.concatenate(
+            [idx, jnp.broadcast_to(c0 + jnp.arange(width), (B, width))],
+            axis=1)
+        v, local = jax.lax.top_k(cand, k)
+        return (v, jnp.take_along_axis(cand_idx, local, axis=1)), None
+
+    init = (jnp.full((B, k), L.NEG_INF, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(
+        body, init, (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+    return vals, idx
+
+
+def _topk_materialized(z: jax.Array, col_ids: jax.Array, num_labels: int,
+                       k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over single-launch logits, reproducing ``_topk_scan``'s
+    tie-break contract exactly: ``col_ids`` must be in the scan's visit
+    order (ascending label id), padded ids (≥ num_labels) are masked to
+    NEG_INF, and k NEG_INF sentinel candidates with id 0 — the scan's
+    initial carry — precede the label columns, so overflow slots surface
+    (NEG_INF, 0) and ties at equal logits resolve to the earliest (lowest
+    label id) candidate; ``lax.top_k`` is stable, which seals the match."""
+    B, W = z.shape
+    zm = jnp.where((col_ids < num_labels)[None, :], z.astype(jnp.float32),
+                   L.NEG_INF)
+    cand = jnp.concatenate(
+        [jnp.full((B, k), L.NEG_INF, jnp.float32), zm], axis=1)
+    cand_ids = jnp.concatenate(
+        [jnp.zeros((B, k), jnp.int32), jnp.broadcast_to(col_ids, (B, W))],
+        axis=1)
+    vals, local = jax.lax.top_k(cand, k)
+    return vals, jnp.take_along_axis(cand_ids, local, axis=1)
+
+
+def topk_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                 state: HeadState, x: jax.Array, k: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Streaming top-k over chunks — never materializes full logits —
+    unless the plan chose the single-launch materialized fast path
+    (bit-identical values *and* ids; see ``_topk_materialized``)."""
+    x = x.astype(jnp.bfloat16)
+    if plan.topk_materialize:
+        z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
+                                  quantize_x=cfg.qx,
+                                  drop_rate=cfg.drop_rate, impl=plan.inner)
+        return _topk_materialized(z, jnp.arange(cfg.padded_labels),
+                                  cfg.num_labels, k)
+    return _topk_scan(cfg, state.w, x, k, cfg.chunk,
+                      lambda cidx: cidx * cfg.chunk, plan.inner)
+
+
+def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Deprecated free-function form of ``ELMOHead.topk``."""
+    plan = _plan.resolve_plan(cfg, batch=x.shape[0])
+    return topk_planned(plan, cfg, state, x, k)
+
+
+# ---------------------------------------------------------------------------
+# sharded serving (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+def logits_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                           ctx, state: HeadState, x: jax.Array) -> jax.Array:
+    """``logits_planned`` with W label-sharded over the mesh's model axis.
+
+    Each rank computes its (B, C·chunk/n) logit columns; one BF16
+    ``all_gather`` per chunk restores the global column order — the op
+    sequence per column matches the local path, so values are bit-equal."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    if not plan.sharded:
+        return logits_planned(plan, cfg, state, x)
+    axis = ctx.model_axis
+    x = x.astype(jnp.bfloat16)
+    lc = plan.lc
+    grid, inner = plan.serve_grid, plan.inner
+
+    def body(w, x):
+        B = x.shape[0]
+        if grid:
+            # one launch for every local label block, then one chunk-tiled
+            # gather — same per-column values as the per-chunk scan
+            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
+                                       quantize_x=cfg.qx,
+                                       drop_rate=cfg.drop_rate, impl=inner)
+            z3 = jnp.moveaxis(zl.reshape(B, cfg.num_chunks, lc), 1, 0)
+            zs = jax.lax.all_gather(z3, axis, axis=2, tiled=True)
+        else:
+            def scan_body(_, inp):
+                wc, cidx = inp
+                zc = _chunk_logits(cfg, wc, x, jnp.uint32(0), inner)
+                return None, jax.lax.all_gather(zc, axis, axis=1, tiled=True)
+
+            _, zs = jax.lax.scan(
+                scan_body, None,
+                (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        return jnp.moveaxis(zs, 0, 1).reshape(B, cfg.padded_labels)
+
+    z = _shard_map(body, mesh=ctx.mesh,
+                   in_specs=(plan.w_spec, PS()),
+                   out_specs=PS(), check_vma=False)(state.w, x)
+    return z[:, :cfg.num_labels]
+
+
+def head_logits_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                        ctx=None) -> jax.Array:
+    """Deprecated free-function form of ``ELMOHead.logits`` (sharded)."""
+    ctx, n = _resolve_ctx(ctx)
+    plan = _plan.resolve_plan(
+        cfg, batch=x.shape[0], model_size=n,
+        model_axis=None if ctx is None else ctx.model_axis)
+    return logits_sharded_planned(plan, cfg, ctx, state, x)
+
+
+def topk_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                         ctx, state: HeadState, x: jax.Array, k: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """``topk_planned`` with W label-sharded: local streaming top-k per
+    rank, gather of the n·k candidates, global re-rank (DESIGN.md §6).
+
+    Comm is O(B·k·n) instead of O(B·L); padded label columns are masked on
+    the *local* column window so they can never surface, and ids are
+    global."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    if not plan.sharded:
+        return topk_planned(plan, cfg, state, x, k)
+    axis = ctx.model_axis
+    lc = plan.lc
+    n = plan.model_size
+    x = x.astype(jnp.bfloat16)
+    grid, inner = plan.topk_materialize, plan.inner
+
+    def body(w, x):
+        r = jax.lax.axis_index(axis).astype(jnp.int32)
+        if grid:
+            # local candidates from one logits launch; the local column
+            # visit order (chunk-major, then row) is ascending global id
+            # for a fixed rank, so _topk_materialized's tie-break matches
+            # the streaming scan's
+            zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
+                                       quantize_x=cfg.qx,
+                                       drop_rate=cfg.drop_rate, impl=inner)
+            cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+            col_ids = ((cids * cfg.chunk + r * lc)[:, None]
+                       + jnp.arange(lc, dtype=jnp.int32)[None, :]
+                       ).reshape(-1)
+            vals, idx = _topk_materialized(zl, col_ids, cfg.num_labels, k)
+        else:
+            vals, idx = _topk_scan(cfg, w, x, k, lc,
+                                   lambda cidx: cidx * cfg.chunk + r * lc,
+                                   inner)
+        # (n, B, k) candidates → (B, n·k) → global re-rank.  Sorting on
+        # (−value, id) reproduces the streaming tie-break (equal logits
+        # resolve to the lowest label id) so the merged ids match the
+        # single-device output exactly, not just the values.
+        vall = jax.lax.all_gather(vals, axis)
+        idxl = jax.lax.all_gather(idx, axis)
+        B = x.shape[0]
+        vall = jnp.moveaxis(vall, 0, 1).reshape(B, n * k)
+        idxl = jnp.moveaxis(idxl, 0, 1).reshape(B, n * k)
+        nv, ids = jax.lax.sort((-vall, idxl), dimension=1, num_keys=2)
+        return -nv[:, :k], ids[:, :k]
+
+    return _shard_map(body, mesh=ctx.mesh,
+                      in_specs=(plan.w_spec, PS()),
+                      out_specs=(PS(), PS()), check_vma=False)(state.w, x)
+
+
+def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                      k: int, ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Deprecated free-function form of ``ELMOHead.topk`` (sharded)."""
+    ctx, n = _resolve_ctx(ctx)
+    plan = _plan.resolve_plan(
+        cfg, batch=x.shape[0], model_size=n,
+        model_axis=None if ctx is None else ctx.model_axis)
+    return topk_sharded_planned(plan, cfg, ctx, state, x, k)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def precision_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                           ctx, state: HeadState, x: jax.Array,
+                           label_ids: jax.Array, k: int) -> jax.Array:
+    """P@k for multi-label targets (paper's headline metric)."""
+    _, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    hits = (pred[:, :, None] == label_ids[:, None, :]) \
+        & (label_ids >= 0)[:, None, :]
+    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k
+
+
+def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                   label_ids: jax.Array, k: int) -> jax.Array:
+    """Deprecated free-function form of ``ELMOHead.precision_at_k``
+    (local top-k, as historically)."""
+    plan = _plan.resolve_plan(cfg, batch=x.shape[0])
+    _, pred = topk_planned(plan, cfg, state, x, k)
+    hits = (pred[:, :, None] == label_ids[:, None, :]) \
+        & (label_ids >= 0)[:, None, :]
+    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k

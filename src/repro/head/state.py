@@ -1,0 +1,46 @@
+"""Head state: weights + optional Kahan compensation, and their init.
+
+The state is deliberately dumb — a NamedTuple of arrays — so it passes
+through jit/shard_map/checkpointing untouched.  Everything clever lives in
+``plan`` (decisions) and ``train``/``serving`` (execution).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import precision as P
+from repro.head.config import ELMOHeadConfig
+
+
+class HeadState(NamedTuple):
+    """w: (C, Lc, D) in storage dtype; comp: (Ck, Lc, D) BF16 (App. D)."""
+    w: jax.Array
+    comp: Optional[jax.Array]
+
+
+def init_head(key: jax.Array, cfg: ELMOHeadConfig, scale: float | None = None
+              ) -> HeadState:
+    scale = scale if scale is not None else 1.0 / np.sqrt(cfg.d_model)
+    w = (jax.random.normal(key, (cfg.num_chunks, cfg.chunk, cfg.d_model),
+                           jnp.float32) * scale).astype(cfg.wdtype)
+    comp = (jnp.zeros((cfg.kahan_chunks, cfg.chunk, cfg.d_model), P.BF16)
+            if cfg.kahan_chunks else None)
+    return HeadState(w, comp)
+
+
+def _resolve_ctx(ctx):
+    """Active MeshContext (explicit arg wins) and its model-axis size."""
+    from repro.dist import meshctx as _meshctx  # lazy: dist imports core
+    ctx = _meshctx.get() if ctx is None else ctx
+    return ctx, (1 if ctx is None else ctx.model_size)
+
+
+def init_xg_err(cfg: ELMOHeadConfig, batch: int, ctx=None) -> jax.Array:
+    """Per-shard E5M2 error-feedback carry for the compressed x̄ reduction:
+    (model_size, B, D) BF16, row r owned by model rank r."""
+    _, n = _resolve_ctx(ctx)
+    return jnp.zeros((n, batch, cfg.d_model), P.BF16)

@@ -1,0 +1,356 @@
+"""Single-device ELMO head training step (paper §4.2–4.3), plan-driven.
+
+One ``train_step_planned`` performs, for each label chunk:
+
+    1. forward    z_c = q8(X) @ W_cᵀ            (FP8-storage matmul)
+    2. loss-skip  ḡ_c = σ(z_c) − Y_c   |  softmax(z_c) − onehot      (App. B)
+    3. input grad X̄  += ḡ_c @ W_c
+    4. fused upd  W_c ← SR((1 − lr·wd) W_c − lr ḡ_cᵀ X)   (grad never in HBM)
+
+so transient memory is 1/k of the full logits (paper §4.2, Table 10) and
+the weight/optimizer memory is W itself — SGD without momentum (§4.2),
+stochastic rounding instead of master weights (§4.1/4.3).
+
+Which of the three algorithmically identical paths executes — the
+whole-head grid megakernel (ONE Pallas launch, DESIGN.md §7), the PR-1
+per-chunk ``lax.scan`` (its bit-parity oracle), or the legacy multi-kernel
+composition — is decided by the ``HeadPlan`` passed in: this module
+contains *no* dispatch logic (no ``_impl_split``/``_grid_ok`` calls inside
+traced step functions — DESIGN.md §8).
+
+The head never enters autodiff: the caller runs the backbone under
+``jax.vjp`` and seeds it with the returned ``x_grad`` — which reproduces
+the paper's reordered computation flow (encoder fwd → head fwd/bwd/update
+→ encoder bwd) and its peak-memory profile by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as L
+from repro.head import plan as _plan
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState
+from repro.kernels import ops
+from repro.kernels import prng_utils as PR
+from repro.kernels import tuning as _tuning
+
+
+# ---------------------------------------------------------------------------
+# chunk-level helpers shared by train / train_sharded / serving
+# ---------------------------------------------------------------------------
+
+
+def _valid_cols(cfg: ELMOHeadConfig, cidx: jax.Array) -> jax.Array:
+    """(chunk,) bool — masks padded label columns in the final chunk."""
+    c0 = cidx * cfg.chunk
+    return (c0 + jnp.arange(cfg.chunk)) < cfg.num_labels
+
+
+def _chunk_logits(cfg: ELMOHeadConfig, wc: jax.Array, x: jax.Array,
+                  seed: jax.Array, impl: str) -> jax.Array:
+    return ops.fp8_logits(x, wc, seed, drop_rate=cfg.drop_rate,
+                          quantize_x=cfg.qx, impl=impl)
+
+
+def _chunk_seed(seed: jax.Array, cidx: jax.Array, salt: int) -> jax.Array:
+    return PR.mix32(seed.astype(jnp.uint32)
+                    + cidx.astype(jnp.uint32) * np.uint32(2654435761)
+                    + np.uint32(salt))
+
+
+def _grid_seeds(cfg: ELMOHeadConfig, seed: jax.Array):
+    """Per-chunk DropConnect/SR seed vectors — elementwise identical to the
+    scalar ``_chunk_seed`` draws of the per-chunk scan."""
+    cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+    return _chunk_seed(seed, cids, 0), _chunk_seed(seed, cids, 1), cids
+
+
+def _chunk_grad(cfg: ELMOHeadConfig, z: jax.Array, targets: jax.Array,
+                cidx: jax.Array, lse: Optional[jax.Array],
+                scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Loss-skip logit gradient + optional loss contribution for one chunk."""
+    return L.chunk_loss_skip_grad(cfg.loss, z, targets, cidx * cfg.chunk,
+                                  cfg.chunk, cfg.num_labels, lse, scale,
+                                  cfg.compute_loss)
+
+
+def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
+    valid = _valid_cols(cfg, cidx)[None, :]
+    return jnp.where(valid, z.astype(jnp.float32), L.NEG_INF)
+
+
+def _scan_chunks(cfg: ELMOHeadConfig, w, comp, chunk_ids, zs, carry,
+                 chunk_step):
+    """The Kahan/SR chunk-scan split shared by every train-step path
+    (fused, unfused, sharded).  ``chunk_step(xg, loss, wc, comp_c, cidx,
+    z_c)`` is the per-chunk work; the documented fused-vs-unfused-vs-
+    sharded parity depends on this scaffolding living in exactly one
+    place.  Returns (carry, w_kahan, w_sr, comp_new)."""
+
+    def kahan_body(carry, inp):
+        xg, loss = carry
+        wc, comp_c, cidx, z_c = (inp if zs is not None else inp + (None,))
+        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
+                                                z_c)
+        return (xg, loss), (wc_new, comp_new)
+
+    def sr_body(carry, inp):
+        xg, loss = carry
+        wc, cidx, z_c = inp if zs is not None else inp + (None,)
+        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
+        return (xg, loss), wc_new
+
+    ck = cfg.kahan_chunks
+    if ck:
+        xs = (w[:ck], comp, chunk_ids[:ck])
+        if zs is not None:
+            xs += (zs[:ck],)
+        carry, (w_k, comp_new) = jax.lax.scan(kahan_body, carry, xs)
+    else:
+        w_k, comp_new = w[:0], comp
+
+    if ck < cfg.num_chunks:
+        xs = (w[ck:], chunk_ids[ck:])
+        if zs is not None:
+            xs += (zs[ck:],)
+        carry, w_s = jax.lax.scan(sr_body, carry, xs)
+    else:
+        w_s = w[:0]
+    return carry, w_k, w_s, comp_new
+
+
+def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
+                   lse, scale, B: int) -> Tuple[HeadState, jax.Array, dict]:
+    """Shared epilogue of every train-step path: reassemble the chunk
+    weights and fold the accumulated loss (the fused/unfused A/B guarantee
+    depends on this formula living in exactly one place)."""
+    (xg, loss_raw) = carry
+    w_new = jnp.concatenate([w_k, w_s], axis=0) if cfg.kahan_chunks else w_s
+
+    if cfg.loss == "bce":
+        loss = loss_raw / B
+    else:
+        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
+        tok_mask = (targets >= 0)
+        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
+            if cfg.compute_loss else loss_raw
+
+    metrics = {"loss": loss,
+               "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
+    return HeadState(w_new, comp_new), xg, metrics
+
+
+# ---------------------------------------------------------------------------
+# planned training step
+# ---------------------------------------------------------------------------
+
+
+def train_step_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                       state: HeadState, x: jax.Array, targets: jax.Array,
+                       lr: jax.Array, wd: jax.Array, seed: jax.Array
+                       ) -> Tuple[HeadState, jax.Array, dict]:
+    """One fused forward/backward/update pass over all label chunks, on the
+    path ``plan`` selected (grid / fused scan / unfused — all numerically
+    identical by construction).
+
+    x: (B, D) bf16 backbone outputs (tokens flattened).
+    targets: (B, P) int32 multi-label ids (bce) or (B,) int32 ids (ce).
+    Returns (new_state, x_grad (B, D) bf16, metrics).
+    """
+    if plan.path == "grid":
+        return _train_step_grid(plan, cfg, state, x, targets, lr, wd, seed)
+    if plan.path == "fused":
+        return _train_step_fused(plan, cfg, state, x, targets, lr, wd, seed)
+    return _train_step_unfused(plan, cfg, state, x, targets, lr, wd, seed)
+
+
+def _train_step_grid(plan, cfg: ELMOHeadConfig, state: HeadState,
+                     x: jax.Array, targets: jax.Array, lr: jax.Array,
+                     wd: jax.Array, seed: jax.Array
+                     ) -> Tuple[HeadState, jax.Array, dict]:
+    """One whole-head grid-megakernel launch (DESIGN.md §7): the label loop
+    runs inside the Pallas grid, so BCE is exactly one launch per step and
+    softmax-CE one two-pass launch (the z-cache spills through a
+    grid-mapped HBM buffer instead of a second launch)."""
+    B = x.shape[0]
+    impl = plan.train_inner
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+    seeds_d, seeds_u, cids = _grid_seeds(cfg, seed)
+    base = cids * cfg.chunk
+    kahan = cfg.kahan_chunks > 0
+    comp = state.comp if kahan else None
+    common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                  quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                  compute_loss=cfg.compute_loss, impl=impl)
+
+    if cfg.loss == "bce":
+        scale, lse = jnp.float32(1.0 / B), None
+        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
+                                  seeds_d, seeds_u, base, comp=comp,
+                                  mode="bce", **common)
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+        out = ops.fused_head_step(x, state.w, targets, lr, wd, scale,
+                                  seeds_d, seeds_u, base, comp=comp,
+                                  mode="ce_full", cache_z=plan.cache_z,
+                                  **common)
+        lse = out.lse
+
+    w_k = out.w if kahan else state.w[:0]
+    w_s = state.w[:0] if kahan else out.w
+    return _finalize_step(cfg, (out.xg, out.loss), w_k, w_s, out.comp,
+                          targets, lse, scale, B)
+
+
+def _train_step_fused(plan, cfg: ELMOHeadConfig, state: HeadState,
+                      x: jax.Array, targets: jax.Array, lr: jax.Array,
+                      wd: jax.Array, seed: jax.Array
+                      ) -> Tuple[HeadState, jax.Array, dict]:
+    B = x.shape[0]
+    impl = plan.train_inner
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+
+    if cfg.loss == "bce":
+        scale = jnp.float32(1.0 / B)
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+
+    # hoisted tile-alignment padding: the compiled-kernel path pads
+    # x/x̄/targets ONCE per step here (the chunk kernel's own pad2 calls
+    # become no-ops), instead of re-padding the loop-invariant operands at
+    # every chunk of the scan.  ``n_b`` tells the kernel the logical batch
+    # so its masking ignores the padded rows.  interpret/xla inners keep
+    # exact shapes (their bitwise-parity contract forbids padding).
+    n_b = None
+    if plan.rimpl == "kernel":
+        n_b = B
+        Bp = _tuning._pad_up(B, 16)
+        Dp = _tuning._pad_up(cfg.d_model, _tuning.LANE)
+        x = _tuning.pad2(x, Bp, Dp)
+        targets = _tuning.pad2(
+            targets if targets.ndim == 2 else targets.reshape(B, 1),
+            Bp, 1, value=-1)
+        if cfg.loss == "softmax_ce":
+            targets = targets.reshape(-1)
+
+    if cfg.loss == "bce":
+        lse, zs = None, None
+    else:
+        cache = plan.cache_z
+
+        # ----- pass 1: streaming LSE (optionally caching each chunk's z
+        # so pass 2 skips the forward matmul entirely)
+        def lse_body(carry, inp):
+            wc, cidx = inp
+            m, s = carry
+            z = _chunk_logits(cfg, wc, x, _chunk_seed(seed, cidx, 0), impl)
+            carry = L.lse_update(m, s, _masked_z(cfg, z, cidx))
+            return carry, (z if cache else None)
+
+        (m, s), zs = jax.lax.scan(lse_body, L.lse_init(x.shape[0]),
+                                  (state.w, chunk_ids))
+        lse = L.lse_finalize(m, s)
+
+    def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+        out = ops.fused_chunk_step(
+            x, wc, targets, xg, lr, wd, scale, cidx * cfg.chunk,
+            _chunk_seed(seed, cidx, 0), _chunk_seed(seed, cidx, 1),
+            lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
+            num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+            quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+            compute_loss=cfg.compute_loss, impl=impl,
+            **({"n_b": n_b} if n_b is not None else {}))
+        return out.xg, loss_acc + out.loss, out.w, out.comp
+
+    carry = (jnp.zeros(x.shape, jnp.bfloat16), jnp.float32(0.0))
+    carry, w_k, w_s, comp_new = _scan_chunks(cfg, state.w, state.comp,
+                                             chunk_ids, zs, carry,
+                                             chunk_step)
+    carry = (carry[0][:B, :cfg.d_model], carry[1])
+    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
+                          scale, B)
+
+
+def _train_step_unfused(plan, cfg: ELMOHeadConfig, state: HeadState,
+                        x: jax.Array, targets: jax.Array,
+                        lr: jax.Array, wd: jax.Array, seed: jax.Array
+                        ) -> Tuple[HeadState, jax.Array, dict]:
+    """Legacy multi-kernel path (three launches + HBM logits/grad round
+    trips per chunk) — kept selectable for fused-vs-unfused A/B."""
+    B = x.shape[0]
+    impl = plan.train_inner
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+
+    if cfg.loss == "bce":
+        scale = jnp.float32(1.0 / B)
+        lse = None
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+
+        # ----- pass 1: streaming LSE over chunks (paper §4.2 chunking + CE)
+        def lse_body(carry, inp):
+            wc, cidx = inp
+            m, s = carry
+            z = _masked_z(cfg, _chunk_logits(cfg, wc, x,
+                                             _chunk_seed(seed, cidx, 0),
+                                             impl), cidx)
+            return L.lse_update(m, s, z), None
+
+        (m, s), _ = jax.lax.scan(
+            lse_body, L.lse_init(B),
+            (state.w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        lse = L.lse_finalize(m, s)
+
+    # ----- pass 2: per-chunk grad + fused update + x̄ accumulation
+    def chunk_step(xg, loss_acc, wc, comp_c, cidx, _z):
+        sd = _chunk_seed(seed, cidx, 0)
+        z = _chunk_logits(cfg, wc, x, sd, impl)
+        g, loss_c = _chunk_grad(cfg, z, targets, cidx, lse, scale)
+        # x̄ accumulates in BF16 (paper §4.1: gradients stay BF16) — halves
+        # the accumulator and its cross-model all-reduce
+        xg = xg + ops.fp8_input_grad(g, wc, impl=impl)
+        upd_seed = _chunk_seed(seed, cidx, 1)
+        if comp_c is None:
+            wc_new = ops.fused_head_update(g, x, wc, lr, wd, upd_seed,
+                                           use_sr=cfg.use_sr, impl=impl)
+            return xg, loss_acc + loss_c, wc_new, None
+        wc_new, comp_new = ops.fused_head_update_kahan(
+            g, x, wc, comp_c, lr, wd, upd_seed, impl=impl)
+        return xg, loss_acc + loss_c, wc_new, comp_new
+
+    carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), jnp.float32(0.0))
+    carry, w_k, w_s, comp_new = _scan_chunks(
+        cfg, state.w, state.comp,
+        jnp.arange(cfg.num_chunks, dtype=jnp.int32), None, carry,
+        chunk_step)
+    return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
+                          scale, B)
+
+
+# ---------------------------------------------------------------------------
+# legacy free-function surface (deprecated; the facade pre-resolves)
+# ---------------------------------------------------------------------------
+
+
+def head_train_step(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
+                    targets: jax.Array, lr: jax.Array, wd: jax.Array,
+                    seed: jax.Array
+                    ) -> Tuple[HeadState, jax.Array, dict]:
+    """Deprecated free-function form: resolves a ``HeadPlan`` per call
+    (memoized) and runs the planned step.  Prefer ``repro.head.ELMOHead``,
+    which resolves the plan once at construction."""
+    plan = _plan.resolve_plan(cfg, batch=x.shape[0],
+                              target_slots=_plan._target_slots(targets))
+    return train_step_planned(plan, cfg, state, x, targets, lr, wd, seed)

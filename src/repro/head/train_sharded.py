@@ -1,0 +1,367 @@
+"""Label-sharded ELMO head training (DESIGN.md §6), plan-driven.
+
+``train_step_sharded_planned`` runs the single-device step with the label
+dimension sharded over the mesh's model axis (vocab parallelism, per
+``HeadPlan.w_spec`` / ``dist.sharding.head_specs``): every model rank
+holds ``chunk/n`` rows of each chunk (W and the Kahan buffer partitioned
+identically) and runs the whole-head grid megakernel (one launch for BCE,
+two for softmax-CE with the normalizer collective between them) or, off
+the grid path, the per-chunk fused kernel scan on its local shard.  The
+batch is gathered over the data axes so the in-kernel weight update sees
+full-B gradients — W updates stay deterministic and need no cross-data
+all-reduce.  Per-shard x̄ partials are ``psum``-reduced over the model
+axis (optionally E5M2-compressed with error feedback).
+
+Softmax-CE couples shards through the row normalizer; ``ce_comm`` picks
+the cross-device LSE strategy (DESIGN.md §6):
+
+* ``"gather"`` (default) — the pass-1 logits of each chunk are
+  all-gathered (BF16, column-tiled) and the streaming LSE + the loss
+  run on the full-width rows: weights, Kahan state and the loss are
+  **bit-identical** to the single-device step for deterministic updates
+  (BF16 Kahan / no-SR).  Comm: B·L·2 bytes/step.
+* ``"stats"`` — each shard folds a local (max, Σexp) over its label
+  windows, then one ``pmax`` + one rescaled ``psum`` form the global
+  log-normalizer: comm is O(B) but sums reassociate (parity to ~1e-6).
+
+Every static decision (grid vs scan, inner impl, z-cache, specs) comes
+from the ``HeadPlan`` — this module performs no impl resolution.  SR and
+DropConnect draws are hashed per *local* tile, so low-precision SR runs
+match single-device only distributionally (the paper's own guarantee,
+App. C).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import losses as L
+from repro.head import plan as _plan
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState, _resolve_ctx
+from repro.head.train import (_chunk_logits, _chunk_seed, _finalize_step,
+                              _masked_z, _scan_chunks, _valid_cols,
+                              train_step_planned)
+from repro.kernels import ops
+from repro.kernels import prng_utils as PR
+
+
+def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                               ctx, state: HeadState, x: jax.Array,
+                               targets: jax.Array, lr: jax.Array,
+                               wd: jax.Array, seed: jax.Array, *,
+                               ce_comm: str = "gather",
+                               compress_xg: bool = False,
+                               xg_err: Optional[jax.Array] = None):
+    """The sharded step on the path ``plan`` selected.  Falls back to the
+    single-device step when the plan resolved to single-device semantics
+    (no mesh, model axis of 1, or an indivisible chunk)."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    assert ce_comm in ("gather", "stats"), ce_comm
+    assert xg_err is None or compress_xg, "xg_err implies compress_xg"
+    if not plan.sharded:
+        out = train_step_planned(plan, cfg, state, x, targets, lr, wd, seed)
+        return out if xg_err is None else out + (xg_err,)
+
+    n = plan.model_size
+    mesh, axis = ctx.mesh, ctx.model_axis
+    batch_axes = tuple(a for a in ctx.batch_axes
+                      if a in mesh.shape and mesh.shape[a] > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= int(mesh.shape[a])
+    if x.shape[0] % n_batch != 0:
+        batch_axes, n_batch = (), 1      # ragged batch: replicate instead
+    b0 = batch_axes if batch_axes else None
+
+    lc = plan.lc
+    # grid path: ONE whole-head launch per collective-free pass (BCE = 1
+    # launch; CE = LSE launch + collective + update launch, ≤ 2) — decided
+    # by the plan, which also downgraded the scan inner to "xla" when the
+    # compiled megakernel would not fit VMEM at this global batch.
+    grid = plan.path == "grid"
+    impl = plan.train_inner
+    cache_z = plan.cache_z
+
+    kahan = cfg.kahan_chunks > 0
+    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+    has_err = xg_err is not None
+
+    def body(*args):
+        it = iter(args)
+        w = next(it)
+        comp = next(it) if kahan else None
+        xl, tgt = next(it), next(it)
+        lr_, wd_, seed_ = next(it), next(it), next(it)
+        err = next(it) if has_err else None          # (1, B, D) local slice
+
+        Bl = xl.shape[0]
+        for a in reversed(batch_axes):   # innermost batch axis first
+            xl = jax.lax.all_gather(xl, a, axis=0, tiled=True)
+            tgt = jax.lax.all_gather(tgt, a, axis=0, tiled=True)
+        x16 = xl.astype(jnp.bfloat16)
+        B = x16.shape[0]
+        r = jax.lax.axis_index(axis)
+        # independent SR/DropConnect stream per shard: kernel bits are
+        # hashed by the *local* tile index, so shards must not share seeds
+        seed_sh = PR.mix32(seed_.astype(jnp.uint32)
+                           + (r.astype(jnp.uint32) + 1)
+                           * np.uint32(0x85EBCA6B))
+
+        def c0_of(cidx):
+            return cidx * cfg.chunk + r.astype(jnp.int32) * lc
+
+        kernel_loss = cfg.compute_loss and ce_comm == "stats"
+
+        if grid:
+            # ---- whole-head grid-megakernel branch (DESIGN.md §7) ----
+            seeds_d = _chunk_seed(seed_sh, chunk_ids, 0)
+            seeds_u = _chunk_seed(seed_sh, chunk_ids, 1)
+            base = chunk_ids * cfg.chunk + r.astype(jnp.int32) * lc
+            gkw = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                       quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                       impl=impl)
+            lse = None
+            if cfg.loss == "bce":
+                scale = jnp.float32(1.0 / B)
+                # gather-mode loss needs the (pre-update) local logits:
+                # the single launch emits them alongside the update
+                want_z = cfg.compute_loss and ce_comm == "gather"
+                out = ops.fused_head_step(
+                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
+                    comp=comp, mode="bce", cache_z=want_z,
+                    compute_loss=kernel_loss, **gkw)
+                loss_raw = out.loss
+                if want_z:
+                    z3 = jnp.moveaxis(
+                        out.z.reshape(B, cfg.num_chunks, lc), 1, 0)
+
+                    def loss_body(acc, inp):
+                        zl, cidx = inp
+                        zf = jax.lax.all_gather(zl, axis, axis=1,
+                                                tiled=True)
+                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk,
+                                              cfg.chunk)
+                        return acc + L.bce_chunk_loss(
+                            zf, y, mask=_valid_cols(cfg, cidx)[None, :]), \
+                            None
+
+                    loss_raw, _ = jax.lax.scan(
+                        loss_body, jnp.float32(0.0), (z3, chunk_ids))
+            else:
+                n_tok = jnp.maximum((tgt >= 0).sum(), 1
+                                    ).astype(jnp.float32)
+                scale = 1.0 / n_tok
+                loss_pre = jnp.float32(0.0)
+                if ce_comm == "gather":
+                    # launch 1: all local logits; LSE + exact loss on the
+                    # per-chunk gathered rows, op-for-op the single-device
+                    # sequence (the bit-parity contract)
+                    zflat = ops.fused_head_logits(
+                        x16, w, seeds_d, quantize_x=cfg.qx,
+                        drop_rate=cfg.drop_rate, impl=impl)
+                    z3 = jnp.moveaxis(
+                        zflat.reshape(B, cfg.num_chunks, lc), 1, 0)
+
+                    def lse_body(carry, inp):
+                        zl, cidx = inp
+                        m, s, lraw = carry
+                        zf = jax.lax.all_gather(zl, axis, axis=1,
+                                                tiled=True)
+                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                        if cfg.compute_loss:
+                            lraw = lraw + L.ce_target_logit_chunk(
+                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                        return (m, s, lraw), None
+
+                    (m, s, loss_pre), _ = jax.lax.scan(
+                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                        (z3, chunk_ids))
+                    lse = L.lse_finalize(m, s)
+                else:
+                    # launch 1: in-kernel local streaming (max, Σexp),
+                    # then the O(B) pmax/psum normalizer collective
+                    st = ops.fused_head_lse(
+                        x16, w, seeds_d, base, num_labels=cfg.num_labels,
+                        quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                        cache_z=cache_z, impl=impl)
+                    m_g = jax.lax.pmax(st.m, axis)
+                    s_g = jax.lax.psum(st.s * jnp.exp(st.m - m_g), axis)
+                    lse = L.lse_finalize(m_g, s_g)
+                    zflat = st.z
+                # launch 2: the whole-head update against the global LSE
+                out = ops.fused_head_step(
+                    x16, w, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
+                    lse=lse, z=zflat, comp=comp, mode="ce_update",
+                    cache_z=zflat is not None, compute_loss=kernel_loss,
+                    **gkw)
+                loss_raw = loss_pre + out.loss
+            xg_loc = out.xg
+            w_k = out.w if kahan else w[:0]
+            w_s = w[:0] if kahan else out.w
+            comp_new = out.comp
+        else:
+            # ---- per-chunk scan branch (fused_chunk_step per chunk) ----
+            loss_pre = jnp.float32(0.0)
+            if cfg.loss == "bce":
+                scale = jnp.float32(1.0 / B)
+                lse, zs = None, None
+            else:
+                n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
+                scale = 1.0 / n_tok
+                cache = cache_z
+
+                if ce_comm == "gather":
+                    # pass 1: full-width streaming LSE on gathered chunk logits
+                    # (identical op sequence to the single-device pass — the
+                    # source of the bit-parity guarantee); the CE target-logit
+                    # sum rides along so the loss is exact too
+                    def lse_body(carry, inp):
+                        wc, cidx = inp
+                        m, s, lraw = carry
+                        zl = _chunk_logits(cfg, wc, x16,
+                                           _chunk_seed(seed_sh, cidx, 0), impl)
+                        zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+                        m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                        if cfg.compute_loss:
+                            lraw = lraw + L.ce_target_logit_chunk(
+                                zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                        return (m, s, lraw), (zl if cache else None)
+
+                    (m, s, loss_pre), zs = jax.lax.scan(
+                        lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                        (w, chunk_ids))
+                else:
+                    # pass 1 (stats): local (max, Σexp) over this shard's label
+                    # windows, then pmax + one rescaled psum — O(B) comm
+                    def lse_body(carry, inp):
+                        wc, cidx = inp
+                        m, s = carry
+                        zl = _chunk_logits(cfg, wc, x16,
+                                           _chunk_seed(seed_sh, cidx, 0), impl)
+                        validl = (c0_of(cidx) + jnp.arange(lc)) < cfg.num_labels
+                        zm = jnp.where(validl[None, :], zl.astype(jnp.float32),
+                                       L.NEG_INF)
+                        return L.lse_update(m, s, zm), (zl if cache else None)
+
+                    (m, s), zs = jax.lax.scan(lse_body, L.lse_init(B),
+                                              (w, chunk_ids))
+                    m_g = jax.lax.pmax(m, axis)
+                    s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
+                    m, s = m_g, s_g
+                lse = L.lse_finalize(m, s)
+
+            def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+                if cfg.loss == "bce" and ce_comm == "gather":
+                    z_c = _chunk_logits(cfg, wc, x16,
+                                        _chunk_seed(seed_sh, cidx, 0), impl)
+                    if cfg.compute_loss:
+                        zf = jax.lax.all_gather(z_c, axis, axis=1, tiled=True)
+                        y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
+                        loss_acc = loss_acc + L.bce_chunk_loss(
+                            zf, y, mask=_valid_cols(cfg, cidx)[None, :])
+                out = ops.fused_chunk_step(
+                    x16, wc, tgt, xg, lr_, wd_, scale, c0_of(cidx),
+                    _chunk_seed(seed_sh, cidx, 0), _chunk_seed(seed_sh, cidx, 1),
+                    lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
+                    num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                    quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                    compute_loss=kernel_loss, impl=impl)
+                return out.xg, loss_acc + out.loss, out.w, out.comp
+
+            carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
+            carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
+                                                     zs, carry, chunk_step)
+            xg_loc, loss_raw = carry
+
+        if ce_comm == "stats" and cfg.compute_loss:
+            loss_raw = jax.lax.psum(loss_raw, axis)
+
+        # ---- cross-shard x̄ reduction (optionally E5M2 on the wire) ----
+        err_new = err
+        if compress_xg:
+            from repro.dist import compression as C
+            if err is not None:
+                cpr, e = C.compress_with_feedback(xg_loc, err[0])
+                err_new = e[None]
+            else:
+                cpr = C.compress(xg_loc)
+            payloads = jax.lax.all_gather(cpr.payload, axis)   # (n, B·D) e5m2
+            scales = jax.lax.all_gather(cpr.scale, axis)       # (n,)
+            xg32 = (payloads.astype(jnp.float32) * scales[:, None]).sum(0)
+            xg_comb = xg32.reshape(B, cfg.d_model).astype(jnp.bfloat16)
+        else:
+            xg_comb = jax.lax.psum(xg_loc.astype(jnp.float32), axis
+                                   ).astype(jnp.bfloat16)
+
+        st_new, xg_full, metrics = _finalize_step(
+            cfg, (xg_comb, loss_raw), w_k, w_s, comp_new, tgt, lse, scale, B)
+
+        if batch_axes:   # hand back only this rank's batch rows
+            bidx = jnp.int32(0)
+            for a in batch_axes:
+                bidx = bidx * mesh.shape[a] + jax.lax.axis_index(a)
+            xg_out = jax.lax.dynamic_slice_in_dim(xg_full, bidx * Bl, Bl, 0)
+        else:
+            xg_out = xg_full
+
+        outs = [st_new.w]
+        if kahan:
+            outs.append(st_new.comp)
+        outs += [xg_out, metrics["loss"], metrics["xgrad_norm"]]
+        if has_err:
+            outs.append(err_new)
+        return tuple(outs)
+
+    wspec = plan.w_spec
+    tgt_spec = PS(b0, None) if targets.ndim == 2 else PS(b0)
+    operands = [state.w] + ([state.comp] if kahan else []) + [
+        x, targets, jnp.asarray(lr, jnp.float32),
+        jnp.asarray(wd, jnp.float32), jnp.asarray(seed).astype(jnp.uint32)]
+    in_specs = [wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), tgt_spec, PS(), PS(), PS()]
+    out_specs = [wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), PS(), PS()]
+    if has_err:
+        operands.append(xg_err)
+        in_specs.append(plan.xg_err_spec)
+        out_specs.append(plan.xg_err_spec)
+
+    outs = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                      out_specs=tuple(out_specs), check_vma=False)(*operands)
+    it = iter(outs)
+    w_new = next(it)
+    comp_new = next(it) if kahan else None
+    xg, loss, xnorm = next(it), next(it), next(it)
+    metrics = {"loss": loss, "xgrad_norm": xnorm}
+    ret = (HeadState(w_new, comp_new), xg, metrics)
+    return ret + ((next(it),) if has_err else ())
+
+
+# ---------------------------------------------------------------------------
+# legacy free-function surface (deprecated; the facade pre-resolves)
+# ---------------------------------------------------------------------------
+
+
+def head_train_step_sharded(cfg: ELMOHeadConfig, state: HeadState,
+                            x: jax.Array, targets: jax.Array, lr: jax.Array,
+                            wd: jax.Array, seed: jax.Array, ctx=None, *,
+                            ce_comm: str = "gather",
+                            compress_xg: bool = False,
+                            xg_err: Optional[jax.Array] = None):
+    """Deprecated free-function form: resolves a ``HeadPlan`` per call
+    (memoized) against the ambient/explicit ``MeshContext`` and runs the
+    planned sharded step.  Prefer ``repro.head.ELMOHead``."""
+    ctx, n = _resolve_ctx(ctx)
+    plan = _plan.resolve_plan(
+        cfg, batch=x.shape[0], target_slots=_plan._target_slots(targets),
+        model_size=n, model_axis=None if ctx is None else ctx.model_axis,
+        ce_comm=ce_comm)
+    return train_step_sharded_planned(plan, cfg, ctx, state, x, targets,
+                                      lr, wd, seed, ce_comm=ce_comm,
+                                      compress_xg=compress_xg, xg_err=xg_err)

@@ -34,8 +34,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import get_config                        # noqa: E402
 from repro.configs.registry import (ARCHS, SHAPES, cell_applicable,  # noqa: E402
                                     input_specs)
-from repro.core import elmo_head as EH                      # noqa: E402
 from repro.dist import compat as Compat                     # noqa: E402
+from repro.head import (default_target_slots, head_config_for,  # noqa: E402
+                        resolve_plan)
 from repro.dist import meshctx, sharding as Sh              # noqa: E402
 from repro.launch import steps as St                        # noqa: E402
 from repro.launch.mesh import make_context                  # noqa: E402
@@ -244,6 +245,21 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = dataclasses.replace(cfg, sharding_strategy="tp_sp")
     with meshctx.use(ctx):
         if shape.kind == "train":
+            # record the resolved HeadPlan next to the measured numbers so
+            # predicted-vs-compiled drift is visible per cell.  The head
+            # steps one MICRObatch at a time under grad accumulation, so
+            # the plan is resolved at the microbatch the step executes.
+            hcfg = head_config_for(cfg, impl="xla")
+            mb = shape.batch // max(1, cfg.grad_accum)
+            plan = resolve_plan(
+                hcfg, batch=(mb if cfg.pool == "first" else mb * shape.seq),
+                target_slots=default_target_slots(cfg),
+                model_size=ctx.model_size, model_axis=ctx.model_axis)
+            rec["head_plan"] = {
+                "path": plan.path, "inner": plan.train_inner,
+                "block_l": plan.block_l, "cache_z": plan.cache_z,
+                "temp_bytes": plan.temp_bytes,
+                "fallback": plan.fallback_reason}
             lowered = lower_train_cell(cfg, shape, ctx)
         elif shape.kind == "prefill":
             lowered = lower_prefill_cell(cfg, shape, ctx)

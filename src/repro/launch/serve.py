@@ -12,13 +12,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import head as RH
 from repro.configs import get_config, get_smoke
 from repro.launch import steps as St
 
 
-def serve(cfg, *, batch: int, prompt_len: int, gen: int, impl: str = "auto"):
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, impl: str = "auto",
+          verbose_plan: bool = False):
     state = St.init_serve_state(jax.random.PRNGKey(0), cfg, batch,
                                 max_len=prompt_len + gen, impl=impl)
+    if verbose_plan:   # serving decisions (grid logits / top-k path)
+        print(RH.get_head(St.make_head_cfg(cfg, impl),
+                          batch=batch).plan.explain(), flush=True)
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
                          jnp.int32)
@@ -53,10 +58,13 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--plan", action="store_true",
+                    help="print the resolved HeadPlan before serving")
     args = ap.parse_args()
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     seqs, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                        gen=args.gen, impl="xla" if args.smoke else "auto")
+                        gen=args.gen, impl="xla" if args.smoke else "auto",
+                        verbose_plan=args.plan)
     print("generated:", seqs[:2].tolist())
     print(f"prefill {stats['prefill_s']*1000:.0f} ms, "
           f"decode {stats['decode_tok_s']:.1f} tok/s")

@@ -21,30 +21,22 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import elmo_head as EH
-from repro.dist import meshctx
+from repro import head as RH
+from repro.head import HeadHparams
 from repro.kernels import prng_utils as PR
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim.base import Optimizer
 
 
-def make_head_cfg(cfg: ModelConfig, impl: str = "auto") -> EH.ELMOHeadConfig:
-    return EH.ELMOHeadConfig(
-        num_labels=cfg.head_size,
-        d_model=cfg.d_model,
-        num_chunks=cfg.head_chunks,
-        weight_dtype=cfg.head_weight_dtype,
-        loss=cfg.head_loss,
-        kahan_chunks=cfg.head_kahan_chunks,
-        impl=impl,
-    )
+def make_head_cfg(cfg: ModelConfig, impl: str = "auto") -> RH.ELMOHeadConfig:
+    return RH.head_config_for(cfg, impl=impl)
 
 
 class TrainState(NamedTuple):
     backbone: T.Backbone
     opt_state: Any
-    head: EH.HeadState
+    head: RH.HeadState
     step: jax.Array
 
 
@@ -52,27 +44,25 @@ def init_train_state(key: jax.Array, cfg: ModelConfig, optimizer: Optimizer,
                      impl: str = "auto") -> TrainState:
     kb, kh = jax.random.split(key)
     backbone = T.backbone_init(kb, cfg)
-    head = EH.init_head(kh, make_head_cfg(cfg, impl))
+    head = RH.init_head(kh, make_head_cfg(cfg, impl))
     return TrainState(backbone, optimizer.init(backbone), head, jnp.int32(0))
 
 
 def _head_step(head_cfg, head_state, x, targets, head_lr, head_wd, seed):
-    """Pick the label-sharded head step when a model-parallel mesh is
-    ambient (vocab-parallel W per ``dist.sharding.head_specs``); otherwise
-    the single-device fused path — identical weights/loss by design."""
-    ctx = meshctx.get()
-    if ctx is not None and ctx.model_size > 1:
-        return EH.head_train_step_sharded(head_cfg, head_state, x, targets,
-                                          head_lr, head_wd, seed, ctx)
-    return EH.head_train_step(head_cfg, head_state, x, targets, head_lr,
-                              head_wd, seed)
+    """The ``ELMOHead`` facade dispatches single-device vs label-sharded
+    from the ambient ``MeshContext`` and grid/fused/unfused from its
+    ``HeadPlan`` — resolved once per (config, shape, mesh) by the memoized
+    factory, never re-derived inside the traced step."""
+    head = RH.get_head(head_cfg, batch=x.shape[0],
+                       target_slots=targets.shape[-1]
+                       if targets.ndim == 2 else 1)
+    return head.train_step(head_state, x, targets,
+                           HeadHparams(head_lr, head_wd, seed))
 
 
-def _head_topk(head_cfg, head, x, k: int):
-    ctx = meshctx.get()
-    if ctx is not None and ctx.model_size > 1:
-        return EH.head_topk_sharded(head_cfg, head, x, k, ctx)
-    return EH.head_topk(head_cfg, head, x, k)
+def _head_topk(head_cfg, head_state, x, k: int):
+    head = RH.get_head(head_cfg, batch=x.shape[0])
+    return head.topk(head_state, x, k)
 
 
 def _head_inputs(cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
@@ -80,6 +70,18 @@ def _head_inputs(cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
         return hidden[:, 0, :]
     B, S, D = hidden.shape
     return hidden.reshape(B * S, D)
+
+
+def _micro_seed(seed: jax.Array, micro_idx) -> jax.Array:
+    """Per-microbatch PRNG stream for gradient accumulation.
+
+    The scan index is mixed in so every microbatch draws *distinct*
+    SR/DropConnect bits — a constant derivation (the historical
+    ``mix32(seed + 1)``) replayed identical stochastic-rounding draws at
+    every microbatch, correlating the quantization noise across the
+    accumulation window."""
+    return PR.mix32(seed + (jnp.uint32(micro_idx) + jnp.uint32(1))
+                    * jnp.uint32(0x9E3779B9))
 
 
 def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
@@ -127,12 +129,13 @@ def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
             return (a.reshape(n_micro, mb, *a.shape[1:])
                     if a is not None else None)
 
-        xs = (split(tokens), split(targets), split(frontend))
+        xs = (split(tokens), split(targets), split(frontend),
+              jnp.arange(n_micro, dtype=jnp.uint32))
 
         def micro_body(carry, inp):
             head_state, gacc = carry
-            tok, tgt, fe = inp
-            m_seed = PR.mix32(seed + jnp.uint32(1))
+            tok, tgt, fe, mi = inp
+            m_seed = _micro_seed(seed, mi)
             head_state, g, metrics = _one_microbatch(
                 cfg, head_cfg, state.backbone, head_state, tok, tgt, fe,
                 head_lr, head_wd, m_seed)
@@ -161,7 +164,7 @@ def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
 
 class ServeState(NamedTuple):
     backbone: T.Backbone
-    head: EH.HeadState
+    head: RH.HeadState
     caches: Any
 
 
@@ -169,7 +172,7 @@ def init_serve_state(key: jax.Array, cfg: ModelConfig, batch: int,
                      max_len: int, impl: str = "auto") -> ServeState:
     kb, kh = jax.random.split(key)
     backbone = T.backbone_init(kb, cfg)
-    head = EH.init_head(kh, make_head_cfg(cfg, impl))
+    head = RH.init_head(kh, make_head_cfg(cfg, impl))
     return ServeState(backbone, head, T.init_caches(cfg, batch, max_len))
 
 

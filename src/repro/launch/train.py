@@ -20,6 +20,7 @@ import numpy as np
 
 import contextlib
 
+from repro import head as RH
 from repro.checkpoint import CheckpointManager, restore_checkpoint
 from repro.checkpoint.ckpt import latest_committed
 from repro.configs import get_config, get_smoke
@@ -83,6 +84,17 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
     sched = linear_warmup_constant(backbone_lr, warmup_steps=100)
 
     state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, impl=impl)
+    # resolve + log the head's execution plan once, up front: path, blocks,
+    # byte estimates and any fallback are part of the run record.  The head
+    # sees one MICRObatch per step (grad accumulation scans), so the plan
+    # must be resolved at that size or the logged decision could differ
+    # from the executed one.
+    hcfg = St.make_head_cfg(cfg, impl)
+    mb = global_batch // max(1, cfg.grad_accum)
+    head = RH.get_head(hcfg,
+                       batch=(mb if cfg.pool == "first" else mb * seq),
+                       target_slots=RH.default_target_slots(cfg))
+    print(head.plan.explain(), flush=True)
     if ctx is not None and ctx.model_size > 1:
         state = _shard_head(state, cfg, ctx)
     cursor = DataCursor(seed=1234, step=0)

@@ -243,6 +243,46 @@ def check_grid_sr_fp8_distributional():
     print("grid SR/FP8 distributional ok")
 
 
+def check_facade_matches_legacy():
+    """ISSUE 4: the ``ELMOHead`` facade (plan resolved once at
+    construction, ambient or explicit mesh) is bit-identical to every
+    legacy ``core.elmo_head`` sharded entry point — train step W/comp/
+    loss/x̄, logits, and top-k ids+values — on 1×4 and 2×2 meshes, for
+    both the scan and grid paths."""
+    from repro.head import ELMOHead, HeadHparams
+
+    for impl in ("unfused_xla", "grid_interpret"):
+        cfg, st, x, tgt = _mk("softmax_ce", "bf16", kahan=4, use_sr=False,
+                              impl=impl)
+        for mesh_shape in ((1, 4), (2, 2)):
+            ctx = make_host_mesh(*mesh_shape)
+            stL, xgL, mL = _sharded(cfg, st, x, tgt, mesh_shape)
+            with meshctx.use(ctx):
+                zL = jax.jit(lambda s, x: H.head_logits_sharded(cfg, s, x)
+                             )(st, x)
+                vL, iL = jax.jit(
+                    lambda s, x: H.head_topk_sharded(cfg, s, x, 10))(st, x)
+                # ambient-mesh construction: the facade must pick the
+                # sharded plan on its own
+                head = ELMOHead(cfg, batch=B, target_slots=1)
+                assert head.plan.sharded, (impl, mesh_shape)
+                stF, xgF, mF = jax.jit(
+                    lambda s, x, t: head.train_step(
+                        s, x, t, HeadHparams(*_HYPERS)))(st, x, tgt)
+                zF = jax.jit(lambda s, x: head.logits(s, x))(st, x)
+                vF, iF = jax.jit(lambda s, x: head.topk(s, x, 10))(st, x)
+            assert (_f32(stL.w) == _f32(stF.w)).all(), (impl, mesh_shape)
+            assert (_f32(stL.comp) == _f32(stF.comp)).all(), \
+                (impl, mesh_shape)
+            assert float(mL["loss"]) == float(mF["loss"]), (impl, mesh_shape)
+            assert (_f32(xgL) == _f32(xgF)).all(), (impl, mesh_shape)
+            assert (_f32(zL) == _f32(zF)).all(), (impl, mesh_shape)
+            assert (_f32(vL) == _f32(vF)).all(), (impl, mesh_shape)
+            assert (np.asarray(iL) == np.asarray(iF)).all(), \
+                (impl, mesh_shape)
+    print("facade ≡ legacy (sharded) ok")
+
+
 def check_train_step_picks_sharded_head():
     """launch.steps.train_step under an ambient 2×2 mesh: the head runs
     label-sharded and the loss matches the single-device step closely
@@ -278,5 +318,6 @@ if __name__ == "__main__":
     check_grid_bit_parity()
     check_grid_sharded_serving()
     check_grid_sr_fp8_distributional()
+    check_facade_matches_legacy()
     check_train_step_picks_sharded_head()
     print("ALL SHARDED HEAD CHECKS PASSED")

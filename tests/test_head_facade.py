@@ -1,0 +1,218 @@
+"""`repro.head` facade (ISSUE 4): legacy free functions ≡ ``ELMOHead``
+bit-for-bit, plan resolution happens exactly once per construction, and
+the ``core.elmo_head`` deprecation shim forwards the mutable budget knobs.
+
+The sharded half of the parity matrix runs in the forced-4-device
+subprocess suite (``_multidevice_head_checks.check_facade_matches_legacy``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import elmo_head as H          # the deprecation shim
+from repro.head import (ELMOHead, ELMOHeadConfig, HeadHparams, get_head,
+                        head_config_for, resolve_plan)
+from repro.head import plan as plan_mod
+
+
+def _setup(loss="bce", num_labels=300, d=32, B=16, num_chunks=4,
+           weight_dtype="e4m3", impl="grid_interpret", **kw):
+    cfg = ELMOHeadConfig(num_labels=num_labels, d_model=d,
+                         num_chunks=num_chunks, weight_dtype=weight_dtype,
+                         loss=loss, impl=impl, **kw)
+    st = H.init_head(jax.random.PRNGKey(1), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(2), (B, d)) * 0.5
+         ).astype(jnp.bfloat16)
+    if loss == "bce":
+        tg = jax.random.randint(jax.random.PRNGKey(3), (B, 5), 0, num_labels)
+    else:
+        tg = jax.random.randint(jax.random.PRNGKey(3), (B,), -1, num_labels)
+    return cfg, st, x, tg
+
+
+HP = HeadHparams(lr=jnp.float32(0.1), wd=jnp.float32(1e-4),
+                 seed=jnp.uint32(9))
+
+
+def _f32(a):
+    return np.asarray(a, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# facade ≡ legacy free functions, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("loss", ["bce", "softmax_ce"])
+@pytest.mark.parametrize("impl,wdtype,kahan", [
+    ("grid_interpret", "e4m3", 0), ("fused_xla", "bf16", 4),
+    ("unfused_xla", "bf16", 0), ("auto", "e4m3", 0)])
+def test_facade_train_step_matches_legacy(loss, impl, wdtype, kahan):
+    cfg, st, x, tg = _setup(loss, weight_dtype=wdtype, impl=impl,
+                            kahan_chunks=kahan)
+    st1, xg1, m1 = H.head_train_step(cfg, st, x, tg, HP.lr, HP.wd, HP.seed)
+    head = ELMOHead(cfg, batch=x.shape[0],
+                    target_slots=tg.shape[-1] if tg.ndim == 2 else 1)
+    st2, xg2, m2 = head.train_step(st, x, tg, HP)
+    np.testing.assert_array_equal(_f32(st1.w), _f32(st2.w))
+    if st1.comp is not None:
+        np.testing.assert_array_equal(_f32(st1.comp), _f32(st2.comp))
+    np.testing.assert_array_equal(_f32(xg1), _f32(xg2))
+    assert float(m1["loss"]) == float(m2["loss"])
+
+
+@pytest.mark.parametrize("impl", ["grid_interpret", "fused_xla"])
+def test_facade_serving_matches_legacy(impl):
+    cfg, st, x, tg = _setup("bce", weight_dtype="bf16", use_sr=False,
+                            impl=impl)
+    head = ELMOHead(cfg, batch=x.shape[0])
+    np.testing.assert_array_equal(_f32(H.head_logits(cfg, st, x)),
+                                  _f32(head.logits(st, x)))
+    v1, i1 = H.head_topk(cfg, st, x, 7)
+    v2, i2 = head.topk(st, x, 7)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    p1 = H.precision_at_k(cfg, st, x, tg, k=3)
+    p2 = head.precision_at_k(st, x, tg, k=3)
+    assert float(p1) == float(p2)
+
+
+def test_facade_sharded_entry_points_fall_back_without_mesh():
+    """No mesh → the facade's plan is single-device, byte-identical to the
+    legacy sharded wrappers (which fall back the same way)."""
+    cfg, st, x, tg = _setup("softmax_ce", weight_dtype="bf16", use_sr=False,
+                            impl="unfused_xla")
+    st1, xg1, m1 = H.head_train_step_sharded(cfg, st, x, tg, HP.lr, HP.wd,
+                                             HP.seed)
+    head = ELMOHead(cfg, batch=x.shape[0])
+    assert not head.plan.sharded
+    st2, xg2, m2 = head.train_step(st, x, tg, HP)
+    np.testing.assert_array_equal(_f32(st1.w), _f32(st2.w))
+    np.testing.assert_array_equal(_f32(xg1), _f32(xg2))
+    assert float(m1["loss"]) == float(m2["loss"])
+
+
+def test_facade_convert_and_refine_match_legacy():
+    cfg, st, x, tg = _setup("bce", weight_dtype="e4m3", impl="fused_xla")
+    to_cfg = dataclasses.replace(cfg, weight_dtype="bf16", kahan_chunks=4)
+    ref = H.convert_head(st, cfg, to_cfg)
+    got = ELMOHead(to_cfg, batch=x.shape[0]).convert_from(st, cfg)
+    np.testing.assert_array_equal(_f32(ref.w), _f32(got.w))
+    np.testing.assert_array_equal(_f32(ref.comp), _f32(got.comp))
+
+
+# ---------------------------------------------------------------------------
+# plan resolution happens once per construction (ISSUE 4 acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_resolved_once_per_construction():
+    """Construction resolves the plan; traced/jitted step, logits and topk
+    calls at the declared shapes perform ZERO further resolver entries —
+    no `_impl_split`/`_grid_ok` re-resolution inside step functions."""
+    cfg, st, x, tg = _setup("bce", impl="grid_interpret")
+    head = ELMOHead(cfg, batch=x.shape[0], target_slots=tg.shape[-1])
+    n0 = plan_mod._RESOLVE_CALLS
+
+    step = jax.jit(lambda s, xx, t: head.train_step(s, xx, t, HP))
+    st2, _, _ = step(st, x, tg)
+    step(st2, x, tg)                       # cached trace
+    jax.jit(lambda s, xx, t: head.train_step(s, xx, t, HP))(st, x, tg)
+    head.topk(st, x, 5)                    # topk plans with target_slots=1…
+    n_topk = plan_mod._RESOLVE_CALLS - n0  # …which is a different shape key
+    head.topk(st, x, 5)
+    head.logits(st, x)
+    assert plan_mod._RESOLVE_CALLS - n0 == n_topk <= 1
+
+    # same-shape train steps never re-resolved
+    head2 = ELMOHead(cfg, batch=x.shape[0], target_slots=tg.shape[-1])
+    n1 = plan_mod._RESOLVE_CALLS
+    jax.jit(lambda s, xx, t: head2.train_step(s, xx, t, HP))(st, x, tg)
+    assert plan_mod._RESOLVE_CALLS == n1
+
+
+def test_get_head_is_memoized():
+    cfg, st, x, tg = _setup("bce")
+    h1 = get_head(cfg, batch=x.shape[0], target_slots=5)
+    h2 = get_head(cfg, batch=x.shape[0], target_slots=5)
+    assert h1 is h2
+    h3 = get_head(cfg, batch=x.shape[0] * 2, target_slots=5)
+    assert h3 is not h1
+
+
+# ---------------------------------------------------------------------------
+# plan content, explain, budgets, CLI
+# ---------------------------------------------------------------------------
+
+
+def test_plan_fields_and_explain():
+    cfg, _, x, tg = _setup("softmax_ce", impl="grid_interpret",
+                           weight_dtype="bf16", use_sr=False)
+    plan = resolve_plan(cfg, batch=x.shape[0], target_slots=1)
+    assert plan.path == "grid" and plan.fallback_reason == ""
+    assert plan.block_l == cfg.chunk          # interpret keeps exact shapes
+    assert plan.cache_z                        # small head fits the budget
+    assert plan.temp_bytes > 0 and plan.vmem_bytes > 0
+    txt = plan.explain()
+    for needle in ("executed", "path=grid", "cache_z=on", "serving",
+                   "estimates"):
+        assert needle in txt, txt
+
+    # mixed Kahan: grid request falls back to the fused scan, with a reason
+    mixed = dataclasses.replace(cfg, kahan_chunks=2)
+    p2 = resolve_plan(mixed, batch=x.shape[0])
+    assert p2.path == "fused" and "Kahan" in p2.fallback_reason
+    assert "fallback" in p2.explain()
+
+    # "auto" on a non-TPU backend resolves inner to xla → fused oracle
+    if jax.default_backend() != "tpu":
+        p3 = resolve_plan(dataclasses.replace(cfg, impl="auto"),
+                          batch=x.shape[0])
+        assert p3.path == "fused" and p3.rimpl == "xla"
+
+
+def test_shim_forwards_budget_knobs():
+    """Monkeypatching the legacy module's budget constants must steer the
+    one true policy in repro.head.plan (reads AND writes forward)."""
+    orig = H._CACHE_Z_BYTES
+    assert orig == plan_mod._CACHE_Z_BYTES
+    try:
+        H._CACHE_Z_BYTES = 123
+        assert plan_mod._CACHE_Z_BYTES == 123
+        assert H._CACHE_Z_BYTES == 123
+    finally:
+        H._CACHE_Z_BYTES = orig
+    assert plan_mod._CACHE_Z_BYTES == orig
+
+    # and the plan cache keys on the budget: a changed budget re-resolves
+    cfg, _, x, _ = _setup("softmax_ce", impl="grid_interpret",
+                          weight_dtype="bf16", use_sr=False)
+    zbytes = x.shape[0] * cfg.padded_labels * 2
+    try:
+        H._CACHE_Z_BYTES = zbytes - 1
+        assert not resolve_plan(cfg, batch=x.shape[0]).cache_z
+        H._CACHE_Z_BYTES = zbytes + 1
+        assert resolve_plan(cfg, batch=x.shape[0]).cache_z
+    finally:
+        H._CACHE_Z_BYTES = orig
+
+
+def test_plan_cli_smoke_and_expectation(capsys):
+    assert plan_mod.main(["--arch", "xmc-bert-3m", "--smoke", "--explain",
+                          "--expect-path", "grid,fused"]) == 0
+    out = capsys.readouterr().out
+    assert "HeadPlan" in out and "executed" in out
+    # an impossible expectation reports the fallback and fails
+    assert plan_mod.main(["--arch", "xmc-bert-3m", "--smoke",
+                          "--expect-path", "nonexistent"]) == 1
+    assert "PLAN REGRESSION" in capsys.readouterr().out
+
+
+def test_head_config_for_matches_make_head_cfg():
+    from repro.configs import get_smoke
+    from repro.launch.steps import make_head_cfg
+    mcfg = get_smoke("xmc-bert-3m")
+    assert make_head_cfg(mcfg, "xla") == head_config_for(mcfg, "xla")
