@@ -53,8 +53,8 @@ def _train_head(cfg: H.ELMOHeadConfig, data, steps=300, lr=2.0, bs=128,
         state, _, m = step_fn(state, xtr[lo:lo + bs], ytr[lo:lo + bs],
                               jnp.uint32(i))
     train_s = time.time() - t0
-    p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1))
-    p5 = float(H.precision_at_k(cfg, state, xte, yte, k=5))
+    p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1, denom="k"))
+    p5 = float(H.precision_at_k(cfg, state, xte, yte, k=5, denom="k"))
     return {"p@1": round(p1, 4), "p@5": round(p5, 4),
             "train_s": round(train_s, 2), "loss": float(m["loss"])}
 
@@ -131,7 +131,7 @@ def bench_precision_grid(num_labels=500, d=32, steps=120):
                 lo = (i * 128) % (xtr.shape[0] - 128)
                 state = step_q(state, xtr[lo:lo + 128], ytr[lo:lo + 128],
                                jnp.int32(i))
-            p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1))
+            p1 = float(H.precision_at_k(cfg, state, xte, yte, k=1, denom="k"))
             rows.append({"name": f"grid/E{e_bits}M{m_bits}"
                                  f"{'+sr' if sr else ''}",
                          "p@1": round(p1, 4)})

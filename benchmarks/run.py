@@ -11,12 +11,56 @@ and µs/call land there via the ``kernels`` section).
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+import re
 import sys
 import time
 
 _JSON_ROWS: list = []
+
+
+def bench_files(root: str = ".") -> list:
+    """Every ``BENCH_<n>.json`` present, ordered by ``n`` — tolerating
+    gaps (BENCH_1/2 were never committed), renumbering, and stray
+    non-numeric names (ignored).  Nothing here assumes a dense sequence."""
+    out = []
+    for p in glob.glob(os.path.join(root, "BENCH_*.json")):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
+        if m:
+            out.append((int(m.group(1)), p))
+    return [p for _, p in sorted(out)]
+
+
+def load_trajectory(root: str = ".") -> list:
+    """The merged perf history across every ``BENCH_*.json``: a flat list
+    of run entries ({ts, sections, rows, file}), oldest file first.
+    Unreadable or malformed files are skipped, never fatal — the loader's
+    contract is that a gap or a bad file can't sink the whole history."""
+    hist = []
+    for p in bench_files(root):
+        try:
+            with open(p) as f:
+                entries = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue
+        if not isinstance(entries, list):
+            continue
+        for e in entries:
+            if isinstance(e, dict):
+                hist.append({**e, "file": os.path.basename(p)})
+    return hist
+
+
+def _resolve_json_path(arg: str) -> str:
+    """``--json auto`` appends to the highest-numbered existing
+    ``BENCH_<n>.json`` (or starts BENCH_1.json); anything else is a
+    literal path."""
+    if arg != "auto":
+        return arg
+    files = bench_files()
+    return files[-1] if files else "BENCH_1.json"
 
 
 def _emit(rows):
@@ -116,6 +160,12 @@ def _kernels():
     _emit(bench_fp8_logits())
 
 
+@section("serving")     # ISSUE 5: streaming top-k megakernel (DESIGN.md §9)
+def _serving():
+    from benchmarks.kernel_bench import bench_serving_topk
+    _emit(bench_serving_topk())     # 1 launch, O(B·k) temps vs materialize
+
+
 @section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows
 def _plan():
     from repro.configs import get_config
@@ -160,19 +210,37 @@ def main() -> None:
     ap.add_argument("--only", choices=list(SECTIONS), default=None)
     ap.add_argument("--json", default="BENCH_trajectory.json",
                     help="append rows to this BENCH_*.json history file "
-                         "('' disables)")
+                         "('auto' = highest-numbered existing BENCH_<n>"
+                         ".json, '' disables)")
+    ap.add_argument("--show-trajectory", action="store_true",
+                    help="print a one-line summary per recorded run "
+                         "across every BENCH_*.json (gap-tolerant) "
+                         "and exit")
     args = ap.parse_args()
+    if args.show_trajectory:
+        for e in load_trajectory():
+            print(f"{e['file']}: ts={e.get('ts')} "
+                  f"sections={','.join(e.get('sections', []))} "
+                  f"rows={len(e.get('rows', []))}")
+        return
     todo = [args.only] if args.only else list(SECTIONS)
     t0 = time.time()
+    failed = []
     for name in todo:
         print(f"# === {name} ===", flush=True)
         try:
             SECTIONS[name]()
-        except Exception as e:  # noqa: BLE001 — keep the harness running
+        except Exception as e:  # noqa: BLE001 — finish the other sections
+            failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
     if args.json:
-        _append_trajectory(args.json, todo)
+        _append_trajectory(_resolve_json_path(args.json), todo)
     print(f"# done in {time.time() - t0:.1f}s")
+    if failed:
+        # a failed section (incl. its in-bench acceptance asserts, e.g.
+        # the serving top-k parity/temp-byte gate) must fail the CI step
+        print(f"# FAILED sections: {', '.join(failed)}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

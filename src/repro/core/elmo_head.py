@@ -32,10 +32,12 @@ from repro.head.convert import convert_head, posthoc_refine     # noqa: F401
 from repro.head.plan import (_grid_ok, _grid_serving_ok,        # noqa: F401
                              _impl_split, _target_slots, _want_cache_z,
                              HeadPlan, resolve_plan)
-from repro.head.serving import (_eval_seeds, _topk_materialized,  # noqa: F401
+from repro.head.serving import (_chunk_base, _eval_seeds,  # noqa: F401
+                                _p_at_k, _serve_drop, _topk_materialized,
                                 _topk_scan, head_logits,
                                 head_logits_sharded, head_topk,
-                                head_topk_sharded, precision_at_k)
+                                head_topk_sharded, precision_at_k,
+                                psp_at_k_planned)
 from repro.head.state import (HeadState, _resolve_ctx, init_head,  # noqa: F401
                               init_xg_err)
 from repro.head.train import (_chunk_grad, _chunk_logits,       # noqa: F401

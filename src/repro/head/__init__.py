@@ -166,10 +166,24 @@ class ELMOHead:
         return _serving.topk_planned(plan, self.cfg, state, x, k)
 
     def precision_at_k(self, state: HeadState, x: jax.Array,
-                       label_ids: jax.Array, k: int) -> jax.Array:
+                       label_ids: jax.Array, k: int,
+                       denom: str = "positives") -> jax.Array:
+        """P@k over the served top-k.  ``denom="positives"`` (default)
+        divides each row by min(k, #positives); ``denom="k"`` is the
+        strict XMC-leaderboard convention (see ``serving._p_at_k``)."""
         plan = self._plan_for(x.shape[0])
         return _serving.precision_at_k_planned(plan, self.cfg, self.ctx,
-                                               state, x, label_ids, k)
+                                               state, x, label_ids, k,
+                                               denom)
+
+    def psp_at_k(self, state: HeadState, x: jax.Array,
+                 label_ids: jax.Array, propensity: jax.Array,
+                 k: int) -> jax.Array:
+        """Propensity-scored P@k (paper eq. 3) over the served top-k;
+        ``propensity`` from ``losses.propensity_scores``."""
+        plan = self._plan_for(x.shape[0])
+        return _serving.psp_at_k_planned(plan, self.cfg, self.ctx, state,
+                                         x, label_ids, propensity, k)
 
     # ---- conversion ----
 

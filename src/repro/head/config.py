@@ -51,6 +51,14 @@ class ELMOHeadConfig:
     # softmax-CE only: reuse the LSE pre-pass logits in pass 2 ("on"/"off",
     # or "auto" = on when the z cache fits plan._CACHE_Z_BYTES)
     cache_z: str = "auto"
+    # Serving historically applied DropConnect with a constant seed-0 mask
+    # (``serving._eval_seeds``) — a head trained with drop_rate > 0 served
+    # through one fixed random mask, which is neither train-time averaging
+    # nor standard eval.  Serving now defaults to drop_rate = 0 (standard
+    # "scale at train time, dense at eval" DropConnect); set True to
+    # reproduce the historical seed-0-masked serving outputs bit-for-bit
+    # (the pre-ISSUE-5 parity goldens).  Training is unaffected.
+    compat_eval_drop: bool = False
 
     @property
     def wdtype(self):

@@ -143,11 +143,19 @@ class HeadPlan:
     temp_bytes: int            # predicted per-device logit/grad transients
     # ---- serving decision (same batch) ----
     serve_grid: bool           # single-launch logits kernel usable
-    topk_materialize: bool     # one-top_k fast path fits _TOPK_Z_BYTES
+    topk_path: str             # "kernel" (streaming top-k megakernel, 1
+    #                            launch at O(B·k)) | "materialize" (logits
+    #                            launch + one top_k, ≤ _TOPK_Z_BYTES) |
+    #                            "stream" (per-chunk scan)
 
     @property
     def sharded(self) -> bool:
         return self.model_size > 1
+
+    @property
+    def topk_materialize(self) -> bool:
+        """Back-compat view of the pre-ISSUE-5 two-way serving decision."""
+        return self.topk_path == "materialize"
 
     def launches_per_step(self) -> str:
         if self.path != "grid":
@@ -178,8 +186,7 @@ class HeadPlan:
             f"transients≈{self.temp_bytes / mib:.2f} MiB "
             f"(budgets: cache_z {_CACHE_Z_BYTES / mib:.0f} MiB, "
             f"topk_z {_TOPK_Z_BYTES / mib:.0f} MiB)",
-            f"  serving    grid={self.serve_grid} "
-            f"topk={'materialize' if self.topk_materialize else 'stream'}",
+            f"  serving    grid={self.serve_grid} topk={self.topk_path}",
             f"  sharding   w/comp={self.w_spec} xg_err={self.xg_err_spec}",
         ]
         return "\n".join(lines)
@@ -316,7 +323,20 @@ def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
                   and rimpl in ("kernel", "interpret")
                   and (rimpl != "kernel" or _tuning.head_logits_viable(
                       batch, cfg.d_model, wb)))
-    topk_mat = serve_grid and batch * local_padded * 2 <= topk_budget
+    # top-k path (DESIGN.md §9): the streaming megakernel needs no z
+    # budget — 1 launch at O(B·k) for any label count — so it wins
+    # whenever it can run; the materialized fast path (logits launch +
+    # one top_k) stays as the fallback under _TOPK_Z_BYTES, and the
+    # per-chunk scan serves everything else (incl. the xla oracle, which
+    # streams through ops.fused_topk's ref path).
+    if (requested_path == "grid" and rimpl in ("kernel", "interpret")
+            and (rimpl != "kernel"
+                 or _tuning.fused_topk_viable(batch, cfg.d_model, wb))):
+        topk_path = "kernel"
+    elif serve_grid and batch * local_padded * 2 <= topk_budget:
+        topk_path = "materialize"
+    else:
+        topk_path = "stream"
 
     axis_spec = axis if n > 1 else None
     return HeadPlan(
@@ -328,7 +348,7 @@ def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
         w_spec=PS(None, axis_spec, None),
         xg_err_spec=PS(axis_spec, None, None),
         vmem_bytes=int(vmem), temp_bytes=temp_bytes,
-        serve_grid=serve_grid, topk_materialize=topk_mat)
+        serve_grid=serve_grid, topk_path=topk_path)
 
 
 def _grid_serving_ok(cfg: ELMOHeadConfig, batch: int) -> Tuple[bool, str]:
@@ -368,6 +388,9 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-path", default=None,
                     help="comma-separated allowed executed paths; exit 1 "
                          "on a silent fallback outside this set")
+    ap.add_argument("--expect-topk", default=None,
+                    help="comma-separated allowed serving top-k paths "
+                         "(kernel|materialize|stream); exit 1 otherwise")
     args = ap.parse_args(argv)
 
     mcfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -393,6 +416,12 @@ def main(argv=None) -> int:
             print(f"PLAN REGRESSION: executed path {plan.path!r} not in "
                   f"{sorted(allowed)} (fallback: "
                   f"{plan.fallback_reason or 'none'})")
+            return 1
+    if args.expect_topk:
+        allowed = {p.strip() for p in args.expect_topk.split(",")}
+        if plan.topk_path not in allowed:
+            print(f"PLAN REGRESSION: serving top-k path "
+                  f"{plan.topk_path!r} not in {sorted(allowed)}")
             return 1
     return 0
 

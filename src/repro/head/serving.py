@@ -1,13 +1,19 @@
-"""ELMO head inference: full logits, streaming/materialized top-k, P@k —
-single-device and label-sharded, plan-driven (DESIGN.md §6/§7/§8).
+"""ELMO head inference: full logits, top-k, P@k/PSP@k — single-device and
+label-sharded, plan-driven (DESIGN.md §6/§7/§8/§9).
 
-The serving grid kernel (one launch for every label block) and the
-materialized-top-k fast path are *decisions*, not call-site branches: the
-``HeadPlan`` resolves them once per (config, batch, mesh) and the planned
-functions here execute without re-deriving anything.  Bit-parity contracts
-(tie-breaks, padded-id sentinels, sharded merge order) are unchanged from
-the free-function era and pinned by tests/test_fused_head.py and the
-multi-device suite.
+Top-k serving has three plan-resolved paths (``HeadPlan.topk_path``), all
+bit-identical in values AND ids: the streaming megakernel (ONE Pallas
+launch, (B, k) carry in VMEM scratch, O(B·k) transients for any label
+count — ``kernels/fused_topk.py``), the materialized fast path (one
+logits launch + one stable ``top_k``, under ``plan._TOPK_Z_BYTES``), and
+the per-chunk streaming scan (also the xla-oracle / non-TPU production
+path).  The ``HeadPlan`` resolves the path once per (config, batch,
+mesh); the planned functions here execute without re-deriving anything.
+Bit-parity contracts (tie-breaks, padded-id sentinels, sharded merge
+order) are unchanged from the free-function era and pinned by
+tests/test_fused_head.py, tests/test_fused_topk.py and the multi-device
+suite.  Serving applies NO DropConnect by default (the historical fixed
+seed-0 eval mask is behind ``cfg.compat_eval_drop``).
 """
 from __future__ import annotations
 
@@ -21,14 +27,31 @@ from repro.core import losses as L
 from repro.head import plan as _plan
 from repro.head.config import ELMOHeadConfig
 from repro.head.state import HeadState, _resolve_ctx
-from repro.head.train import _chunk_logits
 from repro.kernels import ops
 
 
 def _eval_seeds(cfg: ELMOHeadConfig) -> jax.Array:
     """The chunk-scan serving paths draw every chunk's DropConnect mask
-    from the constant seed 0; the grid kernel reproduces that exactly."""
+    from the constant seed 0; the grid kernels reproduce that exactly.
+    Only consulted when ``cfg.compat_eval_drop`` re-enables eval-time
+    DropConnect — the default serving path is dense (drop_rate 0)."""
     return jnp.zeros((cfg.num_chunks,), jnp.uint32)
+
+
+def _serve_drop(cfg: ELMOHeadConfig) -> float:
+    """Serving DropConnect rate: 0 (dense weights — standard DropConnect
+    eval) unless ``cfg.compat_eval_drop`` asks for the historical fixed
+    seed-0 mask (pre-ISSUE-5 bit-parity goldens)."""
+    return cfg.drop_rate if cfg.compat_eval_drop else 0.0
+
+
+def _serve_chunk_logits(cfg: ELMOHeadConfig, wc: jax.Array, x: jax.Array,
+                        impl: str) -> jax.Array:
+    """One chunk of serving logits — the train-path op sequence with the
+    *serving* DropConnect policy (``_serve_drop``) instead of the train
+    rate."""
+    return ops.fp8_logits(x, wc, jnp.uint32(0), drop_rate=_serve_drop(cfg),
+                          quantize_x=cfg.qx, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -47,13 +70,13 @@ def logits_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     if plan.serve_grid:
         z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
                                   quantize_x=cfg.qx,
-                                  drop_rate=cfg.drop_rate, impl=plan.inner)
+                                  drop_rate=_serve_drop(cfg),
+                                  impl=plan.inner)
         return z[:, :cfg.num_labels]
 
     def body(_, inp):
         wc, cidx = inp
-        z = _chunk_logits(cfg, wc, x, jnp.uint32(0),
-                          plan.inner)  # no dropout at eval
+        z = _serve_chunk_logits(cfg, wc, x, plan.inner)
         return None, z
 
     _, zs = jax.lax.scan(
@@ -80,31 +103,22 @@ def _topk_scan(cfg: ELMOHeadConfig, w: jax.Array, x: jax.Array, k: int,
     """Streaming top-k over chunk slices of ``width`` label columns whose
     global offset is ``c0_of(cidx)`` — never materializes full logits.
 
-    The single scan shared by the local and sharded serving paths: ties at
-    equal logits resolve to the earliest candidate (lowest label id), and
-    padded columns (≥ num_labels) are masked to NEG_INF so they can never
-    surface; the sharded merge's tie-break contract depends on this body
-    living in exactly one place."""
-    B = x.shape[0]
+    The single scan shared by the local and sharded serving paths; the
+    carry init and the merge/tie-break body live in ``kernels.ref``
+    (``topk_carry_init`` / ``topk_merge``) — ONE home for the contract
+    that the oracle, this scan, and the Pallas megakernel all share."""
+    from repro.kernels import ref as _ref
 
     def body(carry, inp):
-        vals, idx = carry
         wc, cidx = inp
         c0 = c0_of(cidx)
-        z = _chunk_logits(cfg, wc, x, jnp.uint32(0), impl)  # no drop at eval
-        valid = (c0 + jnp.arange(width)) < cfg.num_labels
-        z = jnp.where(valid[None, :], z.astype(jnp.float32), L.NEG_INF)
-        cand = jnp.concatenate([vals, z], axis=1)
-        cand_idx = jnp.concatenate(
-            [idx, jnp.broadcast_to(c0 + jnp.arange(width), (B, width))],
-            axis=1)
-        v, local = jax.lax.top_k(cand, k)
-        return (v, jnp.take_along_axis(cand_idx, local, axis=1)), None
+        z = _serve_chunk_logits(cfg, wc, x, impl)
+        cols = c0 + jnp.arange(width)
+        return _ref.topk_merge(*carry, z, cols, k, cfg.num_labels), None
 
-    init = (jnp.full((B, k), L.NEG_INF, jnp.float32),
-            jnp.zeros((B, k), jnp.int32))
     (vals, idx), _ = jax.lax.scan(
-        body, init, (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
+        body, _ref.topk_carry_init(x.shape[0], k),
+        (w, jnp.arange(cfg.num_chunks, dtype=jnp.int32)))
     return vals, idx
 
 
@@ -129,17 +143,61 @@ def _topk_materialized(z: jax.Array, col_ids: jax.Array, num_labels: int,
     return vals, jnp.take_along_axis(cand_ids, local, axis=1)
 
 
+def _chunk_base(cfg: ELMOHeadConfig) -> jax.Array:
+    """(C,) int32 global label id of each chunk's local row 0 — the
+    ``base`` operand of the streaming top-k megakernel."""
+    return jnp.arange(cfg.num_chunks, dtype=jnp.int32) * cfg.chunk
+
+
+def _topk_exec_path(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                    B: int, k: int) -> str:
+    """``plan.topk_path``, re-gated at the query's ACTUAL k.
+
+    The plan resolves serving before any query k exists, so its kernel
+    viability check uses the nominal lane-tile k (≤ 128 shares the
+    padded carry footprint).  A compiled launch at a much larger k grows
+    the resident (B, K) carry past what the model validated — re-check
+    here and fall back (all paths are bit-identical, so the downgrade is
+    invisible in results).  Interpret/xla inners have no VMEM and keep
+    the plan's choice."""
+    from repro.kernels import tuning as _tuning
+
+    path = plan.topk_path
+    if (path == "kernel" and plan.rimpl == "kernel"
+            and not _tuning.fused_topk_viable(
+                B, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize, k)):
+        lp = cfg.padded_labels // max(1, plan.model_size)
+        if plan.serve_grid and B * lp * 2 <= _plan._TOPK_Z_BYTES:
+            return "materialize"
+        return "stream"
+    return path
+
+
 def topk_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
                  state: HeadState, x: jax.Array, k: int
                  ) -> Tuple[jax.Array, jax.Array]:
-    """Streaming top-k over chunks — never materializes full logits —
-    unless the plan chose the single-launch materialized fast path
-    (bit-identical values *and* ids; see ``_topk_materialized``)."""
+    """Top-k serving on the path the plan resolved (DESIGN.md §9) — all
+    three produce bit-identical values AND ids:
+
+    * ``"kernel"``      — ONE Pallas launch, the (B, k) running top-k
+      lives in VMEM scratch across every label block; O(B·k) transients
+      for any label count (``kernels/fused_topk.py``).
+    * ``"materialize"`` — one logits launch + one stable ``top_k`` over
+      the full width (≤ ``plan._TOPK_Z_BYTES``; see ``_topk_materialized``).
+    * ``"stream"``      — the per-chunk ``lax.scan`` (also the xla oracle
+      and the non-TPU production path)."""
     x = x.astype(jnp.bfloat16)
-    if plan.topk_materialize:
+    tpath = _topk_exec_path(plan, cfg, x.shape[0], k)
+    if tpath == "kernel":
+        return ops.fused_topk(x, state.w, _eval_seeds(cfg),
+                              _chunk_base(cfg), k=k,
+                              num_labels=cfg.num_labels, quantize_x=cfg.qx,
+                              drop_rate=_serve_drop(cfg), impl=plan.inner)
+    if tpath == "materialize":
         z = ops.fused_head_logits(x, state.w, _eval_seeds(cfg),
                                   quantize_x=cfg.qx,
-                                  drop_rate=cfg.drop_rate, impl=plan.inner)
+                                  drop_rate=_serve_drop(cfg),
+                                  impl=plan.inner)
         return _topk_materialized(z, jnp.arange(cfg.padded_labels),
                                   cfg.num_labels, k)
     return _topk_scan(cfg, state.w, x, k, cfg.chunk,
@@ -181,13 +239,14 @@ def logits_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
             # gather — same per-column values as the per-chunk scan
             zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
                                        quantize_x=cfg.qx,
-                                       drop_rate=cfg.drop_rate, impl=inner)
+                                       drop_rate=_serve_drop(cfg),
+                                       impl=inner)
             z3 = jnp.moveaxis(zl.reshape(B, cfg.num_chunks, lc), 1, 0)
             zs = jax.lax.all_gather(z3, axis, axis=2, tiled=True)
         else:
             def scan_body(_, inp):
                 wc, cidx = inp
-                zc = _chunk_logits(cfg, wc, x, jnp.uint32(0), inner)
+                zc = _serve_chunk_logits(cfg, wc, x, inner)
                 return None, jax.lax.all_gather(zc, axis, axis=1, tiled=True)
 
             _, zs = jax.lax.scan(
@@ -228,18 +287,29 @@ def topk_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     lc = plan.lc
     n = plan.model_size
     x = x.astype(jnp.bfloat16)
-    grid, inner = plan.topk_materialize, plan.inner
+    tpath = _topk_exec_path(plan, cfg, x.shape[0], k)
+    inner = plan.inner
 
     def body(w, x):
         r = jax.lax.axis_index(axis).astype(jnp.int32)
-        if grid:
-            # local candidates from one logits launch; the local column
-            # visit order (chunk-major, then row) is ascending global id
-            # for a fixed rank, so _topk_materialized's tie-break matches
-            # the streaming scan's
+        if tpath == "kernel":
+            # one streaming top-k launch over the LOCAL label blocks: the
+            # kernel's visit order (chunk-major, then row) is ascending
+            # global id for a fixed rank, so its tie-break contract
+            # matches the local streaming scan's candidate for candidate
+            base = _chunk_base(cfg) + r * lc
+            vals, idx = ops.fused_topk(x, w, _eval_seeds(cfg), base, k=k,
+                                       num_labels=cfg.num_labels,
+                                       quantize_x=cfg.qx,
+                                       drop_rate=_serve_drop(cfg),
+                                       impl=inner)
+        elif tpath == "materialize":
+            # local candidates from one logits launch (same visit-order
+            # argument as above for _topk_materialized's tie-break)
             zl = ops.fused_head_logits(x, w, _eval_seeds(cfg),
                                        quantize_x=cfg.qx,
-                                       drop_rate=cfg.drop_rate, impl=inner)
+                                       drop_rate=_serve_drop(cfg),
+                                       impl=inner)
             cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
             col_ids = ((cids * cfg.chunk + r * lc)[:, None]
                        + jnp.arange(lc, dtype=jnp.int32)[None, :]
@@ -281,22 +351,71 @@ def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def precision_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
-                           ctx, state: HeadState, x: jax.Array,
-                           label_ids: jax.Array, k: int) -> jax.Array:
-    """P@k for multi-label targets (paper's headline metric)."""
-    _, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+def _real_preds(vals: jax.Array, pred: jax.Array) -> jax.Array:
+    """(B, k) predicted ids with overflow sentinel slots masked to -1.
+
+    When k exceeds the valid candidate count, top-k overflow slots
+    surface the scan's (NEG_INF, id 0) sentinels — id 0 there is a
+    placeholder, not a prediction, and must not score a hit against a
+    genuine label 0 (it would double-count and could push P@k past 1).
+    Real logits are bf16-finite, so value ≤ NEG_INF/2 identifies a
+    sentinel exactly; -1 can never match a valid label id."""
+    return jnp.where(vals > L.NEG_INF / 2, pred, -1)
+
+
+def _p_at_k(vals: jax.Array, pred: jax.Array, label_ids: jax.Array, k: int,
+            denom: str) -> jax.Array:
+    """P@k from (B, k) top-k values/ids and (B, P) padded label ids.
+
+    ``denom`` selects the denominator convention (both are published XMC
+    practice; the difference only shows on rows with fewer than k
+    positives):
+
+    * ``"positives"`` — divide each row's hit count by min(k, #positives)
+      (and skip all-padding rows): a row with 2 positives and both in the
+      top-5 scores 1.0, not 2/5.  The default: rows can all reach 1.0.
+    * ``"k"`` — the strict P@k of the XMC leaderboards: always divide by
+      k, so rows with < k positives can never reach 1.0.
+
+    For the tail-weighted variant use ``psp_at_k`` (paper eq. 3), which
+    takes Jain et al. propensities from ``losses.propensity_scores``."""
+    assert denom in ("positives", "k"), denom
+    pred = _real_preds(vals, pred)
     hits = (pred[:, :, None] == label_ids[:, None, :]) \
         & (label_ids >= 0)[:, None, :]
-    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k
+    hit = hits.any(-1).sum(-1).astype(jnp.float32)        # (B,)
+    if denom == "k":
+        return (hit / k).mean()
+    npos = (label_ids >= 0).sum(-1).astype(jnp.float32)   # (B,)
+    per = hit / jnp.maximum(jnp.minimum(npos, float(k)), 1.0)
+    rows = (npos > 0).astype(jnp.float32)
+    return (per * rows).sum() / jnp.maximum(rows.sum(), 1.0)
+
+
+def precision_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                           ctx, state: HeadState, x: jax.Array,
+                           label_ids: jax.Array, k: int,
+                           denom: str = "positives") -> jax.Array:
+    """P@k for multi-label targets (paper's headline metric)."""
+    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    return _p_at_k(vals, pred, label_ids, k, denom)
 
 
 def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                   label_ids: jax.Array, k: int) -> jax.Array:
+                   label_ids: jax.Array, k: int,
+                   denom: str = "positives") -> jax.Array:
     """Deprecated free-function form of ``ELMOHead.precision_at_k``
     (local top-k, as historically)."""
     plan = _plan.resolve_plan(cfg, batch=x.shape[0])
-    _, pred = topk_planned(plan, cfg, state, x, k)
-    hits = (pred[:, :, None] == label_ids[:, None, :]) \
-        & (label_ids >= 0)[:, None, :]
-    return hits.any(-1).sum(-1).astype(jnp.float32).mean() / k
+    vals, pred = topk_planned(plan, cfg, state, x, k)
+    return _p_at_k(vals, pred, label_ids, k, denom)
+
+
+def psp_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig, ctx,
+                     state: HeadState, x: jax.Array, label_ids: jax.Array,
+                     propensity: jax.Array, k: int) -> jax.Array:
+    """Propensity-scored P@k (paper eq. 3) over the served top-k: the
+    psp-ready hook — ``propensity`` comes from
+    ``losses.propensity_scores(label_freq)``."""
+    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    return L.psp_at_k(_real_preds(vals, pred), label_ids, propensity, k)

@@ -1,0 +1,210 @@
+"""Pallas TPU megakernel: streaming top-k serving in ONE launch (DESIGN §9).
+
+Serving previously paid one of two prices for a top-k query batch: the
+materialized fast path ran one logits launch but held the full (B, C·lc)
+logits in HBM (gated at ``plan._TOPK_Z_BYTES``, so a 3M-label head could
+only serve tiny batches that way), or the ``lax.scan`` streaming path kept
+O(B·(k+chunk)) memory but launched one kernel per chunk and re-ranked a
+``(k+chunk)``-wide candidate set each time.  ELMO's streaming argument for
+the classifier gradient (§4.2–4.3: the big tensor is a *reduction
+intermediate* — never materialize it) applies verbatim to inference: the
+logits exist only to be reduced to (values, ids) top-k.
+
+This kernel moves the label loop into the Pallas grid, exactly like the
+train-step megakernel (``fused_head.py``): the grid walks every label
+block of every chunk, Pallas double-buffers the W stream (1 byte/elem for
+FP8 storage) so the DMA of block ``i+1`` overlaps the MXU dot of block
+``i``, and the ONLY state that persists is a (B, K) value/id running
+top-k in VMEM scratch:
+
+    grid = (C · lcp/bl,)
+    per label block (chunk c, rows [off, off+bl)):
+      z     = q8(X) @ W_blᵀ                    (MXU, f32 acc → BF16)
+      zm    = mask(z): padded / out-of-range columns → NEG_INF
+      carry = merge_topk(carry, (zm, global col ids))   [VMEM scratch]
+    last block: emit carry → (B, K) values f32, ids int32
+
+so top-k serving is 1 launch at O(B·k) transient memory for ANY label
+count — no z budget, no per-chunk launch tax.
+
+Tie-break contract (bit-for-bit the streaming scan's, ``serving._topk_scan``):
+
+* equal logits resolve to the EARLIEST candidate = lowest global label id
+  (the scan's ``lax.top_k`` is stable and ids arrive in ascending order);
+* the carry is initialized to k (NEG_INF, id 0) sentinels — the scan's
+  initial carry — so overflow slots (k beyond the valid label count)
+  surface exactly (NEG_INF, 0), never a padded label id.
+
+The in-kernel merge is a selection sort over the (K + bl)-wide candidate
+row: slot j takes the maximum value, ties broken by minimum id, then
+retires that candidate.  Retiring by setting its value to NEG_INF (id
+kept) is safe: a NEG_INF output slot can only happen while the carry
+still holds a sentinel (id 0), which wins every NEG_INF tie — so retired
+real ids can never resurface (see tests/test_fused_topk.py for the
+adversarial sweeps).  Selection by (max value, min id) is exactly the
+first-k prefix of a stable sort of ``[sentinels, cols...]`` by
+(−value, id) — the scan's contract.
+
+A per-block threshold check (``block max < carry min``, all rows) skips
+the merge entirely once the carry saturates above the block: with no
+sentinel in the carry row, nothing below the resident minimum can enter
+or reorder the top-k, so the skip is bitwise-invisible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.losses import NEG_INF
+from repro.kernels import prng_utils as PR
+from repro.kernels import tuning
+from repro.kernels.fused_head import _head_shapes
+
+_I32_MAX = 2 ** 31 - 1   # plain int: jnp scalars would be captured consts
+
+
+def _topk_kernel(sd_ref, base_ref, x_ref, w_ref, vals_out, ids_out,
+                 vals_sc, ids_sc, *, k: int, num_labels: int, lc: int,
+                 bpc: int, n_b: int, quantize_x: bool, drop_rate: float):
+    li = pl.program_id(0)
+    nb = pl.num_programs(0)
+    Bp, Dp = x_ref.shape
+    bl = w_ref.shape[1]                     # w block is (1, bl, Dp)
+    K = vals_sc.shape[1]                    # carry width (k, lane-padded)
+    cidx = li // bpc                        # chunk of this label block
+    off = (li % bpc) * bl                   # row offset inside the chunk
+
+    @pl.when(li == 0)
+    def _init():                            # the scan's initial carry
+        vals_sc[...] = jnp.full_like(vals_sc, NEG_INF)
+        ids_sc[...] = jnp.zeros_like(ids_sc)
+
+    # ---- forward: op-for-op fused_head's serving matmul (bit parity) ----
+    xq = x_ref[...]
+    if quantize_x:
+        xq = xq.astype(jnp.float8_e4m3fn)
+    xq = xq.astype(jnp.bfloat16)
+    w16 = w_ref[0].astype(jnp.bfloat16)
+    if drop_rate > 0.0:
+        bits = PR.hash_bits_2d(sd_ref[cidx], off.astype(jnp.uint32),
+                               jnp.uint32(0), (bl, Dp))
+        keep = PR.uniform_from_bits(bits) >= drop_rate
+        w16 = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
+            / jnp.bfloat16(1.0 - drop_rate)
+    z16 = jax.lax.dot_general(xq, w16, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32
+                              ).astype(jnp.bfloat16)
+
+    # global label coordinate + validity (local-row × real-label × real
+    # batch row), same construction as the train grid kernel.  Masking
+    # the padded batch rows matters for PERF, not parity (their outputs
+    # are sliced away): a padded row's z is exactly 0 on every column,
+    # so an unmasked carry would saturate at 0 and `0 >= 0` would defeat
+    # the threshold skip below for every remaining block.
+    col_local = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 1) + off
+    col_global = col_local + base_ref[cidx]
+    rowv = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 0) < n_b
+    valid = (col_global < num_labels) & (col_local < lc) & rowv
+    zm = jnp.where(valid, z16.astype(jnp.float32), NEG_INF)
+
+    # ---- threshold skip: nothing in this block can displace the carry.
+    # Padded batch rows sit at (NEG_INF carry, NEG_INF block) forever and
+    # would tie `>=` on every block — only REAL rows get a vote.
+    thresh = vals_sc[...][:, K - 1]         # per-row resident minimum
+    need = jnp.any((zm.max(axis=1) >= thresh) & rowv[:, 0])
+
+    @pl.when(need)
+    def _merge():
+        cv = jnp.concatenate([vals_sc[...], zm], axis=1)       # (Bp, K+bl)
+        ci = jnp.concatenate([ids_sc[...], col_global], axis=1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, cv.shape, 1)
+
+        def body(j, carry):
+            cv, ci = carry
+            m = cv.max(axis=1, keepdims=True)
+            tie = cv == m
+            sid = jnp.min(jnp.where(tie, ci, _I32_MAX), axis=1,
+                          keepdims=True)
+            hit = tie & (ci == sid)
+            pos = jnp.min(jnp.where(hit, iota, _I32_MAX), axis=1,
+                          keepdims=True)
+            vals_sc[:, pl.ds(j, 1)] = m
+            ids_sc[:, pl.ds(j, 1)] = sid
+            return jnp.where(iota == pos, NEG_INF, cv), ci
+
+        jax.lax.fori_loop(0, K, body, (cv, ci))
+
+    @pl.when(li == nb - 1)
+    def _emit():
+        vals_out[...] = vals_sc[...]
+        ids_out[...] = ids_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "num_labels", "quantize_x", "drop_rate", "block_l", "interpret"))
+def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
+               base: jax.Array, *, k: int, num_labels: int,
+               quantize_x: bool = True, drop_rate: float = 0.0,
+               block_l: int | None = None,
+               interpret: bool | None = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k over every head logit in ONE launch, never materializing them.
+
+    x (B, D) bf16 · w (C, lc, D) storage dtype · seeds_drop (C,) uint32
+    per-chunk DropConnect seeds · base (C,) int32 global label id of each
+    chunk's local row 0 (``cidx·chunk`` single-device, ``cidx·chunk +
+    rank·lc`` label-sharded).  Returns ((B, k) f32 values descending,
+    (B, k) int32 global ids) — bit-identical, values AND ids, to the
+    chunk-scan streaming top-k and to ``ref.fused_topk_ref``.
+    """
+    (B, D), (C, lc, _) = x.shape, w.shape
+    assert k >= 1
+    interpret = tuning.interpret_default(interpret)
+    if block_l is None:
+        if interpret:
+            # unlike the train grid, ANY label tile is bit-identical here
+            # (columns are independent and the merge is prefix-associative),
+            # so interpret mode — which has no DMA to amortize — takes a
+            # lane-sized tile: the per-block merge carrier, not the W
+            # stream, is the interpreter's live working set
+            block_l = tuning.LANE
+        else:
+            block_l = tuning.topk_block_l(B, lc, D,
+                                          jnp.dtype(w.dtype).itemsize, k)
+    Bp, Dp, lcp, bl = _head_shapes(B, D, lc, block_l, interpret)
+    # interpret mode keeps the exact carry width; compiled lanes pad it —
+    # extra slots are sentinels past k and cannot change the first k
+    K = k if interpret else tuning._pad_up(k, tuning.LANE)
+    bpc = lcp // bl
+    xp = tuning.pad2(x.astype(jnp.bfloat16), Bp, Dp)
+    # W streams as a 3-D (1, bl, Dp) block — no flatten/copy: when the
+    # shard geometry is already tile-aligned (the production case) the
+    # operand is the checkpoint buffer itself, pad-free
+    wp = w if (lcp, Dp) == (lc, D) else jnp.pad(
+        w, ((0, 0), (0, lcp - lc), (0, Dp - D)))
+
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    vals, ids = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, num_labels=num_labels, lc=lc,
+                          bpc=bpc, n_b=B, quantize_x=quantize_x,
+                          drop_rate=drop_rate),
+        grid=(C * bpc,),
+        in_specs=[smem, smem,
+                  pl.BlockSpec((Bp, Dp), lambda l: (0, 0)),
+                  pl.BlockSpec((1, bl, Dp),
+                               lambda l: (l // bpc, l % bpc, 0))],
+        out_specs=(pl.BlockSpec((Bp, K), lambda l: (0, 0)),
+                   pl.BlockSpec((Bp, K), lambda l: (0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Bp, K), jnp.float32),
+                   jax.ShapeDtypeStruct((Bp, K), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((Bp, K), jnp.float32),
+                        pltpu.VMEM((Bp, K), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(seeds_drop).astype(jnp.uint32),
+      jnp.asarray(base).astype(jnp.int32), xp, wp)
+    return vals[:B, :k], ids[:B, :k]

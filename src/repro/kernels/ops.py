@@ -20,6 +20,7 @@ from repro.kernels import flash_attention_tpu as _fa
 from repro.kernels import fp8_matmul as _fp8
 from repro.kernels import fused_chunk as _fc
 from repro.kernels import fused_head as _fh
+from repro.kernels import fused_topk as _ft
 from repro.kernels import fused_head_update as _fused
 from repro.kernels import ref as _ref
 from repro.kernels import sr_cast as _sr
@@ -149,6 +150,22 @@ def fused_head_logits(x, w, seeds_drop, *, impl: str = "auto", **kw):
     assert impl != "xla", "grid head has no XLA path; use the chunk scan"
     return _fh.fused_head_logits(x, w, seeds_drop,
                                  interpret=_interpret_of(impl), **kw)
+
+
+def fused_topk(x, w, seeds_drop, base, *, k: int, num_labels: int,
+               impl: str = "auto", **kw):
+    """Streaming top-k serving in one launch (kernels/fused_topk.py):
+    (B, k) values/ids over every label block, the logits never leave
+    VMEM.  ``impl="xla"`` runs the chunk-scan oracle (same tie-break
+    contract, bit-identical) — the non-TPU production path."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        kw.pop("block_l", None)     # the oracle scan has no label tile
+        return _ref.fused_topk_ref(x, w, seeds_drop, base, k=k,
+                                   num_labels=num_labels, **kw)
+    return _ft.fused_topk(x, w, seeds_drop, base, k=k,
+                          num_labels=num_labels,
+                          interpret=_interpret_of(impl), **kw)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,

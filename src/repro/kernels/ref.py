@@ -111,6 +111,67 @@ def fused_chunk_ref(x: jax.Array, w: jax.Array, targets: jax.Array,
                     z if return_z else None)
 
 
+def topk_carry_init(B: int, k: int) -> tuple[jax.Array, jax.Array]:
+    """The streaming top-k initial carry: k (NEG_INF, id 0) sentinels per
+    row — what overflow slots surface when k exceeds the candidates."""
+    from repro.core.losses import NEG_INF  # local import: core ↔ kernels
+    return (jnp.full((B, k), NEG_INF, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+
+
+def topk_merge(vals: jax.Array, idx: jax.Array, z: jax.Array,
+               cols: jax.Array, k: int, num_labels: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Fold one block of logits into a (B, k) running top-k — THE
+    streaming tie-break contract, in exactly one place (the serving scan,
+    this module's oracle, and — op-for-op in its selection-sort form —
+    the Pallas megakernel all reproduce it): columns with global id
+    ``cols`` ≥ num_labels are masked to NEG_INF, candidates are
+    ``[carry, block]`` with the block in ascending-id order, and
+    ``lax.top_k`` is stable — so equal logits resolve to the lowest label
+    id, and padded columns lose every NEG_INF tie to the earlier
+    sentinels/carry."""
+    from repro.core.losses import NEG_INF  # local import: core ↔ kernels
+
+    B, width = z.shape
+    zm = jnp.where((cols < num_labels)[None, :], z.astype(jnp.float32),
+                   NEG_INF)
+    cand = jnp.concatenate([vals, zm], axis=1)
+    cand_i = jnp.concatenate(
+        [idx, jnp.broadcast_to(cols, (B, width))], axis=1)
+    v, sel = jax.lax.top_k(cand, k)
+    return v, jnp.take_along_axis(cand_i, sel, axis=1)
+
+
+def fused_topk_ref(x: jax.Array, w: jax.Array, seeds: jax.Array,
+                   base: jax.Array, *, k: int, num_labels: int,
+                   quantize_x: bool = True, drop_rate: float = 0.0
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the streaming top-k serving megakernel
+    (``kernels/fused_topk.py``) — and the non-TPU production path: a
+    ``lax.scan`` over chunks carrying a (B, k) running top-k, O(B·(k+lc))
+    memory, never materializing the full logits.  The merge body is
+    ``topk_merge`` above — shared with ``head.serving._topk_scan``.
+
+    ``base`` (C,) int32 is each chunk's global label id of local row 0
+    (``cidx·chunk`` single-device, ``cidx·chunk + rank·lc`` sharded)."""
+    B = x.shape[0]
+    lc = w.shape[1]
+
+    def body(carry, inp):
+        wc, sd, b0 = inp
+        z = fp8_logits_ref(x, wc, sd, drop_rate=drop_rate,
+                           quantize_x=quantize_x)
+        cols = b0 + jnp.arange(lc, dtype=jnp.int32)
+        return topk_merge(*carry, z, cols, k, num_labels), None
+
+    (vals, idx), _ = jax.lax.scan(
+        body, topk_carry_init(B, k),
+        (w, jnp.asarray(seeds).astype(jnp.uint32),
+         jnp.asarray(base).astype(jnp.int32)))
+    return vals, idx
+
+
 def flash_attention_fwd_ref(q, k, v, causal: bool = True, window=None):
     """Dense softmax-attention oracle for the Pallas flash kernel.
     q: (B, H, Sq, dh); k, v: (B, KH, Sk, dh) — O(S²), tests/tiny only."""

@@ -233,6 +233,51 @@ def head_grid_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
     return LANE
 
 
+def _topk_vmem(B: int, D: int, bl: int, w_bytes: int, k: int) -> int:
+    """Streaming top-k serving megakernel working-set model at label tile
+    ``bl`` (``kernels/fused_topk.py``, DESIGN.md §9) — the single source of
+    truth for its tile chooser and viability gate.
+
+    Resident across the whole launch: X and the (B, K) value/id running
+    top-k (carry + double-buffered output blocks).  Per tile: the
+    double-buffered W stream, the masked logits block, and the selection
+    merge's (B, K+bl) candidate value/id pair."""
+    Bp = _pad_up(max(B, 1), 16)
+    Dp = _pad_up(max(D, 1), LANE)
+    Kp = _pad_up(max(k, 1), LANE)
+    resident = (Bp * Dp * 2              # X bf16
+                + Bp * Kp * 8            # running (vals f32, ids i32)
+                + 2 * Bp * Kp * 8)       # out blocks, double-buffered
+    per_tile = (2 * bl * Dp * w_bytes    # W stream, double-buffered
+                + Bp * bl * 10           # z16 + masked f32 + col ids
+                + Bp * (Kp + bl) * 8)    # merge candidate (value, id) pair
+    return resident + per_tile
+
+
+@functools.lru_cache(maxsize=None)
+def topk_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
+                 k: int = 128) -> int:
+    """Label-row tile for the streaming top-k grid (one launch walks
+    ``num_chunks · lc/bl`` blocks).  Largest fitting candidate wins —
+    fewer merge steps and longer DMA/MXU overlap windows.  Returns LANE
+    when nothing fits; compiled callers gate on ``fused_topk_viable``."""
+    for bl in sorted(set(_cands(lc, cap=4096)), reverse=True):
+        if _topk_vmem(B, D, bl, w_bytes, k) <= VMEM_BUDGET:
+            return bl
+    return LANE
+
+
+@functools.lru_cache(maxsize=None)
+def fused_topk_viable(B: int, D: int, w_bytes: int = 1,
+                      k: int = 128) -> bool:
+    """Whether the streaming top-k megakernel fits VMEM at the smallest
+    tile — same model ``topk_block_l`` minimizes over.  ``k`` defaults to
+    one lane tile (the plan resolves the serving path before the query k
+    is known; any k ≤ 128 shares the padded carry footprint).  When False,
+    serving falls back to the materialized or chunk-scan path."""
+    return _topk_vmem(B, D, LANE, w_bytes, k) <= VMEM_BUDGET
+
+
 @functools.lru_cache(maxsize=None)
 def head_logits_viable(B: int, D: int, w_bytes: int = 1) -> bool:
     """Whether the logits-only grid kernel (serving: ``fused_head_logits``)

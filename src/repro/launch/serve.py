@@ -1,11 +1,15 @@
-"""Serving driver: batched prefill + greedy decode.
+"""Serving driver: batched prefill + greedy decode, and the batched
+top-k serving bench (ISSUE 5).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --prompt-len 16 --gen 8
+    PYTHONPATH=src python -m repro.launch.serve --arch xmc-bert-3m --smoke \
+        --bench --batch 64 --k 5 --queries 256
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -51,6 +55,73 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, impl: str = "auto",
                   "decode_tok_s": batch * (gen - 1) / max(decode_s, 1e-9)}
 
 
+def _buckets(sizes, max_batch: int):
+    """Pad each ragged query-group size up to a power-of-two bucket
+    (≤ max_batch): one compiled top-k program per bucket instead of one
+    per distinct batch size."""
+    out = []
+    for s in sizes:
+        b = 1
+        while b < min(int(s), max_batch):
+            b *= 2
+        out.append(min(b, max_batch))
+    return out
+
+
+def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
+               seed: int = 0, verbose_plan: bool = False) -> dict:
+    """Batched top-k serving bench: padded-bucket microbatching over
+    ``ELMOHead.topk``.
+
+    Queries arrive in ragged groups; each group is padded up to a
+    power-of-two bucket so only O(log batch) programs compile, and the
+    report carries queries/sec plus the per-query HBM traffic of the
+    streaming kernel path: the whole W stream (1 byte/elem FP8)
+    amortized over the bucket, + x in, + the (B, k) result out — the
+    logits never touch HBM.  (Donating the query buffer would be a
+    no-op: no output can alias a (B, D) bf16 donor — the results are
+    (B, k) f32/int32 — so XLA would warn and copy; the loop instead just
+    drops each batch after its call.)"""
+    head_cfg = St.make_head_cfg(cfg, impl)
+    head = RH.get_head(head_cfg, batch=batch)
+    if verbose_plan:
+        print(head.plan.explain(), flush=True)
+    state = head.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+
+    @functools.partial(jax.jit, static_argnames=("b",))
+    def run(s, x, b):
+        del b   # static key: one program per bucket width
+        return head.topk(s, x, k)
+
+    n_groups = max(1, queries // max(1, batch // 2))
+    sizes = rng.integers(1, batch + 1, size=n_groups)
+    buckets = _buckets(sizes, batch)
+    xs = [jnp.asarray(rng.standard_normal((b, cfg.d_model)), jnp.bfloat16)
+          for b in buckets]
+    for x, b in zip(xs, buckets):           # warm up every bucket program
+        jax.block_until_ready(run(state, x, b=b))
+    t0 = time.time()
+    for x, b in zip(xs, buckets):
+        vals, ids = run(state, x, b=b)
+    jax.block_until_ready((vals, ids))
+    dt = max(time.time() - t0, 1e-9)
+
+    n_q = int(np.sum(sizes))
+    n_padded = int(np.sum(buckets))
+    w_bytes = int(np.prod(state.w.shape)) * jnp.dtype(state.w.dtype).itemsize
+    per_query_hbm = (w_bytes / max(1, min(buckets))
+                     + cfg.d_model * 2 + k * 8)
+    return {
+        "queries": n_q, "padded_rows": n_padded, "k": k,
+        "topk_path": head.plan.topk_path,
+        "qps": n_q / dt, "wall_s": dt,
+        "per_query_hbm_bytes": int(per_query_hbm),
+        "w_bytes": w_bytes,
+        "bucket_sizes": sorted(set(buckets)),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -60,8 +131,25 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--plan", action="store_true",
                     help="print the resolved HeadPlan before serving")
+    ap.add_argument("--bench", action="store_true",
+                    help="batched top-k serving bench (padded-bucket "
+                         "microbatching, donated buffers)")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--queries", type=int, default=256)
     args = ap.parse_args()
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.bench:
+        stats = topk_bench(cfg, batch=args.batch, k=args.k,
+                           queries=args.queries,
+                           impl="xla" if args.smoke else "auto",
+                           verbose_plan=args.plan)
+        print(f"topk bench: {stats['queries']} queries "
+              f"(padded {stats['padded_rows']}) k={stats['k']} "
+              f"path={stats['topk_path']} buckets={stats['bucket_sizes']}")
+        print(f"  {stats['qps']:.1f} queries/s, "
+              f"{stats['per_query_hbm_bytes'] / 2**20:.2f} MiB "
+              "HBM traffic/query (W stream amortized over the bucket)")
+        return
     seqs, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen, impl="xla" if args.smoke else "auto",
                         verbose_plan=args.plan)

@@ -243,6 +243,40 @@ def check_grid_sr_fp8_distributional():
     print("grid SR/FP8 distributional ok")
 
 
+def check_topk_kernel_sharded_parity():
+    """ISSUE 5: the streaming top-k megakernel under label sharding
+    (local single-launch top-k → all-gather n·k → (−value, id) re-rank)
+    is bit-identical — values AND ids — to the single-device kernel AND
+    to the historical streaming scan, on 1×4, 2×2 and 4×1 meshes,
+    including k beyond the local shard width and beyond num_labels."""
+    import dataclasses
+
+    from repro.head import plan as plan_mod
+    from repro.head import serving
+
+    cfg, st, x, _ = _mk("bce", "bf16", kahan=0, use_sr=False,
+                        impl="grid_interpret")
+    plan1 = plan_mod.resolve_plan(cfg, batch=B)
+    assert plan1.topk_path == "kernel", plan1.topk_path
+    for k in (10, 300, 1010):        # k > lc (=64 on 4 shards), k ≥ NL
+        k = min(k, cfg.padded_labels)
+        v1, i1 = H.head_topk(cfg, st, x, k)
+        vs, is_ = serving.topk_planned(
+            dataclasses.replace(plan1, topk_path="stream"), cfg, st, x, k)
+        assert (_f32(v1) == _f32(vs)).all(), k
+        assert (np.asarray(i1) == np.asarray(is_)).all(), k
+        for mesh_shape in ((1, 4), (2, 2), (4, 1)):
+            ctx = make_host_mesh(*mesh_shape)
+            with meshctx.use(ctx):
+                vS, iS = jax.jit(
+                    lambda s, x: H.head_topk_sharded(cfg, s, x, k))(st, x)
+            assert (_f32(v1) == _f32(vS)).all(), (k, mesh_shape)
+            assert (np.asarray(i1) == np.asarray(iS)).all(), (k, mesh_shape)
+            assert (np.asarray(iS)[:, :min(k, NL)] < NL).all(), \
+                (k, mesh_shape)
+    print("sharded streaming-top-k kernel parity ok")
+
+
 def check_facade_matches_legacy():
     """ISSUE 4: the ``ELMOHead`` facade (plan resolved once at
     construction, ambient or explicit mesh) is bit-identical to every
@@ -317,6 +351,7 @@ if __name__ == "__main__":
     check_compressed_xg()
     check_grid_bit_parity()
     check_grid_sharded_serving()
+    check_topk_kernel_sharded_parity()
     check_grid_sr_fp8_distributional()
     check_facade_matches_legacy()
     check_train_step_picks_sharded_head()
