@@ -1,16 +1,25 @@
-"""Fault-tolerant training: checkpoint → crash → elastic resume.
+"""Fault-tolerant training: checkpoint → crash → elastic resume, plus a
+corrupted-checkpoint fallback (DESIGN.md §10).
 
     PYTHONPATH=src python examples/fault_tolerant_train.py
 
 Trains, checkpoints asynchronously, simulates a crash, restores from the
 last committed checkpoint (including the deterministic data cursor), and
-verifies the loss trajectory continues seamlessly.
+verifies the loss trajectory continues seamlessly.  Then flips one bit in
+the newest committed checkpoint — restore detects the crc mismatch,
+demotes it, and falls back to the previous committed step.
 """
 import shutil
 import tempfile
 
+import jax
+
+from repro.checkpoint import latest_committed, restore_checkpoint
 from repro.configs import get_smoke
+from repro.fault import inject
+from repro.launch.steps import init_train_state
 from repro.launch.train import train
+from repro.optim import kahan_adamw
 
 
 def main():
@@ -27,6 +36,18 @@ def main():
         print(f"resumed at step 30, continued to 45; "
               f"loss {losses2[0]:.3f} → {losses2[-1]:.3f}")
         assert len(losses2) == 15  # resumed from step 30, not 0
+
+        print("-- simulated storage corruption: bit-flip the newest "
+              "checkpoint --")
+        newest = latest_committed(ckpt)
+        assert newest.endswith("ckpt_00000040")
+        inject.bit_flip_leaf(newest, leaf_index=0)
+        template = init_train_state(jax.random.PRNGKey(0), cfg,
+                                    kahan_adamw(), impl="xla")
+        # the crc mismatch demotes ckpt 40; restore falls back to 30
+        _, step, _ = restore_checkpoint(ckpt, template)
+        print(f"corrupt checkpoint demoted; fell back to step {step}")
+        assert step == 30, step
     finally:
         shutil.rmtree(ckpt, ignore_errors=True)
     print("fault_tolerant_train OK")

@@ -1,6 +1,10 @@
-"""Mesh-independent sharded checkpointing with async writes and elastic
-restore."""
-from repro.checkpoint.ckpt import (CheckpointManager, restore_checkpoint,
-                                   save_checkpoint)
+"""Mesh-independent sharded checkpointing: crash-safe commits, per-leaf
+checksums, async writes with surfaced errors, elastic restore."""
+from repro.checkpoint.ckpt import (CheckpointError, CheckpointManager,
+                                   committed_paths, latest_committed,
+                                   restore_checkpoint, save_checkpoint,
+                                   verify_checkpoint)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = ["CheckpointError", "CheckpointManager", "committed_paths",
+           "latest_committed", "restore_checkpoint", "save_checkpoint",
+           "verify_checkpoint"]

@@ -1,26 +1,43 @@
-"""Sharded, mesh-independent checkpointing (no orbax dependency).
+"""Sharded, mesh-independent, crash-safe checkpointing (no orbax).
 
 Layout (one directory per step):
 
     ckpt_000123/
-      manifest.json         # treedef, leaf paths, shapes, dtypes, step,
-                            # data cursor, mesh that wrote it (informative)
-      leaf_00000.npy        # one .npy per leaf (f8 stored as raw uint8)
+      manifest.json         # treedef, leaf paths, shapes, dtypes, per-leaf
+                            # crc32 checksums, step, data cursor, head-plan
+                            # metadata, mesh that wrote it (informative)
+      leaf_00000.npy        # one .npy per leaf (f8/bf16 stored as raw bits)
       ...
-      COMMITTED             # written LAST — crash-safe commit marker
+      COMMITTED             # written LAST — crash-safe commit marker; holds
+                            # the manifest's own crc32 (torn-manifest guard)
 
-Key properties for the 1000+-node story:
+Commit protocol (DESIGN.md §10):
+
+1. leaves + manifest are written into ``ckpt_N.tmp/``;
+2. ``COMMITTED`` (containing the manifest crc32) is flushed + fsynced;
+3. ``ckpt_N.tmp`` is atomically renamed to ``ckpt_N``.
+
+A crash at any point leaves either a ``.tmp`` partial (garbage-collected by
+``latest_committed``) or a fully committed step.  Every leaf's crc32 is
+recorded in the manifest and re-verified on restore: a torn or bit-flipped
+leaf **demotes** the checkpoint (``COMMITTED`` → ``CORRUPT`` with the
+reason) and restore falls back to the previous committed step.
+
+Key properties for the elastic-restart story:
 
 * **Mesh-independent restore**: leaves are saved as full logical arrays and
   restored with ``jax.device_put(..., NamedSharding(new_mesh, spec))`` — the
-  job can come back on a different pod count / mesh shape (elastic restart).
-* **Async double-buffered saves**: ``CheckpointManager.save_async`` snapshots
-  to host memory synchronously (cheap) and writes to disk on a background
-  thread, so the train loop only blocks for the device→host copy.
-* **Crash safety**: a checkpoint without COMMITTED is ignored and garbage-
-  collected; the previous committed step is used instead.
-* **Data-cursor**: the manifest stores (epoch, step, shard cursor) so the
-  deterministic data pipeline resumes exactly (repro.data).
+  job can come back on a different pod count / mesh shape.
+* **Async double-buffered saves**: ``CheckpointManager.save_async``
+  snapshots to host memory synchronously (cheap) and writes to disk on a
+  background thread; a failed background write is surfaced as a
+  ``CheckpointError`` on the next ``save_async``/``wait`` instead of
+  vanishing in the daemon thread.
+* **Bit-exact low precision**: FP8 / BF16 leaves are stored as raw bits
+  (bitcast to uint8/uint16), so FP8 W and the BF16 Kahan compensation
+  survive a round trip bit-for-bit — the resume-determinism contract.
+* **Data-cursor**: the manifest stores the *next* (seed, step) cursor so
+  the deterministic data pipeline resumes exactly (repro.data).
 
 On a real multi-host cluster each host writes only the shards it owns
 (``process_allgather`` is avoided); in this single-process harness the full
@@ -28,11 +45,13 @@ array is local already.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +59,17 @@ import numpy as np
 
 _F8_TYPES = {"float8_e4m3fn": jnp.float8_e4m3fn, "float8_e5m2": jnp.float8_e5m2,
              "bfloat16": jnp.bfloat16}
+
+FORMAT_VERSION = 2
+
+
+class CheckpointError(RuntimeError):
+    """Raised for failed writes (surfaced from the background thread) and
+    for restores with no intact committed checkpoint to fall back to."""
+
+
+class _LeafCorrupt(Exception):
+    """Internal: one leaf failed its integrity check (torn / bit-flipped)."""
 
 
 def _leaf_paths(tree):
@@ -65,124 +95,263 @@ def _from_numpy(x: np.ndarray, dtype_str: str) -> np.ndarray:
     return x
 
 
-def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra: Optional[dict] = None) -> str:
-    """Synchronous commit-marked save. Returns the checkpoint path."""
+def _checksum(arr: np.ndarray) -> str:
+    return f"crc32:{zlib.crc32(np.ascontiguousarray(arr).tobytes()):08x}"
+
+
+@dataclasses.dataclass
+class _LeafRecord:
+    """One leaf snapshotted to host memory, ready for the writer thread."""
+    name: str
+    data: np.ndarray          # storage representation (bits for f8/bf16)
+    dtype: str                # logical dtype string
+    shape: List[int]          # logical shape
+
+
+def _snapshot(tree: Any) -> List[_LeafRecord]:
+    names, leaves, _ = _leaf_paths(tree)
+    return [_LeafRecord(n, _to_numpy(l), str(l.dtype), list(l.shape))
+            for n, l in zip(names, leaves)]
+
+
+def _fsync_write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _write_snapshot(directory: str, step: int, records: List[_LeafRecord],
+                    extra: Optional[dict], keep: Optional[int] = None) -> str:
+    """The one commit path shared by sync and async saves."""
     path = os.path.join(directory, f"ckpt_{step:08d}")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
-    os.makedirs(tmp, exist_ok=True)
-    names, leaves, _ = _leaf_paths(tree)
-    manifest = {"step": step, "extra": extra or {}, "leaves": []}
-    for i, (name, leaf) in enumerate(zip(names, leaves)):
-        arr = _to_numpy(leaf)
+    os.makedirs(tmp)
+    manifest = {"format": FORMAT_VERSION, "step": step, "extra": extra or {},
+                "leaves": []}
+    for i, rec in enumerate(records):
         fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        np.save(os.path.join(tmp, fname), rec.data)
         manifest["leaves"].append({
-            "name": name, "file": fname, "shape": list(leaf.shape),
-            "dtype": str(leaf.dtype)})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
-        f.write("ok")
+            "name": rec.name, "file": fname, "shape": rec.shape,
+            "dtype": rec.dtype, "checksum": _checksum(rec.data)})
+    mtext = json.dumps(manifest)
+    _fsync_write(os.path.join(tmp, "manifest.json"), mtext)
+    _fsync_write(os.path.join(tmp, "COMMITTED"), json.dumps(
+        {"manifest_crc32": f"{zlib.crc32(mtext.encode()):08x}"}))
     if os.path.exists(path):
         shutil.rmtree(path)
     os.rename(tmp, path)
+    if keep is not None:
+        _gc_old(directory, keep)
     return path
 
 
-def latest_committed(directory: str) -> Optional[str]:
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous commit-marked save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    return _write_snapshot(directory, step, _snapshot(tree), extra)
+
+
+def _demote(path: str, reason: str) -> None:
+    """Strip the commit marker from a corrupt checkpoint so every future
+    ``latest_committed`` skips it; record why for the postmortem."""
+    marker = os.path.join(path, "COMMITTED")
+    try:
+        os.replace(marker, os.path.join(path, "CORRUPT"))
+    except OSError:
+        pass
+    try:
+        with open(os.path.join(path, "CORRUPT"), "a") as f:
+            f.write("\n" + reason)
+    except OSError:
+        pass
+
+
+def committed_paths(directory: str) -> List[str]:
+    """All committed checkpoint dirs, ascending by step; GCs ``.tmp``
+    partials (crashed mid-write) as a side effect."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    out = []
     for d in sorted(os.listdir(directory)):
         full = os.path.join(directory, d)
         if d.startswith("ckpt_") and not d.endswith(".tmp") \
                 and os.path.exists(os.path.join(full, "COMMITTED")):
-            best = full
-        elif d.endswith(".tmp"):
+            out.append(full)
+        elif d.startswith("ckpt_") and d.endswith(".tmp"):
             shutil.rmtree(full, ignore_errors=True)   # GC partial saves
-    return best
+    return out
+
+
+def latest_committed(directory: str) -> Optional[str]:
+    paths = committed_paths(directory)
+    return paths[-1] if paths else None
+
+
+def _read_manifest(path: str) -> dict:
+    """Parse + integrity-check a committed checkpoint's manifest.
+
+    Raises ``_LeafCorrupt`` on a torn manifest (crc mismatch against the
+    COMMITTED marker, or unparseable json)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            mtext = f.read()
+        manifest = json.loads(mtext)
+    except (OSError, json.JSONDecodeError) as e:
+        raise _LeafCorrupt(f"manifest unreadable: {e!r}")
+    try:
+        with open(os.path.join(path, "COMMITTED")) as f:
+            marker = f.read()
+        rec = json.loads(marker)
+        want = rec.get("manifest_crc32")
+    except (OSError, json.JSONDecodeError):
+        want = None    # legacy "ok" marker: no manifest crc recorded
+    if want is not None and f"{zlib.crc32(mtext.encode()):08x}" != want:
+        raise _LeafCorrupt("manifest crc mismatch (torn manifest write)")
+    return manifest
+
+
+def _load_leaf(path: str, entry: dict, verify: bool) -> np.ndarray:
+    """np.load one leaf and verify its recorded checksum.
+
+    Raises ``_LeafCorrupt`` on torn files (np.load fails) or bit flips
+    (crc mismatch)."""
+    try:
+        raw = np.load(os.path.join(path, entry["file"]))
+    except (OSError, ValueError, EOFError) as e:
+        raise _LeafCorrupt(f"{entry['name']}: unreadable ({e!r})")
+    want = entry.get("checksum")
+    if verify and want is not None and _checksum(raw) != want:
+        raise _LeafCorrupt(f"{entry['name']}: checksum mismatch "
+                           f"({_checksum(raw)} != {want})")
+    return raw
+
+
+def verify_checkpoint(path: str) -> Tuple[bool, str]:
+    """Full integrity check of one checkpoint dir: commit marker, manifest
+    crc, every leaf's existence + crc32.  Returns (ok, reason)."""
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        return False, "no COMMITTED marker"
+    try:
+        manifest = _read_manifest(path)
+        for entry in manifest["leaves"]:
+            _load_leaf(path, entry, verify=True)
+    except _LeafCorrupt as e:
+        return False, str(e)
+    except KeyError as e:
+        return False, f"malformed manifest: {e!r}"
+    return True, ""
+
+
+def _resolve_shardings(shardings, treedef, names, t_leaves):
+    """``shardings`` may be None, a matching pytree of Shardings, or a
+    callable ``(leaf_name, template_leaf) -> Optional[Sharding]``."""
+    if shardings is None:
+        return [None] * len(t_leaves)
+    if callable(shardings):
+        return [shardings(n, l) for n, l in zip(names, t_leaves)]
+    return treedef.flatten_up_to(shardings)
 
 
 def restore_checkpoint(directory: str, template: Any,
-                       shardings: Any = None) -> tuple[Any, int, dict]:
+                       shardings: Union[None, Any, Callable] = None,
+                       verify: bool = True) -> tuple[Any, int, dict]:
     """Restore into ``template``'s structure; reshard onto ``shardings``
-    (a matching tree of jax.sharding.Sharding) if given — this is the
-    elastic-restart path (mesh may differ from the writer's)."""
-    path = latest_committed(directory)
-    assert path is not None, f"no committed checkpoint under {directory}"
-    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    (a matching tree of jax.sharding.Sharding, or a callable
+    ``(name, leaf) -> Sharding``) if given — the elastic-restart path (the
+    mesh may differ from the writer's).
+
+    Integrity: each leaf's crc32 is re-verified against the manifest; a
+    corrupt or torn checkpoint is demoted to uncommitted (``COMMITTED`` →
+    ``CORRUPT``) and restore falls back to the previous committed step.
+    Raises ``CheckpointError`` when no intact committed checkpoint remains.
+    """
     names, t_leaves, treedef = _leaf_paths(template)
-    by_name = {e["name"]: e for e in manifest["leaves"]}
-    shard_leaves = (treedef.flatten_up_to(shardings)
-                    if shardings is not None else [None] * len(t_leaves))
-    out = []
-    for name, tl, sh in zip(names, t_leaves, shard_leaves):
-        entry = by_name[name]
-        raw = np.load(os.path.join(path, entry["file"]))
-        arr = _from_numpy(raw, entry["dtype"])
-        assert list(tl.shape) == entry["shape"], \
-            f"{name}: shape changed {entry['shape']} → {tl.shape}"
-        if sh is not None and not isinstance(sh, jax.sharding.PartitionSpec):
-            out.append(jax.device_put(arr, sh))
-        else:
-            out.append(jnp.asarray(arr).astype(tl.dtype))
-    return (jax.tree_util.tree_unflatten(treedef, out),
-            manifest["step"], manifest.get("extra", {}))
+    shard_leaves = _resolve_shardings(shardings, treedef, names, t_leaves)
+    while True:
+        path = latest_committed(directory)
+        if path is None:
+            raise CheckpointError(
+                f"no intact committed checkpoint under {directory}")
+        try:
+            manifest = _read_manifest(path)
+            by_name = {e["name"]: e for e in manifest["leaves"]}
+            out = []
+            for name, tl, sh in zip(names, t_leaves, shard_leaves):
+                entry = by_name.get(name)
+                if entry is None:
+                    raise ValueError(
+                        f"{path}: leaf {name!r} missing from manifest — "
+                        "template structure changed since the save")
+                raw = _load_leaf(path, entry, verify)
+                arr = _from_numpy(raw, entry["dtype"])
+                if list(tl.shape) != entry["shape"]:
+                    raise ValueError(f"{name}: shape changed "
+                                     f"{entry['shape']} → {list(tl.shape)}")
+                if sh is not None and not isinstance(
+                        sh, jax.sharding.PartitionSpec):
+                    out.append(jax.device_put(arr, sh))
+                else:
+                    out.append(jnp.asarray(arr).astype(tl.dtype))
+        except _LeafCorrupt as e:
+            _demote(path, str(e))
+            print(f"checkpoint {os.path.basename(path)} corrupt ({e}); "
+                  "falling back to previous committed step", flush=True)
+            continue
+        return (jax.tree_util.tree_unflatten(treedef, out),
+                manifest["step"], manifest.get("extra", {}))
+
+
+def _gc_old(directory: str, keep: int) -> None:
+    cks = sorted(d for d in os.listdir(directory)
+                 if d.startswith("ckpt_") and not d.endswith(".tmp"))
+    for d in cks[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
 class CheckpointManager:
-    """Async double-buffered manager with retention."""
+    """Async double-buffered manager with retention and error surfacing.
+
+    The background writer never swallows exceptions: a failed disk write is
+    stored and re-raised as ``CheckpointError`` from the next ``wait()`` or
+    ``save_async()`` — the train loop finds out *before* it deletes the
+    state the failed checkpoint was supposed to protect."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def wait(self):
+        """Join the in-flight write; raise if it (or a previous one)
+        failed."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                f"background checkpoint write failed: {err!r}") from err
 
     def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
-        """Blocks only for device→host transfer; disk I/O on a thread."""
+        """Blocks only for device→host transfer; disk I/O on a thread.
+        Raises ``CheckpointError`` if the previous background write
+        failed."""
         self.wait()
-        host_tree = jax.tree.map(_to_numpy, tree)   # snapshot now
-        names, leaves, treedef = _leaf_paths(tree)
-        dtypes = [str(l.dtype) for l in leaves]
+        records = _snapshot(tree)   # device→host now; bit-exact f8/bf16
 
         def _write():
-            # rebuild a tree of (numpy, dtype) for save
-            h_names, h_leaves, h_treedef = _leaf_paths(host_tree)
-            path = os.path.join(self.directory, f"ckpt_{step:08d}")
-            tmp = path + ".tmp"
-            os.makedirs(tmp, exist_ok=True)
-            manifest = {"step": step, "extra": extra or {}, "leaves": []}
-            for i, (name, arr, dt) in enumerate(
-                    zip(h_names, h_leaves, dtypes)):
-                fname = f"leaf_{i:05d}.npy"
-                np.save(os.path.join(tmp, fname), arr)
-                manifest["leaves"].append({
-                    "name": name, "file": fname,
-                    "shape": list(np.asarray(arr).shape)
-                    if dt not in ("bfloat16",) else list(arr.shape),
-                    "dtype": dt})
-            json.dump(manifest, open(os.path.join(tmp, "manifest.json"), "w"))
-            open(os.path.join(tmp, "COMMITTED"), "w").write("ok")
-            if os.path.exists(path):
-                shutil.rmtree(path)
-            os.rename(tmp, path)
-            self._gc()
+            try:
+                _write_snapshot(self.directory, step, records, extra,
+                                keep=self.keep)
+            except BaseException as e:   # surfaced on next wait/save_async
+                self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
-
-    def _gc(self):
-        cks = sorted(d for d in os.listdir(self.directory)
-                     if d.startswith("ckpt_") and not d.endswith(".tmp"))
-        for d in cks[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, d),
-                          ignore_errors=True)

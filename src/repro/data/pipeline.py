@@ -50,14 +50,20 @@ def _host_slice(global_batch: int, host_id: int, n_hosts: int) -> slice:
 
 def lm_batches(vocab: int, global_batch: int, seq: int, cursor: DataCursor,
                host_id: int = 0, n_hosts: int = 1) -> Iterator[dict]:
-    """Synthetic LM stream: tokens (B, S) + next-token targets (B, S)."""
+    """Synthetic LM stream: tokens (B, S) + next-token targets (B, S).
+
+    Each batch carries ``cursor`` (the state that *generated* it) and
+    ``next_cursor`` (the state of the batch after it).  Checkpoints must
+    store ``next_cursor``: a restore replays the first *unconsumed* batch,
+    not the one the saved step already trained on."""
     sl = _host_slice(global_batch, host_id, n_hosts)
     while True:
         rng = _rng_for(cursor)
+        nxt = DataCursor(cursor.seed, cursor.step + 1)
         toks = rng.integers(0, vocab, (global_batch, seq + 1), dtype=np.int32)
         yield {"tokens": toks[sl, :-1], "targets": toks[sl, 1:],
-               "cursor": cursor.state()}
-        cursor = DataCursor(cursor.seed, cursor.step + 1)
+               "cursor": cursor.state(), "next_cursor": nxt.state()}
+        cursor = nxt
 
 
 def synthetic_xmc(rng: np.random.Generator, batch: int, seq: int, vocab: int,
@@ -79,8 +85,9 @@ def xmc_batches(vocab: int, num_labels: int, global_batch: int, seq: int,
     sl = _host_slice(global_batch, host_id, n_hosts)
     while True:
         rng = _rng_for(cursor)
+        nxt = DataCursor(cursor.seed, cursor.step + 1)
         toks, labels = synthetic_xmc(rng, global_batch, seq, vocab,
                                      num_labels, max_pos)
         yield {"tokens": toks[sl], "targets": labels[sl],
-               "cursor": cursor.state()}
-        cursor = DataCursor(cursor.seed, cursor.step + 1)
+               "cursor": cursor.state(), "next_cursor": nxt.state()}
+        cursor = nxt

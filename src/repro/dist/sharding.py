@@ -125,6 +125,21 @@ def head_specs(cfg, n_model: int):
     return HeadState(w=w_spec, comp=comp_spec)
 
 
+def head_state_shardings(state: HeadState, mesh, model_axis: str = "model"):
+    """``NamedSharding`` tree matching ``state`` for elastic checkpoint
+    restore: label rows over ``model_axis``, sanitized per leaf.  Pass to
+    ``checkpoint.restore_checkpoint(..., shardings=...)`` to land restored
+    full-logical leaves directly on a (possibly reshaped) mesh."""
+    def ns(leaf):
+        if leaf is None:
+            return None
+        spec = sanitize_spec(leaf.shape, P(None, model_axis, None), mesh)
+        return jax.sharding.NamedSharding(mesh, spec)
+
+    return jax.tree.map(ns, state,
+                        is_leaf=lambda x: x is None or hasattr(x, "shape"))
+
+
 def batch_specs(cfg, batch_axes) -> dict:
     """Specs for every possible step-function input key (dim 0 = batch)."""
     b = tuple(batch_axes)

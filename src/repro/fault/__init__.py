@@ -1,5 +1,7 @@
-"""Fault tolerance: heartbeat, straggler detection, elastic restart driver."""
-from repro.fault.runtime import (ElasticController, Heartbeat,
+"""Fault tolerance: heartbeat, straggler detection, elastic restart driver,
+and the fault-injection harness (``repro.fault.inject``)."""
+from repro.fault.runtime import (ElasticController, Heartbeat, HostFailure,
                                  StragglerMonitor, retry)
 
-__all__ = ["Heartbeat", "StragglerMonitor", "ElasticController", "retry"]
+__all__ = ["Heartbeat", "HostFailure", "StragglerMonitor",
+           "ElasticController", "retry"]

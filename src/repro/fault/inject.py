@@ -1,0 +1,192 @@
+"""Fault injection: the drivers tests use to *prove* the runtime is fault
+tolerant, instead of trusting it.
+
+* ``run_and_kill``       — subprocess driver: launch a training CLI, watch
+                           its heartbeat file, SIGKILL it the moment it
+                           reaches step N (a real preemption: no atexit, no
+                           flush, in-flight async checkpoint writes torn).
+* ``bit_flip_leaf`` /    — checkpoint corruption: flip one bit in a
+  ``truncate_leaf`` /      committed leaf, tear a leaf mid-file, or tear
+  ``truncate_manifest``    the manifest itself.  Restore must detect all
+                           three via the manifest checksums and fall back.
+* ``write_heartbeat`` /  — simulated fleet: beat for hosts that do not
+  ``make_stale``           exist in this single-process harness, then age
+                           one past the timeout to trigger ``HostFailure``.
+* ``FlakyBatches``       — transient data-pipeline errors: raises on
+                           scheduled fetches, then recovers — the train
+                           loop's ``retry`` wrapper must absorb it without
+                           skipping or duplicating a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+from typing import Iterator, List, Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# kill-at-step-N subprocess driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KillResult:
+    killed: bool               # True iff we SIGKILLed it (vs ran to exit)
+    step_seen: int             # last heartbeat step observed
+    returncode: Optional[int]
+    stdout: str
+    stderr: str
+
+
+def _read_hb_step(hb_file: str) -> Optional[int]:
+    try:
+        with open(hb_file) as f:
+            return int(json.load(f)["step"])
+    except (FileNotFoundError, json.JSONDecodeError, KeyError, ValueError):
+        return None            # not written yet / mid-replace
+
+
+def run_and_kill(argv: Sequence[str], *, hb_file: str, kill_step: int,
+                 env: Optional[dict] = None, poll_s: float = 0.02,
+                 timeout_s: float = 600.0) -> KillResult:
+    """Launch ``argv``, poll its heartbeat file, SIGKILL at ``kill_step``.
+
+    The heartbeat is the same file the fault runtime watches
+    (``<ckpt_dir>/hb/host_0000.hb``), so the kill lands mid-step — after
+    the step's compute, possibly mid-checkpoint-write.  Returns a
+    ``KillResult``; ``killed=False`` means the run finished first."""
+    proc = subprocess.Popen(list(argv), env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    deadline = time.time() + timeout_s
+    step_seen = -1
+    killed = False
+    while proc.poll() is None:
+        if time.time() > deadline:
+            proc.kill()
+            out, err = proc.communicate()
+            raise TimeoutError(f"run_and_kill: {timeout_s}s elapsed before "
+                               f"step {kill_step} (saw {step_seen})\n"
+                               + out[-2000:] + err[-2000:])
+        step = _read_hb_step(hb_file)
+        if step is not None:
+            step_seen = step
+            if step >= kill_step:
+                proc.send_signal(signal.SIGKILL)
+                killed = True
+                break
+        time.sleep(poll_s)
+    out, err = proc.communicate()
+    return KillResult(killed=killed, step_seen=step_seen,
+                      returncode=proc.returncode, stdout=out, stderr=err)
+
+
+def train_argv(*args: str) -> List[str]:
+    """``python -m repro.launch.train <args>`` with this interpreter."""
+    return [sys.executable, "-m", "repro.launch.train", *args]
+
+
+def subprocess_env(repo_src: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = repo_src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption
+# ---------------------------------------------------------------------------
+
+
+def _leaf_file(ckpt_path: str, leaf_index: int) -> str:
+    with open(os.path.join(ckpt_path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return os.path.join(ckpt_path, manifest["leaves"][leaf_index]["file"])
+
+
+def bit_flip_leaf(ckpt_path: str, leaf_index: int = 0,
+                  byte_offset: Optional[int] = None, bit: int = 3) -> str:
+    """Flip one bit in a committed leaf file (silent storage corruption —
+    undetectable without the manifest checksums).  Returns the file."""
+    fname = _leaf_file(ckpt_path, leaf_index)
+    with open(fname, "r+b") as f:
+        data = bytearray(f.read())
+        # default: a payload byte well past the .npy header
+        off = byte_offset if byte_offset is not None else len(data) - 1
+        data[off] ^= (1 << bit)
+        f.seek(0)
+        f.write(data)
+    return fname
+
+
+def truncate_leaf(ckpt_path: str, leaf_index: int = 0,
+                  keep_fraction: float = 0.5) -> str:
+    """Tear a leaf write: keep only the leading fraction of the file."""
+    fname = _leaf_file(ckpt_path, leaf_index)
+    size = os.path.getsize(fname)
+    with open(fname, "r+b") as f:
+        f.truncate(max(1, int(size * keep_fraction)))
+    return fname
+
+
+def truncate_manifest(ckpt_path: str, keep_bytes: int = 40) -> str:
+    """Tear the manifest itself (crash between leaf and manifest fsync)."""
+    fname = os.path.join(ckpt_path, "manifest.json")
+    with open(fname, "r+b") as f:
+        f.truncate(keep_bytes)
+    return fname
+
+
+# ---------------------------------------------------------------------------
+# simulated fleet heartbeats
+# ---------------------------------------------------------------------------
+
+
+def write_heartbeat(hb_dir: str, host: int, step: int,
+                    t: Optional[float] = None) -> None:
+    """Beat on behalf of a simulated peer host."""
+    os.makedirs(hb_dir, exist_ok=True)
+    path = os.path.join(hb_dir, f"host_{host:04d}.hb")
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"step": step, "t": time.time() if t is None else t}, f)
+    os.replace(tmp, path)
+
+
+def make_stale(hb_dir: str, host: int, age_s: float = 1e6) -> None:
+    """Age a peer's heartbeat past any timeout — a dead/preempted host."""
+    write_heartbeat(hb_dir, host, step=0, t=time.time() - age_s)
+
+
+# ---------------------------------------------------------------------------
+# transient data-pipeline errors
+# ---------------------------------------------------------------------------
+
+
+class FlakyBatches:
+    """Wrap a batch iterator with scheduled transient failures.
+
+    ``fail_fetches`` indexes the *fetch attempts* (0-based) that raise;
+    the underlying iterator is only advanced on success, so a retried
+    fetch yields exactly the batch an unfailed run would have seen."""
+
+    def __init__(self, inner: Iterator[dict], fail_fetches: Sequence[int],
+                 exc: type = OSError):
+        self._inner = inner
+        self._fail = set(fail_fetches)
+        self._exc = exc
+        self._fetches = 0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        i = self._fetches
+        self._fetches += 1
+        if i in self._fail:
+            raise self._exc(f"injected transient data error (fetch {i})")
+        return next(self._inner)

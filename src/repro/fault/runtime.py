@@ -31,6 +31,22 @@ import time
 from typing import Callable, Dict, List, Optional
 
 
+class HostFailure(RuntimeError):
+    """A peer's heartbeat went stale mid-run.  Raised from inside the train
+    loop (launch/train.py); the elastic driver catches it, plans the
+    shrunken fleet with ``ElasticController`` and re-enters training from
+    the last committed checkpoint."""
+
+    def __init__(self, dead: List[int], alive: List[int], step: int,
+                 losses: Optional[List[float]] = None):
+        super().__init__(f"hosts {dead} failed at step {step} "
+                         f"(alive: {alive})")
+        self.dead = dead
+        self.alive = alive
+        self.step = step
+        self.losses = losses or []
+
+
 class Heartbeat:
     """File-based heartbeat (stands in for a distributed KV store)."""
 
@@ -49,18 +65,28 @@ class Heartbeat:
             json.dump({"step": step, "t": now or time.time()}, f)
         os.replace(tmp, self._path(self.host_id))
 
+    def _read(self, host: int) -> Optional[dict]:
+        try:
+            with open(self._path(host)) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def records(self, n_hosts: int) -> Dict[int, dict]:
+        """Latest ``{"step", "t"}`` record per host that has ever beaten
+        (feeds ``StragglerMonitor`` with peer step times)."""
+        out = {}
+        for h in range(n_hosts):
+            rec = self._read(h)
+            if rec is not None:
+                out[h] = rec
+        return out
+
     def alive_hosts(self, n_hosts: int, now: Optional[float] = None
                     ) -> List[int]:
         now = now or time.time()
-        alive = []
-        for h in range(n_hosts):
-            try:
-                rec = json.load(open(self._path(h)))
-                if now - rec["t"] <= self.timeout_s:
-                    alive.append(h)
-            except (FileNotFoundError, json.JSONDecodeError):
-                pass
-        return alive
+        return [h for h, rec in self.records(n_hosts).items()
+                if now - rec["t"] <= self.timeout_s]
 
 
 @dataclasses.dataclass
@@ -84,6 +110,8 @@ class StragglerMonitor:
 def retry(fn: Callable, attempts: int = 3, base_delay_s: float = 1.0,
           retriable=(RuntimeError, OSError), sleep=time.sleep):
     """Exponential backoff around transient launcher-side failures."""
+    if attempts < 1:
+        raise ValueError(f"retry needs attempts >= 1, got {attempts}")
     for i in range(attempts):
         try:
             return fn()

@@ -54,7 +54,8 @@ from repro.head.convert import convert_head, posthoc_refine
 from repro.head.plan import HeadPlan, resolve_plan
 from repro.head.serving import (head_logits, head_logits_sharded, head_topk,
                                 head_topk_sharded, precision_at_k)
-from repro.head.state import HeadState, init_head, init_xg_err
+from repro.head.state import (HeadState, init_head, init_xg_err,
+                              state_bits_equal)
 from repro.head.train import head_train_step
 from repro.head.train_sharded import head_train_step_sharded
 
@@ -65,6 +66,7 @@ __all__ = [
     "head_logits_sharded", "head_topk", "head_topk_sharded",
     "head_train_step", "head_train_step_sharded", "init_head",
     "init_xg_err", "posthoc_refine", "precision_at_k", "resolve_plan",
+    "state_bits_equal",
 ]
 
 _AMBIENT = object()   # sentinel: "capture the ambient mesh at construction"

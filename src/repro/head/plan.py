@@ -157,6 +157,18 @@ class HeadPlan:
         """Back-compat view of the pre-ISSUE-5 two-way serving decision."""
         return self.topk_path == "materialize"
 
+    def checkpoint_meta(self) -> dict:
+        """What a checkpoint of this head's state must record (DESIGN.md
+        §10): the shard layout W/comp were saved under (informative — leaves
+        are stored full-logical and reshard on restore), the label geometry
+        a restore's template must match bit-for-bit, and the backend the
+        trajectory is deterministic on.  ``launch.train`` writes this into
+        every manifest's ``extra``; restore cross-checks it before
+        continuing a run."""
+        return {"model_size": self.model_size, "model_axis": self.model_axis,
+                "w_spec": str(self.w_spec), "lc": self.lc,
+                "path": self.path, "backend": self.backend}
+
     def launches_per_step(self) -> str:
         if self.path != "grid":
             return "O(num_chunks)"
@@ -188,6 +200,8 @@ class HeadPlan:
             f"topk_z {_TOPK_Z_BYTES / mib:.0f} MiB)",
             f"  serving    grid={self.serve_grid} topk={self.topk_path}",
             f"  sharding   w/comp={self.w_spec} xg_err={self.xg_err_spec}",
+            f"  checkpoint full-logical leaves, reshard on restore; "
+            f"manifest meta={self.checkpoint_meta()} (DESIGN.md §10)",
         ]
         return "\n".join(lines)
 

@@ -44,3 +44,21 @@ def init_xg_err(cfg: ELMOHeadConfig, batch: int, ctx=None) -> jax.Array:
     (model_size, B, D) BF16, row r owned by model rank r."""
     _, n = _resolve_ctx(ctx)
     return jnp.zeros((n, batch, cfg.d_model), P.BF16)
+
+
+def state_bits_equal(a: HeadState, b: HeadState) -> bool:
+    """Bitwise equality of two head states — the resume-determinism
+    contract (DESIGN.md §10).  FP8 W and the BF16 Kahan compensation
+    compare as raw bits: float comparison would call two states "equal"
+    whose Kahan carries differ in the low bits that make pure-low-precision
+    training stable."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.shape != ya.shape or xa.dtype != ya.dtype:
+            return False
+        if xa.tobytes() != ya.tobytes():
+            return False
+    return True

@@ -5,13 +5,31 @@ tolerance, under any mesh.
         --smoke --steps 20 --ckpt-dir /tmp/ckpt
 
 ``--smoke`` uses the reduced config (CPU-runnable end to end); without it
-the full config is used (requires a real fleet).  The loop demonstrates the
-production contract: deterministic data cursor in every checkpoint, async
-saves, heartbeat + straggler hooks, elastic restore on restart.
+the full config is used (requires a real fleet).  The loop implements the
+production contract (DESIGN.md §10):
+
+* deterministic **next**-batch data cursor and the head's
+  ``HeadPlan.checkpoint_meta()`` in every checkpoint manifest;
+* async checksummed saves whose background failures surface in the loop;
+* restore-before-shard: an elastic restart restores the last committed
+  (intact) checkpoint and *then* places the head per ``dist.sharding`` —
+  a mesh-shape change across the restart is just a different placement;
+* per-step heartbeats; a stale peer raises ``HostFailure`` out of the
+  loop, and ``run_elastic`` re-plans the fleet with ``ElasticController``
+  and re-enters training from the checkpoint;
+* transient data-pipeline errors absorbed by ``fault.retry`` around the
+  batch fetch (the iterator is only advanced on success);
+* peer step-times fed to ``StragglerMonitor`` from heartbeat records.
+
+A SIGKILL at ANY point resumes bit-identically: state, data cursor and the
+step-derived SR/DropConnect seeds are all functions of the committed step.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import shutil
 import time
 
 import jax
@@ -26,7 +44,8 @@ from repro.checkpoint.ckpt import latest_committed
 from repro.configs import get_config, get_smoke
 from repro.data import DataCursor, lm_batches, xmc_batches
 from repro.dist import meshctx, sharding
-from repro.fault import Heartbeat, StragglerMonitor
+from repro.fault import (ElasticController, Heartbeat, HostFailure,
+                         StragglerMonitor, retry)
 from repro.launch import steps as St
 from repro.launch.mesh import make_host_mesh
 from repro.optim import kahan_adamw, linear_warmup_constant
@@ -43,8 +62,9 @@ def make_batches(cfg, global_batch: int, seq: int, cursor: DataCursor,
 
 def _shard_head(state: St.TrainState, cfg, ctx) -> St.TrainState:
     """Place the head per ``dist.sharding.head_specs`` (label rows over the
-    model axis) so the sharded step starts from a vocab-parallel layout
-    instead of resharding replicated weights every step."""
+    model axis).  Runs AFTER checkpoint restore, so an elastic restart onto
+    a different mesh shape is just this placement applied to the restored
+    full-logical leaves."""
     specs = sharding.head_specs(cfg, ctx.model_size)
     mesh = ctx.mesh
 
@@ -59,13 +79,31 @@ def _shard_head(state: St.TrainState, cfg, ctx) -> St.TrainState:
     return state._replace(head=head)
 
 
+def _check_restore_meta(extra: dict, cfg) -> None:
+    """Cross-check the manifest's head-plan metadata against this run's
+    config: a weight-dtype change cannot be resumed bit-identically (the
+    mesh MAY change — leaves are full-logical; see HeadPlan.checkpoint_meta)."""
+    meta = extra.get("head_plan")
+    if not meta:
+        return
+    want = getattr(cfg, "head_weight_dtype", None)
+    got = meta.get("weight_dtype")
+    if want is not None and got is not None and got != want:
+        raise RuntimeError(
+            f"checkpoint was written with head weight_dtype={got!r} but this "
+            f"run uses {want!r}; convert explicitly (repro.head.convert) "
+            "instead of resuming")
+
+
 def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
           head_lr: float = 0.05, backbone_lr: float = 2e-5,
           ckpt_every: int = 50, impl: str = "auto", log_every: int = 1,
           host_id: int = 0, n_hosts: int = 1, n_data: int = 1,
-          n_model: int = 1):
+          n_model: int = 1, hb_timeout: float = 60.0, data_retries: int = 3,
+          on_step=None):
     """``n_model`` > 1 runs the label-sharded head (vocab parallelism over a
-    host mesh — DESIGN.md §6); ``n_data`` shards the batch on top."""
+    host mesh — DESIGN.md §6); ``n_data`` shards the batch on top.
+    ``on_step(i)`` is an observation hook (fault injection, tests)."""
     ctx = (make_host_mesh(n_data, n_model)
            if n_data * n_model > 1 else None)
     with (meshctx.use(ctx) if ctx is not None else contextlib.nullcontext()):
@@ -73,13 +111,15 @@ def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
                             seq=seq, ckpt_dir=ckpt_dir, head_lr=head_lr,
                             backbone_lr=backbone_lr, ckpt_every=ckpt_every,
                             impl=impl, log_every=log_every, host_id=host_id,
-                            n_hosts=n_hosts)
+                            n_hosts=n_hosts, hb_timeout=hb_timeout,
+                            data_retries=data_retries, on_step=on_step)
 
 
 def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
                  ckpt_dir: str, head_lr: float, backbone_lr: float,
                  ckpt_every: int, impl: str, log_every: int,
-                 host_id: int, n_hosts: int):
+                 host_id: int, n_hosts: int, hb_timeout: float,
+                 data_retries: int, on_step):
     opt = kahan_adamw()
     sched = linear_warmup_constant(backbone_lr, warmup_steps=100)
 
@@ -95,18 +135,29 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
                        batch=(mb if cfg.pool == "first" else mb * seq),
                        target_slots=RH.default_target_slots(cfg))
     print(head.plan.explain(), flush=True)
-    if ctx is not None and ctx.model_size > 1:
-        state = _shard_head(state, cfg, ctx)
     cursor = DataCursor(seed=1234, step=0)
     start = 0
     if ckpt_dir and latest_committed(ckpt_dir):
+        # restore BEFORE sharding: leaves come back full-logical; the
+        # placement below reshards them onto whatever mesh this (possibly
+        # shrunken) incarnation runs — corrupt/torn checkpoints are demoted
+        # inside restore_checkpoint and the previous committed step is used
         state, start, extra = restore_checkpoint(ckpt_dir, state)
+        _check_restore_meta(extra, cfg)
         cursor = DataCursor.from_state(extra.get("cursor", cursor.state()))
         print(f"restored step {start} (data cursor {cursor})", flush=True)
+    if ctx is not None and ctx.model_size > 1:
+        state = _shard_head(state, cfg, ctx)
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    hb = Heartbeat(ckpt_dir + "/hb", host_id) if ckpt_dir else None
+    hb = (Heartbeat(os.path.join(ckpt_dir, "hb"), host_id,
+                    timeout_s=hb_timeout) if ckpt_dir else None)
     monitor = StragglerMonitor()
+    ckpt_meta = {"head_plan": dict(head.plan.checkpoint_meta(),
+                                   weight_dtype=hcfg.weight_dtype),
+                 "mesh": {"n_hosts": n_hosts,
+                          "shape": None if ctx is None
+                          else dict(ctx.mesh.shape)}}
 
     @jax.jit
     def jstep(state, tokens, targets, frontend, lr_b):
@@ -119,8 +170,14 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
 
     batches = make_batches(cfg, global_batch, seq, cursor, host_id, n_hosts)
     losses = []
-    for i, batch in zip(range(start, steps), batches):
+    peer_beats = {}
+    for i in range(start, steps):
         t0 = time.time()
+        # transient pipeline errors (flaky storage, preempted reader) are
+        # retried; the iterator only advances on success so no batch is
+        # skipped or duplicated
+        batch = retry(lambda: next(batches), attempts=data_retries,
+                      base_delay_s=0.01)
         frontend = None
         if cfg.frontend == "audio_frames":
             frontend = jnp.asarray(
@@ -141,15 +198,85 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
         monitor.record(host_id, dt)
         if hb:
             hb.beat(i)
+        if on_step is not None:
+            on_step(i)
+        if hb is not None and n_hosts > 1:
+            # feed peer step times (from their heartbeat records) to the
+            # straggler monitor, then check liveness: a stale peer stalls
+            # the whole SPMD program, so bail to the elastic driver
+            for h, rec in hb.records(n_hosts).items():
+                prev = peer_beats.get(h)
+                if prev and rec["step"] > prev["step"]:
+                    monitor.record(h, (rec["t"] - prev["t"])
+                                   / (rec["step"] - prev["step"]))
+                peer_beats[h] = rec
+            lagging = [h for h in monitor.stragglers() if h != host_id]
+            if lagging and i % log_every == 0:
+                print(f"step {i:5d}  stragglers {lagging} "
+                      "(candidates for preemptive replacement)", flush=True)
+            alive = hb.alive_hosts(n_hosts)
+            if len(alive) < n_hosts:
+                dead = sorted(set(range(n_hosts)) - set(alive))
+                if mgr:
+                    mgr.wait()      # land the in-flight save before bailing
+                raise HostFailure(dead=dead, alive=alive, step=i,
+                                  losses=losses)
         if i % log_every == 0:
             print(f"step {i:5d}  loss {loss:.4f}  {dt*1000:.0f} ms",
                   flush=True)
         if mgr and (i + 1) % ckpt_every == 0:
+            # the NEXT batch's cursor: restore must replay the first
+            # unconsumed batch, not re-train the one this step just saw
             mgr.save_async(i + 1, state,
-                           extra={"cursor": batch["cursor"]})
+                           extra=dict(ckpt_meta,
+                                      cursor=batch["next_cursor"]))
     if mgr:
         mgr.wait()
     return state, losses
+
+
+def run_elastic(cfg, *, steps: int, global_batch: int, seq: int,
+                ckpt_dir: str, n_hosts: int, controller=None,
+                max_restarts: int = 4, **kw):
+    """The supervision path: train under heartbeat watch; on a dead host,
+    plan the shrunken fleet with ``ElasticController``, clear the stale
+    heartbeat fleet, and re-enter ``train`` — which restores the last
+    committed checkpoint (with its data cursor) and continues.
+
+    Returns ``(state, losses, restarts)`` where ``losses`` concatenates
+    every incarnation's steps (failed attempts contribute the steps they
+    completed before the failure was detected)."""
+    controller = controller or ElasticController(n_hosts=n_hosts,
+                                                 min_hosts=1)
+    hosts = list(range(n_hosts))
+    all_losses: list = []
+    restarts = 0
+    while True:
+        try:
+            state, losses = train(cfg, steps=steps,
+                                  global_batch=global_batch, seq=seq,
+                                  ckpt_dir=ckpt_dir, host_id=0,
+                                  n_hosts=len(hosts), **kw)
+            return state, all_losses + losses, restarts
+        except HostFailure as e:
+            plan = controller.plan_after_failure(e.alive)
+            print(f"host failure at step {e.step}: dead={e.dead} → {plan}",
+                  flush=True)
+            if plan["action"] != "restart" or restarts >= max_restarts:
+                raise
+            # steps the failed incarnation completed are real: they are in
+            # the committed checkpoint the next incarnation resumes from
+            ckpt_step = 0
+            last = latest_committed(ckpt_dir)
+            if last is not None:
+                ckpt_step = int(os.path.basename(last)[len("ckpt_"):])
+            all_losses += e.losses[:max(0, ckpt_step - (e.step + 1
+                                                        - len(e.losses)))]
+            hosts = plan["hosts"]
+            # the next incarnation starts a fresh heartbeat fleet (dead
+            # hosts' stale files must not instantly re-fail it)
+            shutil.rmtree(os.path.join(ckpt_dir, "hb"), ignore_errors=True)
+            restarts += 1
 
 
 def main():
@@ -160,20 +287,33 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--head-lr", type=float, default=0.05)
     ap.add_argument("--backbone-lr", type=float, default=2e-5)
     ap.add_argument("--n-data", type=int, default=1,
                     help="data-parallel mesh axis size")
     ap.add_argument("--n-model", type=int, default=1,
                     help="model mesh axis size (label-sharded head)")
+    ap.add_argument("--vocab", type=int, default=None,
+                    help="vocab override for --smoke (smaller = faster)")
+    ap.add_argument("--losses-out", default="",
+                    help="write {start, losses} json (fault-injection "
+                         "harness compares trajectories across kills)")
     args = ap.parse_args()
 
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    overrides = {"vocab": args.vocab} if args.vocab else {}
+    cfg = (get_smoke(args.arch, **overrides) if args.smoke
+           else get_config(args.arch))
     _, losses = train(cfg, steps=args.steps, global_batch=args.global_batch,
                       seq=args.seq, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
                       head_lr=args.head_lr, backbone_lr=args.backbone_lr,
                       impl="xla" if args.smoke else "auto",
                       n_data=args.n_data, n_model=args.n_model)
+    if args.losses_out:
+        with open(args.losses_out, "w") as f:
+            json.dump({"start": args.steps - len(losses),
+                       "losses": losses}, f)
     print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
 
 

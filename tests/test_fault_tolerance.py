@@ -1,0 +1,545 @@
+"""Fault-tolerance suite (ISSUE 6): crash-safe checksummed checkpointing,
+bit-identical kill/resume, elastic supervision, and the injection harness.
+
+The contract under test (DESIGN.md §10):
+
+* a checkpoint with a torn or bit-flipped leaf (or torn manifest) is
+  detected via per-leaf crc32, demoted to uncommitted, and restore falls
+  back to the previous committed step;
+* a background ``save_async`` failure surfaces as ``CheckpointError`` on
+  the next ``save_async``/``wait`` (never silently lost);
+* a training run SIGKILLed at an arbitrary step resumes from the last
+  committed checkpoint and reproduces the **bit-identical** W / Kahan /
+  loss trajectory of an uninterrupted run — including SR / DropConnect
+  seed replay across the resume boundary and the exact data-batch order;
+* a stale peer heartbeat raises ``HostFailure`` out of the train loop and
+  ``run_elastic`` re-plans the fleet and continues from the checkpoint.
+"""
+import json
+import os
+import warnings
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import head as RH
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              latest_committed, restore_checkpoint,
+                              save_checkpoint, verify_checkpoint)
+from repro.checkpoint import ckpt as ckpt_mod
+from repro.configs import get_smoke
+from repro.data import DataCursor, lm_batches, xmc_batches
+from repro.fault import (ElasticController, Heartbeat, HostFailure, retry)
+from repro.fault import inject
+from repro.kernels import prng_utils as PR
+from repro.launch import train as train_mod
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_GOLDEN = os.path.join(REPO, "tests", "goldens",
+                       "train_smollm_360m_smoke.json")
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "fp8": (jnp.ones((64,), jnp.float32) * 0.37).astype(
+            jnp.float8_e4m3fn),
+        "bf16": (jnp.ones((4, 4)) * 1.5).astype(jnp.bfloat16),
+        "nested": {"step": jnp.int32(7)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# corruption safety: checksums, demotion, fallback
+# ---------------------------------------------------------------------------
+
+
+def test_bit_flip_detected_and_falls_back(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree, extra={"mark": 1})
+    p2 = save_checkpoint(str(tmp_path), 2, tree, extra={"mark": 2})
+    ok, _ = verify_checkpoint(p2)
+    assert ok
+    inject.bit_flip_leaf(p2, leaf_index=1)
+    ok, reason = verify_checkpoint(p2)
+    assert not ok and "checksum mismatch" in reason
+    restored, step, extra = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1 and extra["mark"] == 1
+    # the corrupt checkpoint is demoted: no longer committed, reason kept
+    assert latest_committed(str(tmp_path)).endswith("ckpt_00000001")
+    assert not os.path.exists(os.path.join(p2, "COMMITTED"))
+    assert os.path.exists(os.path.join(p2, "CORRUPT"))
+
+
+def test_torn_leaf_falls_back(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 3, tree, extra={"mark": 3})
+    p = save_checkpoint(str(tmp_path), 4, tree)
+    inject.truncate_leaf(p, leaf_index=0, keep_fraction=0.4)
+    _, step, extra = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3 and extra["mark"] == 3
+
+
+def test_torn_manifest_falls_back(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    p = save_checkpoint(str(tmp_path), 2, tree)
+    inject.truncate_manifest(p)
+    _, step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 1
+
+
+def test_no_intact_checkpoint_raises(tmp_path):
+    tree = _tree()
+    p = save_checkpoint(str(tmp_path), 1, tree)
+    inject.bit_flip_leaf(p, leaf_index=0)
+    with pytest.raises(CheckpointError, match="no intact committed"):
+        restore_checkpoint(str(tmp_path), tree)
+
+
+def test_roundtrip_bit_exact_low_precision(tmp_path):
+    """FP8 / BF16 leaves survive the round trip as raw bits (the Kahan
+    compensation buffer must come back exactly, App. D)."""
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 5, tree)
+    restored, step, _ = restore_checkpoint(str(tmp_path), tree)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_tmp_partials_garbage_collected(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), 1, tree)
+    partial = tmp_path / "ckpt_00000002.tmp"
+    partial.mkdir()
+    (partial / "leaf_00000.npy").write_bytes(b"torn")
+    assert latest_committed(str(tmp_path)).endswith("ckpt_00000001")
+    assert not partial.exists()
+
+
+# ---------------------------------------------------------------------------
+# async manager: background-failure surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_save_async_error_propagates(tmp_path, monkeypatch):
+    """A failed background disk write must raise from the next
+    ``save_async``/``wait`` — and must not destroy the previous committed
+    checkpoint (regression: the daemon thread used to swallow it)."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save_async(1, tree, extra={"s": 1})
+    mgr.wait()
+
+    real_save = ckpt_mod.np.save
+    boom = {"armed": True}
+
+    def flaky_save(path, arr):
+        if boom["armed"]:
+            raise OSError("disk full (injected)")
+        return real_save(path, arr)
+
+    monkeypatch.setattr(ckpt_mod.np, "save", flaky_save)
+    mgr.save_async(2, tree, extra={"s": 2})
+    with pytest.raises(CheckpointError, match="background checkpoint"):
+        mgr.wait()
+    # error is cleared once surfaced; the store still serves step 1
+    assert latest_committed(str(tmp_path)).endswith("ckpt_00000001")
+    boom["armed"] = False
+    mgr.save_async(3, tree, extra={"s": 3})
+    mgr.wait()
+    _, step, extra = restore_checkpoint(str(tmp_path), tree)
+    assert step == 3 and extra["s"] == 3
+
+
+def test_save_async_error_surfaces_on_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    monkeypatch.setattr(ckpt_mod.np, "save",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("injected")))
+    mgr.save_async(1, _tree())
+    mgr._thread.join()       # let the failure land without calling wait()
+    with pytest.raises(CheckpointError):
+        mgr.save_async(2, _tree())
+
+
+# ---------------------------------------------------------------------------
+# fault runtime satellites: fd leaks, retry validation, controller edges
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_and_restore_close_files(tmp_path):
+    """Regression: ``json.load(open(...))`` leaked fds in
+    ``alive_hosts``/``restore_checkpoint``; unclosed files now surface as
+    ResourceWarning-as-error."""
+    hb = Heartbeat(str(tmp_path / "hb"), 0, timeout_s=10)
+    hb.beat(step=1)
+    save_checkpoint(str(tmp_path / "ck"), 1, _tree())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ResourceWarning)
+        assert hb.alive_hosts(1, now=None) == [0]
+        restore_checkpoint(str(tmp_path / "ck"), _tree())
+
+
+def test_retry_validates_attempts():
+    with pytest.raises(ValueError, match="attempts >= 1"):
+        retry(lambda: "ok", attempts=0)
+    with pytest.raises(ValueError):
+        retry(lambda: "ok", attempts=-2)
+    assert retry(lambda: "ok", attempts=1) == "ok"
+
+
+def test_elastic_controller_edge_cases():
+    # model group incomplete: fewer survivors than one model group needs
+    ctl = ElasticController(n_hosts=8, hosts_per_data_shard=4, min_hosts=1)
+    plan = ctl.plan_after_failure(alive=[0, 1, 5])
+    assert plan["action"] == "abort" and "model group" in plan["reason"]
+    # exactly min_hosts alive → still restarts
+    ctl = ElasticController(n_hosts=8, hosts_per_data_shard=1, min_hosts=3)
+    plan = ctl.plan_after_failure(alive=[0, 4, 7])
+    assert plan["action"] == "restart"
+    assert plan["new_data_parallelism"] == 3
+    # below min_hosts → abort
+    assert ctl.plan_after_failure(alive=[0, 4])["action"] == "abort"
+    # non-divisible survivor count truncates to whole model groups
+    ctl = ElasticController(n_hosts=8, hosts_per_data_shard=2, min_hosts=1)
+    plan = ctl.plan_after_failure(alive=[0, 1, 2, 3, 6])
+    assert plan["action"] == "restart"
+    assert plan["hosts"] == [0, 1, 2, 3]
+    assert plan["new_data_parallelism"] == 2
+
+
+# ---------------------------------------------------------------------------
+# data-pipeline cursor round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("maker", [
+    lambda c: lm_batches(100, 8, 16, c),
+    lambda c: xmc_batches(100, 10_000, 8, 16, 10, c),
+], ids=["lm", "xmc"])
+def test_cursor_roundtrip_replays_unconsumed_batch(maker):
+    """Saving ``next_cursor`` after consuming batch k and resuming must
+    yield batch k+1 — NOT replay batch k (the historical off-by-one: the
+    checkpoint stored the consumed batch's own cursor)."""
+    it = maker(DataCursor(7, 0))
+    ref = [next(it) for _ in range(6)]
+    saved = ref[3]["next_cursor"]            # checkpoint after batch 3
+    resumed = maker(DataCursor.from_state(saved))
+    for want in ref[4:]:
+        got = next(resumed)
+        np.testing.assert_array_equal(want["tokens"], got["tokens"])
+        np.testing.assert_array_equal(want["targets"], got["targets"])
+        assert want["cursor"] == got["cursor"]
+
+
+def test_flaky_batches_retry_preserves_sequence():
+    """Transient pipeline errors + retry: the recovered stream is exactly
+    the unfailed stream (no skipped or duplicated batch)."""
+    ref_it = lm_batches(50, 4, 8, DataCursor(3, 0))
+    ref = [next(ref_it) for _ in range(4)]
+    flaky = inject.FlakyBatches(lm_batches(50, 4, 8, DataCursor(3, 0)),
+                                fail_fetches=[1, 2, 4])
+    got = [retry(lambda: next(flaky), attempts=4, base_delay_s=0,
+                 sleep=lambda s: None) for _ in range(4)]
+    for w, g in zip(ref, got):
+        np.testing.assert_array_equal(w["tokens"], g["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# plan checkpoint metadata
+# ---------------------------------------------------------------------------
+
+
+def test_plan_checkpoint_meta():
+    cfg = RH.ELMOHeadConfig(num_labels=1000, d_model=32, num_chunks=4,
+                            weight_dtype="e4m3", kahan_chunks=4, impl="xla")
+    plan = RH.resolve_plan(cfg, batch=16)
+    meta = plan.checkpoint_meta()
+    assert meta["model_size"] == 1 and meta["lc"] == plan.lc
+    assert "w_spec" in meta and "backend" in meta
+    assert "checkpoint" in plan.explain()
+    sharded = RH.resolve_plan(cfg, batch=16, model_size=4,
+                              model_axis="model")
+    assert sharded.checkpoint_meta()["model_size"] == 4
+    assert "model" in sharded.checkpoint_meta()["w_spec"]
+
+
+# ---------------------------------------------------------------------------
+# bit-identical head resume: SR + Kahan + DropConnect across the boundary
+# ---------------------------------------------------------------------------
+
+
+def _head_setup():
+    cfg = RH.ELMOHeadConfig(num_labels=600, d_model=32, num_chunks=2,
+                            weight_dtype="e4m3", kahan_chunks=2,
+                            use_sr=True, drop_rate=0.25, loss="bce",
+                            impl="xla")
+    B, P = 8, 6
+    state = RH.init_head(jax.random.PRNGKey(0), cfg)
+    head = RH.get_head(cfg, batch=B, target_slots=P, ctx=None)
+
+    def batch_for(s):
+        rng = np.random.default_rng(1000 + s)
+        x = jnp.asarray(rng.standard_normal((B, 32), np.float32) * 0.5,
+                        jnp.bfloat16)
+        tgt = jnp.asarray(rng.integers(0, 600, (B, P)), jnp.int32)
+        return x, tgt
+
+    def run(state, lo, hi):
+        losses = []
+        for s in range(lo, hi):
+            x, tgt = batch_for(s)
+            hp = RH.HeadHparams(jnp.float32(0.05), jnp.float32(1e-4),
+                                PR.mix32(jnp.uint32(s)))
+            state, _, m = head.train_step(state, x, tgt, hp)
+            losses.append(float(m["loss"]))
+        return state, losses
+
+    return cfg, state, run
+
+
+def test_head_resume_bit_identical_sr_kahan(tmp_path):
+    """FP8 W + BF16 Kahan + SR + DropConnect: kill after step 3, restore,
+    continue — W, comp and losses bit-identical to the uninterrupted run
+    (the step-keyed seeds replay the same SR/DropConnect draws)."""
+    cfg, state0, run = _head_setup()
+    full_state, full_losses = run(state0, 0, 7)
+
+    part_state, part_losses = run(state0, 0, 3)
+    save_checkpoint(str(tmp_path), 3, part_state._asdict())
+    del part_state                                  # "crash"
+
+    template = RH.init_head(jax.random.PRNGKey(9), cfg)   # fresh process
+    restored_d, step, _ = restore_checkpoint(str(tmp_path),
+                                             template._asdict())
+    assert step == 3
+    resumed, resumed_losses = run(RH.HeadState(**restored_d), 3, 7)
+
+    assert RH.state_bits_equal(full_state, resumed)
+    assert part_losses + resumed_losses == full_losses
+
+
+def test_head_resume_detects_corruption_then_uses_older_step(tmp_path):
+    """Corrupt the newest head checkpoint: restore falls back one step and
+    the continued trajectory still matches the uninterrupted run from that
+    older step."""
+    cfg, state0, run = _head_setup()
+    full_state, _ = run(state0, 0, 7)
+
+    s2, _ = run(state0, 0, 2)
+    save_checkpoint(str(tmp_path), 2, s2._asdict())
+    s4, _ = run(s2, 2, 4)
+    p4 = save_checkpoint(str(tmp_path), 4, s4._asdict())
+    inject.bit_flip_leaf(p4, leaf_index=0)
+
+    template = RH.init_head(jax.random.PRNGKey(9), cfg)
+    restored_d, step, _ = restore_checkpoint(str(tmp_path),
+                                             template._asdict())
+    assert step == 2                      # fell back past the corrupt 4
+    resumed, _ = run(RH.HeadState(**restored_d), 2, 7)
+    assert RH.state_bits_equal(full_state, resumed)
+
+
+# ---------------------------------------------------------------------------
+# launch.train integration: cursor round-trip, flaky data, supervision
+# ---------------------------------------------------------------------------
+
+
+def _smoke_cfg():
+    return get_smoke("smollm-360m", vocab=256)
+
+
+_KW = dict(global_batch=4, seq=8, impl="xla", log_every=100)
+
+
+def _manifest_checksums(ckpt_path):
+    with open(os.path.join(ckpt_path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return {e["name"]: e["checksum"] for e in manifest["leaves"]}
+
+
+@pytest.mark.slow
+def test_train_resume_bit_identical(tmp_path):
+    """In-process kill/resume through ``launch.train``: the resumed run's
+    losses equal the uninterrupted run's exactly, and the final committed
+    checkpoints are bit-identical leaf-for-leaf (manifest checksums)."""
+    cfg = _smoke_cfg()
+    full_dir, part_dir = str(tmp_path / "full"), str(tmp_path / "part")
+    _, full = train_mod.train(cfg, steps=6, ckpt_dir=full_dir,
+                              ckpt_every=3, **_KW)
+    _, part = train_mod.train(cfg, steps=3, ckpt_dir=part_dir,
+                              ckpt_every=3, **_KW)
+    _, rest = train_mod.train(cfg, steps=6, ckpt_dir=part_dir,
+                              ckpt_every=3, **_KW)
+    assert part == full[:3]
+    assert rest == full[3:]            # exact float equality: same backend
+    a = _manifest_checksums(os.path.join(full_dir, "ckpt_00000006"))
+    b = _manifest_checksums(os.path.join(part_dir, "ckpt_00000006"))
+    assert a == b
+
+
+@pytest.mark.slow
+def test_train_transient_data_errors_absorbed(tmp_path, monkeypatch):
+    """Injected transient pipeline errors do not change the trajectory."""
+    cfg = _smoke_cfg()
+    _, clean = train_mod.train(cfg, steps=3, ckpt_dir="", **_KW)
+    real = train_mod.make_batches
+    monkeypatch.setattr(
+        train_mod, "make_batches",
+        lambda *a, **k: inject.FlakyBatches(real(*a, **k),
+                                            fail_fetches=[1]))
+    _, flaky = train_mod.train(cfg, steps=3, ckpt_dir="", **_KW)
+    assert flaky == clean
+
+
+@pytest.mark.slow
+def test_run_elastic_detects_dead_host_and_continues(tmp_path):
+    """Supervision path end to end: peers heartbeat in lockstep; host 2
+    goes stale at step 4 → ``HostFailure`` → ``ElasticController`` plans a
+    2-host fleet → restart restores the committed checkpoint (step 4) and
+    finishes the run."""
+    cfg = _smoke_cfg()
+    ckpt_dir = str(tmp_path / "ck")
+    hb_dir = os.path.join(ckpt_dir, "hb")
+    failed = {"done": False}
+
+    def on_step(i):
+        inject.write_heartbeat(hb_dir, 1, i)
+        if not failed["done"]:
+            inject.write_heartbeat(hb_dir, 3, i)
+            if i < 4:
+                inject.write_heartbeat(hb_dir, 2, i)
+            else:
+                inject.make_stale(hb_dir, 2)
+                failed["done"] = True
+
+    controller = ElasticController(n_hosts=4, hosts_per_data_shard=2,
+                                   min_hosts=2)
+    _, losses, restarts = train_mod.run_elastic(
+        cfg, steps=8, global_batch=8, seq=8, ckpt_dir=ckpt_dir,
+        n_hosts=4, controller=controller, ckpt_every=2, impl="xla",
+        log_every=100, on_step=on_step)
+    assert restarts == 1
+    assert failed["done"]
+    assert len(losses) == 8            # 4 kept from attempt 0 + steps 4..7
+    assert all(np.isfinite(losses))
+
+
+@pytest.mark.slow
+def test_run_elastic_aborts_below_min_hosts(tmp_path):
+    cfg = _smoke_cfg()
+    ckpt_dir = str(tmp_path / "ck")
+    hb_dir = os.path.join(ckpt_dir, "hb")
+
+    def on_step(i):
+        # every peer immediately stale: the controller cannot rebuild
+        for h in (1, 2, 3):
+            inject.make_stale(hb_dir, h)
+
+    controller = ElasticController(n_hosts=4, hosts_per_data_shard=1,
+                                   min_hosts=3)
+    with pytest.raises(HostFailure):
+        train_mod.run_elastic(cfg, steps=4, global_batch=8, seq=8,
+                              ckpt_dir=ckpt_dir, n_hosts=4,
+                              controller=controller, ckpt_every=2,
+                              impl="xla", log_every=100, on_step=on_step)
+
+
+# ---------------------------------------------------------------------------
+# the real thing: SIGKILL a training subprocess, resume, compare to the
+# 20-step goldens
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sigkill_resume_matches_goldens(tmp_path):
+    """A run SIGKILLed at an arbitrary step and restarted reaches step 20
+    with the loss trajectory bit-identical to an uninterrupted run and
+    within the committed goldens' tolerance — and the final checkpoint is
+    leaf-for-leaf bit-identical (manifest crc32s)."""
+    with open(_GOLDEN) as f:
+        golden = json.load(f)
+    r = golden["recipe"]
+    env = inject.subprocess_env(os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+
+    def argv(ckpt_dir, losses_out):
+        return inject.train_argv(
+            "--arch", "smollm-360m", "--smoke",
+            "--steps", str(r["steps"]),
+            "--global-batch", str(r["global_batch"]),
+            "--seq", str(r["seq"]),
+            "--head-lr", str(r["head_lr"]),
+            "--backbone-lr", str(r["backbone_lr"]),
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "2",
+            "--losses-out", losses_out)
+
+    full_dir = str(tmp_path / "full")
+    kill_dir = str(tmp_path / "kill")
+    full_json = str(tmp_path / "full.json")
+    resume_json = str(tmp_path / "resume.json")
+
+    # (a) uninterrupted oracle
+    res = inject.run_and_kill(argv(full_dir, full_json),
+                              hb_file=os.path.join(
+                                  full_dir, "hb", "host_0000.hb"),
+                              kill_step=10**9, env=env)
+    assert not res.killed and res.returncode == 0, \
+        res.stdout[-2000:] + res.stderr[-2000:]
+
+    # (b) killed at an "arbitrary" (pinned pseudo-random) step
+    kill_step = 5 + zlib.crc32(b"elmo-fault-injection") % 8   # ∈ [5, 12]
+    res = inject.run_and_kill(argv(kill_dir, str(tmp_path / "unused.json")),
+                              hb_file=os.path.join(
+                                  kill_dir, "hb", "host_0000.hb"),
+                              kill_step=kill_step, env=env)
+    assert res.killed and res.step_seen >= kill_step
+    last = latest_committed(kill_dir)
+    assert last is not None, "no committed checkpoint survived the kill"
+
+    # (c) restart: resumes from the last committed step, reaches 20
+    res = inject.run_and_kill(argv(kill_dir, resume_json),
+                              hb_file=os.path.join(
+                                  kill_dir, "hb", "host_0000.hb"),
+                              kill_step=10**9, env=env)
+    assert not res.killed and res.returncode == 0, \
+        res.stdout[-2000:] + res.stderr[-2000:]
+    assert "restored step" in res.stdout
+
+    with open(full_json) as f:
+        full = json.load(f)
+    with open(resume_json) as f:
+        resumed = json.load(f)
+    assert full["start"] == 0
+    start = resumed["start"]
+    assert 0 < start <= kill_step + 1
+    # bit-identical loss trajectory across the resume boundary
+    np.testing.assert_array_equal(np.asarray(resumed["losses"]),
+                                  np.asarray(full["losses"][start:]))
+    # the combined trajectory is the goldens' (same tolerance as
+    # test_train_golden)
+    combined = full["losses"][:start] + resumed["losses"]
+    np.testing.assert_allclose(np.asarray(combined),
+                               np.asarray(golden["loss"]),
+                               rtol=2e-2, atol=1e-3)
+    # final state bit-identical: compare every leaf's crc32
+    a = _manifest_checksums(os.path.join(full_dir, "ckpt_00000020"))
+    b = _manifest_checksums(os.path.join(kill_dir, "ckpt_00000020"))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# sharded restore parity across mesh-shape changes (forced 4 devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multidevice_fault_suite(multidevice_runner):
+    out = multidevice_runner("_multidevice_fault_checks.py", device_count=4)
+    assert "ALL FAULT CHECKS PASSED" in out
