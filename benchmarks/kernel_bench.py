@@ -289,6 +289,96 @@ def bench_serving_topk(L=4096, D=256, B=256, k=10, num_chunks=8):
     return rows
 
 
+def bench_shortlist_topk(L=4096, D=64, B=256, k=10, num_chunks=8,
+                         groups=128, noise=0.2, n_clusters=64, beam=28):
+    """2-stage shortlisted serving vs exact top-k (ISSUE 7, DESIGN §11).
+
+    Runs the golden structured-head geometry (``shortlist.
+    synthetic_clustered_state``: labels drawn around latent group
+    centers — the regime trained XMC heads live in; an i.i.d. head has
+    no cluster structure and shortlisting it is meaningless).  Reported:
+    µs/call and QPS for exact vs 2-stage serving, the admitted-label
+    fraction (the work ratio a compiled backend realizes), and
+    recall@{1,5,10} of shortlisted vs exact results.
+
+    Two hard gates (a failure exits the bench driver non-zero):
+
+    * the shortlisted (values, ids) are bit-identical to the restricted
+      oracle ``ref.fused_topk_ref`` on the same (assign, beam) — the
+      beam is the ONLY approximation;
+    * recall@10 ≥ ``RECALL_FLOOR`` — the regression tripwire for the
+      partition build and the stage-1 router.
+    """
+    import numpy as np
+
+    from repro import head as H
+    from repro.head import resolve_plan, serving
+    from repro.head import shortlist as SL
+
+    RECALL_FLOOR = 0.95
+    cfg = H.ELMOHeadConfig(num_labels=L, d_model=D, num_chunks=num_chunks,
+                           weight_dtype="e4m3", use_sr=False,
+                           impl="grid_interpret", shortlist="on")
+    state = SL.synthetic_clustered_state(cfg, groups=groups, noise=noise,
+                                         seed=7)
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, D)
+                          ).astype(jnp.bfloat16)
+    index = SL.build_shortlist_index(cfg, state, n_clusters=n_clusters,
+                                     beam=beam, iters=8, seed=0)
+    plan = resolve_plan(cfg, batch=B)
+    assert plan.topk_path == "shortlist", plan.topk_path
+    # pin the bench geometry (the auto plan sizes for generic heads;
+    # recall is a property of THIS index)
+    import dataclasses
+    plan = dataclasses.replace(plan, shortlist_c=index.n_clusters,
+                               shortlist_beam=index.beam)
+    plan_exact = dataclasses.replace(plan, topk_path="kernel",
+                                     shortlist_c=0, shortlist_beam=0)
+
+    f_sl = jax.jit(lambda s, xx: serving.topk_planned(plan, cfg, s, xx, k,
+                                                      index))
+    f_ex = jax.jit(
+        lambda s, xx: serving.topk_planned(plan_exact, cfg, s, xx, k))
+    out_sl = jax.block_until_ready(f_sl(state, x))
+    jax.block_until_ready(f_ex(state, x))
+
+    # gate 1: bit-parity against the restricted oracle
+    beam_ids = SL.shortlist_clusters(index, x, impl="xla")
+    want = ref.fused_topk_ref(
+        x, state.w, jnp.zeros((num_chunks,), jnp.uint32),
+        jnp.arange(num_chunks, dtype=jnp.int32) * cfg.chunk, k=k,
+        num_labels=L, quantize_x=cfg.qx, assign=index.assign,
+        beam=beam_ids)
+    np.testing.assert_array_equal(np.asarray(out_sl[0]),
+                                  np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(out_sl[1]),
+                                  np.asarray(want[1]))
+
+    # gate 2: recall floor
+    recall = SL.shortlist_recall_at_k(cfg, state, index, x, ks=(1, 5, 10))
+    assert recall[10] >= RECALL_FLOOR, \
+        f"shortlist recall@10 {recall[10]} below floor {RECALL_FLOOR}"
+
+    us_ex = _time(f_ex, state, x, n=3)
+    us_sl = _time(f_sl, state, x, n=3)
+    cap = -(-L // index.n_clusters)
+    admitted_frac = index.beam * cap / L
+    common = {"B": B, "L": L, "D": D, "k": k}
+    return [
+        {"name": "serving/shortlist_exact",
+         "us_per_call": round(us_ex), "qps": round(B / us_ex * 1e6),
+         **common},
+        {"name": "serving/shortlist_2stage",
+         "us_per_call": round(us_sl), "qps": round(B / us_sl * 1e6),
+         "qps_vs_exact": round(us_ex / us_sl, 3),
+         "n_clusters": index.n_clusters, "beam": index.beam,
+         "admitted_label_frac": round(admitted_frac, 4),
+         "recall_at_1": recall[1], "recall_at_5": recall[5],
+         "recall_at_10": recall[10], "recall_floor": RECALL_FLOOR,
+         **common},
+    ]
+
+
 def bench_fused_chunk(L=4096, D=256, B=256):
     """Single-launch fused chunk step vs the legacy 3-launch composition.
 

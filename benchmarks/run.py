@@ -161,9 +161,11 @@ def _kernels():
 
 
 @section("serving")     # ISSUE 5: streaming top-k megakernel (DESIGN.md §9)
-def _serving():
-    from benchmarks.kernel_bench import bench_serving_topk
+def _serving():         # ISSUE 7: + 2-stage shortlisted serving (§11)
+    from benchmarks.kernel_bench import (bench_serving_topk,
+                                         bench_shortlist_topk)
     _emit(bench_serving_topk())     # 1 launch, O(B·k) temps vs materialize
+    _emit(bench_shortlist_topk())   # recall-gated (≥0.95) 2-stage serving
 
 
 @section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows

@@ -35,7 +35,9 @@ Layering (import order is strictly downward):
     train.py          single-device planned step (+ legacy wrapper)
     train_sharded.py  label-sharded planned step (+ legacy wrapper)
     serving.py        logits / top-k / P@k, local + sharded (+ wrappers)
-    convert.py        checkpoint re-typing, post-hoc refinement
+    shortlist.py      2-stage shortlisted serving index (DESIGN.md §11)
+    convert.py        checkpoint re-typing, post-hoc refinement,
+                      offline shortlist build
 """
 from __future__ import annotations
 
@@ -54,6 +56,12 @@ from repro.head.convert import convert_head, posthoc_refine
 from repro.head.plan import HeadPlan, resolve_plan
 from repro.head.serving import (head_logits, head_logits_sharded, head_topk,
                                 head_topk_sharded, precision_at_k)
+from repro.head.shortlist import (ShortlistError, ShortlistIndex,
+                                  build_shortlist_index,
+                                  load_shortlist_index,
+                                  save_shortlist_index,
+                                  shortlist_clusters,
+                                  shortlist_recall_at_k)
 from repro.head.state import (HeadState, init_head, init_xg_err,
                               state_bits_equal)
 from repro.head.train import head_train_step
@@ -61,12 +69,14 @@ from repro.head.train_sharded import head_train_step_sharded
 
 __all__ = [
     "ELMOHead", "ELMOHeadConfig", "HeadHparams", "HeadPlan", "HeadState",
+    "ShortlistError", "ShortlistIndex", "build_shortlist_index",
     "convert_head", "default_target_slots", "get_head", "head_config_for",
     "head_logits",
     "head_logits_sharded", "head_topk", "head_topk_sharded",
     "head_train_step", "head_train_step_sharded", "init_head",
-    "init_xg_err", "posthoc_refine", "precision_at_k", "resolve_plan",
-    "state_bits_equal",
+    "init_xg_err", "load_shortlist_index", "posthoc_refine",
+    "precision_at_k", "resolve_plan", "save_shortlist_index",
+    "shortlist_clusters", "shortlist_recall_at_k", "state_bits_equal",
 ]
 
 _AMBIENT = object()   # sentinel: "capture the ambient mesh at construction"
@@ -102,6 +112,7 @@ class ELMOHead:
         self._model_size = 1 if ctx is None else ctx.model_size
         self._model_axis = None if ctx is None else ctx.model_axis
         self._plans: dict = {}
+        self._shortlist: "ShortlistIndex | None" = None
         self.plan: HeadPlan = self._resolve(batch, target_slots)
         self._plans[self._plan_key(batch, target_slots)] = self.plan
 
@@ -164,8 +175,40 @@ class ELMOHead:
         plan = self._plan_for(x.shape[0])
         if plan.sharded:
             return _serving.topk_sharded_planned(plan, self.cfg, self.ctx,
-                                                 state, x, k)
-        return _serving.topk_planned(plan, self.cfg, state, x, k)
+                                                 state, x, k,
+                                                 self._shortlist)
+        return _serving.topk_planned(plan, self.cfg, state, x, k,
+                                     self._shortlist)
+
+    # ---- 2-stage shortlisted serving (DESIGN.md §11) ----
+
+    @property
+    def shortlist(self) -> "ShortlistIndex | None":
+        return self._shortlist
+
+    def attach_shortlist(self, index: "ShortlistIndex | None") -> None:
+        """Attach (or, with None, detach) a shortlist index.  Serving uses
+        it only when the plan resolved ``topk_path == "shortlist"``; with
+        no index attached a shortlist plan serves exact (the downgrade is
+        result-invisible — the exact top-k is a superset)."""
+        self._shortlist = index
+
+    def build_shortlist(self, state: HeadState, *, iters: int = 8,
+                        seed: int = 0, n_clusters: int | None = None,
+                        beam: int | None = None) -> "ShortlistIndex":
+        """Build (offline, host numpy) AND attach a shortlist index for
+        ``state``, defaulting to the geometry the plan resolved
+        (``shortlist_c``/``shortlist_beam``); see
+        ``convert.build_shortlist`` for the checkpoint-facing entry."""
+        if n_clusters is None and self.plan.shortlist_c:
+            n_clusters = self.plan.shortlist_c
+        if beam is None and self.plan.shortlist_beam:
+            beam = self.plan.shortlist_beam
+        index = build_shortlist_index(self.cfg, state,
+                                      n_clusters=n_clusters, beam=beam,
+                                      iters=iters, seed=seed)
+        self._shortlist = index
+        return index
 
     def precision_at_k(self, state: HeadState, x: jax.Array,
                        label_ids: jax.Array, k: int,
@@ -176,7 +219,7 @@ class ELMOHead:
         plan = self._plan_for(x.shape[0])
         return _serving.precision_at_k_planned(plan, self.cfg, self.ctx,
                                                state, x, label_ids, k,
-                                               denom)
+                                               denom, self._shortlist)
 
     def psp_at_k(self, state: HeadState, x: jax.Array,
                  label_ids: jax.Array, propensity: jax.Array,
@@ -185,7 +228,8 @@ class ELMOHead:
         ``propensity`` from ``losses.propensity_scores``."""
         plan = self._plan_for(x.shape[0])
         return _serving.psp_at_k_planned(plan, self.cfg, self.ctx, state,
-                                         x, label_ids, propensity, k)
+                                         x, label_ids, propensity, k,
+                                         self._shortlist)
 
     # ---- conversion ----
 

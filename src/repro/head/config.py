@@ -59,6 +59,13 @@ class ELMOHeadConfig:
     # reproduce the historical seed-0-masked serving outputs bit-for-bit
     # (the pre-ISSUE-5 parity goldens).  Training is unaffected.
     compat_eval_drop: bool = False
+    # 2-stage shortlisted serving (DESIGN.md §11): "off" serves exact,
+    # "on" plans the shortlist path whenever the restricted kernel is
+    # viable, "auto" enables it only at label counts where the √L
+    # partition pays (``plan._SHORTLIST_MIN_LABELS``).  Serving-only:
+    # training never shortlists, and serving falls back to the exact
+    # path when no index is attached.
+    shortlist: str = "off"
 
     @property
     def wdtype(self):
@@ -91,6 +98,7 @@ class ELMOHeadConfig:
         assert 0 <= self.kahan_chunks <= self.num_chunks
         assert self.loss in ("bce", "softmax_ce")
         assert self.cache_z in ("auto", "on", "off")
+        assert self.shortlist in ("off", "on", "auto")
 
 
 class HeadHparams(NamedTuple):

@@ -1,5 +1,8 @@
-"""Checkpoint re-typing + post-hoc classifier refinement (paper App. D.1)."""
+"""Checkpoint re-typing + post-hoc classifier refinement (paper App. D.1),
+and the offline shortlist-index build (DESIGN.md §11)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -35,3 +38,26 @@ def posthoc_refine(to_cfg: ELMOHeadConfig, state: HeadState,
                                       jnp.float32(lr), jnp.float32(0.0),
                                       jnp.uint32(seed + i))
     return state
+
+
+def build_shortlist(cfg: ELMOHeadConfig, state: HeadState, *,
+                    out_dir: Optional[str] = None,
+                    n_clusters: Optional[int] = None,
+                    beam: Optional[int] = None,
+                    iters: int = 8, seed: int = 0):
+    """Offline 2-stage shortlist build from a (typically FP8) head
+    checkpoint: balanced k-means over the W rows in BF16, optionally
+    persisted beside the checkpoint with the same crc32-leaf integrity
+    scheme (``shortlist.save_shortlist_index``).  Returns the
+    ``ShortlistIndex``; attach it with ``ELMOHead.attach_shortlist`` (or
+    rebuild via ``ELMOHead.build_shortlist``, which also attaches).
+
+    Lives here with the other offline state transforms because the build
+    reads checkpoint bits, not serving traffic — and MUST be re-run after
+    further training moves W (``shortlist.is_stale``; DESIGN.md §11)."""
+    from repro.head import shortlist as _sl
+    index = _sl.build_shortlist_index(cfg, state, n_clusters=n_clusters,
+                                      beam=beam, iters=iters, seed=seed)
+    if out_dir is not None:
+        _sl.save_shortlist_index(out_dir, index)
+    return index

@@ -52,6 +52,12 @@ _CACHE_Z_BYTES = 32 * 2 ** 20
 # at runtime deliberately does not move the other): past it, streaming wins
 _TOPK_Z_BYTES = 32 * 2 ** 20
 
+# "auto" shortlisting (DESIGN.md §11) only turns on at label counts where
+# the 2-stage √L partition beats the exact scan by enough to matter; below
+# this the exact streaming kernel is already cheap and the recall tax buys
+# nothing.  cfg.shortlist == "on" bypasses the floor (tests, small heads).
+_SHORTLIST_MIN_LABELS = 1 << 20
+
 # entries into resolve_plan() — the facade contract is that this stops
 # moving once an ELMOHead is constructed and used at its declared shapes
 _RESOLVE_CALLS = 0
@@ -146,7 +152,11 @@ class HeadPlan:
     topk_path: str             # "kernel" (streaming top-k megakernel, 1
     #                            launch at O(B·k)) | "materialize" (logits
     #                            launch + one top_k, ≤ _TOPK_Z_BYTES) |
-    #                            "stream" (per-chunk scan)
+    #                            "stream" (per-chunk scan) | "shortlist"
+    #                            (2-stage: centroid beam → restricted
+    #                            kernel/scan, DESIGN.md §11)
+    shortlist_c: int = 0       # shortlist cluster count (0 = exact serving)
+    shortlist_beam: int = 0    # admitted clusters per query
 
     @property
     def sharded(self) -> bool:
@@ -198,7 +208,9 @@ class HeadPlan:
             f"transients≈{self.temp_bytes / mib:.2f} MiB "
             f"(budgets: cache_z {_CACHE_Z_BYTES / mib:.0f} MiB, "
             f"topk_z {_TOPK_Z_BYTES / mib:.0f} MiB)",
-            f"  serving    grid={self.serve_grid} topk={self.topk_path}",
+            f"  serving    grid={self.serve_grid} topk={self.topk_path}"
+            + (f" (C={self.shortlist_c} beam={self.shortlist_beam})"
+               if self.topk_path == "shortlist" else ""),
             f"  sharding   w/comp={self.w_spec} xg_err={self.xg_err_spec}",
             f"  checkpoint full-logical leaves, reshard on restore; "
             f"manifest meta={self.checkpoint_meta()} (DESIGN.md §10)",
@@ -352,6 +364,26 @@ def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
     else:
         topk_path = "stream"
 
+    # ---- 2-stage shortlisted serving (DESIGN.md §11) ----
+    # Replaces only the O(L) exec modes (kernel/stream): "materialize"
+    # means the whole logits block fits the z budget, where a partition
+    # buys nothing.  "auto" additionally requires the √L-scale label
+    # count; geometry (C, beam) comes from the same residency/work model
+    # as every other tile choice, and the restricted kernel re-checks
+    # VMEM with the beam resident.  Serving still downgrades to the
+    # exact path at call time when no index is attached
+    # (``serving._topk_exec_path``).
+    sl_c = sl_beam = 0
+    if (cfg.shortlist != "off" and topk_path in ("kernel", "stream")
+            and (cfg.shortlist == "on"
+                 or cfg.num_labels >= _SHORTLIST_MIN_LABELS)):
+        c, bm = _tuning.shortlist_params(cfg.num_labels, cfg.d_model)
+        if c > 0 and (topk_path != "kernel" or rimpl != "kernel"
+                      or _tuning.fused_topk_viable(batch, cfg.d_model, wb,
+                                                   n_beam=bm)):
+            sl_c, sl_beam = c, bm
+            topk_path = "shortlist"
+
     axis_spec = axis if n > 1 else None
     return HeadPlan(
         batch=batch, target_slots=target_slots, model_size=n,
@@ -362,7 +394,8 @@ def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
         w_spec=PS(None, axis_spec, None),
         xg_err_spec=PS(axis_spec, None, None),
         vmem_bytes=int(vmem), temp_bytes=temp_bytes,
-        serve_grid=serve_grid, topk_path=topk_path)
+        serve_grid=serve_grid, topk_path=topk_path,
+        shortlist_c=sl_c, shortlist_beam=sl_beam)
 
 
 def _grid_serving_ok(cfg: ELMOHeadConfig, batch: int) -> Tuple[bool, str]:
@@ -398,19 +431,26 @@ def main(argv=None) -> int:
                     help="label shards (mesh model-axis size)")
     ap.add_argument("--ce-comm", default="gather",
                     choices=["gather", "stats"])
+    ap.add_argument("--shortlist", default=None,
+                    choices=["off", "on", "auto"],
+                    help="override the head's 2-stage shortlisted-serving "
+                         "mode (DESIGN.md §11)")
     ap.add_argument("--explain", action="store_true")
     ap.add_argument("--expect-path", default=None,
                     help="comma-separated allowed executed paths; exit 1 "
                          "on a silent fallback outside this set")
     ap.add_argument("--expect-topk", default=None,
                     help="comma-separated allowed serving top-k paths "
-                         "(kernel|materialize|stream); exit 1 otherwise")
+                         "(kernel|materialize|stream|shortlist); exit 1 "
+                         "otherwise")
     args = ap.parse_args(argv)
 
     mcfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     hcfg = head_config_for(mcfg)
     if args.impl:
         hcfg = _dc.replace(hcfg, impl=args.impl)
+    if args.shortlist:
+        hcfg = _dc.replace(hcfg, shortlist=args.shortlist)
     plan = resolve_plan(hcfg, batch=args.batch,
                         target_slots=default_target_slots(mcfg),
                         model_size=args.model_size,

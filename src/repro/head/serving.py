@@ -1,14 +1,19 @@
 """ELMO head inference: full logits, top-k, P@k/PSP@k — single-device and
 label-sharded, plan-driven (DESIGN.md §6/§7/§8/§9).
 
-Top-k serving has three plan-resolved paths (``HeadPlan.topk_path``), all
-bit-identical in values AND ids: the streaming megakernel (ONE Pallas
-launch, (B, k) carry in VMEM scratch, O(B·k) transients for any label
-count — ``kernels/fused_topk.py``), the materialized fast path (one
-logits launch + one stable ``top_k``, under ``plan._TOPK_Z_BYTES``), and
-the per-chunk streaming scan (also the xla-oracle / non-TPU production
-path).  The ``HeadPlan`` resolves the path once per (config, batch,
-mesh); the planned functions here execute without re-deriving anything.
+Top-k serving has four plan-resolved paths (``HeadPlan.topk_path``).
+Three are exact and bit-identical in values AND ids: the streaming
+megakernel (ONE Pallas launch, (B, k) carry in VMEM scratch, O(B·k)
+transients for any label count — ``kernels/fused_topk.py``), the
+materialized fast path (one logits launch + one stable ``top_k``, under
+``plan._TOPK_Z_BYTES``), and the per-chunk streaming scan (also the
+xla-oracle / non-TPU production path).  The fourth, ``"shortlist"``
+(DESIGN.md §11), is 2-stage PLT-style serving: a centroid beam routes
+each query to a few clusters and the restricted kernel/scan serves
+exactly those — bit-identical to the exact top-k restricted to the
+admitted labels, with recall@k quantifying what the beam excludes.  The
+``HeadPlan`` resolves the path once per (config, batch, mesh); the
+planned functions here execute without re-deriving anything.
 Bit-parity contracts (tie-breaks, padded-id sentinels, sharded merge
 order) are unchanged from the free-function era and pinned by
 tests/test_fused_head.py, tests/test_fused_topk.py and the multi-device
@@ -150,7 +155,7 @@ def _chunk_base(cfg: ELMOHeadConfig) -> jax.Array:
 
 
 def _topk_exec_path(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
-                    B: int, k: int) -> str:
+                    B: int, k: int, shortlist=None) -> str:
     """``plan.topk_path``, re-gated at the query's ACTUAL k.
 
     The plan resolves serving before any query k exists, so its kernel
@@ -159,10 +164,19 @@ def _topk_exec_path(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     the resident (B, K) carry past what the model validated — re-check
     here and fall back (all paths are bit-identical, so the downgrade is
     invisible in results).  Interpret/xla inners have no VMEM and keep
-    the plan's choice."""
+    the plan's choice.
+
+    A "shortlist" plan additionally needs an attached ``ShortlistIndex``
+    (``shortlist``); without one it downgrades to the exact path the
+    shortlist replaced — a correctness-invisible fallback (the exact
+    result is a superset of any restricted one)."""
     from repro.kernels import tuning as _tuning
 
     path = plan.topk_path
+    if path == "shortlist" and shortlist is None:
+        path = ("kernel" if (plan.requested_path == "grid"
+                             and plan.rimpl in ("kernel", "interpret"))
+                else "stream")
     if (path == "kernel" and plan.rimpl == "kernel"
             and not _tuning.fused_topk_viable(
                 B, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize, k)):
@@ -173,11 +187,32 @@ def _topk_exec_path(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     return path
 
 
+def _shortlist_impls(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                     B: int, k: int, beam: int) -> Tuple[str, str]:
+    """(stage-1 impl, stage-2 impl) for shortlisted serving.
+
+    Stage 2 runs the restricted streaming kernel when the exact kernel
+    path would have been chosen AND the beam-resident VMEM model still
+    fits at the query's actual k; otherwise the restricted chunk-scan
+    oracle ("xla") — bit-identical by the differential-test contract.
+    Stage 1 scores the tiny (C, D) centroid block and follows the same
+    inner (its carry is beam-wide, so the nominal model always fits)."""
+    from repro.kernels import tuning as _tuning
+
+    kernelish = (plan.requested_path == "grid"
+                 and plan.rimpl in ("kernel", "interpret"))
+    if kernelish and (plan.rimpl != "kernel" or _tuning.fused_topk_viable(
+            B, cfg.d_model, jnp.dtype(cfg.wdtype).itemsize, k,
+            n_beam=beam)):
+        return plan.inner, plan.inner
+    return ("xla", "xla") if not kernelish else (plan.inner, "xla")
+
+
 def topk_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
-                 state: HeadState, x: jax.Array, k: int
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Top-k serving on the path the plan resolved (DESIGN.md §9) — all
-    three produce bit-identical values AND ids:
+                 state: HeadState, x: jax.Array, k: int,
+                 shortlist=None) -> Tuple[jax.Array, jax.Array]:
+    """Top-k serving on the path the plan resolved (DESIGN.md §9) — the
+    exact paths produce bit-identical values AND ids:
 
     * ``"kernel"``      — ONE Pallas launch, the (B, k) running top-k
       lives in VMEM scratch across every label block; O(B·k) transients
@@ -185,9 +220,27 @@ def topk_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     * ``"materialize"`` — one logits launch + one stable ``top_k`` over
       the full width (≤ ``plan._TOPK_Z_BYTES``; see ``_topk_materialized``).
     * ``"stream"``      — the per-chunk ``lax.scan`` (also the xla oracle
-      and the non-TPU production path)."""
+      and the non-TPU production path).
+    * ``"shortlist"``   — 2-stage (DESIGN.md §11): centroid beam, then
+      the restricted kernel/scan over admitted clusters only —
+      bit-identical to the exact top-k RESTRICTED to the labels the beam
+      admits (``ref.fused_topk_ref`` with the same assign/beam).
+      Requires an attached ``ShortlistIndex``; downgrades to exact when
+      ``shortlist`` is None."""
     x = x.astype(jnp.bfloat16)
-    tpath = _topk_exec_path(plan, cfg, x.shape[0], k)
+    tpath = _topk_exec_path(plan, cfg, x.shape[0], k, shortlist)
+    if tpath == "shortlist":
+        from repro.head import shortlist as _sl
+        beam_w = min(plan.shortlist_beam or shortlist.beam, shortlist.beam)
+        impl1, impl2 = _shortlist_impls(plan, cfg, x.shape[0], k, beam_w)
+        beam_ids = _sl.stage1_clusters(
+            shortlist.centroids, x, n_clusters=shortlist.n_clusters,
+            beam=beam_w, impl=impl1)
+        return ops.fused_topk(x, state.w, _eval_seeds(cfg),
+                              _chunk_base(cfg), k=k,
+                              num_labels=cfg.num_labels, quantize_x=cfg.qx,
+                              drop_rate=_serve_drop(cfg), impl=impl2,
+                              assign=shortlist.assign, beam=beam_ids)
     if tpath == "kernel":
         return ops.fused_topk(x, state.w, _eval_seeds(cfg),
                               _chunk_base(cfg), k=k,
@@ -204,11 +257,11 @@ def topk_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
                       lambda cidx: cidx * cfg.chunk, plan.inner)
 
 
-def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int
-              ) -> Tuple[jax.Array, jax.Array]:
+def head_topk(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array, k: int,
+              shortlist=None) -> Tuple[jax.Array, jax.Array]:
     """Deprecated free-function form of ``ELMOHead.topk``."""
     plan = _plan.resolve_plan(cfg, batch=x.shape[0])
-    return topk_planned(plan, cfg, state, x, k)
+    return topk_planned(plan, cfg, state, x, k, shortlist)
 
 
 # ---------------------------------------------------------------------------
@@ -271,28 +324,63 @@ def head_logits_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
 
 
 def topk_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
-                         ctx, state: HeadState, x: jax.Array, k: int
-                         ) -> Tuple[jax.Array, jax.Array]:
+                         ctx, state: HeadState, x: jax.Array, k: int,
+                         shortlist=None) -> Tuple[jax.Array, jax.Array]:
     """``topk_planned`` with W label-sharded: local streaming top-k per
     rank, gather of the n·k candidates, global re-rank (DESIGN.md §6).
 
     Comm is O(B·k·n) instead of O(B·L); padded label columns are masked on
     the *local* column window so they can never surface, and ids are
-    global."""
+    global.
+
+    Shortlisted serving (DESIGN.md §11) needs no extra communication:
+    the centroids and x are replicated, so every rank computes the SAME
+    per-query beam locally, slices its own (C, lc) window of the cluster
+    assignment, and restricts its local top-k to the admitted labels it
+    owns.  A rank owning none of a query's admitted labels contributes k
+    (NEG_INF, 0) sentinels, which the (−value, id) re-rank sorts behind
+    every real candidate — so the merged result is bit-identical to
+    single-device shortlisted serving."""
     from repro.dist.compat import shard_map as _shard_map
 
     if not plan.sharded:
-        return topk_planned(plan, cfg, state, x, k)
+        return topk_planned(plan, cfg, state, x, k, shortlist)
     axis = ctx.model_axis
     lc = plan.lc
     n = plan.model_size
     x = x.astype(jnp.bfloat16)
-    tpath = _topk_exec_path(plan, cfg, x.shape[0], k)
+    tpath = _topk_exec_path(plan, cfg, x.shape[0], k, shortlist)
     inner = plan.inner
+    sl_ops, sl_specs = (), ()
+    if tpath == "shortlist":
+        beam_w = min(plan.shortlist_beam or shortlist.beam, shortlist.beam)
+        impl1, impl2 = _shortlist_impls(plan, cfg, x.shape[0], k, beam_w)
+        n_clusters = shortlist.n_clusters
+        sl_ops = (jnp.asarray(shortlist.centroids),
+                  jnp.asarray(shortlist.assign))
+        sl_specs = (PS(), PS())              # replicated index leaves
 
-    def body(w, x):
+    def body(w, x, *sl):
         r = jax.lax.axis_index(axis).astype(jnp.int32)
-        if tpath == "kernel":
+        if tpath == "shortlist":
+            from repro.head import shortlist as _sl
+            cent, asg = sl
+            # stage 1 locally per rank: replicated (centroids, x) make
+            # every rank's beam identical without a collective
+            beam_ids = _sl.stage1_clusters(cent, x, n_clusters=n_clusters,
+                                           beam=beam_w, impl=impl1)
+            # this rank's (C, lc) window of the cluster assignment: rank
+            # r owns rows [r·lc, (r+1)·lc) of every chunk
+            asg_local = jax.lax.dynamic_slice_in_dim(asg, r * lc, lc,
+                                                     axis=1)
+            base = _chunk_base(cfg) + r * lc
+            vals, idx = ops.fused_topk(x, w, _eval_seeds(cfg), base, k=k,
+                                       num_labels=cfg.num_labels,
+                                       quantize_x=cfg.qx,
+                                       drop_rate=_serve_drop(cfg),
+                                       impl=impl2, assign=asg_local,
+                                       beam=beam_ids)
+        elif tpath == "kernel":
             # one streaming top-k launch over the LOCAL label blocks: the
             # kernel's visit order (chunk-major, then row) is ascending
             # global id for a fixed rank, so its tie-break contract
@@ -332,18 +420,20 @@ def topk_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
         return -nv[:, :k], ids[:, :k]
 
     return _shard_map(body, mesh=ctx.mesh,
-                      in_specs=(plan.w_spec, PS()),
-                      out_specs=(PS(), PS()), check_vma=False)(state.w, x)
+                      in_specs=(plan.w_spec, PS()) + sl_specs,
+                      out_specs=(PS(), PS()),
+                      check_vma=False)(state.w, x, *sl_ops)
 
 
 def head_topk_sharded(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
-                      k: int, ctx=None) -> Tuple[jax.Array, jax.Array]:
+                      k: int, ctx=None, shortlist=None
+                      ) -> Tuple[jax.Array, jax.Array]:
     """Deprecated free-function form of ``ELMOHead.topk`` (sharded)."""
     ctx, n = _resolve_ctx(ctx)
     plan = _plan.resolve_plan(
         cfg, batch=x.shape[0], model_size=n,
         model_axis=None if ctx is None else ctx.model_axis)
-    return topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    return topk_sharded_planned(plan, cfg, ctx, state, x, k, shortlist)
 
 
 # ---------------------------------------------------------------------------
@@ -395,9 +485,11 @@ def _p_at_k(vals: jax.Array, pred: jax.Array, label_ids: jax.Array, k: int,
 def precision_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
                            ctx, state: HeadState, x: jax.Array,
                            label_ids: jax.Array, k: int,
-                           denom: str = "positives") -> jax.Array:
+                           denom: str = "positives",
+                           shortlist=None) -> jax.Array:
     """P@k for multi-label targets (paper's headline metric)."""
-    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k,
+                                      shortlist)
     return _p_at_k(vals, pred, label_ids, k, denom)
 
 
@@ -413,9 +505,11 @@ def precision_at_k(cfg: ELMOHeadConfig, state: HeadState, x: jax.Array,
 
 def psp_at_k_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig, ctx,
                      state: HeadState, x: jax.Array, label_ids: jax.Array,
-                     propensity: jax.Array, k: int) -> jax.Array:
+                     propensity: jax.Array, k: int,
+                     shortlist=None) -> jax.Array:
     """Propensity-scored P@k (paper eq. 3) over the served top-k: the
     psp-ready hook — ``propensity`` comes from
     ``losses.propensity_scores(label_freq)``."""
-    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k)
+    vals, pred = topk_sharded_planned(plan, cfg, ctx, state, x, k,
+                                      shortlist)
     return L.psp_at_k(_real_preds(vals, pred), label_ids, propensity, k)

@@ -1,0 +1,406 @@
+"""Two-stage shortlisted serving: the PLT-style label partition (DESIGN §11).
+
+Exact serving walks all L label rows per query — O(B·L·D) forever, no
+matter how lean the FP8 streaming kernel gets.  The classic XMC answer
+(Parabel/PLT, X-Transformer's matcher, the meta-classifier of
+"Memory-Efficient Training for Extremely Large Output Spaces") is a
+2-level partition: cluster the label embeddings, score the B×C cluster
+centroids first, and run the exact scorer only over the labels of the
+top-``beam`` clusters — O(B·(C + beam·L/C)·D) per query, minimized near
+C ≈ √(beam·L).
+
+This module owns the index:
+
+* ``build_shortlist_index`` — balanced k-means over the head's W rows in
+  BF16 (the FP8 checkpoint is upcast first, so e4m3/e5m2 and bf16 heads
+  share one geometry), built OFFLINE (numpy, deterministic seed) — see
+  ``convert.build_shortlist`` for the checkpoint-facing entry point.
+* ``shortlist_clusters`` — stage-1 scoring of the (C, D) BF16 centroids
+  through ``ops.fused_topk`` itself: the centroids are one "chunk" of C
+  pseudo-labels, so the streaming/merge contract (``ref.topk_merge``
+  tie-breaks, sentinel slots) is reused verbatim, not re-implemented.
+* ``save_shortlist_index`` / ``load_shortlist_index`` — persisted beside
+  checkpoints with the SAME leaf integrity scheme as ``checkpoint.ckpt``
+  (raw-bit .npy leaves + per-leaf crc32 in a manifest + a COMMITTED
+  marker holding the manifest crc; atomic tmp-dir rename).
+* staleness: the index records the crc32 of the exact W bits it was
+  built from (``is_stale``) — training moves W, the partition does not
+  follow, recall decays; rebuild policy in DESIGN.md §11.
+
+Stage 2 (the restricted exact scorer) lives in ``kernels/fused_topk.py``
+(admitted-cluster block-skip) with ``ref.fused_topk_ref`` as its
+bit-exact oracle; ``head.serving`` wires both stages under
+``HeadPlan.topk_path == "shortlist"``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import NEG_INF
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState
+from repro.kernels import tuning as _tuning
+
+_FORMAT = "elmo-shortlist-v1"
+
+
+class ShortlistError(RuntimeError):
+    """Raised for torn/corrupt/incompatible persisted shortlist indices."""
+
+
+class ShortlistIndex(NamedTuple):
+    """The 2-level label partition stage-2 serving closes over.
+
+    ``centroids``: (n_clusters, D) BF16 cluster means of the BF16-cast W
+    rows.  ``assign``: (num_chunks, chunk) int32 cluster id per padded
+    label row — real labels carry ids in [0, n_clusters); padded rows are
+    -1, which can never match a beam entry.  ``beam`` is the default
+    stage-1 width (admitted clusters per query).  ``w_checksum`` is the
+    crc32 of the exact W bits the partition was built from — the
+    staleness contract (``is_stale``)."""
+    centroids: jax.Array
+    assign: jax.Array
+    n_clusters: int
+    beam: int
+    w_checksum: str
+
+
+def _w_checksum(state: HeadState) -> str:
+    from repro.checkpoint import ckpt as _ckpt
+    return _ckpt._checksum(_ckpt._to_numpy(jnp.asarray(state.w)))
+
+
+def is_stale(index: ShortlistIndex, state: HeadState) -> bool:
+    """True when ``state.w`` no longer carries the bits the index was
+    built from.  Serving a stale index is *correct* (stage 2 is exact on
+    whatever it admits) but its recall is unquantified — rebuild after
+    weight updates (DESIGN.md §11)."""
+    return index.w_checksum != _w_checksum(state)
+
+
+# ---------------------------------------------------------------------------
+# offline build: balanced k-means over W rows (numpy, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _balanced_assign(rows: np.ndarray, cent: np.ndarray,
+                     cap: int) -> np.ndarray:
+    """Greedy capacity-constrained nearest-centroid assignment.
+
+    Labels are visited in ascending best-distance order (confident labels
+    claim their cluster first) and take the nearest centroid with free
+    capacity — the standard balanced-k-means heuristic; with cap =
+    ceil(L/C) every cluster ends within one label of balance."""
+    d = ((rows * rows).sum(1, keepdims=True)
+         - 2.0 * (rows @ cent.T)
+         + (cent * cent).sum(1)[None, :])            # (L, C) squared dists
+    order = np.argsort(d.min(axis=1), kind="stable")
+    pref = np.argsort(d, axis=1, kind="stable")
+    counts = np.zeros(cent.shape[0], np.int64)
+    assign = np.empty(rows.shape[0], np.int64)
+    for lab in order:
+        for c in pref[lab]:
+            if counts[c] < cap:
+                assign[lab] = c
+                counts[c] += 1
+                break
+    return assign
+
+
+# above this many (L × C) distance-matrix entries the flat builder would
+# not fit in host memory (2.8M labels × 8192 clusters is 172 GiB of f64);
+# switch to the O(L·D)-memory hierarchical splitter
+_FLAT_BUILD_MAX = 1 << 24
+
+
+def _hierarchical_assign(rows: np.ndarray, n_clusters: int,
+                         rng: np.random.Generator,
+                         iters: int) -> np.ndarray:
+    """Parabel-style recursive balanced 2-means for paper-scale L.
+
+    Each node splits its labels into two halves sized proportionally to
+    the leaf counts below (so every leaf ends within one label of L/C):
+    Lloyd-iterate two centers, order labels by the margin d₀ − d₁
+    (stable), send the first ``n_left`` to the left child.  Memory is
+    O(L·D) — never an (L, C) matrix — and the recursion is sequential
+    over a seeded generator, so the result is deterministic."""
+    assign = np.zeros(rows.shape[0], np.int64)
+    stack = [(np.arange(rows.shape[0]), 0, n_clusters)]
+    while stack:
+        idx, first_leaf, leaves = stack.pop()
+        if leaves <= 1 or len(idx) <= 1:
+            assign[idx] = first_leaf
+            continue
+        r = rows[idx].astype(np.float32)
+        c = r[rng.choice(len(idx), size=2, replace=False)].copy()
+        left_leaves = leaves // 2
+        n_left = int(round(len(idx) * left_leaves / leaves))
+        n_left = min(max(n_left, 1), len(idx) - 1)
+        for _ in range(max(iters, 1)):
+            d0 = ((r - c[0]) ** 2).sum(axis=1)
+            d1 = ((r - c[1]) ** 2).sum(axis=1)
+            order = np.argsort(d0 - d1, kind="stable")
+            m0, m1 = order[:n_left], order[n_left:]
+            c = np.stack([r[m0].mean(axis=0), r[m1].mean(axis=0)])
+        stack.append((idx[m0], first_leaf, left_leaves))
+        stack.append((idx[m1], first_leaf + left_leaves,
+                      leaves - left_leaves))
+    return assign
+
+
+def build_shortlist_index(cfg: ELMOHeadConfig, state: HeadState, *,
+                          n_clusters: Optional[int] = None,
+                          beam: Optional[int] = None,
+                          iters: int = 8, seed: int = 0) -> ShortlistIndex:
+    """Balanced k-means over the head's W rows in BF16 — offline, host
+    numpy (f64 accumulation so the result is stable across BLAS builds),
+    seeded init, so one (cfg, state, seed) always yields one index.
+
+    Geometry defaults come from ``tuning.shortlist_params`` (the serving
+    residency/work model); pass ``n_clusters``/``beam`` to pin them (the
+    golden fixture does).  Small problems run flat Lloyd + greedy
+    capacity assignment; past ``_FLAT_BUILD_MAX`` distance entries the
+    build switches to ``_hierarchical_assign`` (recursive balanced
+    2-means, the Parabel/PLT construction) so multi-million-label heads
+    cluster in O(L·D) host memory."""
+    L, D = cfg.num_labels, cfg.d_model
+    if n_clusters is None or beam is None:
+        c_def, b_def = _tuning.shortlist_params(L, D)
+        n_clusters = c_def if n_clusters is None else n_clusters
+        beam = b_def if beam is None else beam
+    n_clusters = int(min(max(n_clusters, 1), L))
+    beam = int(min(max(beam, 1), n_clusters))
+    rows = np.asarray(jnp.asarray(state.w).astype(jnp.bfloat16)
+                      .astype(jnp.float32))
+    rows = rows.reshape(cfg.padded_labels, D)[:L].astype(np.float64)
+    rng = np.random.default_rng(seed)
+    if L * n_clusters > _FLAT_BUILD_MAX:
+        assign = _hierarchical_assign(rows, n_clusters, rng, iters)
+        cent = np.zeros((n_clusters, D), np.float64)
+        for c in range(n_clusters):
+            m = assign == c
+            if m.any():
+                cent[c] = rows[m].mean(axis=0)
+    else:
+        cent = rows[rng.choice(L, size=n_clusters, replace=False)].copy()
+        cap = -(-L // n_clusters)
+        assign = _balanced_assign(rows, cent, cap)
+        for _ in range(iters):
+            for c in range(n_clusters):
+                m = assign == c
+                if m.any():
+                    cent[c] = rows[m].mean(axis=0)
+            assign = _balanced_assign(rows, cent, cap)
+    asg = np.full((cfg.padded_labels,), -1, np.int32)
+    asg[:L] = assign.astype(np.int32)
+    centroids = jnp.asarray(cent.astype(np.float32)).astype(jnp.bfloat16)
+    return ShortlistIndex(
+        centroids=centroids,
+        assign=jnp.asarray(asg.reshape(cfg.num_chunks, cfg.chunk)),
+        n_clusters=n_clusters, beam=beam, w_checksum=_w_checksum(state))
+
+
+def cluster_sizes(index: ShortlistIndex) -> np.ndarray:
+    """(n_clusters,) member counts — the golden fixture pins these."""
+    a = np.asarray(index.assign).reshape(-1)
+    return np.bincount(a[a >= 0], minlength=index.n_clusters)
+
+
+def synthetic_clustered_state(cfg: ELMOHeadConfig, *, groups: int = 128,
+                              noise: float = 0.3, seed: int = 7
+                              ) -> HeadState:
+    """Deterministic structured head for recall fixtures and benches.
+
+    An i.i.d.-Gaussian head has NO cluster structure — every label row is
+    equidistant from every other in expectation — so a partition cannot
+    route queries and shortlist recall is meaningless noise.  Trained XMC
+    heads are the opposite (semantically related labels share direction;
+    that structure is the entire PLT/X-Transformer premise), so the
+    fixture draws rows around ``groups`` latent centers with ``noise``
+    in-group spread, scaled 1/√D like ``init_head``, then quantized to
+    the config's storage dtype.  Pure numpy from one seeded generator:
+    the bits — and therefore the committed golden index built from them —
+    are reproducible everywhere."""
+    L, D = cfg.num_labels, cfg.d_model
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((groups, D))
+    gid = rng.integers(0, groups, size=L)
+    rows = centers[gid] + noise * rng.standard_normal((L, D))
+    w = np.zeros((cfg.padded_labels, D), np.float32)
+    w[:L] = rows / np.sqrt(D)
+    w = jnp.asarray(w).reshape(cfg.num_chunks, cfg.chunk, D) \
+        .astype(cfg.wdtype)
+    comp = None
+    if cfg.kahan_chunks:
+        comp = jnp.zeros((cfg.kahan_chunks, cfg.chunk, D), jnp.bfloat16)
+    return HeadState(w, comp)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: centroid scoring through the fused_topk contract
+# ---------------------------------------------------------------------------
+
+
+def stage1_clusters(centroids: jax.Array, x: jax.Array, *,
+                    n_clusters: int, beam: int,
+                    impl: str = "auto") -> jax.Array:
+    """(B, beam) admitted cluster ids per query, -1 in empty slots.
+
+    The centroids are scored as ONE chunk of ``n_clusters`` pseudo-labels
+    through ``ops.fused_topk`` — the same streaming/merge/tie-break
+    contract (``ref.topk_merge``) as stage 2, so stage 1 needs no kernel
+    of its own and inherits the sentinel semantics: overflow slots
+    surface (NEG_INF, id 0) and are masked here to -1 so an unselected
+    cluster 0 can never be admitted by accident.  Centroids are BF16 and
+    score unquantized (``quantize_x=False``) regardless of the head's
+    FP8 setting — stage 1 is a router, not the paper's scorer.
+
+    Array-level so the sharded serving body (inside ``shard_map``) can
+    call it on the replicated centroid leaf directly; use
+    ``shortlist_clusters`` with a ``ShortlistIndex`` elsewhere."""
+    from repro.kernels import ops as _ops
+    vals, ids = _ops.fused_topk(
+        x.astype(jnp.bfloat16), centroids[None],
+        jnp.zeros((1,), jnp.uint32), jnp.zeros((1,), jnp.int32),
+        k=beam, num_labels=n_clusters, quantize_x=False,
+        drop_rate=0.0, impl=impl)
+    return jnp.where(vals > NEG_INF / 2, ids, -1)
+
+
+def shortlist_clusters(index: ShortlistIndex, x: jax.Array, *,
+                       beam: Optional[int] = None,
+                       impl: str = "auto") -> jax.Array:
+    """``stage1_clusters`` over a built index (beam defaults to the
+    index's)."""
+    beam = index.beam if beam is None else int(beam)
+    beam = min(max(beam, 1), index.n_clusters)
+    return stage1_clusters(index.centroids, x, n_clusters=index.n_clusters,
+                           beam=beam, impl=impl)
+
+
+def full_beam(index: ShortlistIndex, batch: int) -> jax.Array:
+    """(B, n_clusters) beam admitting every cluster — with it, the
+    restricted top-k equals the exact top-k bit-for-bit (recall 1.0);
+    the differential tests pin this."""
+    return jnp.broadcast_to(
+        jnp.arange(index.n_clusters, dtype=jnp.int32),
+        (batch, index.n_clusters))
+
+
+def shortlist_recall_at_k(cfg: ELMOHeadConfig, state: HeadState,
+                          index: ShortlistIndex, x: jax.Array,
+                          ks: Sequence[int] = (1, 5, 10), *,
+                          impl: str = "xla") -> dict:
+    """recall@k of shortlisted vs exact serving: mean over queries of
+    |shortlisted top-k ∩ exact top-k| / k.  Quantifies what the beam
+    excludes — the restricted result itself is exact on admitted labels,
+    so recall is the ONLY quality axis the shortlist adds."""
+    from repro.kernels import ops as _ops
+    kmax = int(max(ks))
+    xb = x.astype(jnp.bfloat16)
+    seeds = jnp.zeros((cfg.num_chunks,), jnp.uint32)
+    base = jnp.arange(cfg.num_chunks, dtype=jnp.int32) * cfg.chunk
+    kw = dict(k=kmax, num_labels=cfg.num_labels, quantize_x=cfg.qx,
+              drop_rate=0.0, impl=impl)
+    ve, ie = _ops.fused_topk(xb, state.w, seeds, base, **kw)
+    beam_ids = shortlist_clusters(index, xb, impl=impl)
+    vs, is_ = _ops.fused_topk(xb, state.w, seeds, base,
+                              assign=index.assign, beam=beam_ids, **kw)
+    # sentinel slots must never count as hits: exact → -2, shortlist → -1
+    ie = np.where(np.asarray(ve) > NEG_INF / 2, np.asarray(ie), -2)
+    is_ = np.where(np.asarray(vs) > NEG_INF / 2, np.asarray(is_), -1)
+    out = {}
+    for k in ks:
+        hit = (is_[:, :k, None] == ie[:, None, :k]).any(-1)
+        out[int(k)] = float(hit.sum(-1).mean() / k)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# persistence: ckpt-style crc32 leaves, atomic commit
+# ---------------------------------------------------------------------------
+
+
+def save_shortlist_index(path: str, index: ShortlistIndex,
+                         extra: Optional[dict] = None) -> str:
+    """Persist the index as a committed directory beside checkpoints.
+
+    Same integrity scheme as ``checkpoint.ckpt`` leaves: raw-bit .npy
+    per array (BF16 stored as uint16 bits), per-leaf crc32 in
+    ``manifest.json``, a ``COMMITTED`` marker holding the manifest crc,
+    all staged in a tmp dir and atomically renamed."""
+    from repro.checkpoint import ckpt as _ckpt
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"format": _FORMAT, "n_clusters": index.n_clusters,
+                "beam": index.beam, "w_checksum": index.w_checksum,
+                "extra": extra or {}, "leaves": []}
+    for name in ("centroids", "assign"):
+        arr = jnp.asarray(getattr(index, name))
+        data = _ckpt._to_numpy(arr)
+        fname = name + ".npy"
+        np.save(os.path.join(tmp, fname), data)
+        manifest["leaves"].append({
+            "name": name, "file": fname, "shape": list(arr.shape),
+            "dtype": str(arr.dtype), "checksum": _ckpt._checksum(data)})
+    mtext = json.dumps(manifest)
+    _ckpt._fsync_write(os.path.join(tmp, "manifest.json"), mtext)
+    _ckpt._fsync_write(os.path.join(tmp, "COMMITTED"), json.dumps(
+        {"manifest_crc32": f"{zlib.crc32(mtext.encode()):08x}"}))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def load_shortlist_index(path: str, *, verify: bool = True
+                         ) -> ShortlistIndex:
+    """Load + integrity-check a persisted index.  Raises
+    ``ShortlistError`` on a missing commit marker, torn manifest, crc
+    mismatch, or unknown format — a corrupt index must never silently
+    route serving."""
+    from repro.checkpoint import ckpt as _ckpt
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise ShortlistError(f"{path}: no COMMITTED marker")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            mtext = f.read()
+        manifest = json.loads(mtext)
+        with open(os.path.join(path, "COMMITTED")) as f:
+            want = json.load(f).get("manifest_crc32")
+    except (OSError, json.JSONDecodeError, ValueError) as e:
+        raise ShortlistError(f"{path}: manifest unreadable ({e!r})")
+    if want is not None and f"{zlib.crc32(mtext.encode()):08x}" != want:
+        raise ShortlistError(f"{path}: manifest crc mismatch")
+    if manifest.get("format") != _FORMAT:
+        raise ShortlistError(
+            f"{path}: unknown format {manifest.get('format')!r}")
+    arrays = {}
+    for entry in manifest["leaves"]:
+        try:
+            raw = np.load(os.path.join(path, entry["file"]))
+        except (OSError, ValueError, EOFError) as e:
+            raise ShortlistError(f"{entry['name']}: unreadable ({e!r})")
+        if verify and _ckpt._checksum(raw) != entry["checksum"]:
+            raise ShortlistError(f"{entry['name']}: checksum mismatch")
+        arr = _ckpt._from_numpy(raw, entry["dtype"])
+        arrays[entry["name"]] = jnp.asarray(arr).reshape(entry["shape"])
+    for name in ("centroids", "assign"):
+        if name not in arrays:
+            raise ShortlistError(f"{path}: missing leaf {name!r}")
+    return ShortlistIndex(
+        centroids=arrays["centroids"].astype(jnp.bfloat16),
+        assign=arrays["assign"].astype(jnp.int32),
+        n_clusters=int(manifest["n_clusters"]),
+        beam=int(manifest["beam"]),
+        w_checksum=manifest.get("w_checksum", ""))

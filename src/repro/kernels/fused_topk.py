@@ -49,6 +49,25 @@ A per-block threshold check (``block max < carry min``, all rows) skips
 the merge entirely once the carry saturates above the block: with no
 sentinel in the carry row, nothing below the resident minimum can enter
 or reorder the top-k, so the skip is bitwise-invisible.
+
+Shortlisted mode (``assign``/``beam`` given — DESIGN §11) drives that
+same skip machinery from the 2-level label partition instead: each label
+block streams its (1, bl) int32 cluster ids alongside W, the per-query
+admitted clusters sit VMEM-resident as a (Bp, n_beam) int32 beam, and a
+column is *valid* only when its cluster appears in its query's beam.
+When NO column of a block is admitted for ANY query the whole block —
+the MXU dot included, not just the merge — is skipped under ``pl.when``,
+so stage-2 work scales with beam·L/C rather than L.  The skip is
+bitwise-invisible against the restricted oracle (``ref.fused_topk_ref``
+with the same assign/beam): a fully-masked block contributes only
+(NEG_INF, real id) candidates, and every carry slot holds either a
+finite value (wins outright) or the (NEG_INF, id 0) sentinel (wins or
+ties every NEG_INF tie, id 0 being minimal — masking label 0 itself
+yields the identical (NEG_INF, 0) pair), so the merge could not have
+changed the carry.  -1 entries are inert on both sides: real cluster
+ids are ≥ 0, ``assign`` is -1 only on padded label rows (already masked
+by the column-validity test) and ``beam`` is -1 only in sentinel/padded
+slots.
 """
 from __future__ import annotations
 
@@ -68,9 +87,13 @@ from repro.kernels.fused_head import _head_shapes
 _I32_MAX = 2 ** 31 - 1   # plain int: jnp scalars would be captured consts
 
 
-def _topk_kernel(sd_ref, base_ref, x_ref, w_ref, vals_out, ids_out,
-                 vals_sc, ids_sc, *, k: int, num_labels: int, lc: int,
-                 bpc: int, n_b: int, quantize_x: bool, drop_rate: float):
+def _topk_kernel(sd_ref, base_ref, x_ref, w_ref, *refs, k: int,
+                 num_labels: int, lc: int, bpc: int, n_b: int,
+                 quantize_x: bool, drop_rate: float, shortlisted: bool):
+    if shortlisted:                         # + streamed cluster ids, beam
+        asg_ref, beam_ref, vals_out, ids_out, vals_sc, ids_sc = refs
+    else:
+        vals_out, ids_out, vals_sc, ids_sc = refs
     li = pl.program_id(0)
     nb = pl.num_programs(0)
     Bp, Dp = x_ref.shape
@@ -84,22 +107,6 @@ def _topk_kernel(sd_ref, base_ref, x_ref, w_ref, vals_out, ids_out,
         vals_sc[...] = jnp.full_like(vals_sc, NEG_INF)
         ids_sc[...] = jnp.zeros_like(ids_sc)
 
-    # ---- forward: op-for-op fused_head's serving matmul (bit parity) ----
-    xq = x_ref[...]
-    if quantize_x:
-        xq = xq.astype(jnp.float8_e4m3fn)
-    xq = xq.astype(jnp.bfloat16)
-    w16 = w_ref[0].astype(jnp.bfloat16)
-    if drop_rate > 0.0:
-        bits = PR.hash_bits_2d(sd_ref[cidx], off.astype(jnp.uint32),
-                               jnp.uint32(0), (bl, Dp))
-        keep = PR.uniform_from_bits(bits) >= drop_rate
-        w16 = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
-            / jnp.bfloat16(1.0 - drop_rate)
-    z16 = jax.lax.dot_general(xq, w16, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32
-                              ).astype(jnp.bfloat16)
-
     # global label coordinate + validity (local-row × real-label × real
     # batch row), same construction as the train grid kernel.  Masking
     # the padded batch rows matters for PERF, not parity (their outputs
@@ -110,34 +117,76 @@ def _topk_kernel(sd_ref, base_ref, x_ref, w_ref, vals_out, ids_out,
     col_global = col_local + base_ref[cidx]
     rowv = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 0) < n_b
     valid = (col_global < num_labels) & (col_local < lc) & rowv
-    zm = jnp.where(valid, z16.astype(jnp.float32), NEG_INF)
 
-    # ---- threshold skip: nothing in this block can displace the carry.
-    # Padded batch rows sit at (NEG_INF carry, NEG_INF block) forever and
-    # would tie `>=` on every block — only REAL rows get a vote.
-    thresh = vals_sc[...][:, K - 1]         # per-row resident minimum
-    need = jnp.any((zm.max(axis=1) >= thresh) & rowv[:, 0])
+    if shortlisted:
+        # a column is admitted iff its cluster id appears in its query's
+        # beam.  -1 is inert by construction: beam −1 (sentinel/padded
+        # slot) never equals a real assign ≥ 0, and assign −1 only sits
+        # on padded label rows `valid` already excludes.
+        asg = asg_ref[...]                  # (1, bl) streamed with W
+        n_beam = beam_ref.shape[1]
 
-    @pl.when(need)
-    def _merge():
-        cv = jnp.concatenate([vals_sc[...], zm], axis=1)       # (Bp, K+bl)
-        ci = jnp.concatenate([ids_sc[...], col_global], axis=1)
-        iota = jax.lax.broadcasted_iota(jnp.int32, cv.shape, 1)
+        def _adm(e, adm):
+            return adm | (beam_ref[:, pl.ds(e, 1)] == asg)
 
-        def body(j, carry):
-            cv, ci = carry
-            m = cv.max(axis=1, keepdims=True)
-            tie = cv == m
-            sid = jnp.min(jnp.where(tie, ci, _I32_MAX), axis=1,
-                          keepdims=True)
-            hit = tie & (ci == sid)
-            pos = jnp.min(jnp.where(hit, iota, _I32_MAX), axis=1,
-                          keepdims=True)
-            vals_sc[:, pl.ds(j, 1)] = m
-            ids_sc[:, pl.ds(j, 1)] = sid
-            return jnp.where(iota == pos, NEG_INF, cv), ci
+        admit = jax.lax.fori_loop(0, n_beam, _adm,
+                                  jnp.zeros((Bp, bl), jnp.bool_))
+        valid = valid & admit
 
-        jax.lax.fori_loop(0, K, body, (cv, ci))
+    def _block():
+        # ---- forward: op-for-op fused_head's serving matmul (parity) ----
+        xq = x_ref[...]
+        if quantize_x:
+            xq = xq.astype(jnp.float8_e4m3fn)
+        xq = xq.astype(jnp.bfloat16)
+        w16 = w_ref[0].astype(jnp.bfloat16)
+        if drop_rate > 0.0:
+            bits = PR.hash_bits_2d(sd_ref[cidx], off.astype(jnp.uint32),
+                                   jnp.uint32(0), (bl, Dp))
+            keep = PR.uniform_from_bits(bits) >= drop_rate
+            w16 = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
+                / jnp.bfloat16(1.0 - drop_rate)
+        z16 = jax.lax.dot_general(xq, w16, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32
+                                  ).astype(jnp.bfloat16)
+        zm = jnp.where(valid, z16.astype(jnp.float32), NEG_INF)
+
+        # ---- threshold skip: nothing in this block can displace the
+        # carry.  Padded batch rows sit at (NEG_INF carry, NEG_INF block)
+        # forever and would tie `>=` on every block — only REAL rows get
+        # a vote.
+        thresh = vals_sc[...][:, K - 1]     # per-row resident minimum
+        need = jnp.any((zm.max(axis=1) >= thresh) & rowv[:, 0])
+
+        @pl.when(need)
+        def _merge():
+            cv = jnp.concatenate([vals_sc[...], zm], axis=1)   # (Bp, K+bl)
+            ci = jnp.concatenate([ids_sc[...], col_global], axis=1)
+            iota = jax.lax.broadcasted_iota(jnp.int32, cv.shape, 1)
+
+            def body(j, carry):
+                cv, ci = carry
+                m = cv.max(axis=1, keepdims=True)
+                tie = cv == m
+                sid = jnp.min(jnp.where(tie, ci, _I32_MAX), axis=1,
+                              keepdims=True)
+                hit = tie & (ci == sid)
+                pos = jnp.min(jnp.where(hit, iota, _I32_MAX), axis=1,
+                              keepdims=True)
+                vals_sc[:, pl.ds(j, 1)] = m
+                ids_sc[:, pl.ds(j, 1)] = sid
+                return jnp.where(iota == pos, NEG_INF, cv), ci
+
+            jax.lax.fori_loop(0, K, body, (cv, ci))
+
+    if shortlisted:
+        # the shortlist-driven block-skip: a block with no admitted
+        # column for any query contributes only (NEG_INF, id) candidates
+        # — which cannot change the carry (module docstring) — so the
+        # MXU dot AND the merge are skipped wholesale.
+        pl.when(jnp.any(valid))(_block)
+    else:
+        _block()
 
     @pl.when(li == nb - 1)
     def _emit():
@@ -151,7 +200,9 @@ def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
                base: jax.Array, *, k: int, num_labels: int,
                quantize_x: bool = True, drop_rate: float = 0.0,
                block_l: int | None = None,
-               interpret: bool | None = None
+               interpret: bool | None = None,
+               assign: jax.Array | None = None,
+               beam: jax.Array | None = None
                ) -> Tuple[jax.Array, jax.Array]:
     """Top-k over every head logit in ONE launch, never materializing them.
 
@@ -161,10 +212,20 @@ def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
     rank·lc`` label-sharded).  Returns ((B, k) f32 values descending,
     (B, k) int32 global ids) — bit-identical, values AND ids, to the
     chunk-scan streaming top-k and to ``ref.fused_topk_ref``.
+
+    ``assign`` (C, lc) int32 + ``beam`` (B, n_beam) int32 (both or
+    neither) switch on shortlisted mode: the top-k is restricted to the
+    labels whose cluster appears in their query's beam, bit-identical to
+    ``ref.fused_topk_ref`` with the same assign/beam, and label blocks
+    with no admitted column are skipped wholesale (module docstring).
     """
     (B, D), (C, lc, _) = x.shape, w.shape
     assert k >= 1
+    shortlisted = assign is not None
+    if shortlisted:
+        assert beam is not None, "assign without beam"
     interpret = tuning.interpret_default(interpret)
+    n_beam = beam.shape[1] if shortlisted else 0
     if block_l is None:
         if interpret:
             # unlike the train grid, ANY label tile is bit-identical here
@@ -175,7 +236,8 @@ def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
             block_l = tuning.LANE
         else:
             block_l = tuning.topk_block_l(B, lc, D,
-                                          jnp.dtype(w.dtype).itemsize, k)
+                                          jnp.dtype(w.dtype).itemsize, k,
+                                          n_beam=n_beam)
     Bp, Dp, lcp, bl = _head_shapes(B, D, lc, block_l, interpret)
     # interpret mode keeps the exact carry width; compiled lanes pad it —
     # extra slots are sentinels past k and cannot change the first k
@@ -189,15 +251,31 @@ def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
         w, ((0, 0), (0, lcp - lc), (0, Dp - D)))
 
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    in_specs = [smem, smem,
+                pl.BlockSpec((Bp, Dp), lambda l: (0, 0)),
+                pl.BlockSpec((1, bl, Dp),
+                             lambda l: (l // bpc, l % bpc, 0))]
+    operands = [jnp.asarray(seeds_drop).astype(jnp.uint32),
+                jnp.asarray(base).astype(jnp.int32), xp, wp]
+    if shortlisted:
+        # cluster ids stream (1, bl) blocks in lock-step with W; the beam
+        # is VMEM-resident like the carry.  All padding is -1 (inert) —
+        # pad2 would write 0s, which name a REAL cluster.
+        Ep = n_beam if interpret else tuning._pad_up(n_beam, tuning.LANE)
+        asgp = jnp.pad(jnp.asarray(assign).astype(jnp.int32),
+                       ((0, 0), (0, lcp - lc)), constant_values=-1)
+        beamp = jnp.pad(jnp.asarray(beam).astype(jnp.int32),
+                        ((0, Bp - B), (0, Ep - n_beam)),
+                        constant_values=-1)
+        in_specs += [pl.BlockSpec((1, bl), lambda l: (l // bpc, l % bpc)),
+                     pl.BlockSpec((Bp, Ep), lambda l: (0, 0))]
+        operands += [asgp, beamp]
     vals, ids = pl.pallas_call(
         functools.partial(_topk_kernel, k=k, num_labels=num_labels, lc=lc,
                           bpc=bpc, n_b=B, quantize_x=quantize_x,
-                          drop_rate=drop_rate),
+                          drop_rate=drop_rate, shortlisted=shortlisted),
         grid=(C * bpc,),
-        in_specs=[smem, smem,
-                  pl.BlockSpec((Bp, Dp), lambda l: (0, 0)),
-                  pl.BlockSpec((1, bl, Dp),
-                               lambda l: (l // bpc, l % bpc, 0))],
+        in_specs=in_specs,
         out_specs=(pl.BlockSpec((Bp, K), lambda l: (0, 0)),
                    pl.BlockSpec((Bp, K), lambda l: (0, 0))),
         out_shape=(jax.ShapeDtypeStruct((Bp, K), jnp.float32),
@@ -205,6 +283,5 @@ def fused_topk(x: jax.Array, w: jax.Array, seeds_drop: jax.Array,
         scratch_shapes=[pltpu.VMEM((Bp, K), jnp.float32),
                         pltpu.VMEM((Bp, K), jnp.int32)],
         interpret=interpret,
-    )(jnp.asarray(seeds_drop).astype(jnp.uint32),
-      jnp.asarray(base).astype(jnp.int32), xp, wp)
+    )(*operands)
     return vals[:B, :k], ids[:B, :k]

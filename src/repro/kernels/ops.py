@@ -153,18 +153,24 @@ def fused_head_logits(x, w, seeds_drop, *, impl: str = "auto", **kw):
 
 
 def fused_topk(x, w, seeds_drop, base, *, k: int, num_labels: int,
-               impl: str = "auto", **kw):
+               impl: str = "auto", assign=None, beam=None, **kw):
     """Streaming top-k serving in one launch (kernels/fused_topk.py):
     (B, k) values/ids over every label block, the logits never leave
     VMEM.  ``impl="xla"`` runs the chunk-scan oracle (same tie-break
-    contract, bit-identical) — the non-TPU production path."""
+    contract, bit-identical) — the non-TPU production path.
+
+    ``assign``/``beam`` (both or neither) restrict the top-k to the
+    shortlisted clusters (DESIGN §11) — identically on every impl, so
+    the XLA oracle IS the restricted reference the kernel is tested
+    against bit-for-bit."""
     impl = resolve_impl(impl)
     if impl == "xla":
         kw.pop("block_l", None)     # the oracle scan has no label tile
         return _ref.fused_topk_ref(x, w, seeds_drop, base, k=k,
-                                   num_labels=num_labels, **kw)
+                                   num_labels=num_labels, assign=assign,
+                                   beam=beam, **kw)
     return _ft.fused_topk(x, w, seeds_drop, base, k=k,
-                          num_labels=num_labels,
+                          num_labels=num_labels, assign=assign, beam=beam,
                           interpret=_interpret_of(impl), **kw)
 
 

@@ -145,7 +145,9 @@ def topk_merge(vals: jax.Array, idx: jax.Array, z: jax.Array,
 
 def fused_topk_ref(x: jax.Array, w: jax.Array, seeds: jax.Array,
                    base: jax.Array, *, k: int, num_labels: int,
-                   quantize_x: bool = True, drop_rate: float = 0.0
+                   quantize_x: bool = True, drop_rate: float = 0.0,
+                   assign: jax.Array | None = None,
+                   beam: jax.Array | None = None
                    ) -> tuple[jax.Array, jax.Array]:
     """Oracle for the streaming top-k serving megakernel
     (``kernels/fused_topk.py``) — and the non-TPU production path: a
@@ -154,21 +156,42 @@ def fused_topk_ref(x: jax.Array, w: jax.Array, seeds: jax.Array,
     ``topk_merge`` above — shared with ``head.serving._topk_scan``.
 
     ``base`` (C,) int32 is each chunk's global label id of local row 0
-    (``cidx·chunk`` single-device, ``cidx·chunk + rank·lc`` sharded)."""
+    (``cidx·chunk`` single-device, ``cidx·chunk + rank·lc`` sharded).
+
+    ``assign`` (C, lc) int32 per-row cluster ids + ``beam`` (B, n_beam)
+    int32 admitted clusters per query (both or neither) make this the
+    RESTRICTED oracle for shortlisted serving (DESIGN §11): non-admitted
+    columns are masked to NEG_INF before the merge, so the result is the
+    exact top-k over exactly the labels the shortlist admits — sentinel
+    slots (NEG_INF, id 0) surface when a row admits fewer than k labels,
+    never a non-admitted id.  ``beam`` slots of -1 are inert (real
+    cluster ids are ≥ 0; ``assign`` is -1 only on padded label rows,
+    which the ``cols < num_labels`` mask in ``topk_merge`` kills
+    regardless)."""
+    from repro.core.losses import NEG_INF  # local import: core ↔ kernels
     B = x.shape[0]
     lc = w.shape[1]
+    shortlisted = assign is not None
+    if shortlisted:
+        assert beam is not None, "assign without beam"
+        beam = jnp.asarray(beam).astype(jnp.int32)
 
     def body(carry, inp):
-        wc, sd, b0 = inp
+        wc, sd, b0 = inp[:3]
         z = fp8_logits_ref(x, wc, sd, drop_rate=drop_rate,
                            quantize_x=quantize_x)
+        if shortlisted:
+            asg = inp[3]                              # (lc,) cluster ids
+            adm = jnp.any(asg[None, :, None] == beam[:, None, :], axis=-1)
+            z = jnp.where(adm, z.astype(jnp.float32), NEG_INF)
         cols = b0 + jnp.arange(lc, dtype=jnp.int32)
         return topk_merge(*carry, z, cols, k, num_labels), None
 
-    (vals, idx), _ = jax.lax.scan(
-        body, topk_carry_init(B, k),
-        (w, jnp.asarray(seeds).astype(jnp.uint32),
-         jnp.asarray(base).astype(jnp.int32)))
+    xs = (w, jnp.asarray(seeds).astype(jnp.uint32),
+          jnp.asarray(base).astype(jnp.int32))
+    if shortlisted:
+        xs = xs + (jnp.asarray(assign).astype(jnp.int32),)
+    (vals, idx), _ = jax.lax.scan(body, topk_carry_init(B, k), xs)
     return vals, idx
 
 

@@ -18,6 +18,7 @@ Everything is a pure function of static shapes; results are memoized.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -233,7 +234,8 @@ def head_grid_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
     return LANE
 
 
-def _topk_vmem(B: int, D: int, bl: int, w_bytes: int, k: int) -> int:
+def _topk_vmem(B: int, D: int, bl: int, w_bytes: int, k: int,
+               n_beam: int = 0) -> int:
     """Streaming top-k serving megakernel working-set model at label tile
     ``bl`` (``kernels/fused_topk.py``, DESIGN.md §9) — the single source of
     truth for its tile chooser and viability gate.
@@ -241,41 +243,71 @@ def _topk_vmem(B: int, D: int, bl: int, w_bytes: int, k: int) -> int:
     Resident across the whole launch: X and the (B, K) value/id running
     top-k (carry + double-buffered output blocks).  Per tile: the
     double-buffered W stream, the masked logits block, and the selection
-    merge's (B, K+bl) candidate value/id pair."""
+    merge's (B, K+bl) candidate value/id pair.
+
+    ``n_beam`` > 0 is shortlisted mode (DESIGN §11): the (B, n_beam) int32
+    admitted-cluster beam joins the resident set, and each tile also
+    streams its (1, bl) int32 cluster-id block and holds the (B, bl)
+    admit-mask transient."""
     Bp = _pad_up(max(B, 1), 16)
     Dp = _pad_up(max(D, 1), LANE)
     Kp = _pad_up(max(k, 1), LANE)
+    Ep = _pad_up(n_beam, LANE) if n_beam else 0
     resident = (Bp * Dp * 2              # X bf16
                 + Bp * Kp * 8            # running (vals f32, ids i32)
-                + 2 * Bp * Kp * 8)       # out blocks, double-buffered
+                + 2 * Bp * Kp * 8        # out blocks, double-buffered
+                + Bp * Ep * 4)           # resident beam i32 (shortlisted)
     per_tile = (2 * bl * Dp * w_bytes    # W stream, double-buffered
                 + Bp * bl * 10           # z16 + masked f32 + col ids
-                + Bp * (Kp + bl) * 8)    # merge candidate (value, id) pair
+                + Bp * (Kp + bl) * 8     # merge candidate (value, id) pair
+                + (2 * bl * 4 + Bp * bl if n_beam else 0))  # asg + admit
     return resident + per_tile
 
 
 @functools.lru_cache(maxsize=None)
 def topk_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
-                 k: int = 128) -> int:
+                 k: int = 128, n_beam: int = 0) -> int:
     """Label-row tile for the streaming top-k grid (one launch walks
     ``num_chunks · lc/bl`` blocks).  Largest fitting candidate wins —
     fewer merge steps and longer DMA/MXU overlap windows.  Returns LANE
     when nothing fits; compiled callers gate on ``fused_topk_viable``."""
     for bl in sorted(set(_cands(lc, cap=4096)), reverse=True):
-        if _topk_vmem(B, D, bl, w_bytes, k) <= VMEM_BUDGET:
+        if _topk_vmem(B, D, bl, w_bytes, k, n_beam) <= VMEM_BUDGET:
             return bl
     return LANE
 
 
 @functools.lru_cache(maxsize=None)
 def fused_topk_viable(B: int, D: int, w_bytes: int = 1,
-                      k: int = 128) -> bool:
+                      k: int = 128, n_beam: int = 0) -> bool:
     """Whether the streaming top-k megakernel fits VMEM at the smallest
     tile — same model ``topk_block_l`` minimizes over.  ``k`` defaults to
     one lane tile (the plan resolves the serving path before the query k
     is known; any k ≤ 128 shares the padded carry footprint).  When False,
     serving falls back to the materialized or chunk-scan path."""
-    return _topk_vmem(B, D, LANE, w_bytes, k) <= VMEM_BUDGET
+    return _topk_vmem(B, D, LANE, w_bytes, k, n_beam) <= VMEM_BUDGET
+
+
+@functools.lru_cache(maxsize=None)
+def shortlist_params(L: int, D: int, k: int = 10) -> tuple[int, int]:
+    """(n_clusters, beam) for 2-stage shortlisted serving (DESIGN §11).
+
+    Per-query work is C·D (stage 1: score the centroids) plus
+    beam·(L/C)·D (stage 2: exact scan over admitted clusters, balanced
+    partition so every cluster holds ≈ L/C labels) — minimized at
+    C = √(beam·L), the classic PLT/X-Transformer √L geometry.  The beam
+    is fixed small (recall, not residency, sets it: the golden fixture
+    pins recall@10 ≥ 0.95 at beam 16) and C snaps to a power of two ≥
+    LANE/4 so the centroid block and the assign stream stay tile-friendly.
+    Returns (0, 0) — shortlisting off — when L is too small for a
+    partition to pay (below ~256 labels stage 1 costs as much as exact).
+    """
+    if L < 256:
+        return (0, 0)
+    beam = 16
+    c = 2 ** max(round(math.log2(math.sqrt(beam * L))), 5)
+    c = max(min(c, L // 4), 2)
+    return c, min(beam, c)
 
 
 @functools.lru_cache(maxsize=None)

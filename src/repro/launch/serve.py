@@ -69,7 +69,8 @@ def _buckets(sizes, max_batch: int):
 
 
 def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
-               seed: int = 0, verbose_plan: bool = False) -> dict:
+               seed: int = 0, verbose_plan: bool = False,
+               shortlist: str = "off") -> dict:
     """Batched top-k serving bench: padded-bucket microbatching over
     ``ELMOHead.topk``.
 
@@ -81,12 +82,28 @@ def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
     logits never touch HBM.  (Donating the query buffer would be a
     no-op: no output can alias a (B, D) bf16 donor — the results are
     (B, k) f32/int32 — so XLA would warn and copy; the loop instead just
-    drops each batch after its call.)"""
+    drops each batch after its call.)
+
+    ``shortlist`` ∈ {off, on, auto} rewires the head config for 2-stage
+    shortlisted serving (DESIGN.md §11): when the plan resolves
+    ``topk_path == "shortlist"`` the bench builds + attaches an index
+    from the served weights and additionally reports recall@{1,5,k} of
+    shortlisted vs exact results on a held-out query batch.  Recall
+    reflects the cluster structure of the SERVED head: on a trained XMC
+    head (or the golden structured fixture) it clears 0.95; on this
+    driver's random-init smoke weights it is necessarily near
+    beam·⌈L/C⌉/L — a routing sanity number, not a quality claim."""
+    import dataclasses
+
     head_cfg = St.make_head_cfg(cfg, impl)
+    if shortlist != "off":
+        head_cfg = dataclasses.replace(head_cfg, shortlist=shortlist)
     head = RH.get_head(head_cfg, batch=batch)
     if verbose_plan:
         print(head.plan.explain(), flush=True)
     state = head.init(jax.random.PRNGKey(0))
+    if head.plan.topk_path == "shortlist":
+        head.build_shortlist(state, iters=4)
     rng = np.random.default_rng(seed)
 
     @functools.partial(jax.jit, static_argnames=("b",))
@@ -112,6 +129,14 @@ def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
     w_bytes = int(np.prod(state.w.shape)) * jnp.dtype(state.w.dtype).itemsize
     per_query_hbm = (w_bytes / max(1, min(buckets))
                      + cfg.d_model * 2 + k * 8)
+    recall = None
+    if head.shortlist is not None:
+        from repro.head import shortlist as _sl
+        xq = jnp.asarray(rng.standard_normal((batch, cfg.d_model)),
+                         jnp.bfloat16)
+        recall = _sl.shortlist_recall_at_k(
+            head.cfg, state, head.shortlist, xq,
+            ks=sorted({1, 5, k}), impl="xla")
     return {
         "queries": n_q, "padded_rows": n_padded, "k": k,
         "topk_path": head.plan.topk_path,
@@ -119,6 +144,9 @@ def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
         "per_query_hbm_bytes": int(per_query_hbm),
         "w_bytes": w_bytes,
         "bucket_sizes": sorted(set(buckets)),
+        "shortlist_c": head.plan.shortlist_c,
+        "shortlist_beam": head.plan.shortlist_beam,
+        "recall": recall,
     }
 
 
@@ -136,19 +164,30 @@ def main():
                          "microbatching, donated buffers)")
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--shortlist", default="off",
+                    choices=("off", "on", "auto"),
+                    help="2-stage shortlisted serving (DESIGN.md §11): "
+                         "build+attach a label-partition index and "
+                         "report recall@k vs exact in --bench")
     args = ap.parse_args()
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if args.bench:
         stats = topk_bench(cfg, batch=args.batch, k=args.k,
                            queries=args.queries,
                            impl="xla" if args.smoke else "auto",
-                           verbose_plan=args.plan)
+                           verbose_plan=args.plan,
+                           shortlist=args.shortlist)
         print(f"topk bench: {stats['queries']} queries "
               f"(padded {stats['padded_rows']}) k={stats['k']} "
               f"path={stats['topk_path']} buckets={stats['bucket_sizes']}")
         print(f"  {stats['qps']:.1f} queries/s, "
               f"{stats['per_query_hbm_bytes'] / 2**20:.2f} MiB "
               "HBM traffic/query (W stream amortized over the bucket)")
+        if stats["recall"] is not None:
+            rec = " ".join(f"recall@{kk}={v:.4f}"
+                           for kk, v in sorted(stats["recall"].items()))
+            print(f"  shortlist C={stats['shortlist_c']} "
+                  f"beam={stats['shortlist_beam']}: {rec} (vs exact)")
         return
     seqs, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen, impl="xla" if args.smoke else "auto",

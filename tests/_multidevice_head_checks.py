@@ -317,6 +317,85 @@ def check_facade_matches_legacy():
     print("facade ≡ legacy (sharded) ok")
 
 
+def check_shortlist_sharded_parity():
+    """ISSUE 7: 2-stage shortlisted serving under label sharding.  The
+    beam is computed per rank from the REPLICATED centroids (no
+    collective — every rank derives the same beam), each rank restricts
+    its local label window via its assign slice, and the existing
+    all-gather + (−value, id) re-rank merges.  Must be bit-identical —
+    values AND ids — to single-device shortlisted serving AND to the
+    restricted oracle on 1×4, 2×2 and 4×1 meshes, including k beyond the
+    local shard width and a handcrafted index where whole ranks admit NO
+    cluster for any query (their k local sentinels must sort behind every
+    real candidate, exactly like the padded-column case)."""
+    from repro.head import ELMOHead
+    from repro.head import plan as plan_mod
+    from repro.head import serving
+    from repro.head import shortlist as SL
+
+    cfg = H.ELMOHeadConfig(num_labels=NL, d_model=D, num_chunks=4,
+                           weight_dtype="bf16", use_sr=False,
+                           impl="grid_interpret", shortlist="on")
+    st = H.init_head(jax.random.PRNGKey(0), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+         ).astype(jnp.bfloat16)
+    plan1 = plan_mod.resolve_plan(cfg, batch=B)
+    assert plan1.topk_path == "shortlist", plan1.topk_path
+    index = SL.build_shortlist_index(cfg, st,
+                                     n_clusters=plan1.shortlist_c,
+                                     beam=plan1.shortlist_beam, iters=2)
+
+    # a degenerate index: cluster c = chunk c (rank-contiguous on 1×4),
+    # all-zero centroids so stage-1 ties resolve to cluster 0 for every
+    # query at beam 1 → on 1×4 three ranks serve an empty shortlist
+    asg = np.repeat(np.arange(4, dtype=np.int32)[:, None], cfg.chunk,
+                    axis=1).reshape(-1)
+    asg[NL:] = -1
+    empty_rank_index = SL.ShortlistIndex(
+        centroids=jnp.zeros((4, D), jnp.bfloat16),
+        assign=jnp.asarray(asg.reshape(4, cfg.chunk)),
+        n_clusters=4, beam=1, w_checksum=index.w_checksum)
+
+    for sl in (index, empty_rank_index):
+        for k in (10, 300, min(1010, cfg.padded_labels)):
+            v1, i1 = serving.topk_planned(plan1, cfg, st, x, k, sl)
+            beam_w = min(plan1.shortlist_beam or sl.beam, sl.beam)
+            beam = SL.shortlist_clusters(index=sl, x=x, beam=beam_w,
+                                         impl="xla")
+            from repro.kernels import ref
+            vo, io = ref.fused_topk_ref(
+                x, st.w, serving._eval_seeds(cfg),
+                serving._chunk_base(cfg), k=k, num_labels=NL,
+                quantize_x=cfg.qx, assign=sl.assign, beam=beam)
+            assert (_f32(v1) == _f32(vo)).all(), (sl.beam, k)
+            assert (np.asarray(i1) == np.asarray(io)).all(), (sl.beam, k)
+            for mesh_shape in ((1, 4), (2, 2), (4, 1)):
+                ctx = make_host_mesh(*mesh_shape)
+                with meshctx.use(ctx):
+                    head = ELMOHead(cfg, batch=B)
+                    # label axis 1 (4×1) legitimately plans unsharded
+                    assert head.plan.sharded == (mesh_shape[1] > 1), \
+                        mesh_shape
+                    assert head.plan.topk_path == "shortlist", mesh_shape
+                    head.attach_shortlist(sl)
+                    vS, iS = jax.jit(
+                        lambda s, xx: head.topk(s, xx, k))(st, x)
+                assert (_f32(v1) == _f32(vS)).all(), (sl.beam, k,
+                                                      mesh_shape)
+                assert (np.asarray(i1) == np.asarray(iS)).all(), \
+                    (sl.beam, k, mesh_shape)
+                assert (np.asarray(iS) < NL).all(), (sl.beam, k,
+                                                     mesh_shape)
+    # the empty-rank index really is degenerate: only cluster-0 labels
+    # (chunk 0) ever surface as non-sentinel results
+    v1, i1 = serving.topk_planned(plan1, cfg, st, x, 300,
+                                  empty_rank_index)
+    real = _f32(v1) > -1e15
+    assert real.sum(axis=1).max() <= cfg.chunk
+    assert (np.asarray(i1)[real] < cfg.chunk).all()
+    print("sharded shortlisted serving parity ok")
+
+
 def check_train_step_picks_sharded_head():
     """launch.steps.train_step under an ambient 2×2 mesh: the head runs
     label-sharded and the loss matches the single-device step closely
@@ -352,6 +431,7 @@ if __name__ == "__main__":
     check_grid_bit_parity()
     check_grid_sharded_serving()
     check_topk_kernel_sharded_parity()
+    check_shortlist_sharded_parity()
     check_grid_sr_fp8_distributional()
     check_facade_matches_legacy()
     check_train_step_picks_sharded_head()

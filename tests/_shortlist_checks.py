@@ -1,0 +1,150 @@
+"""Shared fixtures + checks for 2-stage shortlisted serving (ISSUE 7).
+
+Two consumers:
+
+* ``tests/test_shortlist.py`` — the differential harness proper.
+* ``python tests/_shortlist_checks.py --write`` — regenerates the
+  committed golden artifacts under ``tests/goldens/shortlist_4096{,/}``
+  (the saved index directory plus a JSON pinning recall@{1,5,10} and the
+  cluster-size histogram).  The golden head is NOT stored: it is fully
+  reproducible from ``shortlist.synthetic_clustered_state`` (pure seeded
+  numpy), so only the derived index + measured numbers are committed.
+
+The golden geometry (L=4096, D=64, e4m3, 128 latent groups, noise 0.2;
+index C=64/beam=28) was swept offline: an unstructured i.i.d. head tops
+out near recall@10 ≈ 0.8 at this beam fraction, while the structured
+head — the regime real trained XMC heads live in — clears 0.95 with
+margin (measured 0.984 at generation time).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import elmo_head as H
+from repro.head import serving
+from repro.head import shortlist as SL
+from repro.kernels import ops, ref
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "goldens", "shortlist_4096")
+GOLDEN_JSON = GOLDEN_DIR + ".json"
+
+# one source of truth for the golden recipe — tests re-derive the head
+# and queries from these, and compare against the committed index
+GOLDEN = dict(num_labels=4096, d_model=64, num_chunks=8,
+              weight_dtype="e4m3", groups=128, noise=0.2, head_seed=7,
+              query_seed=11, batch=64, n_clusters=64, beam=28,
+              iters=8, index_seed=0)
+RECALL_FLOOR = 0.95  # acceptance: recall@10 on the golden fixture
+
+
+def golden_cfg(**over) -> H.ELMOHeadConfig:
+    kw = dict(num_labels=GOLDEN["num_labels"], d_model=GOLDEN["d_model"],
+              num_chunks=GOLDEN["num_chunks"],
+              weight_dtype=GOLDEN["weight_dtype"], use_sr=False,
+              shortlist="on")
+    kw.update(over)
+    return H.ELMOHeadConfig(**kw)
+
+
+def golden_state(cfg: H.ELMOHeadConfig):
+    return SL.synthetic_clustered_state(cfg, groups=GOLDEN["groups"],
+                                        noise=GOLDEN["noise"],
+                                        seed=GOLDEN["head_seed"])
+
+
+def golden_queries(cfg: H.ELMOHeadConfig, batch: int | None = None):
+    b = GOLDEN["batch"] if batch is None else batch
+    return jax.random.normal(jax.random.PRNGKey(GOLDEN["query_seed"]),
+                             (b, cfg.d_model)).astype(jnp.bfloat16)
+
+
+def build_golden_index(cfg: H.ELMOHeadConfig, state) -> SL.ShortlistIndex:
+    return SL.build_shortlist_index(cfg, state,
+                                    n_clusters=GOLDEN["n_clusters"],
+                                    beam=GOLDEN["beam"],
+                                    iters=GOLDEN["iters"],
+                                    seed=GOLDEN["index_seed"])
+
+
+# ---------------------------------------------------------------------------
+# shared differential checks
+# ---------------------------------------------------------------------------
+
+
+def restricted_pair(cfg, state, x, k, assign, beam, *, impl,
+                    block_l=None):
+    """(kernel-or-impl result, restricted-oracle result) for one case."""
+    seeds = serving._eval_seeds(cfg)
+    base = serving._chunk_base(cfg)
+    got = ops.fused_topk(x, state.w, seeds, base, k=k,
+                         num_labels=cfg.num_labels, quantize_x=cfg.qx,
+                         impl=impl, block_l=block_l,
+                         assign=assign, beam=beam)
+    want = ref.fused_topk_ref(x, state.w, seeds, base, k=k,
+                              num_labels=cfg.num_labels,
+                              quantize_x=cfg.qx,
+                              assign=assign, beam=beam)
+    return got, want
+
+
+def assert_bit_equal(got, want, msg=""):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg=f"values {msg}")
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]),
+                                  err_msg=f"ids {msg}")
+
+
+def check_sentinels(vals, ids, num_labels, admitted_per_row=None):
+    """Padded columns never surface; overflow slots are exactly the
+    (NEG_INF, id 0) sentinel pairs from the carry init."""
+    from repro.core.losses import NEG_INF
+    v, i = np.asarray(vals), np.asarray(ids)
+    assert (i < max(num_labels, 1)).all(), "padded/ghost label id surfaced"
+    assert (i >= 0).all()
+    sent = v <= NEG_INF / 2
+    assert (i[sent] == 0).all(), "sentinel slot carries a non-zero id"
+    if admitted_per_row is not None:
+        k = v.shape[1]
+        for r, adm in enumerate(admitted_per_row):
+            n_real = (~sent[r]).sum()
+            assert n_real <= min(adm, k), (r, n_real, adm)
+
+
+# ---------------------------------------------------------------------------
+# golden regeneration
+# ---------------------------------------------------------------------------
+
+
+def _write_golden() -> None:
+    cfg = golden_cfg()
+    state = golden_state(cfg)
+    index = build_golden_index(cfg, state)
+    x = golden_queries(cfg)
+    recall = SL.shortlist_recall_at_k(cfg, state, index, x,
+                                      ks=(1, 5, 10), impl="xla")
+    sizes = SL.cluster_sizes(index)
+    assert recall[10] >= RECALL_FLOOR, recall
+    SL.save_shortlist_index(GOLDEN_DIR, index,
+                            extra={"recipe": GOLDEN})
+    blob = {"recipe": GOLDEN,
+            "w_checksum": index.w_checksum,
+            "recall": {str(k): float(v) for k, v in recall.items()},
+            "cluster_sizes": [int(s) for s in sizes]}
+    with open(GOLDEN_JSON, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_DIR} + {GOLDEN_JSON}  recall={recall}")
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        _write_golden()
+    else:
+        print(__doc__)

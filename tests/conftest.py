@@ -18,6 +18,22 @@ def pytest_configure(config):
         "markers", "slow: long-running integration tests (subprocess suites)")
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Drop compiled executables between test modules.
+
+    A full suite run accumulates hundreds of jitted programs in one
+    process; on constrained hosts the XLA CPU JIT eventually segfaults
+    inside ``backend_compile`` (observed deterministically in
+    ``test_property_parity`` at ~75% of the run).  Compiled programs are
+    never shared across modules here, so clearing is behavior-neutral —
+    it only trades some recompilation time for bounded JIT memory."""
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture
 def multidevice_runner():
     """Run a ``tests/_*.py`` check script in a subprocess with a forced
