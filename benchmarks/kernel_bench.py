@@ -379,6 +379,119 @@ def bench_shortlist_topk(L=4096, D=64, B=256, k=10, num_chunks=8,
     ]
 
 
+def bench_serve_runtime(L=4096, D=64, B=16, k=10, num_chunks=8,
+                        groups=128, noise=0.2, slo_s=0.05):
+    """The deadline-aware serving runtime under a seeded overload soak
+    (ISSUE 8, DESIGN §12): real head, virtual clock, fault injection.
+
+    The golden structured head serves through a 2-rung ladder (exact +
+    the recall-gated shortlist); a Poisson steady → 20k-qps burst →
+    recovery trace with injected transient dispatch failures drives
+    continuous batching, admission shedding, and the degradation
+    controller.  The trace replays on a virtual clock with model
+    timing, so every number below is deterministic — the report IS the
+    artifact.
+
+    Four hard gates (a failure exits the bench driver non-zero):
+
+    * conservation — submitted == completed + rejected + timed_out, and
+      every request reached exactly one terminal state;
+    * SLO — p99 of completed requests within the deadline, and ≥99% of
+      admitted requests met theirs;
+    * the ladder ENGAGED during the burst and RECOVERED to exact after;
+    * bit-identical replay — the whole soak run twice gives the same
+      report.
+    """
+    import numpy as np
+
+    from repro import head as H
+    from repro import serve as RS
+    from repro.fault import inject as FI
+    from repro.head import ELMOHead
+    from repro.head import shortlist as SL
+
+    cfg = H.ELMOHeadConfig(num_labels=L, d_model=D, num_chunks=num_chunks,
+                           weight_dtype="e4m3", use_sr=False)
+    state = SL.synthetic_clustered_state(cfg, groups=groups, noise=noise,
+                                         seed=7)
+    head = ELMOHead(cfg, batch=B)
+    probe = jax.random.normal(jax.random.PRNGKey(11), (64, D)
+                              ).astype(jnp.bfloat16)
+    levels = RS.build_ladder(head, state, k=k, max_batch=B, probe_x=probe,
+                             iters=8, n_clusters=64, beam=28)
+    assert [lv.name for lv in levels] == ["exact", "shortlist"], levels
+
+    def trace():
+        base = FI.poisson_requests(rate_qps=300, horizon_s=0.5, seed=1,
+                                   d_model=D, k=k, deadline_s=slo_s)
+        burst = FI.poisson_requests(rate_qps=20000, horizon_s=0.3, seed=2,
+                                    d_model=D, k=k, deadline_s=slo_s,
+                                    t0=0.5, rid0=len(base))
+        cool = FI.poisson_requests(rate_qps=300, horizon_s=0.5, seed=3,
+                                   d_model=D, k=k, deadline_s=slo_s,
+                                   t0=0.8, rid0=len(base) + len(burst))
+        return base + burst + cool
+
+    def run():
+        ex = FI.FailingExecutor(RS.HeadExecutor(state, timing="model"),
+                                fail_calls=[3, 40])
+        srv = RS.Server(ex, levels,
+                        cfg=RS.ServeConfig(max_batch=B, max_queue=256,
+                                           slo_s=slo_s),
+                        estimator=RS.ServiceEstimator(RS.ServiceModel()))
+        reqs = trace()
+        rep = RS.run_trace(srv, reqs).report()
+        assert all(r.outcome is not None for r in reqs)
+        return rep
+
+    t0 = time.time()
+    rep = run()
+    wall_s = time.time() - t0
+
+    # gate 1: conservation
+    assert rep["conserved"], rep
+    # gate 2: the SLO held for admitted traffic
+    assert rep["p99_ms"] <= slo_s * 1e3, rep["p99_ms"]
+    assert rep["deadline_met_of_admitted"] >= 0.99, rep
+    # gate 3: the ladder engaged under the burst and fully recovered
+    frm_to = [(f, t) for _, f, t, _ in rep["transitions"]]
+    assert (0, 1) in frm_to, rep["transitions"]
+    assert rep["transitions"][-1][2] == 0, rep["transitions"]
+    assert rep["level_dispatches"].get("shortlist", 0) > 0, rep
+    assert rep["shed_rate"] > 0.0, "overload burst never shed"
+    assert rep["dispatch_retries"] >= 1, "injected faults never fired"
+    # gate 4: deterministic replay
+    assert run() == rep, "soak replay is not bit-identical"
+
+    shortlist_lv = levels[1]
+    return [
+        {"name": "serve_runtime/soak",
+         "us_per_call": round(1e3 * rep["p50_ms"]),   # p50 latency in µs
+         "submitted": rep["submitted"], "completed": rep["completed"],
+         "rejected": rep["rejected"], "timed_out": rep["timed_out"],
+         "shed_rate": round(rep["shed_rate"], 4),
+         "timeout_rate": round(rep["timeout_rate"], 6),
+         "p50_ms": round(rep["p50_ms"], 3), "p95_ms": round(rep["p95_ms"], 3),
+         "p99_ms": round(rep["p99_ms"], 3), "slo_ms": slo_s * 1e3,
+         "deadline_met_of_admitted": round(
+             rep["deadline_met_of_admitted"], 5),
+         "qps": round(rep["qps"]), "fill": round(rep["fill"], 4),
+         "max_depth": rep["max_depth"], "B": B, "L": L, "D": D, "k": k,
+         "bench_wall_s": round(wall_s, 1)},
+        {"name": "serve_runtime/degradation",
+         "us_per_call": 0,
+         "transitions": len(rep["transitions"]),
+         "engaged_at_signal": round(rep["transitions"][0][3], 3),
+         "recovered": rep["transitions"][-1][2] == 0,
+         "exact_dispatches": rep["level_dispatches"].get("exact", 0),
+         "shortlist_dispatches": rep["level_dispatches"].get(
+             "shortlist", 0),
+         "dispatch_retries": rep["dispatch_retries"],
+         "rung_recall": round(shortlist_lv.recall, 4),
+         "rung_cost_scale": round(shortlist_lv.cost_scale, 4)},
+    ]
+
+
 def bench_fused_chunk(L=4096, D=256, B=256):
     """Single-launch fused chunk step vs the legacy 3-launch composition.
 

@@ -168,6 +168,12 @@ def _serving():         # ISSUE 7: + 2-stage shortlisted serving (§11)
     _emit(bench_shortlist_topk())   # recall-gated (≥0.95) 2-stage serving
 
 
+@section("serve_runtime")   # ISSUE 8: deadline-aware runtime (DESIGN.md §12)
+def _serve_runtime():
+    from benchmarks.kernel_bench import bench_serve_runtime
+    _emit(bench_serve_runtime())    # fault-injected overload soak, hard-gated
+
+
 @section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows
 def _plan():
     from repro.configs import get_config

@@ -16,6 +16,24 @@ tolerant, instead of trusting it.
                            scheduled fetches, then recovers — the train
                            loop's ``retry`` wrapper must absorb it without
                            skipping or duplicating a batch.
+
+Serving side (DESIGN.md §12 — the runtime soak tests):
+
+* ``SlowExecutor`` /     — wrap a ``repro.serve`` dispatch executor to
+  ``FailingExecutor``      inflate scheduled dispatches' service time
+                           (a straggling accelerator) or raise transient
+                           ``DispatchError`` (a preemption) — the
+                           runtime must degrade/retry, never lose a
+                           request.
+* ``poisson_requests``   — seeded OPEN-LOOP Poisson load: arrival times
+                           are independent of completions (the honest
+                           overload model — real users don't slow down
+                           because your server did), stamped in virtual
+                           seconds so soaks replay bit-identically.
+* ``torn_heartbeat``     — the empty-but-renamed heartbeat a crash
+                           could publish before ``Heartbeat.beat``
+                           fsynced (readers must treat it as absent,
+                           not as a dead host).
 """
 from __future__ import annotations
 
@@ -162,6 +180,19 @@ def make_stale(hb_dir: str, host: int, age_s: float = 1e6) -> None:
     write_heartbeat(hb_dir, host, step=0, t=time.time() - age_s)
 
 
+def torn_heartbeat(hb_dir: str, host: int) -> str:
+    """Publish an EMPTY heartbeat file — what a crash between rename and
+    data reaching disk used to leave behind (``Heartbeat.beat`` now
+    fsyncs before ``os.replace`` so it cannot happen anew; readers must
+    still tolerate the artifact from an old binary: an empty record
+    means "never beaten", not "dead host at t=0")."""
+    os.makedirs(hb_dir, exist_ok=True)
+    path = os.path.join(hb_dir, f"host_{host:04d}.hb")
+    with open(path, "w"):
+        pass
+    return path
+
+
 # ---------------------------------------------------------------------------
 # transient data-pipeline errors
 # ---------------------------------------------------------------------------
@@ -190,3 +221,90 @@ class FlakyBatches:
         if i in self._fail:
             raise self._exc(f"injected transient data error (fetch {i})")
         return next(self._inner)
+
+
+# ---------------------------------------------------------------------------
+# serving-side injection (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class SlowExecutor:
+    """Wrap a serve executor: scheduled dispatches (0-based *attempt*
+    indices, counted across retries) report their service time inflated
+    ``factor``× — a straggling accelerator / noisy neighbor.  The result
+    payload is untouched: slowness must cost deadlines, not answers."""
+
+    def __init__(self, inner, slow_calls: Sequence[int],
+                 factor: float = 10.0):
+        self.inner = inner
+        self._slow = set(slow_calls)
+        self.factor = factor
+        self.calls = 0
+
+    def dispatch(self, x, k: int, level):
+        i = self.calls
+        self.calls += 1
+        res = self.inner.dispatch(x, k, level)
+        if i in self._slow:
+            res = dataclasses.replace(res,
+                                      service_s=res.service_s * self.factor)
+        return res
+
+
+class FailingExecutor:
+    """Wrap a serve executor: scheduled dispatch attempts raise a
+    transient ``DispatchError`` (preempted device, flaky interconnect).
+    The runtime's ``fault.retry`` wrapper must absorb isolated failures;
+    ``dispatch_attempts`` consecutive indices exhaust the retry budget
+    and must surface as TIMED_OUT(dispatch_failed) — never as a lost
+    request."""
+
+    def __init__(self, inner, fail_calls: Sequence[int], exc=None):
+        from repro.serve.dispatch import DispatchError
+
+        self.inner = inner
+        self._fail = set(fail_calls)
+        self._exc = exc or DispatchError
+        self.calls = 0
+
+    def dispatch(self, x, k: int, level):
+        i = self.calls
+        self.calls += 1
+        if i in self._fail:
+            raise self._exc(f"injected transient dispatch failure "
+                            f"(attempt {i})")
+        return self.inner.dispatch(x, k, level)
+
+
+def poisson_requests(*, rate_qps: float, horizon_s: float, seed: int,
+                     d_model: int, k: int = 5, deadline_s: float = 0.05,
+                     tenants: Sequence[str] = ("default",),
+                     t0: float = 0.0, rid0: int = 0) -> list:
+    """Seeded open-loop Poisson arrivals for the virtual-clock soaks.
+
+    Exponential inter-arrival gaps at ``rate_qps`` over ``horizon_s``
+    virtual seconds starting at ``t0``; each request draws i.i.d. normal
+    features and a round-robin-by-draw tenant.  Open loop: the trace is
+    generated up front and never reacts to the server, so overload stays
+    overload.  Compose segments (base → burst → recovery) by chaining
+    calls with increasing ``t0``/``rid0`` and distinct seeds; one
+    (seed, rate, horizon) tuple always yields one bit-identical trace.
+    """
+    import numpy as np
+
+    from repro.serve.request import Request
+
+    rng = np.random.default_rng(seed)
+    out = []
+    t = t0
+    rid = rid0
+    while True:
+        t += float(rng.exponential(1.0 / rate_qps))
+        if t >= t0 + horizon_s:
+            break
+        out.append(Request(
+            rid=rid, tenant=tenants[int(rng.integers(len(tenants)))],
+            x=rng.standard_normal(d_model).astype(np.float32), k=k,
+            submit_t=t, deadline_s=deadline_s))
+        rid += 1
+    return out

@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import random
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -60,9 +61,15 @@ class Heartbeat:
         return os.path.join(self.dir, f"host_{host:04d}.hb")
 
     def beat(self, step: int, now: Optional[float] = None) -> None:
+        # fsync BEFORE the rename — the §10 checkpoint commit protocol.
+        # Without it a crash can publish an empty-but-renamed heartbeat
+        # (rename durable, data not), which reads as a dead host and
+        # triggers a spurious elastic restart.
         tmp = self._path(self.host_id) + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"step": step, "t": now or time.time()}, f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, self._path(self.host_id))
 
     def _read(self, host: int) -> Optional[dict]:
@@ -103,22 +110,47 @@ class StragglerMonitor:
     def stragglers(self) -> List[int]:
         if len(self.ewma) < 2:
             return []
-        med = sorted(self.ewma.values())[len(self.ewma) // 2]
+        vals = sorted(self.ewma.values())
+        n = len(vals)
+        # true median: the upper-middle element alone (the old
+        # ``vals[n // 2]``) inflates the fleet baseline on even counts —
+        # in a 4-host fleet with one straggler it puts the straggler-
+        # adjacent host in the denominator and hides the straggler
+        med = vals[n // 2] if n % 2 else \
+            0.5 * (vals[n // 2 - 1] + vals[n // 2])
         return [h for h, t in self.ewma.items() if t > self.threshold * med]
 
 
 def retry(fn: Callable, attempts: int = 3, base_delay_s: float = 1.0,
-          retriable=(RuntimeError, OSError), sleep=time.sleep):
-    """Exponential backoff around transient launcher-side failures."""
+          retriable=(RuntimeError, OSError), sleep=time.sleep,
+          jitter: str = "none", max_delay_s: Optional[float] = None,
+          rng=None):
+    """Exponential backoff around transient launcher-side failures.
+
+    The default call is bit-compatible with the historical behavior
+    (pure ``base · 2^i`` delays).  ``max_delay_s`` caps the exponential
+    (a deep retry otherwise sleeps for minutes), and ``jitter="full"``
+    draws each delay uniformly from [0, capped delay] (AWS full jitter)
+    so a fleet retrying the same outage doesn't thunder back in
+    lock-step.  ``rng`` (anything with ``.uniform``; seed it for
+    deterministic tests) defaults to the module-level ``random``."""
     if attempts < 1:
         raise ValueError(f"retry needs attempts >= 1, got {attempts}")
+    if jitter not in ("none", "full"):
+        raise ValueError(f"unknown jitter policy {jitter!r}")
     for i in range(attempts):
         try:
             return fn()
         except retriable:
             if i == attempts - 1:
                 raise
-            sleep(base_delay_s * (2 ** i))
+            delay = base_delay_s * (2 ** i)
+            if max_delay_s is not None:
+                delay = min(delay, max_delay_s)
+            if jitter == "full":
+                delay = (rng if rng is not None else random).uniform(
+                    0.0, delay)
+            sleep(delay)
 
 
 @dataclasses.dataclass

@@ -170,15 +170,21 @@ class ELMOHead:
                                                    state, x)
         return _serving.logits_planned(plan, self.cfg, state, x)
 
-    def topk(self, state: HeadState, x: jax.Array, k: int
-             ) -> Tuple[jax.Array, jax.Array]:
+    def topk(self, state: HeadState, x: jax.Array, k: int, *,
+             shortlist=_AMBIENT) -> Tuple[jax.Array, jax.Array]:
+        """Top-k on the planned path.  ``shortlist`` overrides the
+        attached index for THIS call: pass an index to serve through it
+        (e.g. a narrowed-beam copy on the degradation ladder), or None
+        to force the exact path — the default serves whatever
+        ``attach_shortlist`` installed."""
+        if shortlist is _AMBIENT:
+            shortlist = self._shortlist
         plan = self._plan_for(x.shape[0])
         if plan.sharded:
             return _serving.topk_sharded_planned(plan, self.cfg, self.ctx,
-                                                 state, x, k,
-                                                 self._shortlist)
+                                                 state, x, k, shortlist)
         return _serving.topk_planned(plan, self.cfg, state, x, k,
-                                     self._shortlist)
+                                     shortlist)
 
     # ---- 2-stage shortlisted serving (DESIGN.md §11) ----
 

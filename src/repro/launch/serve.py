@@ -1,10 +1,14 @@
-"""Serving driver: batched prefill + greedy decode, and the batched
-top-k serving bench (ISSUE 5).
+"""Serving driver: batched prefill + greedy decode, the batched top-k
+serving bench (padded-bucket microbatching over the streaming kernel
+path), and the deadline-aware serving runtime (``repro.serve``,
+DESIGN.md §12).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
         --batch 4 --prompt-len 16 --gen 8
     PYTHONPATH=src python -m repro.launch.serve --arch xmc-bert-3m --smoke \
         --bench --batch 64 --k 5 --queries 256
+    PYTHONPATH=src python -m repro.launch.serve --arch xmc-bert-3m --smoke \
+        --serve --batch 16 --k 5 --rate 500 --burst-rate 4000 --slo-ms 50
 """
 from __future__ import annotations
 
@@ -58,14 +62,11 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, impl: str = "auto",
 def _buckets(sizes, max_batch: int):
     """Pad each ragged query-group size up to a power-of-two bucket
     (≤ max_batch): one compiled top-k program per bucket instead of one
-    per distinct batch size."""
-    out = []
-    for s in sizes:
-        b = 1
-        while b < min(int(s), max_batch):
-            b *= 2
-        out.append(min(b, max_batch))
-    return out
+    per distinct batch size.  Delegates to ``serve.batcher.bucket_for``
+    — the runtime's batcher and this bench must agree on bucket shapes
+    or the runtime would JIT programs the bench never measured."""
+    from repro.serve.batcher import bucket_for
+    return [bucket_for(s, max_batch) for s in sizes]
 
 
 def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
@@ -123,6 +124,19 @@ def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
         vals, ids = run(state, x, b=b)
     jax.block_until_ready((vals, ids))
     dt = max(time.time() - t0, 1e-9)
+    # per-bucket dispatch latency: a second, per-call-blocking pass
+    # (the qps loop above stays free-running so pipelining is measured)
+    from repro.serve.metrics import percentile
+    lat = {}
+    for x, b in zip(xs, buckets):
+        t = time.time()
+        jax.block_until_ready(run(state, x, b=b))
+        lat.setdefault(b, []).append((time.time() - t) * 1e3)
+    bucket_latency_ms = {
+        int(b): {"p50": round(percentile(v, 50), 4),
+                 "p95": round(percentile(v, 95), 4),
+                 "calls": len(v)}
+        for b, v in sorted(lat.items())}
 
     n_q = int(np.sum(sizes))
     n_padded = int(np.sum(buckets))
@@ -144,10 +158,65 @@ def topk_bench(cfg, *, batch: int, k: int, queries: int, impl: str = "auto",
         "per_query_hbm_bytes": int(per_query_hbm),
         "w_bytes": w_bytes,
         "bucket_sizes": sorted(set(buckets)),
+        "bucket_latency_ms": bucket_latency_ms,
         "shortlist_c": head.plan.shortlist_c,
         "shortlist_beam": head.plan.shortlist_beam,
         "recall": recall,
     }
+
+
+def serve_runtime(cfg, *, batch: int, k: int, rate_qps: float,
+                  burst_qps: float, horizon_s: float, slo_s: float,
+                  seed: int = 0, impl: str = "auto",
+                  real_clock: bool = False,
+                  verbose_plan: bool = False) -> dict:
+    """Drive the deadline-aware serving runtime (``repro.serve``,
+    DESIGN.md §12) against the real head: build the plan-gated
+    degradation ladder from the served weights, warm every (bucket, k,
+    level) program, replay a seeded open-loop Poisson trace (steady →
+    burst → recovery), and return the metrics report.
+
+    Default is a ``VirtualClock`` with model timing — results are real
+    head outputs but the timeline is deterministic, so the same trace
+    prints the same report anywhere.  ``real_clock=True`` serves the
+    trace in wall time with measured service times instead."""
+    from repro import serve as RS
+    from repro.fault import inject as FI
+
+    head_cfg = St.make_head_cfg(cfg, impl)
+    head = RH.get_head(head_cfg, batch=batch)
+    if verbose_plan:
+        print(head.plan.explain(), flush=True)
+    state = head.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    probe_x = jnp.asarray(rng.standard_normal((batch, cfg.d_model)),
+                          jnp.bfloat16)
+    levels = RS.build_ladder(head, state, k=k, max_batch=batch,
+                             probe_x=probe_x, seed=seed)
+    ex = RS.HeadExecutor(state,
+                         timing="measure" if real_clock else "model")
+    buckets = sorted({_b for _b in (1, 2, 4, 8, 16, 32, 64, 128)
+                      if _b <= batch} | {batch})
+    ex.warmup(levels, buckets, (k,), cfg.d_model)
+    scfg = RS.ServeConfig(max_batch=batch, max_queue=16 * batch,
+                          slo_s=slo_s, seed=seed)
+    clock = RS.RealClock() if real_clock else RS.VirtualClock()
+    srv = RS.Server(ex, levels, clock=clock, cfg=scfg)
+    base = FI.poisson_requests(
+        rate_qps=rate_qps, horizon_s=horizon_s, seed=seed,
+        d_model=cfg.d_model, k=k, deadline_s=slo_s)
+    burst = FI.poisson_requests(
+        rate_qps=burst_qps, horizon_s=horizon_s / 2, seed=seed + 1,
+        d_model=cfg.d_model, k=k, deadline_s=slo_s,
+        t0=horizon_s, rid0=len(base))
+    cool = FI.poisson_requests(
+        rate_qps=rate_qps, horizon_s=horizon_s, seed=seed + 2,
+        d_model=cfg.d_model, k=k, deadline_s=slo_s,
+        t0=1.5 * horizon_s, rid0=len(base) + len(burst))
+    rep = RS.run_trace(srv, base + burst + cool).report()
+    rep["ladder"] = [repr(lv) for lv in levels]
+    rep["clock"] = "real" if real_clock else "virtual"
+    return rep
 
 
 def main():
@@ -161,9 +230,27 @@ def main():
                     help="print the resolved HeadPlan before serving")
     ap.add_argument("--bench", action="store_true",
                     help="batched top-k serving bench (padded-bucket "
-                         "microbatching, donated buffers)")
+                         "microbatching over the streaming kernel path; "
+                         "per-bucket p50/p95 dispatch latency)")
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--serve", action="store_true",
+                    help="deadline-aware serving runtime (repro.serve): "
+                         "Poisson steady/burst/recovery trace through "
+                         "continuous batching, admission control, and "
+                         "the plan-gated degradation ladder")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="--serve steady arrival rate (requests/s)")
+    ap.add_argument("--burst-rate", type=float, default=4000.0,
+                    help="--serve overload-burst arrival rate")
+    ap.add_argument("--horizon", type=float, default=1.0,
+                    help="--serve steady-segment length (virtual s)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="--serve per-request deadline / SLO budget")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--real-clock", action="store_true",
+                    help="--serve in wall time with measured service "
+                         "times (default: deterministic virtual clock)")
     ap.add_argument("--shortlist", default="off",
                     choices=("off", "on", "auto"),
                     help="2-stage shortlisted serving (DESIGN.md §11): "
@@ -171,6 +258,18 @@ def main():
                          "report recall@k vs exact in --bench")
     args = ap.parse_args()
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if args.serve:
+        import json as _json
+
+        rep = serve_runtime(cfg, batch=args.batch, k=args.k,
+                            rate_qps=args.rate, burst_qps=args.burst_rate,
+                            horizon_s=args.horizon,
+                            slo_s=args.slo_ms / 1e3, seed=args.seed,
+                            impl="xla" if args.smoke else "auto",
+                            real_clock=args.real_clock,
+                            verbose_plan=args.plan)
+        print(_json.dumps(rep, indent=2, sort_keys=True))
+        return
     if args.bench:
         stats = topk_bench(cfg, batch=args.batch, k=args.k,
                            queries=args.queries,

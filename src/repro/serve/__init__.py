@@ -1,0 +1,45 @@
+"""``repro.serve`` — the production-shaped serving runtime (DESIGN.md §12).
+
+What ``launch/serve.py --bench`` measures, this package operates: an
+event-driven request loop with continuous batching over the HeadPlan's
+precompiled power-of-two bucket programs, admission control with
+explicit REJECTED outcomes, per-request deadlines, retry-backed
+dispatch, and a plan-gated graceful-degradation ladder (exact →
+shortlist → smaller beam, and back with hysteresis).  Deterministic by
+construction: the same runtime code runs against a ``VirtualClock`` in
+the fault-injected soak tests and a ``RealClock`` in production.
+
+    from repro import serve
+    from repro.fault import inject as FI
+
+    levels = serve.build_ladder(head, state, k=5, max_batch=32)
+    ex = serve.HeadExecutor(state, timing="model")
+    srv = serve.Server(ex, levels, cfg=serve.ServeConfig(slo_s=0.05))
+    reqs = FI.poisson_requests(rate_qps=500, horizon_s=2.0, seed=0,
+                               d_model=head.cfg.d_model)
+    report = serve.run_trace(srv, reqs).report()
+"""
+from __future__ import annotations
+
+from repro.serve.admission import AdmissionController, AdmissionDecision
+from repro.serve.batcher import DeadlineBatcher, bucket_for
+from repro.serve.clock import RealClock, VirtualClock
+from repro.serve.degrade import (DegradeController, DegradeLevel,
+                                 build_ladder, sim_ladder)
+from repro.serve.dispatch import (DispatchError, DispatchResult,
+                                  HeadExecutor, ServiceEstimator,
+                                  ServiceModel, SimExecutor)
+from repro.serve.metrics import Metrics, percentile
+from repro.serve.request import (Outcome, Request, TenantPolicy,
+                                 TokenBucket)
+from repro.serve.runtime import ServeConfig, Server, run_trace
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "DeadlineBatcher",
+    "DegradeController", "DegradeLevel", "DispatchError",
+    "DispatchResult", "HeadExecutor", "Metrics", "Outcome", "RealClock",
+    "Request", "ServeConfig", "Server", "ServiceEstimator",
+    "ServiceModel", "SimExecutor", "TenantPolicy", "TokenBucket",
+    "VirtualClock", "bucket_for", "build_ladder", "percentile",
+    "run_trace", "sim_ladder",
+]

@@ -1,0 +1,88 @@
+"""Admission control: shed at the door, not in the queue.
+
+Under overload the worst failure mode is accepting work that cannot
+meet its deadline — it clogs the queue, starves feasible requests, and
+turns one slow burst into a collapse.  Admission therefore rejects at
+submit time, with an explicit ``REJECTED`` terminal outcome and a
+reason, on three gates (checked in order):
+
+* ``queue_full``        — the bounded queue is at capacity (backpressure
+                          floor: memory can never grow with load).
+* ``predicted_late``    — the predicted wait (in-flight remainder +
+                          queue drain at current service estimates) plus
+                          this request's own service already exceeds its
+                          deadline: admitting it would only manufacture
+                          a TIMED_OUT.
+* ``tenant_throttled``  — the tenant's token bucket is empty (per-tenant
+                          rate × burst fairness; a hot tenant cannot
+                          starve the rest).  Checked last so only
+                          otherwise-admittable requests spend tokens.
+
+Per-tenant ``max_k`` is applied here too (the request's k is clamped,
+not rejected), so a tenant's serving cost is bounded by policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.serve.batcher import bucket_for
+from repro.serve.dispatch import ServiceEstimator
+from repro.serve.request import Request, TenantPolicy, TokenBucket
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    admitted: bool
+    reason: str = ""                  # one of the gate names when shed
+    predicted_wait_s: float = 0.0
+
+
+class AdmissionController:
+    def __init__(self, *, max_batch: int, max_queue: int,
+                 estimator: ServiceEstimator,
+                 policies: Optional[Dict[str, TenantPolicy]] = None,
+                 default_policy: TenantPolicy = TenantPolicy()):
+        self.max_batch = max_batch
+        self.max_queue = max_queue
+        self.estimator = estimator
+        self.policies = dict(policies or {})
+        self.default_policy = default_policy
+        self._buckets: Dict[str, TokenBucket] = {}
+
+    def policy(self, tenant: str) -> TenantPolicy:
+        return self.policies.get(tenant, self.default_policy)
+
+    def _bucket(self, tenant: str, now: float) -> TokenBucket:
+        tb = self._buckets.get(tenant)
+        if tb is None:
+            tb = self._buckets[tenant] = TokenBucket(
+                self.policy(tenant), now)
+        return tb
+
+    def predicted_wait(self, queue_depth: int, busy_remaining_s: float,
+                       level) -> float:
+        """Time until a request admitted NOW would start executing: the
+        in-flight batch's remaining service plus draining the queue ahead
+        of it in max-batch bites at current estimates."""
+        batches_ahead = math.ceil(queue_depth / self.max_batch)
+        return busy_remaining_s + batches_ahead * self.estimator.estimate(
+            self.max_batch, level)
+
+    def admit(self, req: Request, now: float, *, queue_depth: int,
+              busy_remaining_s: float, level) -> AdmissionDecision:
+        """Gate one request; clamps ``req.k`` to the tenant's ``max_k``
+        on admission.  Shedding does NOT consume a token (a throttled
+        tenant's rejected requests must not push its refill further out)."""
+        if queue_depth >= self.max_queue:
+            return AdmissionDecision(False, "queue_full")
+        wait = self.predicted_wait(queue_depth + 1, busy_remaining_s, level)
+        own = self.estimator.estimate(
+            bucket_for(queue_depth + 1, self.max_batch), level)
+        if now + wait + own > req.deadline:
+            return AdmissionDecision(False, "predicted_late", wait)
+        if not self._bucket(req.tenant, now).take(now):
+            return AdmissionDecision(False, "tenant_throttled", wait)
+        req.k = min(req.k, self.policy(req.tenant).max_k)
+        return AdmissionDecision(True, "", wait)

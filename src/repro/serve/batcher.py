@@ -1,0 +1,88 @@
+"""Deadline-aware dynamic batching over the precompiled bucket programs.
+
+The HeadPlan facade compiles one top-k program per power-of-two batch
+bucket (``launch.serve._buckets`` — whose sizing now lives here as
+``bucket_for`` so the bench and the runtime share one definition).  The
+batcher exploits the padding that buckets already pay for: a queue of n
+requests dispatches as a ``bucket_for(n)``-row program, so waiting for
+more arrivals is FREE until the queue crosses the next power of two —
+the batcher therefore waits exactly as long as the earliest deadline
+allows (``force_time``), filling the largest bucket each request's
+latency budget admits, and dispatches the moment slack runs out or the
+max bucket fills.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.serve.request import Request
+
+
+def bucket_for(size: int, max_batch: int) -> int:
+    """The power-of-two padded-bucket width for ``size`` queries — the
+    exact ``launch.serve._buckets`` semantics: the smallest power of two
+    ≥ min(size, max_batch), capped at ``max_batch`` (so a non-power-of-two
+    cap is itself the top bucket)."""
+    b = 1
+    while b < min(int(size), max_batch):
+        b *= 2
+    return min(b, max_batch)
+
+
+class DeadlineBatcher:
+    """Bounded FIFO queue + EDF batch formation.
+
+    The queue is arrival-ordered; batches are taken earliest-deadline-
+    first so under pressure the requests closest to their SLO ride the
+    next dispatch.  Expiry (``sweep_expired``) is the batcher's half of
+    the TIMED_OUT contract: a request whose deadline passes while still
+    queued leaves through exactly one door, stamped at its own deadline
+    (not at whenever the runtime happened to look)."""
+
+    def __init__(self, max_queue: int):
+        self.max_queue = max_queue
+        self._q: List[Request] = []
+
+    @property
+    def depth(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.max_queue
+
+    def push(self, req: Request) -> None:
+        assert not self.full, "admission must gate queue_full before push"
+        self._q.append(req)
+
+    def sweep_expired(self, now: float) -> List[Request]:
+        """Pop (still queued, past deadline) requests; caller finishes
+        them TIMED_OUT at their own deadline."""
+        dead = [r for r in self._q if r.deadline <= now]
+        if dead:
+            self._q = [r for r in self._q if r.deadline > now]
+        return dead
+
+    def earliest_deadline(self) -> Optional[float]:
+        return min((r.deadline for r in self._q), default=None)
+
+    def force_time(self, svc_est: Callable[[int], float],
+                   max_batch: int) -> Optional[float]:
+        """Latest moment dispatch can wait: the earliest queued deadline
+        minus the estimated service of the bucket the current queue would
+        dispatch as.  Before this, waiting grows the batch for free (the
+        bucket pads to a power of two anyway); after it, the earliest
+        request would miss.  A full max bucket forces immediately."""
+        if not self._q:
+            return None
+        if len(self._q) >= max_batch:
+            return 0.0                       # dispatch now
+        b = bucket_for(len(self._q), max_batch)
+        return self.earliest_deadline() - svc_est(b)
+
+    def take(self, max_batch: int) -> List[Request]:
+        """Pop up to ``max_batch`` requests, earliest deadline first
+        (ties broken by arrival order — Python's sort is stable)."""
+        self._q.sort(key=lambda r: r.deadline)
+        batch, self._q = self._q[:max_batch], self._q[max_batch:]
+        return batch

@@ -1,0 +1,47 @@
+"""Clocks the serving runtime is written against.
+
+Everything time-shaped in ``repro.serve`` — deadlines, batch-formation
+waits, retry backoff, service-time accounting — goes through this one
+two-method surface (``now()`` / ``sleep()``), so the SAME runtime code
+runs in production against ``RealClock`` and in tests against
+``VirtualClock``, where time only moves when the harness says so.  That
+is what makes the overload soak tests deterministic: a seeded Poisson
+trace replayed on a virtual clock produces bit-identical metrics on
+every run and every machine (DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import time
+
+
+class VirtualClock:
+    """Deterministic simulated time: advances only via ``sleep`` /
+    ``advance_to`` — never by itself.  ``advance_to`` is monotone (moving
+    "backwards" is a no-op, not an error) so interleaved event sources
+    (arrivals, dispatch completions, retry sleeps) cannot fight."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+
+    def now(self) -> float:
+        return self._now
+
+    def sleep(self, dt: float) -> None:
+        self._now += max(0.0, float(dt))
+
+    def advance_to(self, t: float) -> None:
+        self._now = max(self._now, float(t))
+
+
+class RealClock:
+    """Wall time (monotonic, so SLO math survives NTP steps)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+    def advance_to(self, t: float) -> None:
+        self.sleep(t - self.now())

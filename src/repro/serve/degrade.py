@@ -1,0 +1,150 @@
+"""Plan-gated graceful degradation: exact → shortlist → smaller beam.
+
+Under sustained overload the runtime steps down a ladder of serving
+levels that trade recall for service time, and climbs back (with
+hysteresis) when load drops.  The ladder is *plan-gated*: degraded
+levels exist only when the HeadPlan actually resolves the 2-stage
+shortlist path for this head (DESIGN.md §11) — a geometry the plan
+rejects can never be reached by load pressure — and *recall-gated*:
+each shortlist level's recall@k is measured against exact serving on a
+probe batch at build time, and levels below the recall floor (PR 7's
+0.95 contract) are dropped from the ladder entirely.  Degradation may
+shed quality, never correctness: every level is exact on the labels its
+beam admits, and the level each request was served at is recorded on
+the request and in the metrics transitions log.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeLevel:
+    """One rung: ``serve(state, x, k) -> (vals, ids)`` plus the relative
+    cost the service estimator seeds from and the measured recall@k vs
+    exact (1.0 for the exact rung)."""
+    name: str
+    cost_scale: float
+    recall: float
+    serve: Optional[Callable] = None
+
+    def __repr__(self) -> str:
+        return (f"DegradeLevel({self.name}, cost×{self.cost_scale:.3f}, "
+                f"recall={self.recall:.3f})")
+
+
+def sim_ladder(scales: Tuple[float, ...] = (1.0, 0.45, 0.3)
+               ) -> List[DegradeLevel]:
+    """Head-free ladder for the discrete-event tests: exact plus one
+    rung per extra scale, no serve callables (SimExecutor ignores them)."""
+    names = ["exact"] + [f"degraded{i}" for i in range(1, len(scales))]
+    return [DegradeLevel(n, s, 1.0 if i == 0 else 0.96)
+            for i, (n, s) in enumerate(zip(names, scales))]
+
+
+def build_ladder(head, state, *, k: int, max_batch: int,
+                 recall_floor: float = 0.95, probe_x=None,
+                 iters: int = 4, seed: int = 0,
+                 n_clusters: Optional[int] = None,
+                 beam: Optional[int] = None) -> List[DegradeLevel]:
+    """The production ladder for an ``ELMOHead`` + state.
+
+    Level 0 serves exact through ``head`` (any attached shortlist is
+    overridden off).  If — and only if — a shortlist="on" twin of the
+    config plans ``topk_path == "shortlist"``, a balanced-k-means index
+    is built from the SERVED weights (PR 7 machinery) and two degraded
+    rungs are offered: the plan's full beam, then half beam.  Each rung's
+    recall@k is measured on ``probe_x`` (vs exact, ``impl="xla"``) and
+    rungs under ``recall_floor`` are discarded — an i.i.d.-random head
+    has no cluster structure, so its ladder correctly collapses to
+    [exact].  Cost scales come from the §11 work model
+    (C·D + beam·(L/C)·D vs L·D per query).
+
+    ``n_clusters``/``beam`` override the plan's index geometry (the gate
+    itself is still the plan's): the plan tunes for work, but a ladder
+    rung lives or dies by measured recall, and a deployment that swept a
+    better (C, beam) for its head should serve it."""
+    import dataclasses as _dc
+
+    from repro.head import (build_shortlist_index, get_head,
+                            shortlist_recall_at_k)
+
+    def _exact(state, x, k):
+        return head.topk(state, x, k, shortlist=None)
+
+    levels = [DegradeLevel("exact", 1.0, 1.0, _exact)]
+    cfg = head.cfg
+    sl_cfg = _dc.replace(cfg, shortlist="on")
+    sl_head = get_head(sl_cfg, batch=max_batch, ctx=head.ctx)
+    if sl_head.plan.topk_path != "shortlist":
+        return levels                      # plan gate: no degraded path
+    index = build_shortlist_index(
+        sl_cfg, state,
+        n_clusters=n_clusters or sl_head.plan.shortlist_c or None,
+        beam=beam or sl_head.plan.shortlist_beam or None,
+        iters=iters, seed=seed)
+    L, C = cfg.num_labels, index.n_clusters
+
+    def _scale(beam: int) -> float:
+        return min(1.0, (C + beam * (L / max(1, C))) / max(1, L))
+
+    def _rung(name: str, idx) -> Optional[DegradeLevel]:
+        rec = 1.0
+        if probe_x is not None:
+            rec = shortlist_recall_at_k(sl_cfg, state, idx, probe_x,
+                                        ks=(k,))[k]
+        if rec < recall_floor:
+            return None
+
+        def serve(state, x, k, _idx=idx):
+            return sl_head.topk(state, x, k, shortlist=_idx)
+
+        return DegradeLevel(name, _scale(idx.beam), rec, serve)
+
+    for name, beam in (("shortlist", index.beam),
+                       ("shortlist/2", max(1, index.beam // 2))):
+        rung = _rung(name, index._replace(beam=beam))
+        if rung is not None and rung.cost_scale < levels[-1].cost_scale:
+            levels.append(rung)
+    return levels
+
+
+@dataclasses.dataclass
+class DegradeController:
+    """Hysteretic level selection on the load signal the runtime computes
+    at every dispatch decision (predicted drain time / SLO budget).
+
+    Degrades only after ``up_patience`` consecutive observations above
+    ``hi``; recovers only after ``down_patience`` consecutive below
+    ``lo``.  The dead band (lo < signal < hi) resets neither streak to a
+    step, so a load hovering at the threshold cannot flap the ladder —
+    that, plus hi > lo, is the hysteresis contract the tests pin."""
+    n_levels: int
+    hi: float = 1.0
+    lo: float = 0.4
+    up_patience: int = 3
+    down_patience: int = 8
+    level: int = 0
+    transitions: List[tuple] = dataclasses.field(default_factory=list)
+    _hot: int = 0
+    _cool: int = 0
+
+    def observe(self, signal: float, now: float) -> int:
+        if signal > self.hi:
+            self._hot, self._cool = self._hot + 1, 0
+        elif signal < self.lo:
+            self._hot, self._cool = 0, self._cool + 1
+        else:
+            self._hot = self._cool = 0
+        if self._hot >= self.up_patience and self.level < self.n_levels - 1:
+            self.transitions.append(
+                (now, self.level, self.level + 1, round(signal, 4)))
+            self.level += 1
+            self._hot = 0
+        elif self._cool >= self.down_patience and self.level > 0:
+            self.transitions.append(
+                (now, self.level, self.level - 1, round(signal, 4)))
+            self.level -= 1
+            self._cool = 0
+        return self.level

@@ -1,0 +1,152 @@
+"""Dispatch executors: the boundary between the runtime and the head.
+
+An executor is anything with ``dispatch(x, k, level) -> DispatchResult``:
+it serves a padded ``(bucket, D)`` query block at one degradation level
+and reports the service time the runtime should charge.  Three layers:
+
+* ``SimExecutor``   — pure latency model, deterministic placeholder
+                      results; what the discrete-event soak tests run
+                      (no head in the loop, virtual seconds only).
+* ``HeadExecutor``  — the real ``ELMOHead`` top-k behind per-(bucket, k,
+                      level) jitted programs; charges measured wall time
+                      (``RealClock`` serving) or model time (virtual-
+                      clock benches, so results are real but timing is
+                      deterministic).
+* fault wrappers    — ``fault.inject.SlowExecutor`` / ``FailingExecutor``
+                      wrap either to inject slowness / transient
+                      ``DispatchError`` for the soak tests.
+
+``ServiceEstimator`` is the runtime's *belief* about service times — an
+EWMA per (bucket, level) seeded from an affine cost model — feeding the
+batcher's force_time and admission's predicted wait.  It deliberately
+learns from observed (possibly injected-slow) dispatches so overload
+prediction adapts, while the executors' ground truth stays their own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+class DispatchError(RuntimeError):
+    """Transient dispatch failure (preempted accelerator, flaky
+    interconnect): the runtime retries through ``fault.retry`` with
+    jittered backoff; exhaustion times the batch out."""
+
+
+@dataclasses.dataclass
+class DispatchResult:
+    vals: np.ndarray          # (bucket, k) f32
+    ids: np.ndarray           # (bucket, k) int32
+    service_s: float          # seconds the runtime charges for this batch
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceModel:
+    """Affine batch cost: ``base_s + per_row_s·bucket``, scaled by the
+    level's relative cost (degraded paths stream fewer label blocks)."""
+    base_s: float = 2e-3
+    per_row_s: float = 1e-4
+
+    def __call__(self, bucket: int, cost_scale: float = 1.0) -> float:
+        return (self.base_s + self.per_row_s * bucket) * cost_scale
+
+
+class ServiceEstimator:
+    """EWMA service-time belief per (bucket, level name).
+
+    Unobserved keys fall back to the seed model so admission and batch
+    formation work from the first request; every completed dispatch
+    (including injected-slow ones) tightens the belief."""
+
+    def __init__(self, model: ServiceModel = ServiceModel(),
+                 alpha: float = 0.3):
+        self.model = model
+        self.alpha = alpha
+        self._ewma: Dict[Tuple[int, str], float] = {}
+
+    def estimate(self, bucket: int, level) -> float:
+        got = self._ewma.get((bucket, level.name))
+        return self.model(bucket, level.cost_scale) if got is None else got
+
+    def observe(self, bucket: int, level, service_s: float) -> None:
+        key = (bucket, level.name)
+        prev = self._ewma.get(key, service_s)
+        self._ewma[key] = (1 - self.alpha) * prev + self.alpha * service_s
+
+
+class SimExecutor:
+    """Head-free executor for discrete-event tests: service time from a
+    ground-truth ``ServiceModel``, results a deterministic function of
+    shape only (rank-descending values, ascending ids)."""
+
+    def __init__(self, model: ServiceModel = ServiceModel()):
+        self.model = model
+        self.calls = 0
+
+    def dispatch(self, x: np.ndarray, k: int, level) -> DispatchResult:
+        self.calls += 1
+        b = x.shape[0]
+        vals = np.broadcast_to(
+            np.arange(k, 0, -1, dtype=np.float32), (b, k)).copy()
+        ids = np.broadcast_to(np.arange(k, dtype=np.int32), (b, k)).copy()
+        return DispatchResult(vals, ids,
+                              self.model(b, level.cost_scale))
+
+
+class HeadExecutor:
+    """Real serving through the degradation ladder's ``level.serve``
+    callables, one jitted program per (bucket, k, level) — the HeadPlan
+    per-bucket program cache the runtime was built around.
+
+    ``timing="measure"`` charges measured wall seconds (RealClock
+    serving); ``timing="model"`` charges ``model(bucket, cost_scale)``
+    so virtual-clock runs stay deterministic while results are real."""
+
+    def __init__(self, state, *, timing: str = "measure",
+                 model: ServiceModel = ServiceModel()):
+        assert timing in ("measure", "model"), timing
+        self.state = state
+        self.timing = timing
+        self.model = model
+        self.calls = 0
+        self._progs: dict = {}
+
+    def _prog(self, k: int, level):
+        import jax
+
+        key = (k, level.name)
+        fn = self._progs.get(key)
+        if fn is None:
+            serve = level.serve
+            fn = self._progs[key] = jax.jit(
+                functools.partial(serve, k=k))
+        return fn
+
+    def warmup(self, levels, buckets, ks, d_model: int) -> None:
+        """Compile every (bucket, k, level) program up front so the
+        first measured dispatch is not a compile."""
+        import jax
+
+        for level in levels:
+            for b in buckets:
+                for k in ks:
+                    x = np.zeros((b, d_model), np.float32)
+                    jax.block_until_ready(
+                        self._prog(k, level)(self.state, x))
+
+    def dispatch(self, x: np.ndarray, k: int, level) -> DispatchResult:
+        import jax
+
+        self.calls += 1
+        t0 = time.monotonic()
+        vals, ids = jax.block_until_ready(
+            self._prog(k, level)(self.state, x))
+        measured = time.monotonic() - t0
+        service = (measured if self.timing == "measure"
+                   else self.model(x.shape[0], level.cost_scale))
+        return DispatchResult(np.asarray(vals), np.asarray(ids), service)

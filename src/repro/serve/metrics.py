@@ -1,0 +1,119 @@
+"""Serving metrics: latency percentiles, QPS, shed rate, queue depth,
+degradation transitions — and the conservation check the soak tests
+gate on (submitted == completed + rejected + timed_out, exactly).
+
+Everything is recorded against the runtime clock (virtual in tests), so
+a seeded soak produces a bit-identical report on every run — the report
+itself is the deterministic artifact BENCH_8.json stores.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.serve.request import Outcome, Request
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) — no interpolation, so a
+    reported p99 is a latency some request actually saw."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    rank = max(1, -(-len(s) * q // 100))     # ceil(n·q/100), ≥ 1
+    return s[int(rank) - 1]
+
+
+class Metrics:
+    def __init__(self):
+        self.submitted = 0
+        self.counts: Dict[Outcome, int] = {o: 0 for o in Outcome}
+        self.reasons: Dict[str, int] = {}
+        self.latency: Dict[Outcome, List[float]] = {o: [] for o in Outcome}
+        self.met_deadline = 0                 # completed within deadline
+        self.admitted = 0
+        self.dispatches = 0
+        self.dispatch_retries = 0
+        self.rows_real = 0
+        self.rows_padded = 0
+        self.level_dispatches: Dict[str, int] = {}
+        self.depth_samples: List[int] = []
+        self.transitions: List[tuple] = []    # (t, from, to, signal)
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
+
+    # ---- recording ----
+
+    def _span(self, t: float) -> None:
+        self._t0 = t if self._t0 is None else min(self._t0, t)
+        self._t1 = t if self._t1 is None else max(self._t1, t)
+
+    def record_submit(self, t: float) -> None:
+        self.submitted += 1
+        self._span(t)
+
+    def record_terminal(self, req: Request) -> None:
+        o = req.outcome
+        assert o is not None
+        self.counts[o] += 1
+        if req.reason:
+            self.reasons[req.reason] = self.reasons.get(req.reason, 0) + 1
+        self.latency[o].append(req.latency_s)
+        if o is not Outcome.REJECTED:
+            self.admitted += 1
+        if o is Outcome.COMPLETED and req.t_terminal <= req.deadline:
+            self.met_deadline += 1
+        self._span(req.t_terminal)
+
+    def record_dispatch(self, *, bucket: int, n_real: int, level: str,
+                        service_s: float, retries: int) -> None:
+        self.dispatches += 1
+        self.dispatch_retries += retries
+        self.rows_real += n_real
+        self.rows_padded += bucket
+        self.level_dispatches[level] = \
+            self.level_dispatches.get(level, 0) + 1
+
+    def record_depth(self, depth: int) -> None:
+        self.depth_samples.append(depth)
+
+    def record_transition(self, t: float, frm: int, to: int,
+                          signal: float) -> None:
+        self.transitions.append((t, frm, to, signal))
+
+    # ---- report ----
+
+    def conserved(self) -> bool:
+        return self.submitted == sum(self.counts.values())
+
+    def report(self) -> dict:
+        done = self.latency[Outcome.COMPLETED]
+        horizon = ((self._t1 - self._t0)
+                   if self._t0 is not None and self._t1 > self._t0 else 0.0)
+        n = max(1, self.submitted)
+        return {
+            "submitted": self.submitted,
+            "completed": self.counts[Outcome.COMPLETED],
+            "rejected": self.counts[Outcome.REJECTED],
+            "timed_out": self.counts[Outcome.TIMED_OUT],
+            "conserved": self.conserved(),
+            "reasons": dict(sorted(self.reasons.items())),
+            "p50_ms": 1e3 * percentile(done, 50),
+            "p95_ms": 1e3 * percentile(done, 95),
+            "p99_ms": 1e3 * percentile(done, 99),
+            "qps": (self.counts[Outcome.COMPLETED] / horizon
+                    if horizon else 0.0),
+            "shed_rate": self.counts[Outcome.REJECTED] / n,
+            "timeout_rate": self.counts[Outcome.TIMED_OUT] / n,
+            "deadline_met_of_admitted": (self.met_deadline
+                                         / max(1, self.admitted)),
+            "dispatches": self.dispatches,
+            "dispatch_retries": self.dispatch_retries,
+            "fill": self.rows_real / max(1, self.rows_padded),
+            "level_dispatches": dict(sorted(
+                self.level_dispatches.items())),
+            "max_depth": max(self.depth_samples, default=0),
+            "mean_depth": (sum(self.depth_samples)
+                           / max(1, len(self.depth_samples))),
+            "transitions": list(self.transitions),
+            "horizon_s": horizon,
+        }

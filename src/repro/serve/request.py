@@ -1,0 +1,92 @@
+"""Requests, terminal outcomes, and per-tenant policy primitives.
+
+The runtime's one hard invariant lives here: **every submitted request
+reaches exactly one terminal state** — ``COMPLETED`` (result delivered
+within its deadline), ``REJECTED`` (admission shed it before it ever
+queued), or ``TIMED_OUT`` (deadline passed while queued, dispatch failed
+permanently, or the batch finished too late).  ``Request.finish`` is the
+single transition point and asserts the once-ness; the soak tests count
+outcomes against submissions to prove nothing is lost or double-counted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class Outcome(enum.Enum):
+    COMPLETED = "completed"
+    REJECTED = "rejected"
+    TIMED_OUT = "timed_out"
+
+
+@dataclasses.dataclass
+class Request:
+    """One top-k query with a latency budget.
+
+    ``deadline_s`` is relative to ``submit_t`` (the open-loop generator
+    stamps ``submit_t``; admission sees absolute ``deadline``).  ``k`` may
+    be clamped down by the tenant's ``max_k`` at admission."""
+    rid: int
+    tenant: str
+    x: np.ndarray                    # (D,) query features
+    k: int
+    submit_t: float
+    deadline_s: float
+    # terminal bookkeeping (runtime-owned)
+    outcome: Optional[Outcome] = None
+    reason: str = ""
+    t_terminal: float = float("nan")
+    level: str = ""                  # degradation level it was served at
+    vals: Optional[np.ndarray] = None
+    ids: Optional[np.ndarray] = None
+
+    @property
+    def deadline(self) -> float:
+        return self.submit_t + self.deadline_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_terminal - self.submit_t
+
+    def finish(self, outcome: Outcome, t: float, reason: str = "") -> None:
+        """The ONLY terminal transition — a second call is a runtime bug
+        (a lost/double-completed request), not a recoverable condition."""
+        assert self.outcome is None, \
+            f"request {self.rid} already terminal: {self.outcome}"
+        self.outcome = outcome
+        self.reason = reason
+        self.t_terminal = t
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantPolicy:
+    """Per-tenant admission knobs: a token bucket (``rate_qps`` sustained,
+    ``burst`` depth) and a ``max_k`` cap on the served k."""
+    rate_qps: float = float("inf")
+    burst: float = float("inf")
+    max_k: int = 1 << 30
+
+
+class TokenBucket:
+    """Classic token bucket on the runtime clock: ``take`` refills by
+    elapsed × rate (capped at ``burst``) then spends one token; an empty
+    bucket means the tenant is over its rate and the request is shed."""
+
+    def __init__(self, policy: TenantPolicy, now: float):
+        self.policy = policy
+        self.tokens = float(policy.burst)
+        self._last = now
+
+    def take(self, now: float) -> bool:
+        self.tokens = min(float(self.policy.burst),
+                          self.tokens
+                          + max(0.0, now - self._last) * self.policy.rate_qps)
+        self._last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False

@@ -1,0 +1,271 @@
+"""The deadline-aware serving runtime (DESIGN.md §12).
+
+A discrete-event server around one accelerator's head: a bounded queue
+feeds a deadline-aware batcher that fills the largest precompiled
+power-of-two bucket each request's latency budget allows; admission
+sheds at the door (predicted wait, per-tenant token buckets); dispatch
+goes through ``fault.retry`` with full-jitter backoff on transient
+``DispatchError``; and a plan-gated degradation ladder steps exact →
+shortlist → smaller beam under sustained overload, and back with
+hysteresis when load drops.
+
+Continuous batching: exactly one batch is in flight; arrivals admitted
+mid-flight queue up, and the next batch forms the instant the previous
+one completes.  The whole engine is event-driven against the injected
+clock — ``next_action_time`` names the next instant anything can happen
+(in-flight completion, queued-deadline expiry, forced dispatch), and
+``run_until``/``drain`` advance the clock exactly there.  On a
+``VirtualClock`` this makes every soak replay bit-identical; on a
+``RealClock`` the same loop serves wall-clock traffic.
+
+Terminal-state contract: every submitted request reaches exactly one of
+COMPLETED / REJECTED / TIMED_OUT (``Request.finish`` asserts once-ness;
+``Metrics.conserved`` audits the counts).  Timeouts carry reasons:
+``queue_deadline`` (expired while queued, stamped at its own deadline),
+``late_completion`` (batch finished past the deadline), and
+``dispatch_failed`` (retry budget exhausted on injected/real faults).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.fault import runtime as FR
+from repro.serve.admission import AdmissionController
+from repro.serve.batcher import DeadlineBatcher, bucket_for
+from repro.serve.clock import VirtualClock
+from repro.serve.degrade import DegradeController, DegradeLevel
+from repro.serve.dispatch import (DispatchError, ServiceEstimator,
+                                  ServiceModel)
+from repro.serve.metrics import Metrics
+from repro.serve.request import Outcome, Request, TenantPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Runtime knobs (the README's SLO/degradation table).
+
+    ``slo_s`` is the nominal latency budget the load signal is
+    normalized by (requests still carry their own deadlines); the
+    degradation ladder engages when the predicted queue-drain time at
+    EXACT-path estimates exceeds ``degrade_hi × slo_s`` for
+    ``up_patience`` consecutive dispatch decisions, and recovers below
+    ``degrade_lo × slo_s`` after ``down_patience`` — the hi > lo band
+    plus patience is the anti-flap hysteresis."""
+    max_batch: int = 32
+    max_queue: int = 256
+    slo_s: float = 0.05
+    # batch formation waits until earliest_deadline − safety ×
+    # svc_estimate: the margin absorbs estimator error so a converged
+    # estimate doesn't land completions exactly ON the deadline
+    safety: float = 1.25
+    dispatch_attempts: int = 3
+    retry_base_s: float = 1e-3
+    retry_max_s: float = 20e-3
+    # load-signal thresholds as fractions of slo_s: degrade when the
+    # predicted queue-drain time exceeds half the SLO budget (the other
+    # half is the request's own service + safety margin), recover well
+    # below it.  Keep max_queue/max_batch × svc(max_batch) above
+    # degrade_hi × slo_s or queue_full shedding will cap the signal
+    # below the ladder's engage point.
+    degrade_hi: float = 0.5
+    degrade_lo: float = 0.2
+    up_patience: int = 3
+    down_patience: int = 6
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Inflight:
+    done_t: float
+    batch: List[Request]
+    bucket: int
+    level: DegradeLevel
+    vals: np.ndarray
+    ids: np.ndarray
+
+
+class Server:
+    """One serving runtime instance.  Drive it with ``submit`` +
+    ``run_until``/``drain`` (or the ``run_trace`` convenience for a
+    pre-generated arrival list)."""
+
+    def __init__(self, executor, levels: List[DegradeLevel],
+                 clock=None, cfg: ServeConfig = ServeConfig(),
+                 policies: Optional[Dict[str, TenantPolicy]] = None,
+                 default_policy: TenantPolicy = TenantPolicy(),
+                 estimator: Optional[ServiceEstimator] = None):
+        assert levels, "need at least the exact level"
+        self.executor = executor
+        self.levels = levels
+        self.clock = clock if clock is not None else VirtualClock()
+        self.cfg = cfg
+        self.estimator = estimator or ServiceEstimator(ServiceModel())
+        self.metrics = Metrics()
+        self.admission = AdmissionController(
+            max_batch=cfg.max_batch, max_queue=cfg.max_queue,
+            estimator=self.estimator, policies=policies,
+            default_policy=default_policy)
+        self.controller = DegradeController(
+            n_levels=len(levels), hi=cfg.degrade_hi, lo=cfg.degrade_lo,
+            up_patience=cfg.up_patience, down_patience=cfg.down_patience)
+        self._batcher = DeadlineBatcher(cfg.max_queue)
+        self._inflight: Optional[_Inflight] = None
+        self._rng = random.Random(cfg.seed)   # retry jitter only
+
+    # ---- submission ----
+
+    def submit(self, req: Request):
+        """Admit or shed one request at the current clock time.  Returns
+        the ``AdmissionDecision`` (shed requests are already terminal)."""
+        now = self.clock.now()
+        self.metrics.record_submit(now)
+        busy = (max(0.0, self._inflight.done_t - now)
+                if self._inflight else 0.0)
+        dec = self.admission.admit(
+            req, now, queue_depth=self._batcher.depth,
+            busy_remaining_s=busy,
+            level=self.levels[self.controller.level])
+        if not dec.admitted:
+            req.finish(Outcome.REJECTED, now, dec.reason)
+            self.metrics.record_terminal(req)
+            return dec
+        self._batcher.push(req)
+        return dec
+
+    # ---- the event loop ----
+
+    def next_action_time(self) -> Optional[float]:
+        """The next instant anything can happen, or None when idle."""
+        if self._inflight is not None:
+            return self._inflight.done_t
+        if self._batcher.depth == 0:
+            return None
+        now = self.clock.now()
+        e = self._batcher.earliest_deadline()
+        f = self._force_time()
+        return min(e, max(now, f))
+
+    def run_until(self, t: float) -> None:
+        """Process every action due at or before ``t`` (the clock ends
+        ≤ t; the caller advances it to t for same-instant arrivals)."""
+        while True:
+            ta = self.next_action_time()
+            if ta is None or ta > t:
+                return
+            self.clock.advance_to(ta)
+            self._on_timer()
+
+    def drain(self) -> None:
+        """Run to quiescence: no batch in flight, nothing queued."""
+        while True:
+            ta = self.next_action_time()
+            if ta is None:
+                return
+            self.clock.advance_to(ta)
+            self._on_timer()
+
+    # ---- internals ----
+
+    def _svc(self, bucket: int, level: DegradeLevel) -> float:
+        return self.estimator.estimate(bucket, level)
+
+    def _force_time(self) -> float:
+        level = self.levels[self.controller.level]
+        f = self._batcher.force_time(
+            lambda b: self.cfg.safety * self._svc(b, level),
+            self.cfg.max_batch)
+        return 0.0 if f is None else f
+
+    def _on_timer(self) -> None:
+        now = self.clock.now()
+        if self._inflight is not None:
+            if now < self._inflight.done_t:
+                return
+            self._complete(self._inflight.done_t)
+        for r in self._batcher.sweep_expired(now):
+            r.finish(Outcome.TIMED_OUT, r.deadline, "queue_deadline")
+            self.metrics.record_terminal(r)
+        if self._batcher.depth and now >= self._force_time():
+            self._dispatch(now)
+
+    def _signal(self, depth: int) -> float:
+        """Load signal for the degradation controller: predicted time to
+        drain the whole queue at EXACT-path estimates (so a degraded
+        ladder does not lower its own signal and flap), over the SLO."""
+        drain = math.ceil(depth / self.cfg.max_batch) \
+            * self._svc(self.cfg.max_batch, self.levels[0])
+        return drain / self.cfg.slo_s
+
+    def _dispatch(self, now: float) -> None:
+        depth = self._batcher.depth
+        self.metrics.record_depth(depth)
+        prev = self.controller.level
+        lvl = self.controller.observe(self._signal(depth), now)
+        if lvl != prev:
+            self.metrics.record_transition(now, prev, lvl,
+                                           self.controller.transitions[-1][3])
+        level = self.levels[lvl]
+        batch = self._batcher.take(self.cfg.max_batch)
+        bucket = bucket_for(len(batch), self.cfg.max_batch)
+        k_hat = max(r.k for r in batch)
+        xs = np.zeros((bucket, batch[0].x.shape[0]), np.float32)
+        for i, r in enumerate(batch):
+            xs[i] = r.x
+        calls = {"n": 0}
+
+        def call():
+            calls["n"] += 1
+            return self.executor.dispatch(xs, k_hat, level)
+
+        try:
+            res = FR.retry(call, attempts=self.cfg.dispatch_attempts,
+                           base_delay_s=self.cfg.retry_base_s,
+                           retriable=(DispatchError,),
+                           sleep=self.clock.sleep, jitter="full",
+                           max_delay_s=self.cfg.retry_max_s, rng=self._rng)
+        except DispatchError:
+            t = self.clock.now()     # backoff time already charged
+            for r in batch:
+                r.finish(Outcome.TIMED_OUT, t, "dispatch_failed")
+                self.metrics.record_terminal(r)
+            return
+        t_start = self.clock.now()
+        self.estimator.observe(bucket, level, res.service_s)
+        self.metrics.record_dispatch(
+            bucket=bucket, n_real=len(batch), level=level.name,
+            service_s=res.service_s, retries=calls["n"] - 1)
+        self._inflight = _Inflight(t_start + res.service_s, batch, bucket,
+                                   level, np.asarray(res.vals),
+                                   np.asarray(res.ids))
+
+    def _complete(self, t: float) -> None:
+        inf, self._inflight = self._inflight, None
+        for i, r in enumerate(inf.batch):
+            if t > r.deadline:
+                r.finish(Outcome.TIMED_OUT, t, "late_completion")
+            else:
+                r.vals = inf.vals[i, :r.k].copy()
+                r.ids = inf.ids[i, :r.k].copy()
+                r.level = inf.level.name
+                r.finish(Outcome.COMPLETED, t)
+            self.metrics.record_terminal(r)
+
+
+def run_trace(server: Server, requests: List[Request]) -> Metrics:
+    """Replay a pre-generated arrival trace (e.g. from
+    ``fault.inject.poisson_requests``) to quiescence.  Actions due at an
+    arrival's instant run before the arrival (a completion at t frees
+    the server for a request arriving at t); the returned metrics are a
+    pure function of (trace, server config, executor) on a virtual
+    clock."""
+    for req in sorted(requests, key=lambda r: (r.submit_t, r.rid)):
+        server.run_until(req.submit_t)
+        server.clock.advance_to(req.submit_t)
+        server.submit(req)
+    server.drain()
+    return server.metrics

@@ -1,0 +1,149 @@
+"""Serving-runtime checks under a forced host-device count (default 4;
+tests/test_serve_runtime.py drives this via the ``multidevice_runner``
+fixture, CI also runs it single-device).  Exit code 0 = all passed.
+
+The contract under test (DESIGN.md §12, ISSUE 8 acceptance):
+
+* the runtime's dispatch path really is the sharded top-k when a mesh
+  is ambient: the ELMOHead facade plans ``sharded`` and every ladder
+  level's served (vals, ids) are bit-identical to the single-device
+  head (PR 6's parity contract, now exercised through the
+  ``HeadExecutor`` program cache);
+* the plan- and recall-gated degradation ladder builds identically
+  under the mesh (same rungs, same measured recalls);
+* a fault-injected overload soak on the virtual clock — seeded Poisson
+  burst + transient dispatch failures — conserves every request
+  (exactly one terminal state), meets admitted deadlines, engages the
+  ladder and recovers, and replays BIT-IDENTICALLY run to run.
+"""
+import os
+
+_N_DEV = int(os.environ.get("REPRO_FORCE_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={_N_DEV}")
+
+import jax                     # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro import serve as RS                        # noqa: E402
+from repro.core import elmo_head as H                # noqa: E402
+from repro.dist import meshctx                       # noqa: E402
+from repro.fault import inject as FI                 # noqa: E402
+from repro.head import ELMOHead                      # noqa: E402
+from repro.head import shortlist as SL               # noqa: E402
+from repro.launch.mesh import make_host_mesh         # noqa: E402
+
+assert len(jax.devices()) == _N_DEV, jax.devices()
+
+B, K = 16, 10
+# the golden structured-head recipe (tests/_shortlist_checks.GOLDEN):
+# the one geometry where the shortlist rung provably clears the 0.95
+# recall floor, so the ladder has a real degraded level to exercise
+CFG = H.ELMOHeadConfig(num_labels=4096, d_model=64, num_chunks=8,
+                       weight_dtype="e4m3", use_sr=False)
+STATE = SL.synthetic_clustered_state(CFG, groups=128, noise=0.2, seed=7)
+PROBE = jax.random.normal(jax.random.PRNGKey(11),
+                          (64, CFG.d_model)).astype(jnp.bfloat16)
+
+
+def _ladder(head):
+    return RS.build_ladder(head, STATE, k=K, max_batch=B, probe_x=PROBE,
+                           iters=8, n_clusters=64, beam=28)
+
+
+def _mesh():
+    # model (label) axis = device count: every rank serves a label shard
+    return make_host_mesh(1, _N_DEV)
+
+
+def check_sharded_ladder_parity():
+    """Each ladder level under the mesh serves bit-identical (vals, ids)
+    to the single-device head — the runtime cannot tell the difference,
+    which is exactly the point."""
+    head1 = ELMOHead(CFG, batch=B)
+    levels1 = _ladder(head1)
+    assert [lv.name for lv in levels1] == ["exact", "shortlist"], levels1
+    ex1 = RS.HeadExecutor(STATE, timing="model")
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(3),
+                                     (B, CFG.d_model)), np.float32)
+    res1 = [ex1.dispatch(x, K, lv) for lv in levels1]
+    with meshctx.use(_mesh()):
+        headS = ELMOHead(CFG, batch=B)
+        assert headS.plan.sharded == (_N_DEV > 1), headS.plan
+        levelsS = _ladder(headS)
+        assert [lv.name for lv in levelsS] == ["exact", "shortlist"]
+        for lv1, lvS in zip(levels1, levelsS):
+            assert lv1.recall == lvS.recall, (lv1, lvS)
+        exS = RS.HeadExecutor(STATE, timing="model")
+        resS = [exS.dispatch(x, K, lv) for lv in levelsS]
+    for lv, r1, rS in zip(levels1, res1, resS):
+        assert (np.asarray(r1.vals, np.float32)
+                == np.asarray(rS.vals, np.float32)).all(), lv.name
+        assert (r1.ids == rS.ids).all(), lv.name
+        assert r1.service_s == rS.service_s, lv.name   # model timing
+    print(f"sharded ladder parity ok ({_N_DEV} devices)")
+
+
+def _trace():
+    base = FI.poisson_requests(rate_qps=300, horizon_s=0.5, seed=1,
+                               d_model=CFG.d_model, k=K)
+    # 20k qps tops even the degraded-rung capacity (≈10k qps at the
+    # shortlist cost scale), so admission must shed as well as degrade
+    burst = FI.poisson_requests(rate_qps=20000, horizon_s=0.3, seed=2,
+                                d_model=CFG.d_model, k=K,
+                                t0=0.5, rid0=len(base))
+    cool = FI.poisson_requests(rate_qps=300, horizon_s=0.5, seed=3,
+                               d_model=CFG.d_model, k=K, t0=0.8,
+                               rid0=len(base) + len(burst))
+    return base + burst + cool
+
+
+def check_sharded_overload_soak_deterministic():
+    """The full fault-injected overload soak, served by the real sharded
+    head on the virtual clock: conservation, deadline SLO, ladder
+    engage + recover, and bit-identical replay."""
+    with meshctx.use(_mesh()):
+        head = ELMOHead(CFG, batch=B)
+        levels = _ladder(head)
+        assert len(levels) == 2
+
+        def run():
+            ex = FI.FailingExecutor(RS.HeadExecutor(STATE, timing="model"),
+                                    fail_calls=[3, 40])
+            srv = RS.Server(ex, levels,
+                            cfg=RS.ServeConfig(max_batch=B, max_queue=256,
+                                               slo_s=0.05),
+                            estimator=RS.ServiceEstimator(RS.ServiceModel()))
+            reqs = _trace()
+            rep = RS.run_trace(srv, reqs).report()
+            for r in reqs:             # exactly one terminal door each
+                assert r.outcome is not None, r.rid
+            done = [r for r in reqs
+                    if r.outcome is RS.Outcome.COMPLETED][:4]
+            assert done and all(r.vals.shape == (K,) and
+                                (np.asarray(r.ids) < CFG.num_labels).all()
+                                for r in done)
+            return rep
+
+        rep = run()
+        assert rep["conserved"], rep
+        assert rep["shed_rate"] > 0.05, rep["shed_rate"]
+        assert rep["deadline_met_of_admitted"] > 0.99, rep
+        assert rep["dispatch_retries"] >= 1, rep
+        frm_to = [(f, t) for _, f, t, _ in rep["transitions"]]
+        assert (0, 1) in frm_to, rep["transitions"]
+        assert rep["transitions"][-1][2] == 0, rep["transitions"]
+        assert rep["level_dispatches"].get("shortlist", 0) > 0, rep
+        rep2 = run()
+        assert rep == rep2, "sharded soak replay is not bit-identical"
+    print(f"sharded overload soak ok ({_N_DEV} devices): "
+          f"shed={rep['shed_rate']:.3f} "
+          f"p99={rep['p99_ms']:.1f}ms transitions={len(rep['transitions'])}")
+
+
+if __name__ == "__main__":
+    check_sharded_ladder_parity()
+    check_sharded_overload_soak_deterministic()
+    print("ALL SERVE RUNTIME CHECKS PASSED")

@@ -192,6 +192,134 @@ def test_retry_validates_attempts():
     with pytest.raises(ValueError):
         retry(lambda: "ok", attempts=-2)
     assert retry(lambda: "ok", attempts=1) == "ok"
+    with pytest.raises(ValueError, match="jitter"):
+        retry(lambda: "ok", jitter="equal")
+
+
+class _AlwaysFails:
+    def __init__(self, exc=RuntimeError):
+        self.calls = 0
+        self.exc = exc
+
+    def __call__(self):
+        self.calls += 1
+        raise self.exc("transient")
+
+
+def test_retry_default_delays_bit_compatible():
+    """The default call — no jitter, no cap — must sleep the historical
+    pure-exponential sequence base·2^i exactly."""
+    slept = []
+    fn = _AlwaysFails()
+    with pytest.raises(RuntimeError):
+        retry(fn, attempts=4, base_delay_s=0.5, sleep=slept.append)
+    assert fn.calls == 4
+    assert slept == [0.5, 1.0, 2.0]      # no sleep after the last attempt
+
+
+def test_retry_max_delay_caps_exponential():
+    slept = []
+    with pytest.raises(RuntimeError):
+        retry(_AlwaysFails(), attempts=6, base_delay_s=1.0,
+              max_delay_s=3.0, sleep=slept.append)
+    assert slept == [1.0, 2.0, 3.0, 3.0, 3.0]
+
+
+def test_retry_full_jitter_seeded_sequence():
+    """jitter="full" draws each delay uniform from [0, capped delay] —
+    deterministic for a seeded rng, and exactly reproducible from the
+    same seed (the serving runtime's bit-identical-soak requirement)."""
+    import random
+
+    def run():
+        slept = []
+        with pytest.raises(RuntimeError):
+            retry(_AlwaysFails(), attempts=5, base_delay_s=1.0,
+                  max_delay_s=4.0, jitter="full", rng=random.Random(7),
+                  sleep=slept.append)
+        return slept
+
+    slept = run()
+    assert slept == run()                # seeded → reproducible
+    caps = [1.0, 2.0, 4.0, 4.0]          # capped exponential envelope
+    assert len(slept) == 4
+    assert all(0.0 <= d <= c for d, c in zip(slept, caps))
+    assert len(set(slept)) > 1           # actually jittered, not constant
+    # and the draws are exactly the rng's: replay the same stream
+    ref = random.Random(7)
+    assert slept == [ref.uniform(0.0, c) for c in caps]
+
+
+def test_retry_succeeds_mid_backoff_policy():
+    """A success after transient failures returns the value; jitter and
+    cap only shape the sleeps in between."""
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    import random
+    slept = []
+    assert retry(flaky, attempts=5, base_delay_s=0.25, jitter="full",
+                 max_delay_s=0.4, rng=random.Random(0),
+                 sleep=slept.append) == "ok"
+    assert len(slept) == 2 and all(0.0 <= d <= 0.4 for d in slept)
+
+
+def test_straggler_median_even_fleet_regression():
+    """True median on even fleet sizes: with EWMAs [1.0, 1.0, 1.4, 2.0]
+    the old upper-middle 'median' (1.4) hid the 2.0 straggler behind a
+    2.1 cut line; the true median 1.2 flags it."""
+    from repro.fault import StragglerMonitor
+
+    mon = StragglerMonitor(threshold=1.5, alpha=1.0)
+    for host, t in enumerate([1.0, 1.0, 1.4, 2.0]):
+        mon.record(host, t)
+    assert mon.stragglers() == [3]
+    # odd count unchanged: median is the middle element
+    mon_odd = StragglerMonitor(threshold=1.5, alpha=1.0)
+    for host, t in enumerate([1.0, 1.0, 2.0]):
+        mon_odd.record(host, t)
+    assert mon_odd.stragglers() == [2]
+    # a healthy even fleet stays unflagged
+    mon_ok = StragglerMonitor(threshold=1.5, alpha=1.0)
+    for host, t in enumerate([1.0, 1.1, 1.0, 1.2]):
+        mon_ok.record(host, t)
+    assert mon_ok.stragglers() == []
+
+
+def test_heartbeat_fsyncs_before_replace(tmp_path, monkeypatch):
+    """``Heartbeat.beat`` follows the §10 commit protocol: the record is
+    fsynced BEFORE the rename publishes it, so a crash can never leave
+    an empty-but-renamed heartbeat (which would read as a dead host)."""
+    events = []
+    real_fsync, real_replace = os.fsync, os.replace
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (events.append("fsync"),
+                                    real_fsync(fd))[1])
+    monkeypatch.setattr(os, "replace",
+                        lambda a, b: (events.append("replace"),
+                                      real_replace(a, b))[1])
+    hb = Heartbeat(str(tmp_path / "hb"), 0, timeout_s=10)
+    hb.beat(step=3, now=123.0)
+    assert events == ["fsync", "replace"]
+    assert hb.records(1)[0] == {"step": 3, "t": 123.0}
+
+
+def test_torn_heartbeat_reads_as_absent(tmp_path):
+    """An empty heartbeat file (the artifact a pre-fsync binary could
+    publish) must read as 'never beaten' — absent from records and never
+    alive — not as a host dead since t=0."""
+    hb_dir = str(tmp_path / "hb")
+    hb = Heartbeat(hb_dir, 0, timeout_s=10)
+    hb.beat(step=5)
+    inject.torn_heartbeat(hb_dir, host=1)
+    recs = hb.records(2)
+    assert 0 in recs and 1 not in recs
+    assert hb.alive_hosts(2) == [0]
 
 
 def test_elastic_controller_edge_cases():

@@ -1,0 +1,656 @@
+"""Deadline-aware serving runtime suite (ISSUE 8, DESIGN.md §12).
+
+The contract under test:
+
+* every submitted request reaches EXACTLY one terminal state
+  (COMPLETED / REJECTED / TIMED_OUT) — proven by conservation soaks with
+  injected slow/failing dispatches, not assumed;
+* admission sheds at the door (queue_full / predicted_late /
+  tenant_throttled, in that order) and clamps k to tenant policy;
+* the batcher fills the largest power-of-two bucket each deadline
+  allows (``bucket_for`` ≡ the ``launch.serve._buckets`` semantics —
+  property-tested), takes earliest-deadline-first, and expires queued
+  requests at their own deadline;
+* transient dispatch failures are absorbed by ``fault.retry`` with
+  full-jitter backoff charged to the runtime clock; exhaustion surfaces
+  as TIMED_OUT(dispatch_failed), never a lost request;
+* the degradation ladder engages under sustained overload, recovers
+  with hysteresis, and is plan- AND recall-gated at build time;
+* a seeded Poisson soak on the virtual clock is bit-deterministic:
+  same trace + config → identical metrics report, every run.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import serve as RS
+from repro.fault import inject as FI
+from repro.serve.request import Outcome, Request, TenantPolicy, TokenBucket
+
+MODEL = RS.ServiceModel(base_s=2e-3, per_row_s=1e-4)
+
+
+def _req(rid=0, t=0.0, deadline_s=0.05, k=5, tenant="default", d=4):
+    return Request(rid=rid, tenant=tenant,
+                   x=np.zeros(d, np.float32) + rid, k=k,
+                   submit_t=t, deadline_s=deadline_s)
+
+
+def _server(executor=None, levels=None, cfg=None, **kw):
+    return RS.Server(executor or RS.SimExecutor(MODEL),
+                     levels or RS.sim_ladder(),
+                     cfg=cfg or RS.ServeConfig(max_batch=16, max_queue=64),
+                     estimator=RS.ServiceEstimator(MODEL), **kw)
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+
+def test_virtual_clock_monotone():
+    c = RS.VirtualClock()
+    assert c.now() == 0.0
+    c.sleep(1.5)
+    assert c.now() == 1.5
+    c.advance_to(1.0)            # backwards advance is a no-op
+    assert c.now() == 1.5
+    c.advance_to(2.0)
+    assert c.now() == 2.0
+    c.sleep(-1.0)                # negative sleep cannot rewind either
+    assert c.now() == 2.0
+
+
+# ---------------------------------------------------------------------------
+# bucket_for: property tests (the _buckets contract)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 4096), st.integers(0, 8))
+def test_bucket_for_properties(size, j):
+    max_batch = 2 ** j
+    b = RS.bucket_for(size, max_batch)
+    assert b <= max_batch
+    assert b >= min(size, max_batch)
+    assert b & (b - 1) == 0                      # power of two
+    # minimality: the next bucket down would not fit the group
+    if b > 1 and size <= max_batch:
+        assert b // 2 < size
+    # monotone in size
+    assert RS.bucket_for(size + 1, max_batch) >= b
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=20),
+       st.integers(0, 7))
+def test_bucket_for_matches_launch_buckets(sizes, j):
+    """The runtime's sizing and the bench's ``_buckets`` are one
+    definition (the bench delegates) — pin the equivalence anyway so a
+    future fork of either reintroduces the drift visibly."""
+    from repro.launch.serve import _buckets
+    max_batch = 2 ** j
+    assert _buckets(sizes, max_batch) == \
+        [RS.bucket_for(s, max_batch) for s in sizes]
+
+
+def test_bucket_for_non_power_of_two_cap():
+    # a non-power-of-two max_batch is itself the top bucket
+    assert RS.bucket_for(25, 24) == 24
+    assert RS.bucket_for(24, 24) == 24
+    assert RS.bucket_for(9, 24) == 16
+
+
+# ---------------------------------------------------------------------------
+# percentile
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert RS.percentile(xs, 50) == 3.0
+    assert RS.percentile(xs, 100) == 5.0
+    assert RS.percentile(xs, 0) == 1.0           # rank floor of 1
+    assert RS.percentile([7.0], 99) == 7.0
+    assert math.isnan(RS.percentile([], 50))
+    # p99 is a value some request actually saw (no interpolation)
+    many = list(range(1, 101))
+    assert RS.percentile(many, 99) == 99
+
+
+# ---------------------------------------------------------------------------
+# token bucket + tenant policy
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_burst_and_refill():
+    tb = TokenBucket(TenantPolicy(rate_qps=10.0, burst=3.0), now=0.0)
+    assert [tb.take(0.0) for _ in range(4)] == [True, True, True, False]
+    assert not tb.take(0.05)     # 0.5 tokens refilled: still < 1
+    assert tb.take(0.1)          # 1.0 token accrued
+    tb2 = TokenBucket(TenantPolicy(rate_qps=10.0, burst=2.0), now=0.0)
+    tb2.take(0.0)
+    tb2.take(0.0)
+    assert tb2.take(100.0)       # refill is capped at burst, then spends
+    assert tb2.take(100.0)
+    assert not tb2.take(100.0)
+
+
+def test_default_policy_unlimited():
+    tb = TokenBucket(TenantPolicy(), now=0.0)
+    assert all(tb.take(0.0) for _ in range(1000))
+
+
+# ---------------------------------------------------------------------------
+# admission gates
+# ---------------------------------------------------------------------------
+
+
+def _admission(**kw):
+    kw.setdefault("max_batch", 16)
+    kw.setdefault("max_queue", 32)
+    kw.setdefault("estimator", RS.ServiceEstimator(MODEL))
+    return RS.AdmissionController(**kw)
+
+
+def test_admission_queue_full_gate():
+    adm = _admission(max_queue=4)
+    dec = adm.admit(_req(), 0.0, queue_depth=4, busy_remaining_s=0.0,
+                    level=RS.sim_ladder()[0])
+    assert not dec.admitted and dec.reason == "queue_full"
+
+
+def test_admission_predicted_late_gate():
+    adm = _admission()
+    lvl = RS.sim_ladder()[0]
+    # generous deadline, shallow queue: admitted
+    assert adm.admit(_req(deadline_s=0.5), 0.0, queue_depth=0,
+                     busy_remaining_s=0.0, level=lvl).admitted
+    # a deadline the predicted wait alone blows: shed as predicted_late
+    dec = adm.admit(_req(rid=1, deadline_s=0.01), 0.0, queue_depth=31,
+                    busy_remaining_s=0.05, level=lvl)
+    assert not dec.admitted and dec.reason == "predicted_late"
+    assert dec.predicted_wait_s > 0.01
+
+
+def test_admission_tenant_throttle_checked_last():
+    """A throttled tenant's queue_full/predicted_late rejections must not
+    spend tokens — only otherwise-admittable requests do."""
+    pol = {"hot": TenantPolicy(rate_qps=0.0, burst=2.0)}
+    adm = _admission(policies=pol, max_queue=4)
+    lvl = RS.sim_ladder()[0]
+    # queue_full rejections: no token spend
+    for _ in range(5):
+        dec = adm.admit(_req(tenant="hot"), 0.0, queue_depth=4,
+                        busy_remaining_s=0.0, level=lvl)
+        assert dec.reason == "queue_full"
+    # both burst tokens still available
+    for _ in range(2):
+        assert adm.admit(_req(tenant="hot", deadline_s=0.5), 0.0,
+                         queue_depth=0, busy_remaining_s=0.0,
+                         level=lvl).admitted
+    dec = adm.admit(_req(tenant="hot", deadline_s=0.5), 0.0,
+                    queue_depth=0, busy_remaining_s=0.0, level=lvl)
+    assert not dec.admitted and dec.reason == "tenant_throttled"
+    # other tenants are unaffected by the hot tenant's throttle
+    assert adm.admit(_req(tenant="cold", deadline_s=0.5), 0.0,
+                     queue_depth=0, busy_remaining_s=0.0,
+                     level=lvl).admitted
+
+
+def test_admission_clamps_k_to_tenant_policy():
+    adm = _admission(policies={"small": TenantPolicy(max_k=3)})
+    r = _req(tenant="small", k=100, deadline_s=0.5)
+    assert adm.admit(r, 0.0, queue_depth=0, busy_remaining_s=0.0,
+                     level=RS.sim_ladder()[0]).admitted
+    assert r.k == 3
+    r2 = _req(rid=1, k=100, deadline_s=0.5)     # default tenant: no cap
+    adm.admit(r2, 0.0, queue_depth=0, busy_remaining_s=0.0,
+              level=RS.sim_ladder()[0])
+    assert r2.k == 100
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_take_is_edf_with_stable_ties():
+    b = RS.DeadlineBatcher(max_queue=16)
+    b.push(_req(rid=0, t=0.0, deadline_s=0.09))
+    b.push(_req(rid=1, t=0.0, deadline_s=0.05))
+    b.push(_req(rid=2, t=0.0, deadline_s=0.05))   # tie with rid 1
+    b.push(_req(rid=3, t=0.0, deadline_s=0.01))
+    assert [r.rid for r in b.take(3)] == [3, 1, 2]
+    assert [r.rid for r in b.take(3)] == [0]
+
+
+def test_batcher_sweep_expired():
+    b = RS.DeadlineBatcher(max_queue=16)
+    b.push(_req(rid=0, t=0.0, deadline_s=0.02))
+    b.push(_req(rid=1, t=0.0, deadline_s=0.10))
+    dead = b.sweep_expired(now=0.05)
+    assert [r.rid for r in dead] == [0] and b.depth == 1
+    assert b.sweep_expired(now=0.05) == []
+
+
+def test_batcher_force_time_semantics():
+    svc = lambda bucket: 0.01 * bucket           # noqa: E731
+    b = RS.DeadlineBatcher(max_queue=64)
+    assert b.force_time(svc, 16) is None         # empty queue: no force
+    b.push(_req(rid=0, t=0.0, deadline_s=0.5))
+    b.push(_req(rid=1, t=0.0, deadline_s=0.3))
+    # bucket_for(2)=2 → force at earliest deadline − svc(2)
+    assert b.force_time(svc, 16) == pytest.approx(0.3 - 0.02)
+    for i in range(14):
+        b.push(_req(rid=2 + i, t=0.0, deadline_s=0.5))
+    assert b.force_time(svc, 16) == 0.0          # full max bucket: now
+
+
+# ---------------------------------------------------------------------------
+# degradation controller (hysteresis unit contract)
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_controller_patience_and_recovery():
+    c = RS.DegradeController(n_levels=3, hi=1.0, lo=0.4,
+                             up_patience=3, down_patience=4)
+    for i in range(2):
+        assert c.observe(2.0, float(i)) == 0     # not yet: patience 3
+    assert c.observe(2.0, 2.0) == 1              # engage
+    assert c.observe(2.0, 3.0) == 1              # streak reset on step
+    assert c.observe(2.0, 4.0) == 1
+    assert c.observe(2.0, 5.0) == 2              # deeper
+    assert c.observe(2.0, 6.0) == 2              # floor: no level 3
+    for i in range(3):
+        assert c.observe(0.1, 7.0 + i) == 2
+    assert c.observe(0.1, 10.0) == 1             # recover after 4 cool
+    assert [(f, t) for _, f, t, _ in c.transitions] == \
+        [(0, 1), (1, 2), (2, 1)]
+
+
+def test_degrade_controller_dead_band_resets_streaks():
+    c = RS.DegradeController(n_levels=2, hi=1.0, lo=0.4, up_patience=2,
+                             down_patience=2)
+    assert c.observe(2.0, 0.0) == 0
+    assert c.observe(0.7, 1.0) == 0              # dead band: hot streak dies
+    assert c.observe(2.0, 2.0) == 0
+    assert c.observe(2.0, 3.0) == 1
+    assert c.observe(0.1, 4.0) == 1
+    assert c.observe(0.7, 5.0) == 1              # dead band: cool streak dies
+    assert c.observe(0.1, 6.0) == 1
+    assert c.observe(0.1, 7.0) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime end-to-end on the virtual clock (SimExecutor)
+# ---------------------------------------------------------------------------
+
+
+def test_single_request_completes_with_demuxed_k():
+    srv = _server()
+    r = _req(k=3, deadline_s=0.5)
+    srv.submit(r)
+    srv.drain()
+    assert r.outcome is Outcome.COMPLETED
+    assert r.vals.shape == (3,) and r.ids.shape == (3,)
+    assert r.level == "exact"
+    assert r.latency_s > 0
+
+
+def test_batch_waits_for_free_bucket_padding():
+    """Two requests arriving close together ride ONE dispatch (waiting is
+    free until the queue crosses the next power of two)."""
+    srv = _server()
+    srv.submit(_req(rid=0, t=0.0, deadline_s=0.5))
+    srv.clock.advance_to(0.001)
+    srv.submit(_req(rid=1, t=0.001, deadline_s=0.5))
+    srv.drain()
+    rep = srv.metrics.report()
+    assert rep["dispatches"] == 1
+    assert rep["completed"] == 2
+
+
+def test_queue_deadline_timeout_stamped_at_own_deadline():
+    """When real service runs persistently slower than the estimates
+    admission trusted, queued requests expire before ever dispatching —
+    and leave TIMED_OUT at their OWN deadline, not at whenever the
+    runtime next looked at the queue."""
+    ex = FI.SlowExecutor(RS.SimExecutor(MODEL), slow_calls=range(64),
+                         factor=10.0)             # svc(1): 2.1ms → 21ms
+    srv = _server(ex, cfg=RS.ServeConfig(max_batch=1, max_queue=64))
+    reqs = [_req(rid=i, deadline_s=0.05) for i in range(10)]
+    for r in reqs:                 # all admitted: estimates say ~23ms wait
+        assert srv.submit(r).admitted
+    srv.drain()
+    assert srv.metrics.conserved()
+    expired = [r for r in reqs if r.reason == "queue_deadline"]
+    assert len(expired) >= 5       # the queue tail never got a dispatch
+    for r in expired:
+        assert r.outcome is Outcome.TIMED_OUT
+        assert r.t_terminal == pytest.approx(r.deadline)
+    assert any(r.outcome is Outcome.COMPLETED for r in reqs)
+
+
+def test_transient_dispatch_failure_absorbed_by_retry():
+    ex = FI.FailingExecutor(RS.SimExecutor(MODEL), fail_calls=[0])
+    # max_batch=1: a single request fills the bucket → immediate dispatch
+    srv = _server(ex, cfg=RS.ServeConfig(max_batch=1, max_queue=64))
+    r = _req(deadline_s=0.5)
+    srv.submit(r)
+    srv.drain()
+    assert r.outcome is Outcome.COMPLETED
+    rep = srv.metrics.report()
+    assert rep["dispatch_retries"] == 1
+    assert ex.calls == 2
+
+
+def test_retry_exhaustion_times_out_not_loses():
+    cfg = RS.ServeConfig(max_batch=16, max_queue=64, dispatch_attempts=3)
+    ex = FI.FailingExecutor(RS.SimExecutor(MODEL), fail_calls=[0, 1, 2])
+    srv = _server(ex, cfg=cfg)
+    reqs = [_req(rid=i, deadline_s=0.5) for i in range(3)]
+    for r in reqs:
+        srv.submit(r)
+    t0 = srv.clock.now()
+    srv.drain()
+    for r in reqs:
+        assert r.outcome is Outcome.TIMED_OUT
+        assert r.reason == "dispatch_failed"
+    assert srv.metrics.conserved()
+    assert srv.clock.now() > t0          # jittered backoff charged the clock
+    assert ex.calls == 3
+
+
+def test_slow_dispatch_causes_late_completion():
+    ex = FI.SlowExecutor(RS.SimExecutor(MODEL), slow_calls=[0], factor=100.0)
+    srv = _server(ex)
+    r = _req(deadline_s=0.05)
+    srv.submit(r)
+    srv.drain()
+    assert r.outcome is Outcome.TIMED_OUT and r.reason == "late_completion"
+    assert r.vals is None                # late results are not delivered
+
+
+def test_estimator_learns_from_injected_slowness():
+    """The EWMA belief must absorb observed (injected-slow) dispatches —
+    that is what lets admission start shedding under a real slowdown."""
+    est = RS.ServiceEstimator(MODEL, alpha=0.5)
+    ex = FI.SlowExecutor(RS.SimExecutor(MODEL), slow_calls=range(100),
+                         factor=10.0)
+    srv = RS.Server(ex, RS.sim_ladder(),
+                    cfg=RS.ServeConfig(max_batch=4, max_queue=64),
+                    estimator=est)
+    lvl = RS.sim_ladder()[0]
+    before = est.estimate(4, lvl)
+    for i in range(8):                  # all queue (10s deadlines), then
+        srv.submit(_req(rid=i, t=0.0, deadline_s=10.0))
+    srv.drain()                         # drain as two max-batch buckets
+    assert srv.metrics.report()["dispatches"] == 2
+    assert est.estimate(4, lvl) > 5.0 * before
+
+
+# ---------------------------------------------------------------------------
+# overload: shedding, degradation engage + recovery
+# ---------------------------------------------------------------------------
+
+
+def _burst_trace(d=4, deadline_s=0.05):
+    base = FI.poisson_requests(rate_qps=400, horizon_s=1.0, seed=1,
+                               d_model=d, deadline_s=deadline_s)
+    burst = FI.poisson_requests(rate_qps=20000, horizon_s=0.4, seed=2,
+                                d_model=d, deadline_s=deadline_s,
+                                t0=1.0, rid0=len(base))
+    cool = FI.poisson_requests(rate_qps=400, horizon_s=1.5, seed=3,
+                               d_model=d, deadline_s=deadline_s,
+                               t0=1.4, rid0=len(base) + len(burst))
+    return base + burst + cool
+
+
+def _soak(executor=None):
+    cfg = RS.ServeConfig(max_batch=16, max_queue=256, slo_s=0.05)
+    srv = RS.Server(executor or RS.SimExecutor(MODEL), RS.sim_ladder(),
+                    cfg=cfg, estimator=RS.ServiceEstimator(MODEL))
+    reqs = _burst_trace()
+    return RS.run_trace(srv, reqs), reqs
+
+
+def test_overload_sheds_and_ladder_engages_then_recovers():
+    m, _ = _soak()
+    rep = m.report()
+    assert rep["conserved"]
+    assert rep["rejected"] > 0 and rep["shed_rate"] > 0.05
+    assert set(rep["reasons"]) >= {"queue_full", "predicted_late"}
+    # ladder engaged during the burst AND fully recovered after it
+    levels = [(frm, to) for _, frm, to, _ in rep["transitions"]]
+    assert (0, 1) in levels, rep["transitions"]
+    assert rep["transitions"][-1][2] == 0        # ends back at exact
+    # degraded dispatches actually served requests
+    assert len(rep["level_dispatches"]) >= 2
+    assert sum(v for k, v in rep["level_dispatches"].items()
+               if k != "exact") > 0
+    # admitted requests still overwhelmingly met their deadlines
+    assert rep["deadline_met_of_admitted"] > 0.99
+
+
+def test_soak_conservation_every_request_exactly_one_terminal():
+    m, reqs = _soak(FI.SlowExecutor(
+        FI.FailingExecutor(RS.SimExecutor(MODEL), fail_calls=[5, 120, 121]),
+        slow_calls=[10, 90], factor=8.0))
+    assert m.conserved()
+    assert m.submitted == len(reqs)
+    for r in reqs:                       # exactly one terminal door each
+        assert r.outcome is not None, r.rid
+    by = {o: sum(1 for r in reqs if r.outcome is o) for o in Outcome}
+    rep = m.report()
+    assert by[Outcome.COMPLETED] == rep["completed"]
+    assert by[Outcome.REJECTED] == rep["rejected"]
+    assert by[Outcome.TIMED_OUT] == rep["timed_out"]
+    assert rep["dispatch_retries"] >= 1  # injected faults actually fired
+
+
+def test_soak_bit_deterministic_replay():
+    """Same seeded trace + config → byte-identical report, including the
+    full-jitter retry delays (seeded rng) and transition timestamps."""
+    def run():
+        ex = FI.SlowExecutor(
+            FI.FailingExecutor(RS.SimExecutor(MODEL),
+                               fail_calls=[5, 120, 121]),
+            slow_calls=[10, 90], factor=8.0)
+        m, _ = _soak(ex)
+        return m.report()
+
+    assert run() == run()
+
+
+def test_loadgen_deterministic_and_open_loop():
+    a = FI.poisson_requests(rate_qps=500, horizon_s=1.0, seed=7, d_model=8)
+    b = FI.poisson_requests(rate_qps=500, horizon_s=1.0, seed=7, d_model=8)
+    assert len(a) == len(b) > 300
+    assert all(x.submit_t == y.submit_t and
+               np.array_equal(x.x, y.x) and x.tenant == y.tenant
+               for x, y in zip(a, b))
+    c = FI.poisson_requests(rate_qps=500, horizon_s=1.0, seed=8, d_model=8)
+    assert [r.submit_t for r in a] != [r.submit_t for r in c]
+    # t0/rid0 composition: segment timestamps live in [t0, t0+horizon)
+    seg = FI.poisson_requests(rate_qps=500, horizon_s=0.5, seed=9,
+                              d_model=8, t0=10.0, rid0=len(a))
+    assert all(10.0 <= r.submit_t < 10.5 for r in seg)
+    assert seg[0].rid == len(a)
+
+
+def test_tenant_fairness_under_overload():
+    """A hot tenant over its rate is throttled; the in-policy tenant's
+    completions survive the hot tenant's flood."""
+    cfg = RS.ServeConfig(max_batch=16, max_queue=256, slo_s=0.05)
+    policies = {"hot": TenantPolicy(rate_qps=50.0, burst=10.0)}
+    srv = RS.Server(RS.SimExecutor(MODEL), RS.sim_ladder(), cfg=cfg,
+                    policies=policies,
+                    estimator=RS.ServiceEstimator(MODEL))
+    hot = FI.poisson_requests(rate_qps=2000, horizon_s=1.0, seed=1,
+                              d_model=4, tenants=("hot",))
+    cold = FI.poisson_requests(rate_qps=100, horizon_s=1.0, seed=2,
+                               d_model=4, tenants=("cold",), rid0=10**6)
+    rep = RS.run_trace(srv, hot + cold).report()
+    assert rep["conserved"]
+    assert rep["reasons"].get("tenant_throttled", 0) > 1000
+    done_hot = sum(1 for r in hot if r.outcome is Outcome.COMPLETED)
+    done_cold = sum(1 for r in cold if r.outcome is Outcome.COMPLETED)
+    assert done_hot <= 75                # ≈ rate × horizon + burst
+    assert done_cold >= 0.95 * len(cold)
+
+
+# ---------------------------------------------------------------------------
+# real head: executor demux + ladder gating
+# ---------------------------------------------------------------------------
+
+
+def _small_head():
+    import jax
+
+    from repro.core import elmo_head as H
+    from repro.head import ELMOHead
+
+    cfg = H.ELMOHeadConfig(num_labels=512, d_model=16, num_chunks=2,
+                           weight_dtype="bf16", use_sr=False, impl="xla")
+    head = ELMOHead(cfg, batch=8)
+    state = head.init(jax.random.PRNGKey(0))
+    return head, state
+
+
+def test_head_executor_demux_matches_direct_topk():
+    """Per-request results demuxed from a padded bucket at k_hat=max(k)
+    equal a direct head.topk row-for-row, each trimmed to its own k."""
+    import jax
+
+    head, state = _small_head()
+    levels = [RS.DegradeLevel(
+        "exact", 1.0, 1.0,
+        lambda s, x, k: head.topk(s, x, k, shortlist=None))]
+    ex = RS.HeadExecutor(state, timing="model", model=MODEL)
+    srv = RS.Server(ex, levels,
+                    cfg=RS.ServeConfig(max_batch=8, max_queue=32),
+                    estimator=RS.ServiceEstimator(MODEL))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, tenant="default",
+                    x=rng.standard_normal(16).astype(np.float32),
+                    k=[3, 5, 2][i % 3], submit_t=1e-4 * i, deadline_s=0.5)
+            for i in range(6)]
+    RS.run_trace(srv, list(reqs))
+    assert all(r.outcome is Outcome.COMPLETED for r in reqs)
+    # ONE dispatch: all six rode a single padded bucket-8 program
+    assert srv.metrics.report()["dispatches"] == 1
+    xs = np.zeros((8, 16), np.float32)
+    order = sorted(reqs, key=lambda r: (r.deadline, 0))  # EDF batch order
+    for i, r in enumerate(order):
+        xs[i] = r.x
+    vals, ids = jax.jit(lambda s, x: head.topk(s, x, 5))(state, xs)
+    for i, r in enumerate(order):
+        np.testing.assert_array_equal(r.vals, np.asarray(vals)[i, :r.k])
+        np.testing.assert_array_equal(r.ids, np.asarray(ids)[i, :r.k])
+
+
+def test_build_ladder_plan_gate_collapses_without_shortlist_path():
+    """A geometry whose shortlist="on" twin still refuses the shortlist
+    path (L < 256: stage 1 would cost as much as exact) can never offer
+    a degraded rung — no index is even built."""
+    import jax
+
+    from repro.core import elmo_head as H
+    from repro.head import ELMOHead
+
+    cfg = H.ELMOHeadConfig(num_labels=128, d_model=16, num_chunks=2,
+                           weight_dtype="bf16", use_sr=False, impl="xla")
+    head = ELMOHead(cfg, batch=8)
+    state = head.init(jax.random.PRNGKey(0))
+    levels = RS.build_ladder(head, state, k=5, max_batch=8)
+    assert [lv.name for lv in levels] == ["exact"]
+
+
+@pytest.mark.slow
+def test_build_ladder_recall_gate_structured_vs_random():
+    """On the golden structured head (PR 7 fixture recipe) the full-beam
+    shortlist rung clears the 0.95 floor and joins the ladder; the
+    half-beam rung (measured ≈0.91) and every rung of an i.i.d.-random
+    head are correctly dropped."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import elmo_head as H
+    from repro.head import ELMOHead
+    from repro.head import shortlist as SL
+
+    cfg = H.ELMOHeadConfig(num_labels=4096, d_model=64, num_chunks=8,
+                           weight_dtype="e4m3", use_sr=False)
+    head = ELMOHead(cfg, batch=16)
+    state = SL.synthetic_clustered_state(cfg, groups=128, noise=0.2, seed=7)
+    probe = jax.random.normal(jax.random.PRNGKey(11),
+                              (64, 64)).astype(jnp.bfloat16)
+    # golden index geometry (tests/_shortlist_checks.GOLDEN): C=64 beam=28
+    levels = RS.build_ladder(head, state, k=10, max_batch=16,
+                             probe_x=probe, iters=8,
+                             n_clusters=64, beam=28)
+    assert [lv.name for lv in levels] == ["exact", "shortlist"]
+    assert levels[1].recall >= 0.95
+    assert levels[1].cost_scale < 0.5            # §11 work model
+    # lowering the floor to 0.9 re-admits the half-beam rung, in
+    # strictly descending cost order
+    levels_lo = RS.build_ladder(head, state, k=10, max_batch=16,
+                                probe_x=probe, iters=8,
+                                n_clusters=64, beam=28, recall_floor=0.9)
+    assert [lv.name for lv in levels_lo] == \
+        ["exact", "shortlist", "shortlist/2"]
+    assert levels_lo[1].cost_scale > levels_lo[2].cost_scale
+    assert levels_lo[2].recall < 0.95
+    # the same geometry on an i.i.d.-random head: no rung survives
+    rnd = head.init(jax.random.PRNGKey(0))
+    assert [lv.name for lv in RS.build_ladder(
+        head, rnd, k=10, max_batch=16, probe_x=probe, iters=8,
+        n_clusters=64, beam=28)] == ["exact"]
+
+
+@pytest.mark.slow
+def test_degraded_level_serves_real_shortlisted_results():
+    """A runtime pinned at a degraded rung serves actual shortlisted
+    top-k (ids drawn from the admitted clusters), not placeholders."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import elmo_head as H
+    from repro.head import ELMOHead
+    from repro.head import shortlist as SL
+
+    cfg = H.ELMOHeadConfig(num_labels=4096, d_model=64, num_chunks=8,
+                           weight_dtype="e4m3", use_sr=False)
+    head = ELMOHead(cfg, batch=4)
+    state = SL.synthetic_clustered_state(cfg, groups=128, noise=0.2, seed=7)
+    probe = jax.random.normal(jax.random.PRNGKey(11),
+                              (64, 64)).astype(jnp.bfloat16)
+    levels = RS.build_ladder(head, state, k=10, max_batch=4,
+                             probe_x=probe, iters=8,
+                             n_clusters=64, beam=28)
+    assert len(levels) == 2
+    ex = RS.HeadExecutor(state, timing="model", model=MODEL)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((4, 64)).astype(np.float32)
+    exact = ex.dispatch(x, 10, levels[0])
+    degraded = ex.dispatch(x, 10, levels[1])
+    # recall of the degraded answers vs exact on this batch ≥ the floor
+    hits = sum(len(set(map(int, degraded.ids[i])) &
+                   set(map(int, exact.ids[i]))) for i in range(4))
+    assert hits / (4 * 10) >= 0.9
+    assert (np.asarray(degraded.ids) < cfg.num_labels).all()
+
+
+# ---------------------------------------------------------------------------
+# forced-4-device soak through the sharded top-k path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multidevice_serve_runtime(multidevice_runner):
+    out = multidevice_runner("_serve_runtime_checks.py", 4)
+    assert "ALL SERVE RUNTIME CHECKS PASSED" in out
