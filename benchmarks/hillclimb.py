@@ -3,19 +3,32 @@ three roofline terms + dry-run memory before/after each change.
 
     PYTHONPATH=src python -m benchmarks.hillclimb --cell gemma-7b/train_4k \
         --set sharding_strategy=fsdp_pure --out hc.json
+
+Importing this module has NO side effects (no env mutation, no jax
+backend init, no sys.path edits) — everything environmental happens
+inside ``main()``, so tests and other benchmarks can import the helpers
+without forking a 512-device host platform.
 """
+from __future__ import annotations
+
+import argparse
+import json
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+import sys
+from pathlib import Path
 
-import argparse   # noqa: E402
-import json       # noqa: E402
-import sys        # noqa: E402
-from pathlib import Path  # noqa: E402
+# the dry-run meshes need this many host devices; must be appended to
+# XLA_FLAGS before jax initializes its backend (main() does this first)
+HOST_DEVICES = 512
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from repro.launch import dryrun as DR       # noqa: E402
+def _setup_environment() -> None:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={HOST_DEVICES}")
+    repo_root = str(Path(__file__).resolve().parent.parent)
+    if repo_root not in sys.path:
+        sys.path.insert(0, repo_root)
 
 
 def parse_override(kv: str):
@@ -28,25 +41,33 @@ def parse_override(kv: str):
     return k, v
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", required=True)      # arch/shape
     ap.add_argument("--set", action="append", default=[])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default="hillclimb.json")
-    args = ap.parse_args()
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    _setup_environment()
+    from repro.launch import dryrun as DR
+
     arch, shape = args.cell.split("/")
     overrides = dict(parse_override(kv) for kv in args.set)
 
     rec = DR.run_cell(arch, shape, args.multi_pod, overrides or None)
     # attach analytic roofline terms under the same overrides
     import dataclasses
+
     from benchmarks import roofline as R
     from repro.configs import get_config
+    from repro.configs.registry import SHAPES
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
-    from repro.configs.registry import SHAPES
     sh = SHAPES[shape]
     fl = R.step_flops(cfg, sh)
     coll = R.step_collective_bytes(cfg, sh, args.multi_pod)
@@ -61,6 +82,7 @@ def main():
     json.dump(hist, open(args.out, "w"), indent=1)
     print(json.dumps({k: v for k, v in rec.items()
                       if k not in ("trace",)}, indent=1, default=str))
+    return rec
 
 
 if __name__ == "__main__":

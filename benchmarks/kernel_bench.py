@@ -492,6 +492,106 @@ def bench_serve_runtime(L=4096, D=64, B=16, k=10, num_chunks=8,
     ]
 
 
+def bench_sparse_head(L=4096, D=256, B=256, F=32, num_chunks=8):
+    """Fixed-fan-in sparse head step (DESIGN.md §13) + the §13 memory gate.
+
+    Measured: the whole-step sparse megakernel (interpret lowering) vs
+    the XLA oracle scan at a synthetic shape — bit-parity of the updated
+    value slots and x̄ asserted first, then XLA ``memory_analysis()``
+    temp bytes per path and µs/call for the XLA (production non-TPU)
+    path.  The per-step weight+optimizer stream bytes ride along: HBM
+    weight traffic scales with ``fan_in``, not ``d_model``.
+
+    Modeled, fail-hard: head weight+optimizer bytes (FP8 values + i32
+    index plane + Kahan comp) of each registered sparse XMC variant vs
+    its dense base arch, from ``core.memory_model.head_components`` —
+    the acceptance gate is **≥10×** at the variant's configured fan-in.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro import head as H
+    from repro.configs import get_config
+    from repro.core import memory_model as MM
+    from repro.head import resolve_plan
+    from repro.head.sparse.state import init_sparse_head
+    from repro.head.sparse.train import train_step_sparse
+
+    cfg = H.ELMOHeadConfig(num_labels=L, d_model=D, num_chunks=num_chunks,
+                           weight_dtype="e4m3", loss="bce", fan_in=F,
+                           impl="grid_interpret")
+    state = init_sparse_head(jax.random.PRNGKey(0), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+         ).astype(jnp.bfloat16)
+    tg = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, L)
+    hp = (jnp.float32(0.05), jnp.float32(0.0), jnp.uint32(7))
+    plan = resolve_plan(cfg, batch=B, target_slots=8)
+    assert plan.path == "sparse", plan.path
+
+    variants = {
+        "kernel": dataclasses.replace(plan, train_inner="interpret"),
+        "xla": dataclasses.replace(plan, train_inner="xla"),
+    }
+    # dense-weight HBM stream of the equivalent dense step vs the sparse
+    # value+index(+comp) stream — the §13 bandwidth claim, exact bytes
+    w_stream = {"dense": L * D,
+                "sparse": L * F * (1 + 4 + (2 if state.comp is not None
+                                            else 0))}
+    outs, rows = {}, []
+    for name, p in variants.items():
+        f = jax.jit(lambda s, xx, t, p=p: train_step_sparse(
+            p, cfg, s, xx, t, *hp))
+        outs[name] = jax.block_until_ready(f(state, x, tg))
+        b = _temp_bytes(f, state, x, tg)
+        rows.append({
+            "name": f"sparse/head_{name}",
+            "us_per_call": round(_time(f, state, x, tg, n=3)),
+            "temp_mib": round(b / 2**20, 2),
+            "temp_size_in_bytes": b,
+            "fan_in": F, "block_l": plan.block_l,
+            "w_stream_bytes": w_stream["sparse"],
+            "dense_w_stream_bytes": w_stream["dense"],
+            "B": B, "L": L, "D": D,
+        })
+    # bit-parity gate: megakernel ≡ oracle scan (values are FP8 — compare
+    # the raw byte patterns so -0.0 / NaN encodings can't slip through)
+    for got, want in ((outs["kernel"][0].values, outs["xla"][0].values),
+                      (outs["kernel"][1], outs["xla"][1])):
+        np.testing.assert_array_equal(np.asarray(got).view(np.uint8),
+                                      np.asarray(want).view(np.uint8))
+
+    # ---- modeled §13 memory gate at the paper's own archs (fail-hard) ----
+    for arch in ("xmc-bert-3m-sparse", "xmc-distilbert-8.6m-sparse"):
+        scfg = get_config(arch)
+        dcfg = get_config(arch[:-len("-sparse")])
+        sd = MM.MemScenario(num_labels=dcfg.head_labels,
+                            d_model=dcfg.d_model,
+                            num_chunks=dcfg.head_chunks,
+                            kahan_chunks=dcfg.head_kahan_chunks)
+        ss = dataclasses.replace(sd, num_chunks=scfg.head_chunks,
+                                 kahan_chunks=scfg.head_kahan_chunks)
+        dense = MM.head_components(sd, dcfg.head_weight_dtype)
+        sparse = MM.head_components(ss, scfg.head_weight_dtype,
+                                    fan_in=scfg.head_fan_in)
+        dense_w = sum(v for k, v in dense.items() if k.startswith("W_"))
+        sparse_w = sum(v for k, v in sparse.items() if k.startswith("W_"))
+        ratio = dense_w / sparse_w
+        # acceptance: ≥10× head weight+optimizer shrink at configured fan-in
+        assert ratio >= 10.0, (arch, ratio)
+        rows.append({
+            "name": f"sparse/mem_{arch}",
+            "us_per_call": 0,                  # modeled, not timed
+            "fan_in": scfg.head_fan_in,
+            "labels": dcfg.head_labels,
+            "dense_w_bytes": round(dense_w),
+            "sparse_w_bytes": round(sparse_w),
+            "shrink_x": round(ratio, 2),
+            "gate": "ratio>=10",
+        })
+    return rows
+
+
 def bench_fused_chunk(L=4096, D=256, B=256):
     """Single-launch fused chunk step vs the legacy 3-launch composition.
 

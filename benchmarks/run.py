@@ -20,11 +20,21 @@ import time
 
 _JSON_ROWS: list = []
 
+# the committed BENCH_*.json files live next to this package at the repo
+# root — anchor there, not at the cwd, so --show-trajectory (and the
+# trajectory loaders in tests) see the history from any directory
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def bench_files(root: str = ".") -> list:
+
+def bench_files(root: str | None = None) -> list:
     """Every ``BENCH_<n>.json`` present, ordered by ``n`` — tolerating
     gaps (BENCH_1/2 were never committed), renumbering, and stray
-    non-numeric names (ignored).  Nothing here assumes a dense sequence."""
+    non-numeric names (ignored).  Nothing here assumes a dense sequence.
+    ``root`` defaults to the repo root (where the files are committed),
+    NOT the cwd — running from elsewhere used to render an empty
+    trajectory."""
+    if root is None:
+        root = REPO_ROOT
     out = []
     for p in glob.glob(os.path.join(root, "BENCH_*.json")):
         m = re.fullmatch(r"BENCH_(\d+)\.json", os.path.basename(p))
@@ -33,7 +43,7 @@ def bench_files(root: str = ".") -> list:
     return [p for _, p in sorted(out)]
 
 
-def load_trajectory(root: str = ".") -> list:
+def load_trajectory(root: str | None = None) -> list:
     """The merged perf history across every ``BENCH_*.json``: a flat list
     of run entries ({ts, sections, rows, file}), oldest file first.
     Unreadable or malformed files are skipped, never fatal — the loader's
@@ -60,7 +70,7 @@ def _resolve_json_path(arg: str) -> str:
     if arg != "auto":
         return arg
     files = bench_files()
-    return files[-1] if files else "BENCH_1.json"
+    return files[-1] if files else os.path.join(REPO_ROOT, "BENCH_1.json")
 
 
 def _emit(rows):
@@ -174,12 +184,19 @@ def _serve_runtime():
     _emit(bench_serve_runtime())    # fault-injected overload soak, hard-gated
 
 
+@section("sparse")      # ISSUE 9: fixed-fan-in sparse head (DESIGN.md §13)
+def _sparse():
+    from benchmarks.kernel_bench import bench_sparse_head
+    _emit(bench_sparse_head())      # kernel≡oracle parity + ≥10× mem gate
+
+
 @section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows
 def _plan():
     from repro.configs import get_config
     from repro.head import default_target_slots, head_config_for, resolve_plan
     rows = []
     for arch, batch, n in (("xmc-bert-3m", 128, 1), ("xmc-bert-3m", 128, 4),
+                           ("xmc-bert-3m-sparse", 128, 1),
                            ("smollm-360m", 8 * 32, 1)):
         cfg = get_config(arch)
         hcfg = head_config_for(cfg)
@@ -190,6 +207,7 @@ def _plan():
             "name": f"plan/{arch}/n{n}",
             "us_per_call": 0,              # resolution is trace-time only
             "path": plan.path, "inner": plan.train_inner,
+            "fan_in": plan.fan_in,
             "block_l": plan.block_l, "cache_z": plan.cache_z,
             "temp_bytes": plan.temp_bytes, "vmem_bytes": plan.vmem_bytes,
             "fallback": plan.fallback_reason or "none",

@@ -37,6 +37,10 @@ ARCHS = {
     # paper's own
     "xmc-bert-3m": "repro.configs.xmc_bert_3m",
     "xmc-distilbert-8.6m": "repro.configs.xmc_distilbert_8_6m",
+    # fixed-fan-in sparse head variants (DESIGN.md §13)
+    "xmc-bert-3m-sparse": "repro.configs.xmc_bert_3m_sparse",
+    "xmc-distilbert-8.6m-sparse":
+        "repro.configs.xmc_distilbert_8_6m_sparse",
 }
 
 ASSIGNED = [k for k in ARCHS if not k.startswith("xmc-")]

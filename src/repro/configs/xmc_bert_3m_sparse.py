@@ -1,0 +1,18 @@
+"""xmc-bert-3m-sparse — the fixed-fan-in sparse variant of the paper's
+Amazon-3M setting (DESIGN.md §13): every label row keeps 16 of 768 weight
+slots (FP8 values + i32 column indices, ~14× less head memory than the
+dense FP8+Kahan baseline), with a periodic magnitude-prune /
+gradient-regrow topology update.  Kahan is homogeneous-off here — the
+sparse single-kernel update cannot mix Kahan and SR chunks the way the
+dense hybrid does (head/config.py asserts this)."""
+import dataclasses
+
+from repro.configs.xmc_bert_3m import CONFIG as _DENSE
+
+CONFIG = dataclasses.replace(
+    _DENSE,
+    name="xmc-bert-3m-sparse",
+    head_fan_in=16,
+    head_prune_every=100,
+    head_kahan_chunks=0,
+)

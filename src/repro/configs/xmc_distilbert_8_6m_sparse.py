@@ -1,0 +1,16 @@
+"""xmc-distilbert-8.6m-sparse — the fixed-fan-in sparse variant of the
+paper's LF-Paper2Keywords-8.6M setting (DESIGN.md §13): 12 of 768 weight
+slots per label row (FP8 values + i32 column indices; the dense baseline
+here carries no Kahan buffer, so the fan-in is tighter than the
+Amazon-3M variant's to keep the ≥10× head-memory margin), periodic
+magnitude-prune / gradient-regrow topology updates."""
+import dataclasses
+
+from repro.configs.xmc_distilbert_8_6m import CONFIG as _DENSE
+
+CONFIG = dataclasses.replace(
+    _DENSE,
+    name="xmc-distilbert-8.6m-sparse",
+    head_fan_in=12,
+    head_prune_every=100,
+)

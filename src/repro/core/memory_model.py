@@ -35,7 +35,8 @@ WEIGHT_BYTES = {"bf16": 2, "e4m3": 1, "e5m2": 1, "f32": 4}
 
 def head_components(s: MemScenario, weight_dtype: str = "bf16",
                     n_label_shards: int = 1,
-                    grid_block_l: int | None = None) -> dict:
+                    grid_block_l: int | None = None,
+                    fan_in: int | None = None) -> dict:
     """Per-device ELMO *head* memory (the paper's Fig. 3 head terms only).
 
     ``n_label_shards`` is the mesh's model-axis size when the head is
@@ -50,16 +51,32 @@ def head_components(s: MemScenario, weight_dtype: str = "bf16",
     transient terms shrink from the chunk width to the label-block width —
     and stop depending on the shard count (the tile is chosen per device).
     The residency the kernel adds instead (x, x̄, LSE stats — a few B·D
-    buffers) is accounted as ``grid_resident_bf16``."""
+    buffers) is accounted as ``grid_resident_bf16``.
+
+    ``fan_in`` models the fixed-fan-in sparse head (DESIGN.md §13): every
+    label row keeps exactly ``fan_in`` FP8 value slots plus an i32 column
+    index per slot, so the weight terms scale with L·fan_in instead of
+    L·d_model — the index plane is the sparse format's only overhead.
+    ``None``/0 leaves the dense accounting bit-for-bit unchanged."""
     wb = WEIGHT_BYTES[weight_dtype]
     frac = 1.0 / max(1, n_label_shards)
     chunk_rows = s.num_labels / s.num_chunks
-    comp = {
-        f"W_{weight_dtype}": _w_bytes(s, wb) * frac,
-        "W_kahan_comp_bf16":
-            _w_bytes(s, 2) * (s.kahan_chunks / s.num_chunks) * frac,
-        "W_grad": 0.0,                      # fused into the update kernel
-    }
+    if fan_in:
+        slots = s.num_labels * fan_in
+        comp = {
+            f"W_{weight_dtype}": slots * wb * frac,
+            "W_indices_i32": slots * 4 * frac,
+            "W_kahan_comp_bf16":
+                slots * 2 * (s.kahan_chunks / s.num_chunks) * frac,
+            "W_grad": 0.0,                  # fused into the update kernel
+        }
+    else:
+        comp = {
+            f"W_{weight_dtype}": _w_bytes(s, wb) * frac,
+            "W_kahan_comp_bf16":
+                _w_bytes(s, 2) * (s.kahan_chunks / s.num_chunks) * frac,
+            "W_grad": 0.0,                  # fused into the update kernel
+        }
     if grid_block_l is None:
         comp["chunk_logits_bf16"] = s.batch * chunk_rows * 2 * frac
         comp["chunk_logit_grad_bf16"] = s.batch * chunk_rows * 2 * frac

@@ -125,6 +125,18 @@ def head_specs(cfg, n_model: int):
     return HeadState(w=w_spec, comp=comp_spec)
 
 
+def sparse_head_specs(cfg, n_model: int):
+    """Vocab-parallel fixed-fan-in sparse head (DESIGN.md §13): values,
+    indices, and Kahan comp are all (chunks, rows, fan_in) with the label
+    rows on dim 1 — the same row partition as the dense head, so the
+    sharded sparse step and serving reuse the dense collectives."""
+    from repro.head.sparse.state import SparseHeadState
+
+    w_spec = P(None, "model", None) if n_model > 1 else P()
+    comp_spec = w_spec if getattr(cfg, "head_kahan_chunks", 0) else None
+    return SparseHeadState(values=w_spec, indices=w_spec, comp=comp_spec)
+
+
 def head_state_shardings(state: HeadState, mesh, model_axis: str = "model"):
     """``NamedSharding`` tree matching ``state`` for elastic checkpoint
     restore: label rows over ``model_axis``, sanitized per leaf.  Pass to

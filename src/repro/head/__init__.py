@@ -138,7 +138,14 @@ class ELMOHead:
 
     # ---- state ----
 
-    def init(self, key: jax.Array, scale: float | None = None) -> HeadState:
+    def init(self, key: jax.Array, scale: float | None = None):
+        """Seeded head state: dense ``HeadState`` — or, when the config
+        declares a ``fan_in``, the fixed-fan-in ``SparseHeadState``
+        (DESIGN.md §13); every facade method auto-dispatches on the
+        planned path, so call sites never branch."""
+        if self.cfg.fan_in:
+            from repro.head import sparse as _sparse
+            return _sparse.init_sparse_head(key, self.cfg, scale)
         return init_head(key, self.cfg, scale)
 
     def init_xg_err(self, batch: int) -> jax.Array:
@@ -152,6 +159,17 @@ class ELMOHead:
         label-sharded over the mesh's model axis when the plan says so.
         Returns (new_state, x_grad, metrics)[, xg_err']."""
         plan = self._plan_for(x.shape[0], plan_mod._target_slots(targets))
+        if plan.path == "sparse":
+            from repro.head import sparse as _sparse
+            if plan.sharded:
+                out = _sparse.train_step_sparse_sharded(
+                    plan, self.cfg, self.ctx, state, x, targets, hp.lr,
+                    hp.wd, hp.seed, ce_comm=self.ce_comm)
+            else:
+                out = _sparse.train_step_sparse(plan, self.cfg, state, x,
+                                                targets, hp.lr, hp.wd,
+                                                hp.seed)
+            return out if xg_err is None else out + (xg_err,)
         if plan.sharded:
             return _train_sharded.train_step_sharded_planned(
                 plan, self.cfg, self.ctx, state, x, targets, hp.lr, hp.wd,
@@ -161,10 +179,28 @@ class ELMOHead:
                                         hp.lr, hp.wd, hp.seed)
         return out if xg_err is None else out + (xg_err,)
 
+    def maybe_prune_regrow(self, state, x: jax.Array, targets: jax.Array,
+                           step: jax.Array):
+        """Periodic deterministic prune/regrow of the sparse topology
+        (no-op for dense heads or ``prune_every == 0``): every
+        ``cfg.prune_every`` steps the smallest-|value| slots are pruned
+        and the largest-|dW| dense columns regrown (DESIGN.md §13).
+        ``step`` may be traced — dispatch is a ``lax.cond``."""
+        if not (self.cfg.fan_in and self.cfg.prune_every):
+            return state
+        from repro.head import sparse as _sparse
+        return _sparse.maybe_prune_regrow(self.cfg, state, x, targets, step)
+
     # ---- serving ----
 
-    def logits(self, state: HeadState, x: jax.Array) -> jax.Array:
+    def logits(self, state, x: jax.Array) -> jax.Array:
         plan = self._plan_for(x.shape[0])
+        if plan.path == "sparse":
+            from repro.head import sparse as _sparse
+            if plan.sharded:
+                return _sparse.logits_sparse_sharded_planned(
+                    plan, self.cfg, self.ctx, state, x)
+            return _sparse.logits_sparse_planned(plan, self.cfg, state, x)
         if plan.sharded:
             return _serving.logits_sharded_planned(plan, self.cfg, self.ctx,
                                                    state, x)
@@ -180,6 +216,12 @@ class ELMOHead:
         if shortlist is _AMBIENT:
             shortlist = self._shortlist
         plan = self._plan_for(x.shape[0])
+        if plan.path == "sparse":
+            from repro.head import sparse as _sparse
+            if plan.sharded:
+                return _sparse.topk_sparse_sharded_planned(
+                    plan, self.cfg, self.ctx, state, x, k)
+            return _sparse.topk_sparse_planned(plan, self.cfg, state, x, k)
         if plan.sharded:
             return _serving.topk_sharded_planned(plan, self.cfg, self.ctx,
                                                  state, x, k, shortlist)
@@ -192,12 +234,41 @@ class ELMOHead:
     def shortlist(self) -> "ShortlistIndex | None":
         return self._shortlist
 
-    def attach_shortlist(self, index: "ShortlistIndex | None") -> None:
+    def attach_shortlist(self, index: "ShortlistIndex | None", *,
+                         rebuild_if_stale: bool = False,
+                         state: "HeadState | None" = None,
+                         iters: int = 8, seed: int = 0
+                         ) -> "ShortlistIndex | None":
         """Attach (or, with None, detach) a shortlist index.  Serving uses
         it only when the plan resolved ``topk_path == "shortlist"``; with
         no index attached a shortlist plan serves exact (the downgrade is
-        result-invisible — the exact top-k is a superset)."""
+        result-invisible — the exact top-k is a superset).
+
+        ``rebuild_if_stale=True`` (requires ``state``) checks the index's
+        W-bits checksum against ``state`` (``shortlist.is_stale``): a
+        stale index is *correct* but its measured recall no longer
+        applies, so it is rebuilt here — same geometry, offline host
+        build — with a ``UserWarning`` naming the rebuild.  Returns the
+        index actually attached."""
+        if rebuild_if_stale and index is not None:
+            import warnings
+
+            from repro.head import shortlist as _sl
+            if state is None:
+                raise ValueError(
+                    "attach_shortlist(rebuild_if_stale=True) needs the "
+                    "state the index must match")
+            if _sl.is_stale(index, state):
+                warnings.warn(
+                    "shortlist index is stale for this state "
+                    "(weights moved since the build) — rebuilding with "
+                    f"n_clusters={index.n_clusters} beam={index.beam}",
+                    UserWarning, stacklevel=2)
+                index = build_shortlist_index(
+                    self.cfg, state, n_clusters=index.n_clusters,
+                    beam=index.beam, iters=iters, seed=seed)
         self._shortlist = index
+        return index
 
     def build_shortlist(self, state: HeadState, *, iters: int = 8,
                         seed: int = 0, n_clusters: int | None = None,
@@ -223,6 +294,10 @@ class ELMOHead:
         divides each row by min(k, #positives); ``denom="k"`` is the
         strict XMC-leaderboard convention (see ``serving._p_at_k``)."""
         plan = self._plan_for(x.shape[0])
+        if plan.path == "sparse":
+            from repro.head import sparse as _sparse
+            return _sparse.precision_at_k_sparse_planned(
+                plan, self.cfg, self.ctx, state, x, label_ids, k, denom)
         return _serving.precision_at_k_planned(plan, self.cfg, self.ctx,
                                                state, x, label_ids, k,
                                                denom, self._shortlist)
@@ -233,6 +308,13 @@ class ELMOHead:
         """Propensity-scored P@k (paper eq. 3) over the served top-k;
         ``propensity`` from ``losses.propensity_scores``."""
         plan = self._plan_for(x.shape[0])
+        if plan.path == "sparse":
+            from repro.core import losses as _L
+            from repro.head import sparse as _sparse
+            vals, pred = _sparse.topk_sparse_sharded_planned(
+                plan, self.cfg, self.ctx, state, x, k)
+            return _L.psp_at_k(_serving._real_preds(vals, pred), label_ids,
+                               propensity, k)
         return _serving.psp_at_k_planned(plan, self.cfg, self.ctx, state,
                                          x, label_ids, propensity, k,
                                          self._shortlist)

@@ -66,6 +66,19 @@ class ELMOHeadConfig:
     # training never shortlists, and serving falls back to the exact
     # path when no index is attached.
     shortlist: str = "off"
+    # fixed-fan-in sparse head (DESIGN.md §13): 0 = dense; > 0 stores each
+    # label row as ``fan_in`` FP8 value slots + i32 column indices and
+    # plans the sparse streaming megakernel (kernels/sparse_head.py).
+    # ``fan_in == d_model`` with identity indices is the dense-parity
+    # anchor.  Sparse requires a *homogeneous* update rule —
+    # ``kahan_chunks`` must be 0 or num_chunks — matching the grid path.
+    fan_in: int = 0
+    # prune/regrow cadence in steps (head.sparse.controller): every
+    # ``prune_every`` steps the lowest-|value| ``round(fan_in ·
+    # regrow_frac)`` slots per row are re-pointed at the highest-|grad|
+    # dense columns.  0 = static sparsity.
+    prune_every: int = 0
+    regrow_frac: float = 0.1
 
     @property
     def wdtype(self):
@@ -99,6 +112,16 @@ class ELMOHeadConfig:
         assert self.loss in ("bce", "softmax_ce")
         assert self.cache_z in ("auto", "on", "off")
         assert self.shortlist in ("off", "on", "auto")
+        assert 0 <= self.fan_in <= self.d_model, \
+            f"fan_in {self.fan_in} outside [0, d_model={self.d_model}]"
+        if self.fan_in:
+            assert self.kahan_chunks in (0, self.num_chunks), \
+                "sparse head needs a homogeneous update rule " \
+                "(kahan_chunks 0 or num_chunks)"
+        assert 0.0 <= self.regrow_frac <= 1.0
+        assert self.prune_every >= 0
+        if self.prune_every:
+            assert self.fan_in, "prune_every needs a sparse head (fan_in>0)"
 
 
 class HeadHparams(NamedTuple):
@@ -131,4 +154,6 @@ def head_config_for(model_cfg, impl: str = "auto") -> ELMOHeadConfig:
         loss=model_cfg.head_loss,
         kahan_chunks=model_cfg.head_kahan_chunks,
         impl=impl,
+        fan_in=getattr(model_cfg, "head_fan_in", 0),
+        prune_every=getattr(model_cfg, "head_prune_every", 0),
     )

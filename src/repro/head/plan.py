@@ -157,6 +157,8 @@ class HeadPlan:
     #                            kernel/scan, DESIGN.md §11)
     shortlist_c: int = 0       # shortlist cluster count (0 = exact serving)
     shortlist_beam: int = 0    # admitted clusters per query
+    # ---- fixed-fan-in sparse head (DESIGN.md §13) ----
+    fan_in: int = 0            # 0 = dense; > 0 ⇒ path == "sparse"
 
     @property
     def sharded(self) -> bool:
@@ -180,6 +182,9 @@ class HeadPlan:
                 "path": self.path, "backend": self.backend}
 
     def launches_per_step(self) -> str:
+        if self.path == "sparse":
+            return ("O(num_chunks) (sharded sparse ref scan)"
+                    if self.sharded else "1")
         if self.path != "grid":
             return "O(num_chunks)"
         if self.sharded:
@@ -201,6 +206,9 @@ class HeadPlan:
         ]
         if self.fallback_reason:
             lines.append(f"  fallback   {self.fallback_reason}")
+        if self.fan_in:
+            lines.append(f"  sparse     fan_in={self.fan_in} "
+                         f"(fixed-fan-in value/index head, DESIGN.md §13)")
         lines += [
             f"  geometry   lc={self.lc} block_l={self.block_l} "
             f"cache_z={'on' if self.cache_z else 'off'}",
@@ -248,6 +256,56 @@ def _resolve_cached(cfg, batch, target_slots, n, axis, ce_comm,
     kahan = cfg.kahan_chunks > 0
     lc = cfg.chunk // n
     local_padded = cfg.padded_labels // n
+
+    if cfg.fan_in:
+        # ---- fixed-fan-in sparse head (DESIGN.md §13): its own path ----
+        # Single-device dispatches the sparse megakernel (ref scan on xla);
+        # the sharded body runs the pure-JAX ref composition inside
+        # shard_map.  Serving always scans chunks (densify-free top-k
+        # merge) — no dense grid/materialize/shortlist machinery applies.
+        reason = ""
+        if rimpl == "kernel":
+            if _tuning.sparse_head_viable(batch, cfg.d_model, cfg.fan_in,
+                                          wb, kahan=kahan,
+                                          p_slots=target_slots):
+                train_inner = "kernel"
+            else:
+                train_inner = "xla"
+                reason = ("sparse residency model exceeds VMEM at "
+                          f"B={batch} D={cfg.d_model} F={cfg.fan_in} — "
+                          "ref scan")
+        elif rimpl == "interpret":
+            train_inner = "interpret"
+        else:
+            train_inner = "xla"
+        if train_inner == "kernel":
+            block_l = _tuning.sparse_head_block_l(
+                batch, lc, cfg.d_model, cfg.fan_in, wb, kahan=kahan,
+                p_slots=target_slots, n_chunks=cfg.num_chunks)
+        else:
+            block_l = lc
+        vmem = (0 if train_inner == "xla"
+                else _tuning._sparse_head_vmem(batch, cfg.d_model,
+                                               cfg.fan_in, block_l, wb,
+                                               kahan, target_slots))
+        s = MM.MemScenario(num_labels=cfg.num_labels, d_model=cfg.d_model,
+                           batch=batch, num_chunks=cfg.num_chunks,
+                           kahan_chunks=cfg.kahan_chunks)
+        comp = MM.head_components(s, cfg.weight_dtype, n_label_shards=n,
+                                  fan_in=cfg.fan_in)
+        temp_bytes = int(comp["chunk_logits_bf16"]
+                         + comp["chunk_logit_grad_bf16"])
+        axis_spec = axis if n > 1 else None
+        return HeadPlan(
+            batch=batch, target_slots=target_slots, model_size=n,
+            model_axis=axis, ce_comm=ce_comm, backend=backend,
+            requested_path="sparse", inner=inner, rimpl=rimpl,
+            path="sparse", train_inner=train_inner, cache_z=False,
+            fallback_reason=reason, lc=lc, block_l=int(block_l),
+            w_spec=PS(None, axis_spec, None),
+            xg_err_spec=PS(axis_spec, None, None),
+            vmem_bytes=int(vmem), temp_bytes=temp_bytes,
+            serve_grid=False, topk_path="stream", fan_in=cfg.fan_in)
 
     grid, reason = False, ""
     if requested_path == "grid":

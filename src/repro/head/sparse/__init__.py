@@ -1,0 +1,32 @@
+"""Fixed-fan-in sparse head subsystem (DESIGN.md §13).
+
+Layout: each label row keeps exactly ``fan_in`` weight slots — FP8
+values + i32 column indices, a dense ``(L, fan_in)`` pair that streams
+through the same grid machinery as the dense head.  ``state`` holds the
+SparseHeadState + dense↔sparse conversion (the densify oracle),
+``train`` the plan-driven single-device/sharded steps, ``controller``
+the deterministic periodic prune/regrow.  The Pallas kernel lives in
+``repro.kernels.sparse_head``; its bit-parity oracle in
+``repro.kernels.ref`` (``sparse_head_step_ref``).
+"""
+from repro.head.sparse.controller import (maybe_prune_regrow, n_swap_of,
+                                          prune_regrow)
+from repro.head.sparse.serving import (logits_sparse_planned,
+                                       logits_sparse_sharded_planned,
+                                       precision_at_k_sparse_planned,
+                                       topk_sparse_planned,
+                                       topk_sparse_sharded_planned)
+from repro.head.sparse.state import (SparseHeadState, densify,
+                                     indices_strictly_increasing,
+                                     init_sparse_head, sparsify)
+from repro.head.sparse.train import (train_step_sparse,
+                                     train_step_sparse_sharded)
+
+__all__ = [
+    "SparseHeadState", "densify", "indices_strictly_increasing",
+    "init_sparse_head", "sparsify", "maybe_prune_regrow", "n_swap_of",
+    "prune_regrow", "train_step_sparse", "train_step_sparse_sharded",
+    "logits_sparse_planned", "logits_sparse_sharded_planned",
+    "topk_sparse_planned", "topk_sparse_sharded_planned",
+    "precision_at_k_sparse_planned",
+]

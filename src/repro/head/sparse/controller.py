@@ -1,0 +1,136 @@
+"""Prune/regrow controller for the fixed-fan-in sparse head (DESIGN.md §13).
+
+Every ``cfg.prune_every`` steps each label row swaps its ``n_swap =
+round(fan_in · regrow_frac)`` lowest-|value| slots for the ``n_swap``
+highest-|gradient| dense columns it does not already hold (HASTE-style
+magnitude-prune + gradient-signal regrow).  Regrown slots start at value
+zero (comp zero), so the step after a swap grows them from the live
+gradient.
+
+Determinism is the whole design: the controller is a **pure function of
+(state, x, targets)** — the gradient probe runs the *expected* forward
+(DropConnect off, no SR; ranking by |E[dW]| needs no stochastic draw),
+and every selection is a stable ``lax.top_k`` / ``argsort`` (ties break
+to the lowest slot / lowest column).  Replay across checkpoint resume
+(§10) therefore follows from nothing but raw-bit checkpointing of
+values/indices/comp: restore, feed the same batch, and the same swap
+happens — there is no controller RNG stream to restore.
+
+The fan-in count is exact by construction: kept and regrown slots are
+disjoint (regrow candidates mask out kept columns), their union is
+re-sorted ascending, so the sorted-strictly-increasing index invariant
+is maintained.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as L
+from repro.head.config import ELMOHeadConfig
+from repro.head.sparse.state import SparseHeadState
+from repro.kernels import ref as REF
+
+
+def n_swap_of(cfg: ELMOHeadConfig) -> int:
+    return max(1, int(round(cfg.fan_in * cfg.regrow_frac)))
+
+
+def prune_regrow(cfg: ELMOHeadConfig, state: SparseHeadState, x: jax.Array,
+                 targets: jax.Array) -> SparseHeadState:
+    """One deterministic prune/regrow pass against batch (x, targets)."""
+    assert cfg.fan_in > 0
+    x16 = x.astype(jnp.bfloat16)
+    B = x16.shape[0]
+    kahan = state.comp is not None
+    n_sw = n_swap_of(cfg)
+    n_keep = cfg.fan_in - n_sw
+    cids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+    base = cids * cfg.chunk
+
+    if cfg.loss == "bce":
+        scale, lse = jnp.float32(1.0 / B), None
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+
+        def lse_body(carry, inp):
+            vals_c, idx_c, b0 = inp
+            m, s = carry
+            return REF.sparse_lse_chunk_ref(
+                x16, vals_c, idx_c, m, s, b0, None,
+                num_labels=cfg.num_labels, quantize_x=cfg.qx,
+                drop_rate=0.0), None
+
+        (m, s), _ = jax.lax.scan(lse_body, L.lse_init(B),
+                                 (state.values, state.indices, base))
+        lse = L.lse_finalize(m, s)
+
+    def body(_, inp):
+        if kahan:
+            vals_c, idx_c, comp_c, b0 = inp
+        else:
+            vals_c, idx_c, b0 = inp
+            comp_c = None
+        # |E[dW]| gradient probe on the densified chunk (dropless forward)
+        w16 = REF.sparse_densify(vals_c, idx_c, cfg.d_model)
+        z = REF.fp8_logits_ref(x16, w16, None, drop_rate=0.0,
+                               quantize_x=cfg.qx)
+        g, _ = L.chunk_loss_skip_grad(cfg.loss, z, targets, b0,
+                                      vals_c.shape[0], cfg.num_labels, lse,
+                                      scale, False)
+        dw_abs = jnp.abs(jax.lax.dot_general(
+            g.astype(jnp.bfloat16), x16, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32))          # (lc, D)
+
+        # prune in the slot domain: keep the n_keep largest |value| slots
+        # (stable top_k → equal magnitudes keep the lower slot)
+        _, keep_slots = jax.lax.top_k(
+            jnp.abs(vals_c.astype(jnp.float32)), n_keep)
+        kept_idx = jnp.take_along_axis(idx_c, keep_slots, axis=-1)
+        kept_val = jnp.take_along_axis(vals_c, keep_slots, axis=-1)
+
+        # regrow in the dense domain: largest |dW| among columns not kept
+        kept_mask = REF.sparse_densify(
+            jnp.ones(kept_idx.shape, jnp.bfloat16), kept_idx,
+            cfg.d_model) > 0
+        cand = jnp.where(kept_mask, L.NEG_INF, dw_abs)
+        _, regrow_idx = jax.lax.top_k(cand, n_sw)
+
+        new_idx = jnp.concatenate(
+            [kept_idx, regrow_idx.astype(jnp.int32)], axis=-1)
+        order = jnp.argsort(new_idx, axis=-1, stable=True)
+        new_idx = jnp.take_along_axis(new_idx, order, axis=-1)
+        new_val = jnp.take_along_axis(
+            jnp.concatenate(
+                [kept_val, jnp.zeros(regrow_idx.shape, vals_c.dtype)],
+                axis=-1), order, axis=-1)
+        ys = (new_val, new_idx)
+        if kahan:
+            kept_comp = jnp.take_along_axis(comp_c, keep_slots, axis=-1)
+            new_comp = jnp.take_along_axis(
+                jnp.concatenate(
+                    [kept_comp, jnp.zeros(regrow_idx.shape, comp_c.dtype)],
+                    axis=-1), order, axis=-1)
+            ys += (new_comp,)
+        return None, ys
+
+    xs = ((state.values, state.indices, state.comp, base) if kahan
+          else (state.values, state.indices, base))
+    _, ys = jax.lax.scan(body, None, xs)
+    return SparseHeadState(ys[0], ys[1], ys[2] if kahan else None)
+
+
+def maybe_prune_regrow(cfg: ELMOHeadConfig, state: SparseHeadState,
+                       x: jax.Array, targets: jax.Array,
+                       step: jax.Array) -> SparseHeadState:
+    """Apply prune/regrow when ``step`` hits the cadence (step > 0 and
+    step % prune_every == 0); identity otherwise.  jit-safe: ``step`` may
+    be traced."""
+    if not cfg.prune_every:
+        return state
+    step = jnp.asarray(step, jnp.int32)
+    do = (step > 0) & (step % cfg.prune_every == 0)
+    return jax.lax.cond(do,
+                        lambda s: prune_regrow(cfg, s, x, targets),
+                        lambda s: s, state)

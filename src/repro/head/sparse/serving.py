@@ -1,0 +1,230 @@
+"""Sparse-head serving: logits and streaming top-k (DESIGN.md §13).
+
+The dense head's serving contract (``head/serving.py``) carries over
+unchanged — same DropConnect policy (dense by default, the historical
+seed-0 mask behind ``cfg.compat_eval_drop``), same §9 top-k tie-break
+(``kernels.ref.topk_merge``), same sharded n·k gather + (−value, id)
+re-rank.  What changes is the weight access: the head is never
+densified whole.  Value/index rows stream through in ``(block, D)``
+tiles — each tile is densified (select-scatter, ``ref.sparse_densify``),
+scored, and folded into the running (B, k) carry, so serving transients
+are O(B·k + block·D) for any label count.  Because the per-column op
+sequence equals the dense scan's (the densified tile IS the dense rows),
+sparse serving is bit-identical to dense serving on the densified state
+— the differential test anchor.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.head import plan as _plan
+from repro.head.config import ELMOHeadConfig
+from repro.head.serving import _p_at_k, _serve_drop
+from repro.head.sparse.state import SparseHeadState
+from repro.kernels import prng_utils as PR
+from repro.kernels import ref as REF
+
+
+def _row_block(lc: int) -> int:
+    """Serving row-tile: the largest power-of-two ≤ 2048 dividing the
+    chunk width (the result is bit-invariant to this choice — it only
+    bounds the densified transient)."""
+    for bl in (2048, 1024, 512, 256, 128):
+        if lc % bl == 0 and bl <= lc:
+            return bl
+    return lc
+
+
+def _block_logits(cfg: ELMOHeadConfig, vblk: jax.Array, iblk: jax.Array,
+                  x16: jax.Array, off: jax.Array) -> jax.Array:
+    """(B, bl) serving logits of one sparse row block at row offset
+    ``off`` inside its chunk — op-for-op ``ref.fp8_logits_ref`` on the
+    densified tile, with the DropConnect mask (only live under
+    ``cfg.compat_eval_drop``) drawn at the block's absolute in-chunk
+    rows so any tiling reproduces the per-chunk seed-0 mask exactly."""
+    w16 = REF.sparse_densify(vblk, iblk, cfg.d_model)
+    drop = _serve_drop(cfg)
+    if drop > 0.0:
+        bits = PR.hash_bits_2d(jnp.zeros((), jnp.uint32),
+                               off.astype(jnp.uint32),
+                               jnp.zeros((), jnp.uint32), w16.shape)
+        keep = PR.uniform_from_bits(bits) >= drop
+        w16 = jnp.where(keep, w16, 0).astype(jnp.bfloat16) \
+            / jnp.bfloat16(1.0 - drop)
+    xq = x16.astype(jnp.float8_e4m3fn) if cfg.qx else x16
+    z = jax.lax.dot_general(xq.astype(jnp.bfloat16), w16,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    return z.astype(jnp.bfloat16)
+
+
+def _chunk_logits_blocked(cfg: ELMOHeadConfig, vc: jax.Array, ic: jax.Array,
+                          x16: jax.Array) -> jax.Array:
+    """(B, lc) logits of one sparse chunk via the block-streamed scan."""
+    lc, F = vc.shape
+    bl = _row_block(lc)
+    nb = lc // bl
+
+    def body(_, inp):
+        vblk, iblk, bi = inp
+        return None, _block_logits(cfg, vblk, iblk, x16, bi * bl)
+
+    _, zs = jax.lax.scan(
+        body, None, (vc.reshape(nb, bl, F), ic.reshape(nb, bl, F),
+                     jnp.arange(nb, dtype=jnp.int32)))
+    return jnp.moveaxis(zs, 0, 1).reshape(x16.shape[0], lc)
+
+
+# ---------------------------------------------------------------------------
+# logits
+# ---------------------------------------------------------------------------
+
+
+def logits_sparse_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                          state: SparseHeadState, x: jax.Array) -> jax.Array:
+    """Full (B, L) sparse logits — O(B·L) output like the dense path, but
+    the densified transient is one row block, never a whole chunk."""
+    x16 = x.astype(jnp.bfloat16)
+
+    def body(_, inp):
+        vc, ic = inp
+        return None, _chunk_logits_blocked(cfg, vc, ic, x16)
+
+    _, zs = jax.lax.scan(body, None, (state.values, state.indices))
+    z = jnp.moveaxis(zs, 0, 1).reshape(x.shape[0], cfg.padded_labels)
+    return z[:, :cfg.num_labels]
+
+
+def logits_sparse_sharded_planned(plan: "_plan.HeadPlan",
+                                  cfg: ELMOHeadConfig, ctx,
+                                  state: SparseHeadState, x: jax.Array
+                                  ) -> jax.Array:
+    """``logits_sparse_planned`` with the label rows sharded: each rank
+    scores its (B, lc) window per chunk, one tiled all_gather restores
+    the global column order (bit-equal per column, as dense §6)."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    if not plan.sharded:
+        return logits_sparse_planned(plan, cfg, state, x)
+    axis = ctx.model_axis
+    x = x.astype(jnp.bfloat16)
+
+    def body(vals, idx, x16):
+        def scan_body(_, inp):
+            vc, ic = inp
+            zc = _chunk_logits_blocked(cfg, vc, ic, x16)
+            return None, jax.lax.all_gather(zc, axis, axis=1, tiled=True)
+
+        _, zs = jax.lax.scan(scan_body, None, (vals, idx))
+        return jnp.moveaxis(zs, 0, 1).reshape(x16.shape[0],
+                                              cfg.padded_labels)
+
+    z = _shard_map(body, mesh=ctx.mesh,
+                   in_specs=(plan.w_spec, plan.w_spec, PS()),
+                   out_specs=PS(), check_vma=False)(
+                       state.values, state.indices, x)
+    return z[:, :cfg.num_labels]
+
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+
+def _topk_scan_sparse(cfg: ELMOHeadConfig, values: jax.Array,
+                      indices: jax.Array, x16: jax.Array, k: int,
+                      c0_of) -> Tuple[jax.Array, jax.Array]:
+    """Streaming sparse top-k: every (block, D) densified tile folds into
+    the (B, k) carry through ``ref.topk_merge`` — the §9 contract, so the
+    result is bit-identical to the dense streaming scan on the densified
+    state at ANY row-block size (the merge's total order on (value, id)
+    does not depend on how the label axis is partitioned)."""
+    B = x16.shape[0]
+    C, lc, F = values.shape
+    bl = _row_block(lc)
+    nb = lc // bl
+
+    def body(carry, inp):
+        vc, ic, cidx = inp
+        c0 = c0_of(cidx)
+
+        def bbody(bcarry, binp):
+            vblk, iblk, bi = binp
+            z = _block_logits(cfg, vblk, iblk, x16, bi * bl)
+            cols = c0 + bi * bl + jnp.arange(bl, dtype=jnp.int32)
+            return REF.topk_merge(*bcarry, z, cols, k, cfg.num_labels), None
+
+        carry, _ = jax.lax.scan(
+            bbody, carry, (vc.reshape(nb, bl, F), ic.reshape(nb, bl, F),
+                           jnp.arange(nb, dtype=jnp.int32)))
+        return carry, None
+
+    (vals, idx), _ = jax.lax.scan(
+        body, REF.topk_carry_init(B, k),
+        (values, indices, jnp.arange(C, dtype=jnp.int32)))
+    return vals, idx
+
+
+def topk_sparse_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                        state: SparseHeadState, x: jax.Array, k: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k serving for the sparse head (``plan.topk_path == "stream"``
+    always — the sparse layout IS the streaming format)."""
+    x16 = x.astype(jnp.bfloat16)
+    return _topk_scan_sparse(cfg, state.values, state.indices, x16, k,
+                             lambda cidx: cidx * cfg.chunk)
+
+
+def topk_sparse_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
+                                ctx, state: SparseHeadState, x: jax.Array,
+                                k: int) -> Tuple[jax.Array, jax.Array]:
+    """Sharded sparse top-k: local streaming scan per rank over its label
+    window, gather of the n·k candidates, (−value, id) re-rank — ids and
+    values bit-identical to single-device (same §6 merge argument as the
+    dense path; a rank's candidates are already in ascending global id)."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    if not plan.sharded:
+        return topk_sparse_planned(plan, cfg, state, x, k)
+    axis = ctx.model_axis
+    lc = plan.lc
+    n = plan.model_size
+    x = x.astype(jnp.bfloat16)
+
+    def body(vals_s, idx_s, x16):
+        r = jax.lax.axis_index(axis).astype(jnp.int32)
+        vals, idx = _topk_scan_sparse(
+            cfg, vals_s, idx_s, x16, k,
+            lambda cidx: cidx * cfg.chunk + r * lc)
+        vall = jax.lax.all_gather(vals, axis)
+        idxl = jax.lax.all_gather(idx, axis)
+        B = x16.shape[0]
+        vall = jnp.moveaxis(vall, 0, 1).reshape(B, n * k)
+        idxl = jnp.moveaxis(idxl, 0, 1).reshape(B, n * k)
+        nv, ids = jax.lax.sort((-vall, idxl), dimension=1, num_keys=2)
+        return -nv[:, :k], ids[:, :k]
+
+    return _shard_map(body, mesh=ctx.mesh,
+                      in_specs=(plan.w_spec, plan.w_spec, PS()),
+                      out_specs=(PS(), PS()), check_vma=False)(
+                          state.values, state.indices, x)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def precision_at_k_sparse_planned(plan: "_plan.HeadPlan",
+                                  cfg: ELMOHeadConfig, ctx,
+                                  state: SparseHeadState, x: jax.Array,
+                                  label_ids: jax.Array, k: int,
+                                  denom: str = "positives") -> jax.Array:
+    """P@k over the sparse top-k — same hit/denominator semantics as the
+    dense path (``serving._p_at_k``), same sentinel masking."""
+    vals, pred = topk_sparse_sharded_planned(plan, cfg, ctx, state, x, k)
+    return _p_at_k(vals, pred, label_ids, k, denom)

@@ -1,0 +1,92 @@
+"""Fixed-fan-in sparse head state: values + indices + Kahan comp.
+
+Each label row keeps exactly ``fan_in`` weight slots (DESIGN.md §13):
+``values`` holds the slot weights in the storage dtype and ``indices``
+their dense column ids — **sorted strictly increasing per row**, the
+invariant every kernel and oracle relies on (unique columns make the
+where-select densify and the masked-sum gather exact inverses).  The
+state is a dumb NamedTuple like the dense ``HeadState`` so it passes
+through jit/shard_map/checkpointing untouched; values and indices
+checkpoint as raw bits (the §10 resume contract — an i32 index array
+round-trips exactly, and prune/regrow replays deterministically from
+the restored bits).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as P
+from repro.head.config import ELMOHeadConfig
+from repro.head.state import HeadState, init_head
+
+
+class SparseHeadState(NamedTuple):
+    """values: (C, Lc, F) storage dtype · indices: (C, Lc, F) int32 sorted
+    strictly increasing per row · comp: (C, Lc, F) BF16 (homogeneous Kahan
+    — all chunks or none, unlike the dense mixed hybrid)."""
+    values: jax.Array
+    indices: jax.Array
+    comp: Optional[jax.Array]
+
+
+def _scatter_rows(values: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """Dtype-preserving row scatter: slot f of each row lands at dense
+    column idx[..., f].  Iterated *select* — never add, which would turn
+    a stored ``-0.0`` into ``+0.0`` and break bitwise parity."""
+    out = jnp.zeros(values.shape[:-1] + (d,), values.dtype)
+    iota = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 1)
+    for f in range(values.shape[-1]):
+        out = jnp.where(iota == idx[..., f:f + 1], values[..., f:f + 1], out)
+    return out
+
+
+def sparsify(cfg: ELMOHeadConfig, dense: HeadState) -> SparseHeadState:
+    """Dense → sparse: keep the ``fan_in`` largest-|w| columns per row
+    (ties break to the lowest column — ``lax.top_k`` is stable), then
+    order the kept slots by ascending column id.  At ``fan_in == d_model``
+    this selects every column and the indices are exactly the identity —
+    the dense-parity anchor."""
+    F = cfg.fan_in
+    assert F > 0, "sparsify needs a sparse config (fan_in > 0)"
+    w = dense.w
+    score = jnp.abs(w.astype(jnp.float32))
+    _, slots = jax.lax.top_k(score, F)               # (C, lc, F) descending
+    idx = jnp.sort(slots.astype(jnp.int32), axis=-1)
+    values = jnp.take_along_axis(w, idx, axis=-1)
+    comp = None
+    if cfg.kahan_chunks:
+        assert cfg.kahan_chunks == cfg.num_chunks
+        if dense.comp is not None and dense.comp.shape[0] == cfg.num_chunks:
+            comp = jnp.take_along_axis(dense.comp, idx, axis=-1)
+        else:
+            comp = jnp.zeros(values.shape, P.BF16)
+    return SparseHeadState(values, idx, comp)
+
+
+def densify(cfg: ELMOHeadConfig, state: SparseHeadState) -> HeadState:
+    """Sparse → dense oracle: scatter the value (and comp) slots back into
+    (C, lc, D) zeros.  ``densify(sparsify(s))`` reproduces exactly the
+    kept columns; at ``fan_in == d_model`` it is the identity bit-for-bit."""
+    w = _scatter_rows(state.values, state.indices, cfg.d_model)
+    comp = (_scatter_rows(state.comp, state.indices, cfg.d_model)
+            if state.comp is not None else None)
+    return HeadState(w, comp)
+
+
+def init_sparse_head(key: jax.Array, cfg: ELMOHeadConfig,
+                     scale: float | None = None) -> SparseHeadState:
+    """Seeded sparse init: draw the dense init and keep the top-|w| slots
+    per row — deterministic in (key, cfg), and identical to the dense init
+    at ``fan_in == d_model``.  (Materializes the dense draw once; a
+    direct chunk-streamed sparse init is a future-scale follow-up.)"""
+    return sparsify(cfg, init_head(key, cfg, scale))
+
+
+def indices_strictly_increasing(state: SparseHeadState) -> bool:
+    """Check the sorted-unique index invariant (test/debug helper)."""
+    import numpy as np
+    idx = np.asarray(state.indices)
+    return bool((np.diff(idx, axis=-1) > 0).all())

@@ -1,0 +1,235 @@
+"""Sparse-head training steps (single-device + label-sharded), plan-driven.
+
+``train_step_sparse`` mirrors ``head.train._train_step_grid``: one
+``ops.sparse_head_step`` launch per step (two-pass in-launch grid for
+softmax-CE), dispatched by the plan's ``train_inner`` — the Pallas sparse
+megakernel on kernel/interpret, the bit-identical ``ref`` scan on xla.
+The per-chunk seeds, loss fold, and metrics come from the same helpers
+as the dense paths, so sparse-at-``fan_in = D`` and dense-grid steps are
+bit-identical end to end.
+
+``train_step_sparse_sharded`` mirrors ``head.train_sharded``: the label
+dimension of values/indices/comp shards over the mesh's model axis
+(row-partitioned chunks, ``plan.w_spec``), the batch gathers over the
+data axes, per-shard x̄ partials psum-reduce, and softmax-CE picks the
+normalizer strategy via ``ce_comm`` ("gather" = full-width LSE on
+all-gathered logits, bit-identical to single-device for deterministic
+updates; "stats" = O(B) pmax/psum).  The sharded sparse step runs the
+pure-JAX ref composition inside ``shard_map`` (the sparse forward is
+cheap; a per-shard kernel launch is a measured-autotuning follow-up).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import losses as L
+from repro.head.config import ELMOHeadConfig
+from repro.head.sparse.state import SparseHeadState
+from repro.head.train import _chunk_seed, _fold_loss, _grid_seeds, _masked_z
+from repro.kernels import ops
+from repro.kernels import prng_utils as PR
+from repro.kernels import ref as REF
+
+
+def train_step_sparse(plan, cfg: ELMOHeadConfig, state: SparseHeadState,
+                      x: jax.Array, targets: jax.Array, lr: jax.Array,
+                      wd: jax.Array, seed: jax.Array
+                      ) -> Tuple[SparseHeadState, jax.Array, dict]:
+    """One whole sparse-head launch: forward, loss-skip grad, x̄, in-place
+    SR/Kahan value update.  Indices are read-only here — prune/regrow
+    mutates them between steps (``controller.maybe_prune_regrow``)."""
+    B = x.shape[0]
+    x = x.astype(jnp.bfloat16)
+    seed = seed.astype(jnp.uint32)
+    seeds_d, seeds_u, cids = _grid_seeds(cfg, seed)
+    base = cids * cfg.chunk
+    common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
+                  quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+                  compute_loss=cfg.compute_loss, impl=plan.train_inner)
+
+    if cfg.loss == "bce":
+        scale, lse = jnp.float32(1.0 / B), None
+        out = ops.sparse_head_step(x, state.values, state.indices, targets,
+                                   lr, wd, scale, seeds_d, seeds_u, base,
+                                   comp=state.comp, mode="bce", **common)
+    else:
+        n_tok = jnp.maximum((targets >= 0).sum(), 1).astype(jnp.float32)
+        scale = 1.0 / n_tok
+        out = ops.sparse_head_step(x, state.values, state.indices, targets,
+                                   lr, wd, scale, seeds_d, seeds_u, base,
+                                   comp=state.comp, mode="ce_full", **common)
+        lse = out.lse
+
+    loss = _fold_loss(cfg, out.loss, targets, lse, scale, B)
+    metrics = {"loss": loss,
+               "xgrad_norm": jnp.linalg.norm(out.xg.astype(jnp.float32))}
+    return (SparseHeadState(out.values, state.indices, out.comp),
+            out.xg, metrics)
+
+
+def train_step_sparse_sharded(plan, cfg: ELMOHeadConfig, ctx,
+                              state: SparseHeadState, x: jax.Array,
+                              targets: jax.Array, lr: jax.Array,
+                              wd: jax.Array, seed: jax.Array, *,
+                              ce_comm: str = "gather"
+                              ) -> Tuple[SparseHeadState, jax.Array, dict]:
+    """Label-sharded sparse step (the sparse mirror of
+    ``train_sharded.train_step_sharded_planned``)."""
+    from repro.dist.compat import shard_map as _shard_map
+
+    assert ce_comm in ("gather", "stats"), ce_comm
+    if not plan.sharded:
+        return train_step_sparse(plan, cfg, state, x, targets, lr, wd, seed)
+
+    mesh, axis = ctx.mesh, ctx.model_axis
+    batch_axes = tuple(a for a in ctx.batch_axes
+                       if a in mesh.shape and mesh.shape[a] > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= int(mesh.shape[a])
+    if x.shape[0] % n_batch != 0:
+        batch_axes, n_batch = (), 1
+    b0 = batch_axes if batch_axes else None
+
+    lc = plan.lc
+    kahan = state.comp is not None
+    chunk_ids = jnp.arange(cfg.num_chunks, dtype=jnp.int32)
+
+    def body(*args):
+        it = iter(args)
+        vals, idx = next(it), next(it)
+        comp = next(it) if kahan else None
+        xl, tgt = next(it), next(it)
+        lr_, wd_, seed_ = next(it), next(it), next(it)
+
+        Bl = xl.shape[0]
+        for a in reversed(batch_axes):
+            xl = jax.lax.all_gather(xl, a, axis=0, tiled=True)
+            tgt = jax.lax.all_gather(tgt, a, axis=0, tiled=True)
+        x16 = xl.astype(jnp.bfloat16)
+        B = x16.shape[0]
+        r = jax.lax.axis_index(axis)
+        seed_sh = PR.mix32(seed_.astype(jnp.uint32)
+                           + (r.astype(jnp.uint32) + 1)
+                           * np.uint32(0x85EBCA6B))
+        seeds_d = _chunk_seed(seed_sh, chunk_ids, 0)
+        seeds_u = _chunk_seed(seed_sh, chunk_ids, 1)
+        base = chunk_ids * cfg.chunk + r.astype(jnp.int32) * lc
+
+        lse = None
+        loss_pre = jnp.float32(0.0)
+        if cfg.loss == "bce":
+            scale = jnp.float32(1.0 / B)
+            mode, kernel_loss = "bce", False
+            if cfg.compute_loss:
+                # exact loss on the full-width gathered logits (the local
+                # sparse forward re-runs inside the step — XLA CSEs it)
+                def loss_body(acc, inp):
+                    vals_c, idx_c, sd, b0c, cidx = inp
+                    w16 = REF.sparse_densify(vals_c, idx_c, cfg.d_model)
+                    zl = REF.fp8_logits_ref(x16, w16, sd,
+                                            drop_rate=cfg.drop_rate,
+                                            quantize_x=cfg.qx)
+                    zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+                    y = L.chunk_multi_hot(tgt, cidx * cfg.chunk, cfg.chunk)
+                    valid = ((cidx * cfg.chunk + jnp.arange(cfg.chunk))
+                             < cfg.num_labels)[None, :]
+                    return acc + L.bce_chunk_loss(zf, y, mask=valid), None
+
+                loss_pre, _ = jax.lax.scan(
+                    loss_body, jnp.float32(0.0),
+                    (vals, idx, seeds_d, base, chunk_ids))
+        else:
+            n_tok = jnp.maximum((tgt >= 0).sum(), 1).astype(jnp.float32)
+            scale = 1.0 / n_tok
+            mode, kernel_loss = "ce_update", False
+            if ce_comm == "gather":
+                # full-width streaming LSE on gathered chunk logits — the
+                # same op sequence as single-device (bit-parity contract)
+                def lse_body(carry, inp):
+                    vals_c, idx_c, sd, cidx = inp
+                    m, s, lraw = carry
+                    w16 = REF.sparse_densify(vals_c, idx_c, cfg.d_model)
+                    zl = REF.fp8_logits_ref(x16, w16, sd,
+                                            drop_rate=cfg.drop_rate,
+                                            quantize_x=cfg.qx)
+                    zf = jax.lax.all_gather(zl, axis, axis=1, tiled=True)
+                    m, s = L.lse_update(m, s, _masked_z(cfg, zf, cidx))
+                    if cfg.compute_loss:
+                        lraw = lraw + L.ce_target_logit_chunk(
+                            zf, tgt, cidx * cfg.chunk, cfg.chunk).sum()
+                    return (m, s, lraw), None
+
+                (m, s, loss_pre), _ = jax.lax.scan(
+                    lse_body, L.lse_init(B) + (jnp.float32(0.0),),
+                    (vals, idx, seeds_d, chunk_ids))
+            else:
+                def lse_body(carry, inp):
+                    vals_c, idx_c, sd, b0c = inp
+                    m, s = carry
+                    return REF.sparse_lse_chunk_ref(
+                        x16, vals_c, idx_c, m, s, b0c, sd,
+                        num_labels=cfg.num_labels, quantize_x=cfg.qx,
+                        drop_rate=cfg.drop_rate), None
+
+                (m, s), _ = jax.lax.scan(lse_body, L.lse_init(B),
+                                         (vals, idx, seeds_d, base))
+                m_g = jax.lax.pmax(m, axis)
+                s_g = jax.lax.psum(s * jnp.exp(m - m_g), axis)
+                m, s = m_g, s_g
+                kernel_loss = cfg.compute_loss
+            lse = L.lse_finalize(m, s)
+
+        out = ops.sparse_head_step(
+            x16, vals, idx, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
+            lse=lse, comp=comp, mode=mode, num_labels=cfg.num_labels,
+            use_sr=cfg.use_sr, quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
+            compute_loss=kernel_loss, impl="xla")
+        loss_raw = loss_pre + out.loss
+        if ce_comm == "stats" and cfg.loss != "bce" and cfg.compute_loss:
+            loss_raw = jax.lax.psum(loss_raw, axis)
+
+        xg_comb = jax.lax.psum(out.xg.astype(jnp.float32), axis
+                               ).astype(jnp.bfloat16)
+        loss = _fold_loss(cfg, loss_raw, tgt, lse, scale, B)
+        xnorm = jnp.linalg.norm(xg_comb.astype(jnp.float32))
+
+        if batch_axes:
+            bidx = jnp.int32(0)
+            for a in batch_axes:
+                bidx = bidx * mesh.shape[a] + jax.lax.axis_index(a)
+            xg_out = jax.lax.dynamic_slice_in_dim(xg_comb, bidx * Bl, Bl, 0)
+        else:
+            xg_out = xg_comb
+
+        outs = [out.values]
+        if kahan:
+            outs.append(out.comp)
+        outs += [xg_out, loss, xnorm]
+        return tuple(outs)
+
+    wspec = plan.w_spec
+    tgt_spec = PS(b0, None) if targets.ndim == 2 else PS(b0)
+    operands = [state.values, state.indices] \
+        + ([state.comp] if kahan else []) \
+        + [x, targets, jnp.asarray(lr, jnp.float32),
+           jnp.asarray(wd, jnp.float32),
+           jnp.asarray(seed).astype(jnp.uint32)]
+    in_specs = [wspec, wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), tgt_spec, PS(), PS(), PS()]
+    out_specs = [wspec] + ([wspec] if kahan else []) + [
+        PS(b0, None), PS(), PS()]
+
+    outs = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                      out_specs=tuple(out_specs), check_vma=False)(*operands)
+    it = iter(outs)
+    v_new = next(it)
+    comp_new = next(it) if kahan else None
+    xg, loss, xnorm = next(it), next(it), next(it)
+    return (SparseHeadState(v_new, state.indices, comp_new), xg,
+            {"loss": loss, "xgrad_norm": xnorm})

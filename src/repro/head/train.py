@@ -124,6 +124,19 @@ def _scan_chunks(cfg: ELMOHeadConfig, w, comp, chunk_ids, zs, carry,
     return carry, w_k, w_s, comp_new
 
 
+def _fold_loss(cfg: ELMOHeadConfig, loss_raw, targets, lse, scale,
+               B: int) -> jax.Array:
+    """Raw in-step loss accumulator → reported loss.  BCE: mean over the
+    batch.  CE: Σ(lse − z_target) over valid tokens (loss_raw = Σ z_target).
+    Shared by every dense path *and* the sparse subsystem — the loss-parity
+    guarantees depend on this formula living in exactly one place."""
+    if cfg.loss == "bce":
+        return loss_raw / B
+    tok_mask = (targets >= 0)
+    return ((lse * tok_mask).sum() - loss_raw) * scale \
+        if cfg.compute_loss else loss_raw
+
+
 def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
                    lse, scale, B: int) -> Tuple[HeadState, jax.Array, dict]:
     """Shared epilogue of every train-step path: reassemble the chunk
@@ -131,15 +144,7 @@ def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
     depends on this formula living in exactly one place)."""
     (xg, loss_raw) = carry
     w_new = jnp.concatenate([w_k, w_s], axis=0) if cfg.kahan_chunks else w_s
-
-    if cfg.loss == "bce":
-        loss = loss_raw / B
-    else:
-        # Σ(lse − z_target) over valid tokens; loss_raw = Σ z_target
-        tok_mask = (targets >= 0)
-        loss = ((lse * tok_mask).sum() - loss_raw) * scale \
-            if cfg.compute_loss else loss_raw
-
+    loss = _fold_loss(cfg, loss_raw, targets, lse, scale, B)
     metrics = {"loss": loss,
                "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
     return HeadState(w_new, comp_new), xg, metrics

@@ -152,6 +152,29 @@ def fused_head_logits(x, w, seeds_drop, *, impl: str = "auto", **kw):
                                  interpret=_interpret_of(impl), **kw)
 
 
+def sparse_head_step(x, values, indices, targets, lr, wd, scale,
+                     seeds_drop, seeds_upd, base, lse=None, comp=None, *,
+                     mode: str, num_labels: int, impl: str = "auto", **kw):
+    """Whole sparse-head train step in one launch (kernels/sparse_head.py):
+    fixed-fan-in value/index streams, densify-per-block, in-place SR/Kahan
+    value updates.  Unlike the dense grid, ``impl="xla"`` IS supported —
+    ``ref.sparse_head_step_ref`` scans the per-chunk sparse oracle with
+    identical seed addressing and accumulation order (the bit-parity
+    reference for the kernel, and the production non-TPU / sharded path)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        kw.pop("block_l", None)      # the oracle scan has no label tile
+        return _ref.sparse_head_step_ref(
+            x, values, indices, targets, lr, wd, scale, seeds_drop,
+            seeds_upd, base, lse=lse, comp=comp, mode=mode,
+            num_labels=num_labels, **kw)
+    from repro.kernels import sparse_head as _sh
+    return _sh.sparse_head_step(
+        x, values, indices, targets, lr, wd, scale, seeds_drop, seeds_upd,
+        base, lse=lse, comp=comp, mode=mode, num_labels=num_labels,
+        interpret=_interpret_of(impl), **kw)
+
+
 def fused_topk(x, w, seeds_drop, base, *, k: int, num_labels: int,
                impl: str = "auto", assign=None, beam=None, **kw):
     """Streaming top-k serving in one launch (kernels/fused_topk.py):

@@ -53,6 +53,25 @@ def hash_bits_2d(seed: jax.Array, row0: jax.Array, col0: jax.Array,
     return mix32(h ^ (c * _GOLDEN))
 
 
+def hash_bits_at(seed: jax.Array, row0: jax.Array, cols: jax.Array
+                 ) -> jax.Array:
+    """Uniform uint32 bits at explicit column coordinates: element (i, f) of
+    the result draws the bits of absolute coordinate (row0 + i, cols[i, f]).
+
+    This is ``hash_bits_2d`` restricted to a per-row column *gather* — the
+    draw the fixed-fan-in sparse head needs for its (row, index[row, f])
+    value slots.  Because the hash factors as mix32(h(row) ^ col·GOLDEN),
+    the bits equal the dense draw at the same (row, col): with identity
+    indices (cols[i, f] = f) this is bitwise ``hash_bits_2d(seed, row0, 0,
+    cols.shape)``, which anchors the sparse kernel's fan_in = D parity.
+    """
+    rows, width = cols.shape
+    ii = jax.lax.broadcasted_iota(jnp.uint32, (rows, width), 0)
+    r = row0.astype(jnp.uint32) + ii
+    h = mix32(r * _PRIME1 ^ mix32(seed.astype(jnp.uint32)))
+    return mix32(h ^ (cols.astype(jnp.uint32) * _GOLDEN))
+
+
 def hash_bits_nd(seed: jax.Array, shape: tuple[int, ...]) -> jax.Array:
     """Uniform uint32 bits for an arbitrary-rank array, built from per-axis
     iotas (elementwise → preserves any sharding; no reshape/flatten, so a

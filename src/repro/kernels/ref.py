@@ -111,6 +111,182 @@ def fused_chunk_ref(x: jax.Array, w: jax.Array, targets: jax.Array,
                     z if return_z else None)
 
 
+# ---------------------------------------------------------------------------
+# fixed-fan-in sparse head (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The sparse layout stores, per label row, ``fan_in`` (value, column-index)
+# pairs.  The kernel and this oracle share the two primitives below so their
+# bit-parity is structural, not coincidental:
+#
+# * ``sparse_densify``     — (…, F) values+indices → (…, D) bf16 row blocks
+#   via an iterated *select* (never an add: 0.0 + (-0.0) would flip the sign
+#   of zero and break the fan_in = D anchor against ``w.astype(bf16)``).
+# * ``sparse_gather_cols`` — picks dense[…, idx[…, f]] bit-exactly through
+#   an integer-view masked sum (a float masked sum would likewise lose the
+#   sign of zero).
+#
+# Both require the per-row indices to be unique (the sparse-state invariant:
+# sorted strictly-increasing per row; -1 marks padded slots and selects
+# nothing).
+
+
+def sparse_densify(values: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """(…, F) sparse rows → (…, d) dense bf16 rows; unindexed columns are
+    exactly +0.0.  Lowers inside Pallas kernel bodies (iota/where only)."""
+    v16 = values.astype(jnp.bfloat16)
+    out = jnp.zeros(values.shape[:-1] + (d,), jnp.bfloat16)
+    iota = jax.lax.broadcasted_iota(jnp.int32, out.shape, out.ndim - 1)
+    for f in range(values.shape[-1]):
+        out = jnp.where(iota == idx[..., f:f + 1], v16[..., f:f + 1], out)
+    return out
+
+
+def sparse_gather_cols(dense: jax.Array, idx: jax.Array) -> jax.Array:
+    """dense (…, d) f32 → (…, F) f32 with out[…, f] = dense[…, idx[…, f]],
+    bit-exact (sign of zero included); idx -1 slots gather exactly +0.0."""
+    bits = jax.lax.bitcast_convert_type(dense.astype(jnp.float32), jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, dense.shape, dense.ndim - 1)
+    cols = []
+    for f in range(idx.shape[-1]):
+        m = iota == idx[..., f:f + 1]
+        cols.append(jnp.where(m, bits, 0).sum(-1, keepdims=True))
+    out = jnp.concatenate(cols, axis=-1)
+    return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+def sparse_chunk_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
+                     targets: jax.Array, xg: jax.Array, lr, wd, scale,
+                     c0: jax.Array, seed_drop: jax.Array,
+                     seed_upd: jax.Array, lse: jax.Array | None = None,
+                     comp: jax.Array | None = None, *, loss: str,
+                     num_labels: int, use_sr: bool = True,
+                     quantize_x: bool = True, drop_rate: float = 0.0,
+                     compute_loss: bool = True):
+    """Oracle for one label chunk of the sparse fused train step
+    (``kernels/sparse_head.py``): densify the chunk's value/index rows,
+    run the *dense* chunk computation op-for-op (same DropConnect draw
+    addressed on the densified block, same MXU dot shapes, same loss-skip
+    grad), then gather the dense dW back onto the fan_in slots and apply
+    the SR/Kahan update with bits drawn at the slots' absolute (row, col)
+    coordinates (``PR.hash_bits_at``).  At fan_in = D with identity
+    indices every intermediate equals the dense ``fused_chunk_ref``
+    bitwise — the parity anchor.  Returns (values', xg', loss_c, comp')."""
+    from repro.core import losses as L  # local import: core imports kernels
+
+    Lc = values.shape[0]
+    w16 = sparse_densify(values, indices, x.shape[1])
+    z = fp8_logits_ref(x, w16, seed_drop, drop_rate=drop_rate,
+                       quantize_x=quantize_x)
+    g, loss_c = L.chunk_loss_skip_grad(loss, z, targets, c0, Lc, num_labels,
+                                       lse, scale, compute_loss)
+    xg_new = xg + fp8_input_grad_ref(g, w16)
+    dw = jax.lax.dot_general(g.astype(jnp.bfloat16), x.astype(jnp.bfloat16),
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dv = sparse_gather_cols(dw, indices)
+    v32 = values.astype(jnp.float32)
+    if comp is None:
+        v_new32 = v32 * (1.0 - jnp.float32(lr) * jnp.float32(wd)) \
+            - jnp.float32(lr) * dv
+        if use_sr:
+            bits = PR.hash_bits_at(seed_upd.reshape(()).astype(jnp.uint32),
+                                   jnp.zeros((), jnp.uint32), indices)
+            values_new = P.sr_bits(v_new32, bits, values.dtype)
+        else:
+            values_new = v_new32.astype(values.dtype)
+        comp_new = None
+    else:
+        upd = -jnp.float32(lr) * dv \
+            - (jnp.float32(lr) * jnp.float32(wd)) * v32
+        values_new, comp_new = P.kahan_update(values, comp, upd)
+    return values_new, xg_new, jnp.float32(loss_c), comp_new
+
+
+def sparse_lse_chunk_ref(x: jax.Array, values: jax.Array,
+                         indices: jax.Array, m: jax.Array, s: jax.Array,
+                         c0: jax.Array, seed_drop: jax.Array, *,
+                         num_labels: int, quantize_x: bool = True,
+                         drop_rate: float = 0.0
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Fold one sparse chunk's logits into the streaming (max, Σexp) CE
+    carry — same masking as the kernel's pass 0 (padded / out-of-range
+    columns pinned to NEG_INF before the fold)."""
+    from repro.core import losses as L  # local import: core imports kernels
+    from repro.core.losses import NEG_INF
+
+    Lc = values.shape[0]
+    w16 = sparse_densify(values, indices, x.shape[1])
+    z = fp8_logits_ref(x, w16, seed_drop, drop_rate=drop_rate,
+                       quantize_x=quantize_x)
+    valid = ((c0 + jnp.arange(Lc)) < num_labels)[None, :]
+    zm = jnp.where(valid, z.astype(jnp.float32), NEG_INF)
+    return L.lse_update(m, s, zm)
+
+
+def sparse_head_step_ref(x: jax.Array, values: jax.Array,
+                         indices: jax.Array, targets: jax.Array, lr, wd,
+                         scale, seeds_drop: jax.Array, seeds_upd: jax.Array,
+                         base: jax.Array, lse: jax.Array | None = None,
+                         comp: jax.Array | None = None, *, mode: str,
+                         num_labels: int, use_sr: bool = True,
+                         quantize_x: bool = True, drop_rate: float = 0.0,
+                         compute_loss: bool = True):
+    """Whole-step oracle for the sparse megakernel: a ``lax.scan`` of
+    ``sparse_chunk_ref`` over chunks (with a streaming-LSE pre-scan for
+    ``mode="ce_full"``) — the same per-chunk seed addressing, per-chunk
+    BF16 x̄ rounding, and loss accumulation order as the kernel with one
+    block per chunk.  Also the production non-TPU path (``impl="xla"``)."""
+    from repro.core import losses as L  # local import: core imports kernels
+    from repro.kernels.sparse_head import SparseStepOut
+
+    B, D = x.shape
+    kahan = comp is not None
+    loss_name = "bce" if mode == "bce" else "softmax_ce"
+    seeds_drop = jnp.asarray(seeds_drop).astype(jnp.uint32)
+    seeds_upd = jnp.asarray(seeds_upd).astype(jnp.uint32)
+    base = jnp.asarray(base).astype(jnp.int32)
+
+    if mode == "ce_full":
+        def lse_body(carry, inp):
+            vals_c, idx_c, sd, b0 = inp
+            m, s = carry
+            return sparse_lse_chunk_ref(
+                x, vals_c, idx_c, m, s, b0, sd, num_labels=num_labels,
+                quantize_x=quantize_x, drop_rate=drop_rate), None
+
+        (m, s), _ = jax.lax.scan(lse_body, L.lse_init(B),
+                                 (values, indices, seeds_drop, base))
+        lse = L.lse_finalize(m, s)
+    elif mode == "ce_update":
+        assert lse is not None, "ce_update needs the finalized LSE"
+
+    def body(carry, inp):
+        xg, loss_acc = carry
+        if kahan:
+            vals_c, idx_c, comp_c, sd, su, b0 = inp
+        else:
+            vals_c, idx_c, sd, su, b0 = inp
+            comp_c = None
+        v_new, xg_new, loss_c, comp_new = sparse_chunk_ref(
+            x, vals_c, idx_c, targets, xg, lr, wd, scale, b0, sd, su,
+            lse=None if mode == "bce" else lse, comp=comp_c,
+            loss=loss_name, num_labels=num_labels, use_sr=use_sr,
+            quantize_x=quantize_x, drop_rate=drop_rate,
+            compute_loss=compute_loss)
+        ys = (v_new, comp_new) if kahan else (v_new,)
+        return (xg_new, loss_acc + loss_c), ys
+
+    xs = (values, indices) + ((comp,) if kahan else ()) \
+        + (seeds_drop, seeds_upd, base)
+    xg0 = jnp.zeros((B, D), jnp.bfloat16)
+    (xg, loss), ys = jax.lax.scan(body, (xg0, jnp.float32(0.0)), xs)
+    v_new = ys[0]
+    comp_new = ys[1] if kahan else None
+    return SparseStepOut(v_new, xg, loss, comp_new,
+                         lse if mode == "ce_full" else None)
+
+
 def topk_carry_init(B: int, k: int) -> tuple[jax.Array, jax.Array]:
     """The streaming top-k initial carry: k (NEG_INF, id 0) sentinels per
     row — what overflow slots surface when k exceeds the candidates."""

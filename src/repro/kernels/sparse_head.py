@@ -1,0 +1,419 @@
+"""Pallas TPU megakernel: fixed-fan-in sparse head train step in one launch.
+
+The sparse head stores each label row as ``fan_in`` FP8 value slots plus
+their i32 column indices (DESIGN.md §13) — a dense ``(L, fan_in)`` pair
+that streams through the same grid machinery as ``fused_head``: the grid
+iterates over all label blocks of all chunks, Pallas double-buffers the
+value/index (and Kahan ``comp``) streams, and x, the running x̄, the
+targets, the loss accumulator, and the CE streaming-LSE statistics stay
+resident in VMEM scratch across every grid step.
+
+Per label block the kernel *densifies in-register*: the ``(bl, F)`` value
+slots are scattered into a ``(bl, Dp)`` BF16 tile via an unrolled
+where-select chain (F static steps; indices are sorted-unique per row, a
+``-1`` marks a padded slot and selects nothing), and the block then runs
+the *identical* dense compute — q8(X) @ Wᵀ on the MXU, DropConnect drawn
+from the dense ``(row, col)`` hash, the same loss-skip gradients, and the
+dense ``ḡᵀX`` weight gradient — before gathering the ``fan_in`` columns
+back out for the in-place SR/Kahan update (via input_output_aliases on
+the value/comp streams; the index stream is read-only — prune/regrow
+mutates it *outside* the step).
+
+Two constructions make this bit-exact rather than merely close:
+
+* densify uses iterated **select**, never add (``0.0 + (-0.0)`` would
+  flip the sign of zero), and gather-back masks in the **i32 bit
+  pattern** (a float masked-sum loses ``-0.0``) — see ``ref.sparse_densify``
+  / ``ref.sparse_gather_cols``, which the kernel body calls directly;
+* SR bits come from ``prng_utils.hash_bits_at(seed, off, idx)`` — the
+  dense hash evaluated at the gathered (row, index) coordinates — and
+  DropConnect from the dense ``hash_bits_2d`` on the densified tile, so
+  every stochastic draw matches the dense kernel at the same coordinate.
+
+Consequently at ``fan_in = D`` with identity indices every intermediate
+— z, ḡ, x̄, dW, SR/Kahan bits — is bitwise the dense ``fused_head`` grid
+path, which is the subsystem's parity anchor.  The win is memory and
+weight-stream bandwidth (HBM traffic scales with F, weight+optimizer
+state shrinks D/F-fold), not FLOPs: the MXU dots stay dense-shaped per
+block.
+
+``ref.sparse_head_step_ref`` is the pure-JAX oracle (and the production
+``impl="xla"`` path): a scan of ``sparse_chunk_ref`` with the same
+per-chunk seed addressing and accumulation order, bit-identical to this
+kernel with one block per chunk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.losses import NEG_INF
+from repro.kernels import prng_utils as PR
+from repro.kernels import ref as REF
+from repro.kernels import tuning
+from repro.kernels.fused_head_update import _apply_sr
+
+_UPDATE_MODES = ("bce", "ce_full", "ce_update")
+
+
+class SparseStepOut(NamedTuple):
+    """Results of one whole-head sparse grid step."""
+    values: jax.Array                 # updated value slots (C, lc, F)
+    xg: jax.Array                     # x̄ (B, D) bf16
+    loss: jax.Array                   # f32 scalar raw loss accumulator
+    comp: Optional[jax.Array] = None  # updated Kahan buffer (C, lc, F)
+    lse: Optional[jax.Array] = None   # (B,) f32 (mode="ce_full" only)
+
+
+def _sparse_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
+                   n_b: int, fan_in: int, kahan: bool, use_sr: bool,
+                   quantize_x: bool, drop_rate: float, compute_loss: bool):
+    # ---- unpack the mode-dependent ref list ----
+    it = iter(refs)
+    sd_ref, su_ref, hyper_ref = next(it), next(it), next(it)
+    base_ref, tgt_ref = next(it), next(it)
+    lse_in_ref = next(it) if mode == "ce_update" else None
+    x_ref, v_ref, i_ref = next(it), next(it), next(it)
+    comp_ref = next(it) if kahan else None
+    v_out_ref = next(it)
+    comp_out_ref = next(it) if kahan else None
+    xg_out_ref, loss_ref = next(it), next(it)
+    lse_out_ref = next(it) if mode == "ce_full" else None
+    xg_acc, xg_b16, loss_acc = next(it), next(it), next(it)
+    if mode == "ce_full":
+        m_acc, s_acc, lse_v = next(it), next(it), next(it)
+
+    if mode == "ce_full":
+        pss, li = pl.program_id(0), pl.program_id(1)
+        nb = pl.num_programs(1)
+    else:
+        pss, li = None, pl.program_id(0)
+        nb = pl.num_programs(0)
+
+    Bp, Dp = x_ref.shape
+    bl = v_ref.shape[0]
+    cidx = li // bpc                         # chunk of this label block
+    off = (li % bpc) * bl                    # row offset inside the chunk
+    # slice the streams to the logical fan-in: lane padding carries -1
+    # indices / zero values, and keeping the loops at F avoids Fp − F
+    # wasted (bl, Dp) selects per block
+    v_blk = v_ref[...]
+    idx = i_ref[...][:, :fan_in]
+    vals = v_blk[:, :fan_in]
+    w16 = REF.sparse_densify(vals, idx, Dp)  # (bl, Dp) bf16 densified tile
+    x16 = x_ref[...].astype(jnp.bfloat16)
+
+    col_local = jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 1) + off
+    rowv = (jax.lax.broadcasted_iota(jnp.int32, (Bp, bl), 0)
+            < n_b).astype(jnp.float32)
+    col_global = col_local + base_ref[cidx]
+    valid = ((col_global < num_labels)
+             & (col_local < lc)).astype(jnp.float32)
+
+    def compute_z16():
+        """q8(X) @ densify(V, I)ᵀ — op-for-op the dense grid forward on
+        the densified tile, DropConnect drawn at the dense coordinates."""
+        xq = x_ref[...]
+        if quantize_x:
+            xq = xq.astype(jnp.float8_e4m3fn)
+        xq = xq.astype(jnp.bfloat16)
+        wmm = w16
+        if drop_rate > 0.0:
+            bits = PR.hash_bits_2d(sd_ref[cidx], off.astype(jnp.uint32),
+                                   jnp.uint32(0), (bl, Dp))
+            keep = PR.uniform_from_bits(bits) >= drop_rate
+            wmm = jnp.where(keep, w16, jnp.bfloat16(0.0)) \
+                / jnp.bfloat16(1.0 - drop_rate)
+        z32mm = jax.lax.dot_general(xq, wmm, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        return z32mm.astype(jnp.bfloat16)
+
+    def _write_stream(out_ref, new, blk):
+        """Write the logical-F columns, preserving any lane padding."""
+        if new.shape == out_ref.shape:
+            out_ref[...] = new
+        else:
+            out_ref[...] = jnp.concatenate(
+                [new, blk[:, new.shape[1]:]], axis=1)
+
+    # ---- pass 0 work (CE): streaming (max, Σexp) in VMEM scratch ----
+    def lse_work():
+        z16 = compute_z16()
+        zm = jnp.where(valid > 0, z16.astype(jnp.float32), NEG_INF)
+
+        @pl.when(li == 0)
+        def _init():
+            m_acc[...] = jnp.full_like(m_acc, NEG_INF)
+            s_acc[...] = jnp.zeros_like(s_acc)
+
+        m = m_acc[...]
+        m_new = jnp.maximum(m, zm.max(axis=-1, keepdims=True))
+        s_acc[...] = (s_acc[...] * jnp.exp(m - m_new)
+                      + jnp.exp(zm - m_new).sum(-1, keepdims=True))
+        m_acc[...] = m_new
+
+    # ---- update-pass work: grad, x̄, in-place value/comp update, loss ----
+    def update_work():
+        @pl.when(li == 0)
+        def _init():
+            xg_acc[...] = jnp.zeros_like(xg_acc)
+            xg_b16[...] = jnp.zeros_like(xg_b16)
+            loss_acc[...] = jnp.zeros_like(loss_acc)
+
+        z16 = compute_z16()
+        z32 = z16.astype(jnp.float32)
+        lr, wd, scale = hyper_ref[0], hyper_ref[1], hyper_ref[2]
+
+        if mode == "bce":
+            y = jnp.zeros((Bp, bl), jnp.float32)
+            for slot in range(tgt_ref.shape[1]):
+                y = jnp.maximum(
+                    y, (col_global == tgt_ref[:, slot:slot + 1]
+                        ).astype(jnp.float32))
+            g32 = (jax.nn.sigmoid(z32) - y) * scale * valid * rowv
+            if compute_loss:
+                per = (jnp.maximum(z32, 0.0) - z32 * y
+                       + jnp.log1p(jnp.exp(-jnp.abs(z32))))
+                loss_acc[0, 0] += jnp.sum(per * valid * rowv)
+        else:
+            tid = tgt_ref[...]                              # (Bp, 1) int32
+            onehot = (col_global == tid).astype(jnp.float32)
+            tokm = (tid >= 0).astype(jnp.float32)           # (Bp, 1)
+            lse_row = (lse_in_ref[...] if mode == "ce_update"
+                       else lse_v[...])
+            prob = jnp.exp(z32 - lse_row)
+            g32 = (prob - onehot) * scale * valid * tokm * rowv
+            if compute_loss:
+                loss_acc[0, 0] += jnp.sum(z32 * onehot * rowv)
+
+        g16 = g32.astype(jnp.bfloat16)
+        xg_acc[...] += jnp.dot(g16, w16, preferred_element_type=jnp.float32)
+
+        @pl.when((li + 1) % bpc == 0)
+        def _chunk_flush():
+            xg_b16[...] = (xg_b16[...]
+                           + xg_acc[...].astype(jnp.bfloat16))
+            xg_acc[...] = jnp.zeros_like(xg_acc)
+
+        @pl.when(li == nb - 1)
+        def _final_flush():
+            xg_out_ref[...] = xg_b16[...]
+            loss_ref[0, 0] = loss_acc[0, 0]
+
+        # dense ḡᵀX then gather the fan-in columns back out (i32-bitcast
+        # masked sum — sign-of-zero exact)
+        dw = jax.lax.dot_general(g16, x16, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dv = REF.sparse_gather_cols(dw, idx)                # (bl, F) f32
+        v32 = vals.astype(jnp.float32)
+        if kahan:
+            comp_blk = comp_ref[...]
+            upd = -lr * dv - (lr * wd) * v32
+            yk = upd - comp_blk[:, :fan_in].astype(jnp.float32)
+            t32 = v32 + yk
+            v_new = t32.astype(v_out_ref.dtype)
+            c_new = ((v_new.astype(jnp.float32) - v32) - yk
+                     ).astype(comp_out_ref.dtype)
+            _write_stream(v_out_ref, v_new, v_blk)
+            _write_stream(comp_out_ref, c_new, comp_blk)
+        else:
+            v_new32 = v32 * (1.0 - lr * wd) - lr * dv
+            bits = PR.hash_bits_at(su_ref[cidx], off.astype(jnp.uint32),
+                                   idx)
+            v_new = _apply_sr(v_new32, v_out_ref.dtype, bits, use_sr)
+            _write_stream(v_out_ref, v_new, v_blk)
+
+    if mode == "ce_full":
+        @pl.when(pss == 0)
+        def _pass0():
+            lse_work()
+            # every mapped output block must be written each step it is
+            # visited: write the aliased value/comp streams back unchanged
+            v_out_ref[...] = v_ref[...]
+            if kahan:
+                comp_out_ref[...] = comp_ref[...]
+
+            @pl.when(li == nb - 1)
+            def _finalize_lse():
+                lse_v[...] = m_acc[...] + jnp.log(s_acc[...])
+                lse_out_ref[...] = lse_v[...]
+
+        @pl.when(pss == 1)
+        def _pass1():
+            update_work()
+    else:                                   # bce / ce_update
+        update_work()
+
+
+def _sparse_shapes(B, D, lc, F, block_l, interpret):
+    """(Bp, Dp, Fp, lcp, bl): interpret mode keeps exact shapes (same
+    bitwise-parity rule as ``fused_head._head_shapes``)."""
+    if interpret:
+        bl = lc if block_l is None else min(block_l, lc)
+        if lc % bl != 0:
+            bl = lc
+        return B, D, F, lc, bl
+    Bp = tuning._pad_up(B, 16)
+    Dp = tuning._pad_up(D, tuning.LANE)
+    Fp = tuning._pad_up(F, tuning.LANE)
+    bl = min(block_l or lc, tuning._pad_up(lc, tuning.LANE))
+    bl = tuning._pad_up(bl, tuning.SUBLANE)
+    return Bp, Dp, Fp, tuning._pad_up(lc, bl), bl
+
+
+def _pad_s3(a, lcp, Fp, value=0):
+    """(C, lc, F) → (C·lcp, Fp) row-major stream; padded index slots get
+    ``value=-1`` so they densify/gather/update as inert."""
+    C, lc, F = a.shape
+    if (lcp, Fp) != (lc, F):
+        a = jnp.pad(a, ((0, 0), (0, lcp - lc), (0, Fp - F)),
+                    constant_values=value)
+    return a.reshape(C * lcp, Fp)
+
+
+def _slice_s3(flat, C, lcp, lc, F):
+    return flat.reshape(C, lcp, -1)[:, :lc, :F]
+
+
+def _launch_sparse(mode, x, values, indices, targets, lr, wd, scale,
+                   seeds_drop, seeds_upd, base, lse, comp, num_labels,
+                   use_sr, quantize_x, drop_rate, compute_loss, block_l,
+                   interpret):
+    """Spec/operand assembly — the sparse mirror of ``fused_head._launch``."""
+    (B, D), (C, lc, F) = x.shape, values.shape
+    kahan = comp is not None
+    interpret = tuning.interpret_default(interpret)
+    if block_l is None and not interpret:
+        block_l = tuning.sparse_head_block_l(
+            B, lc, D, F, jnp.dtype(values.dtype).itemsize, kahan=kahan,
+            n_chunks=C,
+            p_slots=targets.shape[-1] if targets.ndim == 2 else 1)
+    Bp, Dp, Fp, lcp, bl = _sparse_shapes(B, D, lc, F, block_l, interpret)
+    bpc = lcp // bl
+    nb = C * bpc
+    xp = tuning.pad2(x.astype(jnp.bfloat16), Bp, Dp)
+    vflat = _pad_s3(values, lcp, Fp)
+    iflat = _pad_s3(indices.astype(jnp.int32), lcp, Fp, value=-1)
+
+    if mode == "ce_full":
+        def full(p, l):
+            return (0, 0)
+
+        def wmap(p, l):
+            return (l, 0)
+        grid = (2, nb)
+    else:
+        def full(l):
+            return (0, 0)
+
+        def wmap(l):
+            return (l, 0)
+        grid = (nb,)
+
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    hyper = jnp.stack([jnp.asarray(lr, jnp.float32),
+                       jnp.asarray(wd, jnp.float32),
+                       jnp.asarray(scale, jnp.float32)])
+    tgt = targets if targets.ndim == 2 else targets.reshape(B, 1)
+    tp = tuning.pad2(tgt, Bp, 1, value=-1)
+    operands = [jnp.asarray(seeds_drop).astype(jnp.uint32),
+                jnp.asarray(seeds_upd).astype(jnp.uint32), hyper,
+                jnp.asarray(base).astype(jnp.int32), tp]
+    in_specs = [smem, smem, smem, smem, pl.BlockSpec(tp.shape, full)]
+    if mode == "ce_update":
+        operands.append(
+            tuning.pad2(lse.reshape(B, 1).astype(jnp.float32), Bp, 1))
+        in_specs.append(pl.BlockSpec((Bp, 1), full))
+    v_idx = len(operands) + 1
+    operands += [xp, vflat, iflat]
+    in_specs += [pl.BlockSpec((Bp, Dp), full),
+                 pl.BlockSpec((bl, Fp), wmap),
+                 pl.BlockSpec((bl, Fp), wmap)]
+    if kahan:
+        operands.append(_pad_s3(comp, lcp, Fp))
+        in_specs.append(pl.BlockSpec((bl, Fp), wmap))
+
+    out_shape = [jax.ShapeDtypeStruct((C * lcp, Fp), values.dtype)]
+    out_specs = [pl.BlockSpec((bl, Fp), wmap)]
+    if kahan:
+        out_shape.append(jax.ShapeDtypeStruct((C * lcp, Fp), comp.dtype))
+        out_specs.append(pl.BlockSpec((bl, Fp), wmap))
+    out_shape += [jax.ShapeDtypeStruct((Bp, Dp), jnp.bfloat16),
+                  jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+    out_specs += [pl.BlockSpec((Bp, Dp), full),
+                  pl.BlockSpec((1, 1), full)]
+    if mode == "ce_full":
+        out_shape.append(jax.ShapeDtypeStruct((Bp, 1), jnp.float32))
+        out_specs.append(pl.BlockSpec((Bp, 1), full))
+
+    aliases = {v_idx: 0}                 # the index stream is read-only
+    if kahan:
+        aliases[v_idx + 2] = 1
+
+    scratch = [pltpu.VMEM((Bp, Dp), jnp.float32),
+               pltpu.VMEM((Bp, Dp), jnp.bfloat16),
+               pltpu.VMEM((1, 1), jnp.float32)]
+    if mode == "ce_full":
+        scratch += [pltpu.VMEM((Bp, 1), jnp.float32),
+                    pltpu.VMEM((Bp, 1), jnp.float32),
+                    pltpu.VMEM((Bp, 1), jnp.float32)]
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _sparse_kernel, mode=mode, num_labels=num_labels, lc=lc,
+            bpc=bpc, n_b=B, fan_in=F, kahan=kahan, use_sr=use_sr,
+            quantize_x=quantize_x, drop_rate=drop_rate,
+            compute_loss=compute_loss),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=scratch,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*operands)
+    return outs, (B, D, C, lc, lcp, F, kahan)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "num_labels", "use_sr", "quantize_x", "drop_rate",
+    "compute_loss", "block_l", "interpret"))
+def sparse_head_step(x: jax.Array, values: jax.Array, indices: jax.Array,
+                     targets: jax.Array, lr, wd, scale,
+                     seeds_drop: jax.Array, seeds_upd: jax.Array,
+                     base: jax.Array, lse: jax.Array | None = None,
+                     comp: jax.Array | None = None, *,
+                     mode: str, num_labels: int, use_sr: bool = True,
+                     quantize_x: bool = True, drop_rate: float = 0.0,
+                     compute_loss: bool = True, block_l: int | None = None,
+                     interpret: bool | None = None) -> SparseStepOut:
+    """One whole sparse-head train step in a single launch.
+
+    x (B, D) bf16 · values (C, lc, F) storage dtype · indices (C, lc, F)
+    int32, sorted strictly increasing per row (−1 pads a dead slot) ·
+    targets (B, P)/(B,) int32 · seeds_drop/seeds_upd (C,) uint32 ·
+    base (C,) int32 · comp (C, lc, F) BF16 Kahan buffer (homogeneous:
+    all chunks or none).  ``mode`` as in ``fused_head_step`` — "bce" /
+    "ce_full" (2-pass in-launch grid, returns the LSE) / "ce_update"
+    (sharded CE, LSE passed in).  No z cache: the sparse forward is
+    cheap enough to recompute from the same per-chunk DropConnect seed.
+    """
+    assert mode in _UPDATE_MODES, mode
+    if mode == "ce_update":
+        assert lse is not None, "ce_update needs the finalized LSE"
+    outs, (B, D, C, lc, lcp, F, kahan) = _launch_sparse(
+        mode, x, values, indices, targets, lr, wd, scale, seeds_drop,
+        seeds_upd, base, lse, comp, num_labels, use_sr, quantize_x,
+        drop_rate, compute_loss, block_l, interpret)
+    it = iter(outs)
+    v_new = _slice_s3(next(it), C, lcp, lc, F)
+    comp_new = _slice_s3(next(it), C, lcp, lc, F) if kahan else None
+    xg = next(it)[:B, :D]
+    loss = next(it)[0, 0]
+    lse_out = next(it)[:B, 0] if mode == "ce_full" else None
+    return SparseStepOut(v_new, xg, loss, comp_new, lse_out)

@@ -234,6 +234,66 @@ def head_grid_block_l(B: int, lc: int, D: int, w_bytes: int = 1,
     return LANE
 
 
+def _sparse_head_vmem(B: int, D: int, F: int, bl: int, w_bytes: int,
+                      kahan: bool, p_slots: int) -> int:
+    """Sparse-head grid-megakernel working-set model at label tile ``bl``
+    (``kernels/sparse_head.py``, DESIGN.md §13) — single source of truth
+    for the sparse tile chooser and its viability gate.
+
+    The resident set matches the dense grid model minus the z cache (the
+    sparse kernel never caches: the densify+forward is recomputed from
+    the same seed).  Per tile the *streams* shrink to the fan-in width
+    ``Fp`` — values in+out, the read-only index stream, and the optional
+    Kahan pair — but the densified (bl, Dp) BF16 tile and the dense dW
+    transient join the working set: the MXU compute stays dense-shaped,
+    only the HBM traffic scales with F."""
+    Bp = _pad_up(max(B, 1), 16)
+    Dp = _pad_up(max(D, 1), LANE)
+    Fp = _pad_up(max(F, 1), LANE)
+    resident = (Bp * Dp * 2              # X bf16
+                + Bp * Dp * 4            # per-chunk x̄ accumulator f32
+                + Bp * Dp * 2            # running x̄ bf16
+                + 2 * Bp * Dp * 2        # x̄ out block, buffered
+                + 3 * Bp * 4             # LSE (m, s) + finalized lse f32
+                + Bp * max(1, p_slots) * 4)   # resident targets block
+    per_tile = (2 * bl * Fp * w_bytes * 2          # values in+out, buffered
+                + 2 * bl * Fp * 4                  # index stream, buffered
+                + (2 * bl * Fp * 2 * 2 if kahan else 0)
+                + bl * Dp * 2                      # densified W tile bf16
+                + Bp * bl * 10                     # z32 + g + g16 regs
+                + bl * Dp * 4                      # dense dW f32 transient
+                + bl * Fp * 4)                     # gathered dv f32
+    return resident + per_tile
+
+
+@functools.lru_cache(maxsize=None)
+def sparse_head_block_l(B: int, lc: int, D: int, F: int, w_bytes: int = 1,
+                        kahan: bool = False, p_slots: int = 1,
+                        n_chunks: int = 1) -> int:
+    """Label-row tile for the sparse-head grid megakernel.  Same selection
+    rule as ``head_grid_block_l`` (largest fitting candidate; ``bl == lc``
+    keeps the in-kernel recurrences bit-identical to the per-chunk ref
+    scan); returns LANE when nothing fits — compiled callers gate on
+    ``sparse_head_viable``."""
+    del n_chunks     # the resident set is per-launch, not per-chunk
+    for bl in sorted(set(_cands(lc, cap=4096)), reverse=True):
+        if _sparse_head_vmem(B, D, F, bl, w_bytes, kahan,
+                             p_slots) <= VMEM_BUDGET:
+            return bl
+    return LANE
+
+
+@functools.lru_cache(maxsize=None)
+def sparse_head_viable(B: int, D: int, F: int, w_bytes: int = 1,
+                       kahan: bool = False, p_slots: int = 1) -> bool:
+    """Whether the sparse megakernel fits VMEM at even the smallest label
+    tile — same model ``sparse_head_block_l`` minimizes over.  When False
+    the sparse head runs the pure-JAX ref scan instead (no per-chunk
+    kernel fallback exists for the sparse layout)."""
+    return _sparse_head_vmem(B, D, F, LANE, w_bytes, kahan,
+                             p_slots) <= VMEM_BUDGET
+
+
 def _topk_vmem(B: int, D: int, bl: int, w_bytes: int, k: int,
                n_beam: int = 0) -> int:
     """Streaming top-k serving megakernel working-set model at label tile

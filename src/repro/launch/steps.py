@@ -36,28 +36,48 @@ def make_head_cfg(cfg: ModelConfig, impl: str = "auto") -> RH.ELMOHeadConfig:
 class TrainState(NamedTuple):
     backbone: T.Backbone
     opt_state: Any
-    head: RH.HeadState
+    head: Any              # HeadState, or SparseHeadState when cfg.head_fan_in
     step: jax.Array
+
+
+def _init_head_state(key: jax.Array, head_cfg: RH.ELMOHeadConfig):
+    """Dense ``HeadState`` or (``fan_in`` configs, DESIGN.md §13) the
+    fixed-fan-in ``SparseHeadState`` — same dispatch as ``ELMOHead.init``."""
+    if head_cfg.fan_in:
+        from repro.head import sparse as _sparse
+        return _sparse.init_sparse_head(key, head_cfg)
+    return RH.init_head(key, head_cfg)
 
 
 def init_train_state(key: jax.Array, cfg: ModelConfig, optimizer: Optimizer,
                      impl: str = "auto") -> TrainState:
     kb, kh = jax.random.split(key)
     backbone = T.backbone_init(kb, cfg)
-    head = RH.init_head(kh, make_head_cfg(cfg, impl))
+    head = _init_head_state(kh, make_head_cfg(cfg, impl))
     return TrainState(backbone, optimizer.init(backbone), head, jnp.int32(0))
 
 
-def _head_step(head_cfg, head_state, x, targets, head_lr, head_wd, seed):
+def _head_step(head_cfg, head_state, x, targets, head_lr, head_wd, seed,
+               step=None):
     """The ``ELMOHead`` facade dispatches single-device vs label-sharded
-    from the ambient ``MeshContext`` and grid/fused/unfused from its
+    from the ambient ``MeshContext`` and grid/fused/unfused/sparse from its
     ``HeadPlan`` — resolved once per (config, shape, mesh) by the memoized
-    factory, never re-derived inside the traced step."""
+    factory, never re-derived inside the traced step.
+
+    ``step`` (when given, and the config schedules it) runs the sparse
+    head's deterministic prune/regrow after the value update — a
+    ``lax.cond`` on the traced step, so the jitted program is
+    step-invariant."""
     head = RH.get_head(head_cfg, batch=x.shape[0],
                        target_slots=targets.shape[-1]
                        if targets.ndim == 2 else 1)
-    return head.train_step(head_state, x, targets,
-                           HeadHparams(head_lr, head_wd, seed))
+    out = head.train_step(head_state, x, targets,
+                          HeadHparams(head_lr, head_wd, seed))
+    if step is not None and head_cfg.fan_in and head_cfg.prune_every:
+        new_state, xg, metrics = out
+        new_state = head.maybe_prune_regrow(new_state, x, targets, step)
+        out = (new_state, xg, metrics)
+    return out
 
 
 def _head_topk(head_cfg, head_state, x, k: int):
@@ -85,7 +105,7 @@ def _micro_seed(seed: jax.Array, micro_idx) -> jax.Array:
 
 
 def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
-                    frontend, head_lr, head_wd, seed):
+                    frontend, head_lr, head_wd, seed, step=None):
     """fwd → chunked head (fwd/grad/update) → bwd. Returns head', grads,
     metrics — the paper's §4.2 ordering."""
     if cfg.head_loss == "softmax_ce":
@@ -97,7 +117,7 @@ def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
 
     x, pullback = jax.vjp(fwd, backbone)
     head_new, x_grad, metrics = _head_step(
-        head_cfg, head_state, x, targets, head_lr, head_wd, seed)
+        head_cfg, head_state, x, targets, head_lr, head_wd, seed, step)
     (bb_grads,) = pullback(x_grad.astype(x.dtype))
     return head_new, bb_grads, metrics
 
@@ -114,9 +134,12 @@ def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
     n_micro = max(1, cfg.grad_accum)
 
     if n_micro == 1:
+        # prune/regrow (sparse heads with a cadence) rides the optimizer
+        # step; under gradient accumulation it is skipped — the cadence is
+        # defined on whole steps and the microbatch scan carries no step
         head_new, bb_grads, metrics = _one_microbatch(
             cfg, head_cfg, state.backbone, state.head, tokens, targets,
-            frontend, head_lr, head_wd, seed)
+            frontend, head_lr, head_wd, seed, step=state.step)
     else:
         # gradient accumulation: scan over microbatches; the head streams
         # its own fused updates per microbatch, backbone grads accumulate
@@ -164,7 +187,7 @@ def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
 
 class ServeState(NamedTuple):
     backbone: T.Backbone
-    head: RH.HeadState
+    head: Any              # HeadState, or SparseHeadState when cfg.head_fan_in
     caches: Any
 
 
@@ -172,7 +195,7 @@ def init_serve_state(key: jax.Array, cfg: ModelConfig, batch: int,
                      max_len: int, impl: str = "auto") -> ServeState:
     kb, kh = jax.random.split(key)
     backbone = T.backbone_init(kb, cfg)
-    head = RH.init_head(kh, make_head_cfg(cfg, impl))
+    head = _init_head_state(kh, make_head_cfg(cfg, impl))
     return ServeState(backbone, head, T.init_caches(cfg, batch, max_len))
 
 

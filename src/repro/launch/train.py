@@ -65,7 +65,9 @@ def _shard_head(state: St.TrainState, cfg, ctx) -> St.TrainState:
     model axis).  Runs AFTER checkpoint restore, so an elastic restart onto
     a different mesh shape is just this placement applied to the restored
     full-logical leaves."""
-    specs = sharding.head_specs(cfg, ctx.model_size)
+    specs = (sharding.sparse_head_specs(cfg, ctx.model_size)
+             if getattr(cfg, "head_fan_in", 0)
+             else sharding.head_specs(cfg, ctx.model_size))
     mesh = ctx.mesh
 
     def put(leaf, spec):
@@ -296,12 +298,27 @@ def main():
                     help="model mesh axis size (label-sharded head)")
     ap.add_argument("--vocab", type=int, default=None,
                     help="vocab override for --smoke (smaller = faster)")
+    ap.add_argument("--head-labels", type=int, default=None,
+                    help="label-count override for --smoke (XMC archs keep "
+                         "their full label space under reduced(); smaller = "
+                         "faster)")
+    ap.add_argument("--head-fan-in", type=int, default=None,
+                    help="fixed-fan-in sparse head override for --smoke "
+                         "(DESIGN.md §13; 0 = dense)")
+    ap.add_argument("--head-prune-every", type=int, default=None,
+                    help="sparse prune/regrow cadence override for --smoke")
     ap.add_argument("--losses-out", default="",
                     help="write {start, losses} json (fault-injection "
                          "harness compares trajectories across kills)")
     args = ap.parse_args()
 
     overrides = {"vocab": args.vocab} if args.vocab else {}
+    if args.head_labels is not None:
+        overrides["head_labels"] = args.head_labels
+    if args.head_fan_in is not None:
+        overrides["head_fan_in"] = args.head_fan_in
+    if args.head_prune_every is not None:
+        overrides["head_prune_every"] = args.head_prune_every
     cfg = (get_smoke(args.arch, **overrides) if args.smoke
            else get_config(args.arch))
     _, losses = train(cfg, steps=args.steps, global_batch=args.global_batch,

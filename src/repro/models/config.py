@@ -60,6 +60,10 @@ class ModelConfig:
     head_kahan_chunks: int = 0
     head_labels: Optional[int] = None   # XMC: label count (BCE head);
     #                                     None → LM head over vocab (CE)
+    # fixed-fan-in sparse head (DESIGN.md §13): 0 = dense; > 0 keeps that
+    # many weight slots per label row (values + i32 indices)
+    head_fan_in: int = 0
+    head_prune_every: int = 0           # prune/regrow cadence in steps (0=off)
     # encoder-style (paper's own XMC archs)
     causal: bool = True
     pool: str = "none"                  # "none" (LM) | "first" (CLS pooling)

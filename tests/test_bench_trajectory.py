@@ -1,0 +1,94 @@
+"""Bench trajectory loading + the hillclimb driver (ISSUE 9 satellites).
+
+The regression under test: ``benchmarks/run.py --show-trajectory`` used
+to anchor at the *cwd*, so the committed ``BENCH_*.json`` history
+rendered as ``[]`` from any directory but the repo root.  The loaders
+now anchor at the repo root derived from ``__file__`` — asserted here by
+loading from a foreign cwd.  ``benchmarks/hillclimb.py`` used to mutate
+``XLA_FLAGS``/``sys.path`` and import jax at *import* time; it must now
+be importable with zero side effects.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = str(Path(__file__).resolve().parent.parent)
+sys.path.insert(0, REPO)
+
+from benchmarks import run as bench_run        # noqa: E402
+
+EXPECTED = {"BENCH_3.json", "BENCH_4.json", "BENCH_5.json",
+            "BENCH_7.json", "BENCH_8.json", "BENCH_9.json"}
+
+
+def test_bench_files_found_from_any_cwd(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)               # the historical failure mode
+    files = bench_run.bench_files()
+    names = {os.path.basename(p) for p in files}
+    assert EXPECTED <= names, names
+    # ordered by n, gap-tolerant (no BENCH_1/2/6)
+    nums = [int(os.path.basename(p)[6:-5]) for p in files]
+    assert nums == sorted(nums)
+
+
+def test_trajectory_renders_committed_history(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    hist = bench_run.load_trajectory()
+    assert hist, "committed BENCH_*.json rendered as an empty trajectory"
+    for e in hist:
+        assert {"ts", "sections", "rows", "file"} <= set(e)
+    # the ISSUE 9 artifact is part of the history, gates included
+    sparse = [e for e in hist if e["file"] == "BENCH_9.json"
+              and "sparse" in e["sections"]]
+    assert sparse, [e["file"] for e in hist]
+    mem_rows = [r for e in sparse for r in e["rows"]
+                if str(r.get("name", "")).startswith("sparse/mem_")]
+    assert mem_rows
+    assert all(r["shrink_x"] >= 10.0 for r in mem_rows)
+
+
+def test_trajectory_skips_malformed_files(tmp_path):
+    (tmp_path / "BENCH_1.json").write_text("{not json")
+    (tmp_path / "BENCH_2.json").write_text(json.dumps({"not": "a list"}))
+    (tmp_path / "BENCH_3.json").write_text(json.dumps(
+        [{"ts": 1.0, "sections": ["x"], "rows": []}, "stray-non-dict"]))
+    hist = bench_run.load_trajectory(str(tmp_path))
+    assert [e["file"] for e in hist] == ["BENCH_3.json"]
+
+
+def test_resolve_json_path_auto_appends_to_latest(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    assert os.path.basename(bench_run._resolve_json_path("auto")) \
+        == sorted(EXPECTED, key=lambda n: int(n[6:-5]))[-1]
+    assert bench_run._resolve_json_path("other.json") == "other.json"
+
+
+def test_hillclimb_importable_without_side_effects():
+    """Importing benchmarks.hillclimb must not touch XLA_FLAGS, sys.path
+    or the jax backend — checked in a pristine subprocess so this test is
+    immune to whatever the suite already imported."""
+    code = (
+        "import os, sys\n"
+        "flags = os.environ.get('XLA_FLAGS')\n"
+        "path = list(sys.path)\n"
+        f"sys.path.insert(0, {REPO!r})\n"
+        "import benchmarks.hillclimb as hc\n"
+        "assert os.environ.get('XLA_FLAGS') == flags, 'XLA_FLAGS mutated'\n"
+        "assert 'jax' not in sys.modules, 'jax imported at module import'\n"
+        "assert 'repro.launch.dryrun' not in sys.modules\n"
+        "assert hc.parse_override('a=2') == ('a', 2)\n"
+        "assert hc.parse_override('r=0.5') == ('r', 0.5)\n"
+        "assert hc.parse_override('s=fsdp_pure') == ('s', 'fsdp_pure')\n"
+        "ap = hc.build_parser()\n"
+        "ns = ap.parse_args(['--cell', 'gemma-7b/train_4k',\n"
+        "                    '--set', 'n_layers=2'])\n"
+        "assert ns.cell == 'gemma-7b/train_4k' and ns.set == ['n_layers=2']\n"
+        "print('ok')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "ok" in proc.stdout

@@ -1,0 +1,437 @@
+"""Fixed-fan-in sparse head subsystem (DESIGN.md §13, ISSUE 9).
+
+The contract under test:
+
+* ``sparsify``/``densify`` are exact inverses on the kept slots (byte
+  compare — ``-0.0`` and FP8 encodings survive), indices stay sorted
+  strictly increasing, and at ``fan_in == d_model`` sparsify yields the
+  identity index plane;
+* the sparse megakernel (interpret lowering) is **bit-identical** to the
+  pure-JAX oracle scan (``ref.sparse_head_step_ref``) in values, Kahan
+  comp, x̄ and the CE streaming LSE, across a hypothesis sweep of shapes,
+  losses, SR/Kahan and DropConnect — the same SR/DropConnect draws by
+  construction (``hash_bits_at`` at the gathered coordinates);
+* at ``fan_in == d_model`` with identity indices the sparse step is
+  bit-identical to the dense grid path — the subsystem's parity anchor;
+* prune/regrow is a deterministic pure function of (state, x, targets):
+  same inputs → bit-identical topology, the strictly-increasing index
+  invariant is preserved, regrown slots start at zero, and the cadence
+  wrapper is an exact identity off-schedule;
+* sparse serving (logits / top-k) equals the dense serving paths on the
+  densified state bit-for-bit, values AND ids;
+* ``memory_model.head_components(fan_in=...)`` accounts the §13 layout —
+  ≥10× weight+optimizer shrink at the configured fan-in for the paper's
+  Amazon-3M arch — while leaving the dense numbers bit-for-bit unchanged
+  (satellite);
+* ``ELMOHead.attach_shortlist(rebuild_if_stale=True)`` warns and rebuilds
+  a stale index, passes a fresh one through silently, and refuses
+  ``rebuild_if_stale`` without a state (satellite);
+* a 20-step sparse training run with prune/regrow events SIGKILLed
+  mid-run resumes bit-identically (§10 harness) — the controller has no
+  RNG stream, so raw-bit checkpointing of values/indices/comp is the
+  whole resume contract.
+"""
+import dataclasses
+import json
+import os
+import warnings
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import head as H
+from repro.core import memory_model as MM
+from repro.fault import inject
+from repro.head import sparse as SP
+from repro.head.sparse.train import train_step_sparse
+from repro.kernels import ref
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_HP = H.HeadHparams(jnp.float32(0.05), jnp.float32(1e-4), jnp.uint32(7))
+
+
+def _mk(loss="bce", L=300, D=64, C=4, F=12, wdtype="e4m3", kahan=0,
+        sr=True, drop=0.0, B=16, seed=0, **kw):
+    cfg = H.ELMOHeadConfig(num_labels=L, d_model=D, num_chunks=C,
+                           weight_dtype=wdtype, loss=loss, fan_in=F,
+                           kahan_chunks=kahan, use_sr=sr, drop_rate=drop,
+                           **kw)
+    state = SP.init_sparse_head(jax.random.PRNGKey(seed), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(seed + 1), (B, D)) * 0.5
+         ).astype(jnp.bfloat16)
+    if loss == "bce":
+        tg = jax.random.randint(jax.random.PRNGKey(seed + 2), (B, 5), 0, L)
+    else:
+        tg = jax.random.randint(jax.random.PRNGKey(seed + 2), (B,), -1, L)
+    return cfg, state, x, tg
+
+
+def _bits(a):
+    return None if a is None else np.asarray(a).view(np.uint8)
+
+
+def _run_sparse(cfg, state, x, tg, inner):
+    plan = H.resolve_plan(cfg, batch=x.shape[0],
+                          target_slots=tg.shape[-1] if tg.ndim == 2 else 1)
+    assert plan.path == "sparse", plan.path
+    plan = dataclasses.replace(plan, train_inner=inner)
+    st2, xg, m = train_step_sparse(plan, cfg, state, x, tg, _HP.lr, _HP.wd,
+                                   _HP.seed)
+    return st2, xg, float(m["loss"])
+
+
+# ---------------------------------------------------------------------------
+# state: sparsify / densify
+# ---------------------------------------------------------------------------
+
+
+def test_sparsify_densify_identity_at_full_fan_in():
+    cfg_d = H.ELMOHeadConfig(num_labels=300, d_model=64, num_chunks=4,
+                             weight_dtype="e4m3")
+    dense = H.init_head(jax.random.PRNGKey(0), cfg_d)
+    cfg_s = dataclasses.replace(cfg_d, fan_in=64)
+    sp = SP.sparsify(cfg_s, dense)
+    # identity index plane and exact (byte-level) weight round-trip
+    assert (np.asarray(sp.indices) == np.arange(64)).all()
+    back = SP.densify(cfg_s, sp)
+    np.testing.assert_array_equal(_bits(back.w), _bits(dense.w))
+    assert SP.indices_strictly_increasing(sp)
+
+
+def test_sparsify_keeps_top_magnitude_and_roundtrips():
+    cfg_d = H.ELMOHeadConfig(num_labels=300, d_model=64, num_chunks=4,
+                             weight_dtype="e4m3")
+    dense = H.init_head(jax.random.PRNGKey(0), cfg_d)
+    cfg_s = dataclasses.replace(cfg_d, fan_in=12)
+    sp = SP.sparsify(cfg_s, dense)
+    assert sp.values.shape == (4, cfg_s.chunk, 12)
+    assert SP.indices_strictly_increasing(sp)
+    # densify→sparsify is idempotent: the kept slots survive exactly
+    sp2 = SP.sparsify(cfg_s, SP.densify(cfg_s, sp))
+    np.testing.assert_array_equal(_bits(sp.values), _bits(sp2.values))
+    np.testing.assert_array_equal(np.asarray(sp.indices),
+                                  np.asarray(sp2.indices))
+    # the kept magnitude per row dominates the dropped magnitude
+    w = np.abs(np.asarray(SP.densify(cfg_s, sp).w, np.float32))
+    full = np.abs(np.asarray(dense.w, np.float32))
+    assert (np.sort(w, -1)[..., -12:] >= np.sort(full, -1)[..., -13:-12]
+            - 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# kernel ≡ oracle (hypothesis sweep) and the dense parity anchor
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(B=st.integers(1, 12), D=st.integers(8, 48), F=st.integers(1, 8),
+       C=st.integers(1, 3), bce=st.integers(0, 1), kahan=st.integers(0, 1),
+       sr=st.integers(0, 1), drop=st.floats(0.0, 0.3))
+def test_sparse_kernel_bitwise_matches_oracle(B, D, F, C, bce, kahan, sr,
+                                              drop):
+    F = min(F, D)
+    loss = "bce" if bce else "softmax_ce"
+    cfg, state, x, tg = _mk(loss=loss, L=C * 97 + 11, D=D, C=C, F=F,
+                            kahan=C if kahan else 0, sr=bool(sr),
+                            drop=round(drop, 2), B=B, seed=B + D + F)
+    sk, xgk, lk = _run_sparse(cfg, state, x, tg, "interpret")
+    so, xgo, lo = _run_sparse(cfg, state, x, tg, "xla")
+    np.testing.assert_array_equal(_bits(sk.values), _bits(so.values))
+    np.testing.assert_array_equal(_bits(sk.comp), _bits(so.comp))
+    np.testing.assert_array_equal(_bits(xgk), _bits(xgo))
+    assert lk == lo, (lk, lo)
+
+
+@pytest.mark.parametrize("loss", ["bce", "softmax_ce"])
+@pytest.mark.parametrize("wdtype,kahan,sr", [
+    ("e4m3", 0, True), ("bf16", 4, False)])
+def test_full_fan_in_bitwise_matches_dense_grid(loss, wdtype, kahan, sr):
+    """fan_in = d_model with identity indices ≡ the dense grid path: every
+    SR/DropConnect draw addresses the same (row, col), so weights, Kahan
+    comp, x̄ and the loss are bitwise the dense step's."""
+    cfg_d = H.ELMOHeadConfig(num_labels=300, d_model=64, num_chunks=4,
+                             weight_dtype=wdtype, loss=loss,
+                             kahan_chunks=kahan, use_sr=sr,
+                             impl="grid_interpret")
+    dense = H.init_head(jax.random.PRNGKey(1), cfg_d)
+    x = (jax.random.normal(jax.random.PRNGKey(2), (16, 64)) * 0.5
+         ).astype(jnp.bfloat16)
+    tg = (jax.random.randint(jax.random.PRNGKey(3), (16, 5), 0, 300)
+          if loss == "bce" else
+          jax.random.randint(jax.random.PRNGKey(3), (16,), -1, 300))
+    cfg_s = dataclasses.replace(cfg_d, fan_in=64)
+    sp = SP.sparsify(cfg_s, dense)
+
+    st_d, xg_d, m_d = H.head_train_step(cfg_d, dense, x, tg, _HP.lr, _HP.wd,
+                                        _HP.seed)
+    for inner in ("interpret", "xla"):
+        st_s, xg_s, loss_s = _run_sparse(cfg_s, sp, x, tg, inner)
+        back = SP.densify(cfg_s, st_s)
+        np.testing.assert_array_equal(_bits(back.w), _bits(st_d.w))
+        np.testing.assert_array_equal(_bits(back.comp), _bits(st_d.comp))
+        np.testing.assert_array_equal(_bits(xg_s), _bits(xg_d))
+        assert loss_s == float(m_d["loss"]), inner
+
+
+# ---------------------------------------------------------------------------
+# prune/regrow controller
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("loss,kahan", [("bce", 0), ("softmax_ce", 4)])
+def test_prune_regrow_deterministic_and_invariant(loss, kahan):
+    cfg, state, x, tg = _mk(loss=loss, kahan=kahan, prune_every=4)
+    a = jax.jit(lambda s: SP.prune_regrow(cfg, s, x, tg))(state)
+    b = jax.jit(lambda s: SP.prune_regrow(cfg, s, x, tg))(state)
+    # pure function of (state, x, targets): bit-identical replay
+    np.testing.assert_array_equal(_bits(a.values), _bits(b.values))
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+    np.testing.assert_array_equal(_bits(a.comp), _bits(b.comp))
+    # invariant: sorted strictly increasing → unique, exact fan-in
+    assert SP.indices_strictly_increasing(a)
+    # the topology moved, a row swaps at most n_swap columns, and every
+    # newly-grown column (absent from the old row's index set — position
+    # shifts from re-sorting don't count) starts at value/comp zero
+    old_i, new_i = np.asarray(state.indices), np.asarray(a.indices)
+    fresh = ~(new_i[..., :, None] == old_i[..., None, :]).any(-1)
+    assert fresh.any()
+    assert fresh.sum(-1).max() <= SP.n_swap_of(cfg)
+    vals = np.asarray(a.values, np.float32)
+    assert (vals[fresh] == 0.0).all()
+    if kahan:
+        comp = np.asarray(a.comp, np.float32)
+        assert (comp[fresh] == 0.0).all()
+
+
+def test_maybe_prune_regrow_cadence():
+    cfg, state, x, tg = _mk(prune_every=4)
+    for step, fires in ((0, False), (3, False), (4, True), (8, True)):
+        out = jax.jit(lambda s, t: SP.maybe_prune_regrow(cfg, s, x, tg, t)
+                      )(state, jnp.int32(step))
+        changed = (np.asarray(out.indices) != np.asarray(state.indices)
+                   ).any()
+        assert changed == fires, (step, fires)
+        if fires:   # the cond's taken branch is the controller, bit-exact
+            want = SP.prune_regrow(cfg, state, x, tg)
+            np.testing.assert_array_equal(np.asarray(out.indices),
+                                          np.asarray(want.indices))
+            np.testing.assert_array_equal(_bits(out.values),
+                                          _bits(want.values))
+
+
+def test_n_swap_floor():
+    cfg = _mk(F=4)[0]
+    assert SP.n_swap_of(cfg) == 1                       # max(1, round(0.4))
+    assert SP.n_swap_of(dataclasses.replace(cfg, regrow_frac=0.5)) == 2
+
+
+# ---------------------------------------------------------------------------
+# serving: sparse paths ≡ dense paths on the densified state
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_serving_bitwise_matches_dense():
+    cfg, state, x, _ = _mk(F=12, sr=False)
+    cfg_d = dataclasses.replace(cfg, fan_in=0)
+    dense = SP.densify(cfg, state)
+    plan_s = H.resolve_plan(cfg, batch=x.shape[0])
+    z_s = SP.logits_sparse_planned(plan_s, cfg, state, x)
+    z_d = H.head_logits(cfg_d, dense, x)
+    np.testing.assert_array_equal(_bits(z_s), _bits(z_d))
+    for k in (5, 64, 400):      # k beyond a chunk and beyond num_labels
+        k = min(k, cfg.padded_labels)
+        v_s, i_s = SP.topk_sparse_planned(plan_s, cfg, state, x, k)
+        v_d, i_d = H.head_topk(cfg_d, dense, x, k)
+        np.testing.assert_array_equal(_bits(v_s), _bits(v_d))
+        np.testing.assert_array_equal(np.asarray(i_s), np.asarray(i_d))
+        assert (np.asarray(i_s)[np.asarray(v_s) > -1e15]
+                < cfg.num_labels).all()
+
+
+def test_facade_sparse_dispatch_and_plan():
+    cfg, state, x, tg = _mk(F=12, prune_every=4)
+    head = H.ELMOHead(cfg, batch=16, target_slots=5)
+    assert head.plan.path == "sparse"
+    assert head.plan.fan_in == 12
+    assert "sparse" in head.plan.explain()
+    st0 = head.init(jax.random.PRNGKey(0))
+    assert isinstance(st0, SP.SparseHeadState)
+    st1, xg, m = head.train_step(st0, x, tg, _HP)
+    assert isinstance(st1, SP.SparseHeadState)
+    assert np.isfinite(float(m["loss"]))
+    # facade serving round-trips through the sparse paths
+    v, i = head.topk(st1, x, 5)
+    assert v.shape == (16, 5) and i.shape == (16, 5)
+    # cadence hook: identity off-schedule, topology update on-schedule
+    same = head.maybe_prune_regrow(st1, x, tg, jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(same.indices),
+                                  np.asarray(st1.indices))
+    swapped = head.maybe_prune_regrow(st1, x, tg, jnp.int32(4))
+    assert (np.asarray(swapped.indices) != np.asarray(st1.indices)).any()
+    # dense heads: the hook is a structural no-op
+    cfg_d = dataclasses.replace(cfg, fan_in=0, prune_every=0)
+    head_d = H.ELMOHead(cfg_d, batch=16, target_slots=5)
+    dstate = head_d.init(jax.random.PRNGKey(0))
+    assert head_d.maybe_prune_regrow(dstate, x, tg, jnp.int32(4)) is dstate
+
+
+# ---------------------------------------------------------------------------
+# memory model (satellite): §13 accounting, dense numbers untouched
+# ---------------------------------------------------------------------------
+
+
+def test_memory_model_sparse_accounting():
+    s = MM.MemScenario(num_labels=2_812_281, d_model=768, batch=128,
+                       num_chunks=8, kahan_chunks=2)
+    dense = MM.head_components(s, "e4m3")
+    # dense accounting is bit-for-bit what it always was (pinned)
+    L = 2_812_281
+    assert dense["W_e4m3"] == L * 768
+    assert dense["W_kahan_comp_bf16"] == L * 768 * 2 * (2 / 8)
+    assert dense["W_grad"] == 0.0
+    dense_w = sum(v for k, v in dense.items() if k.startswith("W_"))
+    assert dense_w == L * 1152
+
+    sp = MM.head_components(dataclasses.replace(s, kahan_chunks=0),
+                            "e4m3", fan_in=16)
+    assert sp["W_e4m3"] == L * 16
+    assert sp["W_indices_i32"] == L * 16 * 4
+    assert sp["W_kahan_comp_bf16"] == 0.0
+    sparse_w = sum(v for k, v in sp.items() if k.startswith("W_"))
+    # ≥10× head weight+optimizer shrink at the configured fan-in (14.4×)
+    assert dense_w / sparse_w >= 10.0
+    # transients unchanged by the sparse flag (dense compute shapes)
+    assert sp["chunk_logits_bf16"] == dense["chunk_logits_bf16"]
+    # label sharding divides every sparse plane
+    sp4 = MM.head_components(dataclasses.replace(s, kahan_chunks=0),
+                             "e4m3", n_label_shards=4, fan_in=16)
+    assert sp4["W_e4m3"] == sp["W_e4m3"] / 4
+    assert sp4["W_indices_i32"] == sp["W_indices_i32"] / 4
+
+
+# ---------------------------------------------------------------------------
+# attach_shortlist(rebuild_if_stale=...) (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_attach_shortlist_rebuild_if_stale():
+    from repro.head import shortlist as SL
+
+    cfg = H.ELMOHeadConfig(num_labels=300, d_model=64, num_chunks=4,
+                           weight_dtype="bf16", use_sr=False,
+                           shortlist="on")
+    state = H.init_head(jax.random.PRNGKey(0), cfg)
+    head = H.ELMOHead(cfg, batch=8)
+    index = head.build_shortlist(state, iters=2, n_clusters=8, beam=4)
+
+    # fresh index: attached silently, same object
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        got = head.attach_shortlist(index, rebuild_if_stale=True,
+                                    state=state)
+    assert got is index and head.shortlist is index
+
+    # stale index (weights moved): warns and rebuilds, same geometry
+    moved = state._replace(w=(state.w.astype(jnp.float32) * 1.5
+                              ).astype(state.w.dtype))
+    assert SL.is_stale(index, moved)
+    with pytest.warns(UserWarning, match="stale"):
+        rebuilt = head.attach_shortlist(index, rebuild_if_stale=True,
+                                        state=moved, iters=2)
+    assert rebuilt is not index
+    assert not SL.is_stale(rebuilt, moved)
+    assert (rebuilt.n_clusters, rebuilt.beam) == (index.n_clusters,
+                                                  index.beam)
+    assert head.shortlist is rebuilt
+
+    # rebuild_if_stale without the state to check against: refused
+    with pytest.raises(ValueError, match="needs the state"):
+        head.attach_shortlist(index, rebuild_if_stale=True)
+
+
+# ---------------------------------------------------------------------------
+# label-sharded bit parity (forced 4-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_sparse_parity(multidevice_runner):
+    out = multidevice_runner("_sparse_head_checks.py", 4)
+    assert "ALL SPARSE SHARDED CHECKS PASSED" in out
+
+
+# ---------------------------------------------------------------------------
+# §10 resume: 20 sparse steps with prune/regrow events across a SIGKILL
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sparse_sigkill_resume_bit_identical(tmp_path):
+    """20 steps of the sparse smoke arch with prune/regrow every 4 steps,
+    SIGKILLed at a pinned pseudo-random step ∈ [5, 12] (so topology swaps
+    land on BOTH sides of the kill), restarted, and compared to an
+    uninterrupted run: the loss trajectory across the resume boundary is
+    bit-identical and the final committed checkpoints match leaf-for-leaf
+    (manifest crc32s) — values, i32 indices and Kahan comp all round-trip
+    as raw bits (§10)."""
+    env = inject.subprocess_env(os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+
+    def argv(ckpt_dir, losses_out):
+        return inject.train_argv(
+            "--arch", "xmc-bert-3m-sparse", "--smoke", "--steps", "20",
+            "--global-batch", "8", "--head-labels", "2003",
+            "--head-prune-every", "4",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "2",
+            "--losses-out", losses_out)
+
+    full_dir, kill_dir = str(tmp_path / "full"), str(tmp_path / "kill")
+    full_json = str(tmp_path / "full.json")
+    resume_json = str(tmp_path / "resume.json")
+
+    res = inject.run_and_kill(argv(full_dir, full_json),
+                              hb_file=os.path.join(full_dir, "hb",
+                                                   "host_0000.hb"),
+                              kill_step=10**9, env=env)
+    assert not res.killed and res.returncode == 0, \
+        res.stdout[-2000:] + res.stderr[-2000:]
+
+    kill_step = 5 + zlib.crc32(b"elmo-sparse-head") % 8       # ∈ [5, 12]
+    res = inject.run_and_kill(argv(kill_dir, str(tmp_path / "unused.json")),
+                              hb_file=os.path.join(kill_dir, "hb",
+                                                   "host_0000.hb"),
+                              kill_step=kill_step, env=env)
+    assert res.killed and res.step_seen >= kill_step
+
+    res = inject.run_and_kill(argv(kill_dir, resume_json),
+                              hb_file=os.path.join(kill_dir, "hb",
+                                                   "host_0000.hb"),
+                              kill_step=10**9, env=env)
+    assert not res.killed and res.returncode == 0, \
+        res.stdout[-2000:] + res.stderr[-2000:]
+    assert "restored step" in res.stdout
+
+    with open(full_json) as f:
+        full = json.load(f)
+    with open(resume_json) as f:
+        resumed = json.load(f)
+    start = resumed["start"]
+    assert 0 < start <= kill_step + 1
+    # bit-identical trajectory across the resume boundary — prune/regrow
+    # events after the boundary replayed from the restored raw bits
+    np.testing.assert_array_equal(np.asarray(resumed["losses"]),
+                                  np.asarray(full["losses"][start:]))
+
+    def checksums(d):
+        with open(os.path.join(d, "ckpt_00000020", "manifest.json")) as f:
+            return {e["name"]: e["checksum"]
+                    for e in json.load(f)["leaves"]}
+
+    assert checksums(full_dir) == checksums(kill_dir)
