@@ -649,3 +649,133 @@ def bench_fused_chunk(L=4096, D=256, B=256):
             {"name": "kernel/unfused_chunk", "us_per_call": round(_time(
                  unfused_x, *args)),
              "temp_mib": round(b_u / 2**20, 2), "temp_size_in_bytes": b_u}]
+
+
+def bench_numerics_guard(L=4096, D=256, B=256, num_chunks=8):
+    """BENCH_10: the numerics guard's cost at the paper shape (DESIGN.md
+    §14) — hard-gated.
+
+    Structural gates (exact, backend-independent — these carry the perf
+    contract):
+      * guard-on compiles to the SAME number of gemms as guard-off (the
+        telemetry replays no dot; a CSE regression here once cost 12%),
+      * temp-byte delta ≤ 1.5 MiB (one f32 chunk buffer for the pre-cast
+        observation + reduction scratch; no (B, L) / extra (L, D)
+        materialization),
+      * guard-on is bitwise invisible in W/comp/x̄/loss at this shape.
+
+    Wall-clock gate: median of paired (adjacent on/off) step-time ratios,
+    drift-cancelled.  <3% on a compiled-kernel backend (TPU — counters
+    accumulate in the megakernel's VMEM scratch); on the XLA-oracle
+    fallback the telemetry reductions are separate un-fusable passes
+    worth ~4-6% single-core (observed medians swing ±4% with machine
+    noise on shared CI boxes), so the CPU gate is a noise-safe <15%.
+
+    Detection/recovery rows ride along from a fault-injected guarded run:
+    NaN-poison at step 3 must trip AT step 3 (0-step latency, gated),
+    quarantine, re-train, and end at a finite loss below the pre-fault
+    envelope (gated).
+    """
+    import dataclasses
+    import statistics
+    import tempfile
+
+    import numpy as np
+
+    from repro import head as H
+    from repro.configs import get_smoke
+    from repro.fault import inject as FI
+    from repro.launch.train import run_guarded
+    from repro.numerics import recovery as NR
+    from repro.numerics import telemetry as NT
+
+    hp = (jnp.float32(0.05), jnp.float32(1e-4), jnp.uint32(7))
+    x = (jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+         ).astype(jnp.bfloat16)
+    tg = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, L)
+    on_tpu = jax.default_backend() == "tpu"
+    gate = 0.03 if on_tpu else 0.15
+
+    def once(f, st, n=4):
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(f(st, x, tg))
+        return (time.time() - t0) / n
+
+    rows = []
+    for mode, use_sr, kahan in (("sr", True, 0), ("kahan", False, num_chunks)):
+        cfg = H.ELMOHeadConfig(num_labels=L, d_model=D,
+                               num_chunks=num_chunks, weight_dtype="e4m3",
+                               loss="bce", use_sr=use_sr,
+                               kahan_chunks=kahan, impl="fused_xla")
+        st = H.init_head(jax.random.PRNGKey(0), cfg)
+        gcfg = dataclasses.replace(cfg, guard=True)
+        f_off = jax.jit(lambda s, xx, t, c=cfg: H.head_train_step(
+            c, s, xx, t, *hp))
+        f_on = jax.jit(lambda s, xx, t, c=gcfg: H.head_train_step(
+            c, s, xx, t, *hp))
+        o_off = jax.block_until_ready(f_off(st, x, tg))
+        o_on = jax.block_until_ready(f_on(st, x, tg))
+
+        # gate: bitwise invisibility at the bench shape
+        for a, b in ((o_off[0].w, o_on[0].w), (o_off[1], o_on[1]),
+                     (o_off[2]["loss"], o_on[2]["loss"])):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        assert np.isfinite(np.asarray(o_on[2]["telemetry"])).all()
+
+        # gate: zero extra gemms, bounded temp delta
+        hlo_off = f_off.lower(st, x, tg).compile()
+        hlo_on = f_on.lower(st, x, tg).compile()
+        d_off = hlo_off.as_text().count(" dot(")
+        d_on = hlo_on.as_text().count(" dot(")
+        assert d_on == d_off, (mode, d_off, d_on)
+        t_off = hlo_off.memory_analysis().temp_size_in_bytes
+        t_on = hlo_on.memory_analysis().temp_size_in_bytes
+        assert t_on - t_off <= 1.5 * 2**20, (mode, t_off, t_on)
+
+        ratios = []
+        for _ in range(12):
+            a = once(f_off, st)
+            b = once(f_on, st)
+            ratios.append(b / a)
+        over = statistics.median(ratios) - 1.0
+        assert over < gate, (mode, over, gate)
+        rows.append({
+            "name": f"numerics/guard_overhead_{mode}",
+            "us_per_call": round(once(f_on, st) * 1e6),
+            "overhead_pct": round(over * 100, 2),
+            "gate_pct": gate * 100, "backend": jax.default_backend(),
+            "extra_dots": d_on - d_off,
+            "extra_temp_mib": round((t_on - t_off) / 2**20, 2),
+            "B": B, "L": L, "D": D,
+        })
+
+    # ---- detection latency + recovery outcome (fault-injected, gated) ----
+    cfg = get_smoke("xmc-bert-3m", head_labels=600)
+    with tempfile.TemporaryDirectory() as d:
+        inject_at = 3
+        state, losses, recoveries = run_guarded(
+            cfg, steps=8, global_batch=4, seq=16, ckpt_dir=d, ckpt_every=2,
+            impl="xla", log_every=100, monitor_kw={"warmup": 4},
+            inject=FI.at_step(inject_at, FI.nan_poison_head))
+        lad = NR.load_ladder(d)
+    trip_step = lad.trips[0]["step"]
+    latency = trip_step - inject_at
+    assert latency == 0, (trip_step, inject_at)       # same-step detection
+    assert recoveries == 1 and lad.rung_name == "reseed"
+    # pre-fault envelope: best loss the poisoned incarnation reached
+    # before the trip — recovery must end strictly below it
+    pre_fault = min(losses[:inject_at])
+    assert all(l == l for l in losses)                # no NaN survived
+    assert losses[-1] < pre_fault
+    rows.append({
+        "name": "numerics/detect_recover",
+        "us_per_call": 0,
+        "detect_latency_steps": latency,
+        "trip_kind": lad.trips[0]["kind"],
+        "recoveries": recoveries, "rung": lad.rung_name,
+        "pre_fault_loss": round(float(pre_fault), 4),
+        "final_loss": round(float(losses[-1]), 4),
+        "gate": "latency==0 & final<pre_fault",
+    })
+    return rows

@@ -190,6 +190,12 @@ def _sparse():
     _emit(bench_sparse_head())      # kernel≡oracle parity + ≥10× mem gate
 
 
+@section("numerics")    # ISSUE 10: numerics guard (DESIGN.md §14)
+def _numerics():
+    from benchmarks.kernel_bench import bench_numerics_guard
+    _emit(bench_numerics_guard())   # BENCH_10: overhead + detect/recover
+
+
 @section("plan")        # HeadPlan resolution (DESIGN.md §8): predicted rows
 def _plan():
     from repro.configs import get_config

@@ -1,0 +1,106 @@
+"""Offline checkpoint integrity audit (DESIGN.md §10 / §14).
+
+    python -m repro.checkpoint verify <ckpt_dir | ckpt_dir/ckpt_NNNNNNNN>
+
+Re-runs the full restore-time integrity checks — commit marker, manifest
+crc against the COMMITTED record, every leaf's existence + crc32 — WITHOUT
+demoting anything (read-only: the online restore path owns demotion).
+Unlike ``verify_checkpoint`` (which reports the first failure), the audit
+checks **every** leaf and prints one line per defect, so a postmortem sees
+the full blast radius of a torn write or a flaky disk.
+
+Exit status: 0 iff every audited checkpoint is intact; 1 otherwise (so CI
+and the recovery runbooks can gate on it); 2 for usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.checkpoint.ckpt import (_LeafCorrupt, _load_leaf, _read_manifest,
+                                   committed_paths)
+
+
+def _audit_one(path: str) -> list:
+    """Every defect in one checkpoint dir, as ``(leaf_or_scope, reason)``.
+    Empty list == intact."""
+    defects = []
+    if os.path.exists(os.path.join(path, "CORRUPT")):
+        try:
+            with open(os.path.join(path, "CORRUPT")) as f:
+                why = f.read().strip().splitlines()
+        except OSError:
+            why = []
+        defects.append(("<marker>", "quarantined: "
+                        + (why[-1] if why else "CORRUPT marker present")))
+    elif not os.path.exists(os.path.join(path, "COMMITTED")):
+        defects.append(("<marker>", "no COMMITTED marker (torn or partial "
+                        "write)"))
+    try:
+        manifest = _read_manifest(path)
+    except _LeafCorrupt as e:
+        defects.append(("<manifest>", str(e)))
+        return defects
+    for entry in manifest.get("leaves", []):
+        try:
+            _load_leaf(path, entry, verify=True)
+        except _LeafCorrupt as e:
+            name = entry.get("name", entry.get("file", "?"))
+            reason = str(e)
+            if reason.startswith(name + ": "):
+                reason = reason[len(name) + 2:]
+            defects.append((name, reason))
+    return defects
+
+
+def _targets(path: str) -> list:
+    """A single checkpoint dir, or every ckpt_* under a store dir."""
+    if os.path.exists(os.path.join(path, "manifest.json")):
+        return [path]
+    store = [os.path.join(path, d) for d in sorted(os.listdir(path))
+             if d.startswith("ckpt_") and not d.endswith(".tmp")]
+    if not store:
+        raise FileNotFoundError(
+            f"{path}: neither a checkpoint dir (no manifest.json) nor a "
+            "store containing ckpt_* dirs")
+    return store
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.checkpoint")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    v = sub.add_parser("verify", help="audit checkpoint integrity")
+    v.add_argument("path", help="a checkpoint store dir, or one ckpt_N dir")
+    v.add_argument("-q", "--quiet", action="store_true",
+                   help="only print defects")
+    args = ap.parse_args(argv)
+
+    try:
+        targets = _targets(args.path)
+    except (FileNotFoundError, NotADirectoryError, OSError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    bad = 0
+    for path in targets:
+        defects = _audit_one(path)
+        name = os.path.basename(path.rstrip("/"))
+        if defects:
+            bad += 1
+            print(f"{name}: CORRUPT ({len(defects)} defect(s))")
+            for leaf, reason in defects:
+                print(f"  {leaf}: {reason}")
+        elif not args.quiet:
+            print(f"{name}: ok")
+    if not args.quiet:
+        n_committed = len(committed_paths(args.path)) \
+            if len(targets) != 1 else None
+        tail = (f"; {n_committed} committed in store"
+                if n_committed is not None else "")
+        print(f"{len(targets) - bad}/{len(targets)} intact{tail}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

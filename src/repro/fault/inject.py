@@ -224,6 +224,77 @@ class FlakyBatches:
 
 
 # ---------------------------------------------------------------------------
+# numeric fault injection (DESIGN.md §14 — the numerics-guard soak tests)
+# ---------------------------------------------------------------------------
+
+
+def _poison_flat(leaf, flat_index: int, value: float):
+    """Overwrite one element (by flattened index) of a device array,
+    round-tripping through f32 so the poison value lands in any storage
+    dtype (e4m3's NaN encoding, bf16's max, ...)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    arr = np.asarray(leaf.astype(jnp.float32)).copy()
+    arr.reshape(-1)[flat_index % arr.size] = value
+    return jnp.asarray(arr).astype(leaf.dtype)
+
+
+def nan_poison_head(state, *, flat_index: int = 0):
+    """NaN-poison one head-weight element of a ``launch.steps.TrainState``
+    (dense W, or the sparse value stream).  The next step's logits row goes
+    non-finite — what a bad DMA / bit-flipped activation looks like — and
+    the guard must trip on ``nonfinite_z`` / ``nonfinite_loss``."""
+    head = state.head
+    if hasattr(head, "values"):
+        head = head._replace(
+            values=_poison_flat(head.values, flat_index, float("nan")))
+    else:
+        head = head._replace(
+            w=_poison_flat(head.w, flat_index, float("nan")))
+    return state._replace(head=head)
+
+
+def saturate_head(state, *, fraction: float = 0.5, magnitude: float = 450.0):
+    """Force-saturate the head's update stream: set the leading
+    ``fraction`` of the Kahan compensation to ``magnitude``, chosen to
+    push every poisoned element's pre-cast sum just past the FP8 cliff —
+    into e4m3's [448, 464) band, which still *rounds down* to ±448 (past
+    ~464 the cast overflows to NaN, a different failure).  The weights
+    silently pile onto the cliff, the loss stays finite, and ONLY the
+    in-kernel saturation counter sees it: the fraction must cross
+    ``guard_sat_frac`` on the very next step.  Requires a Kahan head
+    (``comp is not None``)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    head = state.head
+    assert head.comp is not None, "saturate_head needs a Kahan head"
+    arr = np.asarray(head.comp.astype(jnp.float32)).copy()
+    flat = arr.reshape(-1)
+    flat[:max(1, int(flat.size * fraction))] = magnitude
+    return state._replace(head=head._replace(
+        comp=jnp.asarray(arr).astype(head.comp.dtype)))
+
+
+def at_step(step: int, mutate, **kw):
+    """Adapt a state mutator into a ``train(inject=...)`` hook that fires
+    exactly once, before ``step``."""
+    def hook(i, state):
+        return mutate(state, **kw) if i == step else state
+    return hook
+
+
+def lr_spike(head_lr: float, *, step: int, factor: float = 64.0):
+    """A one-step learning-rate spike schedule (returns ``i -> lr``): the
+    optimizer briefly runs ``factor``× hot — the loss-spike / divergence
+    failure mode the EWMA z-score detector exists for."""
+    def sched(i: int) -> float:
+        return head_lr * (factor if i == step else 1.0)
+    return sched
+
+
+# ---------------------------------------------------------------------------
 # serving-side injection (DESIGN.md §12)
 # ---------------------------------------------------------------------------
 

@@ -79,6 +79,16 @@ class ELMOHeadConfig:
     # dense columns.  0 = static sparsity.
     prune_every: int = 0
     regrow_frac: float = 0.1
+    # numerics guard (DESIGN.md §14): when True, every train-step path
+    # emits an 8-slot telemetry vector (saturation count of the W update,
+    # non-finite z/LSE/x̄ counts, max |Kahan comp|) accumulated in VMEM
+    # scratch alongside the step.  The counters are *bitwise invisible* to
+    # W/comp/x̄/loss — guard-on ≡ guard-off on the 20-step goldens.
+    guard: bool = False
+    # saturation-fraction trip threshold consumed by numerics.NumericsMonitor
+    # (fraction of W-update elements whose pre-cast f32 value lies at or
+    # beyond the storage dtype's max finite — the e4m3 cliff is ±448).
+    guard_sat_frac: float = 0.05
 
     @property
     def wdtype(self):
@@ -122,6 +132,7 @@ class ELMOHeadConfig:
         assert self.prune_every >= 0
         if self.prune_every:
             assert self.fan_in, "prune_every needs a sparse head (fan_in>0)"
+        assert 0.0 < self.guard_sat_frac <= 1.0
 
 
 class HeadHparams(NamedTuple):
@@ -156,4 +167,5 @@ def head_config_for(model_cfg, impl: str = "auto") -> ELMOHeadConfig:
         impl=impl,
         fan_in=getattr(model_cfg, "head_fan_in", 0),
         prune_every=getattr(model_cfg, "head_prune_every", 0),
+        guard=getattr(model_cfg, "head_guard", False),
     )

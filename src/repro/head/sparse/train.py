@@ -34,6 +34,7 @@ from repro.head.train import _chunk_seed, _fold_loss, _grid_seeds, _masked_z
 from repro.kernels import ops
 from repro.kernels import prng_utils as PR
 from repro.kernels import ref as REF
+from repro.numerics import telemetry as NT
 
 
 def train_step_sparse(plan, cfg: ELMOHeadConfig, state: SparseHeadState,
@@ -50,7 +51,8 @@ def train_step_sparse(plan, cfg: ELMOHeadConfig, state: SparseHeadState,
     base = cids * cfg.chunk
     common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
                   quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                  compute_loss=cfg.compute_loss, impl=plan.train_inner)
+                  compute_loss=cfg.compute_loss, impl=plan.train_inner,
+                  guard=cfg.guard)
 
     if cfg.loss == "bce":
         scale, lse = jnp.float32(1.0 / B), None
@@ -68,6 +70,8 @@ def train_step_sparse(plan, cfg: ELMOHeadConfig, state: SparseHeadState,
     loss = _fold_loss(cfg, out.loss, targets, lse, scale, B)
     metrics = {"loss": loss,
                "xgrad_norm": jnp.linalg.norm(out.xg.astype(jnp.float32))}
+    if cfg.guard:
+        metrics["telemetry"] = NT.finalize(out.tele, out.xg, lse)
     return (SparseHeadState(out.values, state.indices, out.comp),
             out.xg, metrics)
 
@@ -189,7 +193,7 @@ def train_step_sparse_sharded(plan, cfg: ELMOHeadConfig, ctx,
             x16, vals, idx, tgt, lr_, wd_, scale, seeds_d, seeds_u, base,
             lse=lse, comp=comp, mode=mode, num_labels=cfg.num_labels,
             use_sr=cfg.use_sr, quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-            compute_loss=kernel_loss, impl="xla")
+            compute_loss=kernel_loss, impl="xla", guard=cfg.guard)
         loss_raw = loss_pre + out.loss
         if ce_comm == "stats" and cfg.loss != "bce" and cfg.compute_loss:
             loss_raw = jax.lax.psum(loss_raw, axis)
@@ -211,6 +215,15 @@ def train_step_sparse_sharded(plan, cfg: ELMOHeadConfig, ctx,
         if kahan:
             outs.append(out.comp)
         outs += [xg_out, loss, xnorm]
+        if cfg.guard:
+            # counts (slots 0–3) sum across label shards, the comp max
+            # maxes; the LSE/x̄ slots then come from the replicated final
+            # outputs — identical on every shard, so the vector replicates
+            slot = jnp.arange(out.tele.shape[0])
+            t = jnp.where(slot == NT.SLOTS["comp_max"],
+                          jax.lax.pmax(out.tele, axis),
+                          jax.lax.psum(out.tele, axis))
+            outs.append(NT.finalize(t, xg_comb, lse))
         return tuple(outs)
 
     wspec = plan.w_spec
@@ -224,6 +237,8 @@ def train_step_sparse_sharded(plan, cfg: ELMOHeadConfig, ctx,
         PS(b0, None), tgt_spec, PS(), PS(), PS()]
     out_specs = [wspec] + ([wspec] if kahan else []) + [
         PS(b0, None), PS(), PS()]
+    if cfg.guard:
+        out_specs.append(PS())
 
     outs = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                       out_specs=tuple(out_specs), check_vma=False)(*operands)
@@ -231,5 +246,7 @@ def train_step_sparse_sharded(plan, cfg: ELMOHeadConfig, ctx,
     v_new = next(it)
     comp_new = next(it) if kahan else None
     xg, loss, xnorm = next(it), next(it), next(it)
-    return (SparseHeadState(v_new, state.indices, comp_new), xg,
-            {"loss": loss, "xgrad_norm": xnorm})
+    metrics = {"loss": loss, "xgrad_norm": xnorm}
+    if cfg.guard:
+        metrics["telemetry"] = next(it)
+    return (SparseHeadState(v_new, state.indices, comp_new), xg, metrics)

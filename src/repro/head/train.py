@@ -38,6 +38,7 @@ from repro.head.state import HeadState
 from repro.kernels import ops
 from repro.kernels import prng_utils as PR
 from repro.kernels import tuning as _tuning
+from repro.numerics import telemetry as NT
 
 
 # ---------------------------------------------------------------------------
@@ -87,23 +88,22 @@ def _masked_z(cfg: ELMOHeadConfig, z: jax.Array, cidx: jax.Array) -> jax.Array:
 def _scan_chunks(cfg: ELMOHeadConfig, w, comp, chunk_ids, zs, carry,
                  chunk_step):
     """The Kahan/SR chunk-scan split shared by every train-step path
-    (fused, unfused, sharded).  ``chunk_step(xg, loss, wc, comp_c, cidx,
-    z_c)`` is the per-chunk work; the documented fused-vs-unfused-vs-
-    sharded parity depends on this scaffolding living in exactly one
-    place.  Returns (carry, w_kahan, w_sr, comp_new)."""
+    (fused, unfused, sharded).  ``chunk_step(*carry, wc, comp_c, cidx,
+    z_c)`` is the per-chunk work — the carry is ``(xg, loss)`` or, when
+    the numerics guard rides along, ``(xg, loss, tele)``; the documented
+    fused-vs-unfused-vs-sharded parity depends on this scaffolding living
+    in exactly one place.  Returns (carry, w_kahan, w_sr, comp_new)."""
 
     def kahan_body(carry, inp):
-        xg, loss = carry
         wc, comp_c, cidx, z_c = (inp if zs is not None else inp + (None,))
-        xg, loss, wc_new, comp_new = chunk_step(xg, loss, wc, comp_c, cidx,
-                                                z_c)
-        return (xg, loss), (wc_new, comp_new)
+        *carry, wc_new, comp_new = chunk_step(*carry, wc, comp_c, cidx,
+                                              z_c)
+        return tuple(carry), (wc_new, comp_new)
 
     def sr_body(carry, inp):
-        xg, loss = carry
         wc, cidx, z_c = inp if zs is not None else inp + (None,)
-        xg, loss, wc_new, _ = chunk_step(xg, loss, wc, None, cidx, z_c)
-        return (xg, loss), wc_new
+        *carry, wc_new, _ = chunk_step(*carry, wc, None, cidx, z_c)
+        return tuple(carry), wc_new
 
     ck = cfg.kahan_chunks
     if ck:
@@ -141,12 +141,17 @@ def _finalize_step(cfg: ELMOHeadConfig, carry, w_k, w_s, comp_new, targets,
                    lse, scale, B: int) -> Tuple[HeadState, jax.Array, dict]:
     """Shared epilogue of every train-step path: reassemble the chunk
     weights and fold the accumulated loss (the fused/unfused A/B guarantee
-    depends on this formula living in exactly one place)."""
-    (xg, loss_raw) = carry
+    depends on this formula living in exactly one place).  A 3-element
+    carry additionally finalizes the numerics telemetry (DESIGN.md §14)
+    into ``metrics["telemetry"]``."""
+    xg, loss_raw = carry[0], carry[1]
     w_new = jnp.concatenate([w_k, w_s], axis=0) if cfg.kahan_chunks else w_s
     loss = _fold_loss(cfg, loss_raw, targets, lse, scale, B)
     metrics = {"loss": loss,
                "xgrad_norm": jnp.linalg.norm(xg.astype(jnp.float32))}
+    if len(carry) > 2:
+        metrics["telemetry"] = NT.finalize(
+            carry[2], xg, None if lse is None else lse[:B])
     return HeadState(w_new, comp_new), xg, metrics
 
 
@@ -192,7 +197,8 @@ def _train_step_grid(plan, cfg: ELMOHeadConfig, state: HeadState,
     comp = state.comp if kahan else None
     common = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
                   quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                  compute_loss=cfg.compute_loss, impl=impl)
+                  compute_loss=cfg.compute_loss, impl=impl,
+                  guard=cfg.guard)
 
     if cfg.loss == "bce":
         scale, lse = jnp.float32(1.0 / B), None
@@ -210,7 +216,8 @@ def _train_step_grid(plan, cfg: ELMOHeadConfig, state: HeadState,
 
     w_k = out.w if kahan else state.w[:0]
     w_s = state.w[:0] if kahan else out.w
-    return _finalize_step(cfg, (out.xg, out.loss), w_k, w_s, out.comp,
+    carry = (out.xg, out.loss) + ((out.tele,) if cfg.guard else ())
+    return _finalize_step(cfg, carry, w_k, w_s, out.comp,
                           targets, lse, scale, B)
 
 
@@ -266,22 +273,29 @@ def _train_step_fused(plan, cfg: ELMOHeadConfig, state: HeadState,
                                   (state.w, chunk_ids))
         lse = L.lse_finalize(m, s)
 
-    def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+    def chunk_step(xg, loss_acc, *rest):
+        tele, (wc, comp_c, cidx, z_c) = (
+            (rest[0], rest[1:]) if cfg.guard else (None, rest))
         out = ops.fused_chunk_step(
             x, wc, targets, xg, lr, wd, scale, cidx * cfg.chunk,
             _chunk_seed(seed, cidx, 0), _chunk_seed(seed, cidx, 1),
             lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
             num_labels=cfg.num_labels, use_sr=cfg.use_sr,
             quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-            compute_loss=cfg.compute_loss, impl=impl,
+            compute_loss=cfg.compute_loss, impl=impl, guard=cfg.guard,
             **({"n_b": n_b} if n_b is not None else {}))
-        return out.xg, loss_acc + out.loss, out.w, out.comp
+        head = (out.xg, loss_acc + out.loss)
+        if cfg.guard:
+            head += (NT.combine(tele, out.tele),)
+        return head + (out.w, out.comp)
 
     carry = (jnp.zeros(x.shape, jnp.bfloat16), jnp.float32(0.0))
+    if cfg.guard:
+        carry += (NT.zero(),)
     carry, w_k, w_s, comp_new = _scan_chunks(cfg, state.w, state.comp,
                                              chunk_ids, zs, carry,
                                              chunk_step)
-    carry = (carry[0][:B, :cfg.d_model], carry[1])
+    carry = (carry[0][:B, :cfg.d_model],) + tuple(carry[1:])
     return _finalize_step(cfg, carry, w_k, w_s, comp_new, targets, lse,
                           scale, B)
 
@@ -292,6 +306,8 @@ def _train_step_unfused(plan, cfg: ELMOHeadConfig, state: HeadState,
                         ) -> Tuple[HeadState, jax.Array, dict]:
     """Legacy multi-kernel path (three launches + HBM logits/grad round
     trips per chunk) — kept selectable for fused-vs-unfused A/B."""
+    assert not cfg.guard, \
+        "numerics guard needs the grid or fused path (DESIGN.md §14)"
     B = x.shape[0]
     impl = plan.train_inner
     x = x.astype(jnp.bfloat16)

@@ -48,6 +48,7 @@ from repro.head.train import (_chunk_logits, _chunk_seed, _finalize_step,
                               train_step_planned)
 from repro.kernels import ops
 from repro.kernels import prng_utils as PR
+from repro.numerics import telemetry as NT
 
 
 def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
@@ -125,7 +126,7 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
             base = chunk_ids * cfg.chunk + r.astype(jnp.int32) * lc
             gkw = dict(num_labels=cfg.num_labels, use_sr=cfg.use_sr,
                        quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                       impl=impl)
+                       impl=impl, guard=cfg.guard)
             lse = None
             if cfg.loss == "bce":
                 scale = jnp.float32(1.0 / B)
@@ -205,6 +206,7 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
             w_k = out.w if kahan else w[:0]
             w_s = w[:0] if kahan else out.w
             comp_new = out.comp
+            tele_loc = out.tele
         else:
             # ---- per-chunk scan branch (fused_chunk_step per chunk) ----
             loss_pre = jnp.float32(0.0)
@@ -256,7 +258,9 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
                     m, s = m_g, s_g
                 lse = L.lse_finalize(m, s)
 
-            def chunk_step(xg, loss_acc, wc, comp_c, cidx, z_c):
+            def chunk_step(xg, loss_acc, *rest):
+                tele, (wc, comp_c, cidx, z_c) = (
+                    (rest[0], rest[1:]) if cfg.guard else (None, rest))
                 if cfg.loss == "bce" and ce_comm == "gather":
                     z_c = _chunk_logits(cfg, wc, x16,
                                         _chunk_seed(seed_sh, cidx, 0), impl)
@@ -271,13 +275,19 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
                     lse=lse, z=z_c, comp=comp_c, loss=cfg.loss,
                     num_labels=cfg.num_labels, use_sr=cfg.use_sr,
                     quantize_x=cfg.qx, drop_rate=cfg.drop_rate,
-                    compute_loss=kernel_loss, impl=impl)
-                return out.xg, loss_acc + out.loss, out.w, out.comp
+                    compute_loss=kernel_loss, impl=impl, guard=cfg.guard)
+                head = (out.xg, loss_acc + out.loss)
+                if cfg.guard:
+                    head += (NT.combine(tele, out.tele),)
+                return head + (out.w, out.comp)
 
             carry = (jnp.zeros((B, cfg.d_model), jnp.bfloat16), loss_pre)
+            if cfg.guard:
+                carry += (NT.zero(),)
             carry, w_k, w_s, comp_new = _scan_chunks(cfg, w, comp, chunk_ids,
                                                      zs, carry, chunk_step)
-            xg_loc, loss_raw = carry
+            xg_loc, loss_raw = carry[0], carry[1]
+            tele_loc = carry[2] if cfg.guard else None
 
         if ce_comm == "stats" and cfg.compute_loss:
             loss_raw = jax.lax.psum(loss_raw, axis)
@@ -299,8 +309,17 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
             xg_comb = jax.lax.psum(xg_loc.astype(jnp.float32), axis
                                    ).astype(jnp.bfloat16)
 
+        fin_carry = (xg_comb, loss_raw)
+        if cfg.guard:
+            # counts (slots 0–3) sum across label shards, the comp max
+            # maxes; the LSE/x̄ slots come from the replicated final
+            # outputs inside _finalize_step — identical on every shard
+            slot = jnp.arange(tele_loc.shape[0])
+            fin_carry += (jnp.where(slot == NT.SLOTS["comp_max"],
+                                    jax.lax.pmax(tele_loc, axis),
+                                    jax.lax.psum(tele_loc, axis)),)
         st_new, xg_full, metrics = _finalize_step(
-            cfg, (xg_comb, loss_raw), w_k, w_s, comp_new, tgt, lse, scale, B)
+            cfg, fin_carry, w_k, w_s, comp_new, tgt, lse, scale, B)
 
         if batch_axes:   # hand back only this rank's batch rows
             bidx = jnp.int32(0)
@@ -314,6 +333,8 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
         if kahan:
             outs.append(st_new.comp)
         outs += [xg_out, metrics["loss"], metrics["xgrad_norm"]]
+        if cfg.guard:
+            outs.append(metrics["telemetry"])
         if has_err:
             outs.append(err_new)
         return tuple(outs)
@@ -327,6 +348,8 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
         PS(b0, None), tgt_spec, PS(), PS(), PS()]
     out_specs = [wspec] + ([wspec] if kahan else []) + [
         PS(b0, None), PS(), PS()]
+    if cfg.guard:
+        out_specs.append(PS())
     if has_err:
         operands.append(xg_err)
         in_specs.append(plan.xg_err_spec)
@@ -339,6 +362,8 @@ def train_step_sharded_planned(plan: "_plan.HeadPlan", cfg: ELMOHeadConfig,
     comp_new = next(it) if kahan else None
     xg, loss, xnorm = next(it), next(it), next(it)
     metrics = {"loss": loss, "xgrad_norm": xnorm}
+    if cfg.guard:
+        metrics["telemetry"] = next(it)
     ret = (HeadState(w_new, comp_new), xg, metrics)
     return ret + ((next(it),) if has_err else ())
 

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import precision as P
 from repro.kernels import prng_utils as PR
 from repro.kernels import tuning
 from repro.kernels.fused_head_update import _apply_sr
@@ -53,13 +54,14 @@ class ChunkOut(NamedTuple):
     loss: jax.Array                  # f32 scalar chunk loss contribution
     comp: Optional[jax.Array] = None  # updated Kahan buffer (kahan chunks)
     z: Optional[jax.Array] = None    # chunk logits (only when return_z)
+    tele: Optional[jax.Array] = None  # (8,) f32 numerics telemetry (guard)
 
 
 def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
                   loss: str, num_labels: int, n_b: int, n_l: int,
                   use_sr: bool, quantize_x: bool, drop_rate: float,
                   compute_loss: bool, cached_z: bool, kahan: bool,
-                  return_z: bool):
+                  return_z: bool, guard: bool):
     # ---- unpack the flag-dependent ref list ----
     it = iter(refs)
     lse_ref = next(it) if loss == "softmax_ce" else None
@@ -69,7 +71,9 @@ def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
     w_out_ref, xg_out_ref, loss_ref = next(it), next(it), next(it)
     comp_out_ref = next(it) if kahan else None
     z_out_ref = next(it) if return_z else None
+    tele_ref = next(it) if guard else None
     xg_acc, loss_acc = next(it), next(it)
+    tele_acc = next(it) if guard else None
 
     li = pl.program_id(0)
     nl = pl.num_programs(0)
@@ -80,6 +84,8 @@ def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
     def _init():
         xg_acc[...] = jnp.zeros_like(xg_acc)
         loss_acc[...] = jnp.zeros_like(loss_acc)
+        if guard:
+            tele_acc[...] = jnp.zeros_like(tele_acc)
 
     lr, wd, scale = hyper_ref[0], hyper_ref[1], hyper_ref[2]
     row0 = (li * bl).astype(jnp.uint32)
@@ -164,17 +170,39 @@ def _chunk_kernel(seeds_ref, hyper_ref, c0_ref, tgt_ref, *refs,
         t32 = w32 + yk
         w_new = t32.astype(w_out_ref.dtype)
         w_out_ref[...] = w_new
-        comp_out_ref[...] = ((w_new.astype(jnp.float32) - w32) - yk
-                             ).astype(comp_out_ref.dtype)
+        c_new = ((w_new.astype(jnp.float32) - w32) - yk
+                 ).astype(comp_out_ref.dtype)
+        comp_out_ref[...] = c_new
+        pre_cast, cmax = t32, jnp.max(jnp.abs(c_new.astype(jnp.float32)))
     else:
         w_new = w32 * (1.0 - lr * wd) - lr * dw
         bits = PR.hash_bits_2d(seeds_ref[1], row0, jnp.uint32(0), (bl, Dp))
         w_out_ref[...] = _apply_sr(w_new, w_out_ref.dtype, bits, use_sr)
+        pre_cast, cmax = w_new, jnp.float32(0.0)
+
+    if guard:
+        # numerics telemetry (DESIGN.md §14) — pure reads of values the
+        # update already computed, accumulated in a private scratch row:
+        # bitwise invisible to W/comp/x̄/loss.  Padding contributes 0
+        # (padded updates are 0; a poisoned-x NaN fails the >= compare).
+        lim = jnp.float32(P.max_finite(w_out_ref.dtype))
+        sat = jnp.sum((jnp.abs(pre_cast) >= lim).astype(jnp.float32))
+        znf = jnp.sum((~jnp.isfinite(z32)).astype(jnp.float32)
+                      * valid * rowv)
+        slot = jax.lax.broadcasted_iota(jnp.int32, tele_acc.shape, 1)
+        acc = (tele_acc[...] + jnp.where(slot == 0, sat, 0.0)
+               + jnp.where(slot == 1, znf, 0.0))
+        tele_acc[...] = jnp.maximum(acc, jnp.where(slot == 4, cmax, 0.0))
+
+        @pl.when(li == nl - 1)
+        def _tele_flush():
+            tele_ref[...] = tele_acc[...]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "loss", "num_labels", "use_sr", "quantize_x", "drop_rate",
-    "compute_loss", "block_l", "interpret", "return_z", "n_b", "n_l"))
+    "compute_loss", "block_l", "interpret", "return_z", "n_b", "n_l",
+    "guard"))
 def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                      xg: jax.Array, lr, wd, scale, c0: jax.Array,
                      seed_drop: jax.Array, seed_upd: jax.Array,
@@ -186,7 +214,8 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                      compute_loss: bool = True, block_l: int | None = None,
                      interpret: bool | None = None,
                      return_z: bool = False, n_b: int | None = None,
-                     n_l: int | None = None) -> ChunkOut:
+                     n_l: int | None = None,
+                     guard: bool = False) -> ChunkOut:
     """One fused chunk step.
 
     x (B, D) bf16 · w (L, D) e4m3/bf16/f32 · targets (B, P) int32 (bce) or
@@ -273,10 +302,18 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
     if return_z:
         out_shape.append(jax.ShapeDtypeStruct((Bp, Lp), jnp.bfloat16))
         out_specs.append(pl.BlockSpec((Bp, bl), lambda l: (0, l)))
+    if guard:
+        out_shape.append(jax.ShapeDtypeStruct((1, 8), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 8), lambda l: (0, 0)))
 
     aliases = {idx_x + 1: 0, idx_x + 2: 1}     # W → w_new, x̄ → x̄'
     if kahan:
         aliases[idx_x + 3] = 3                 # comp → comp'
+
+    scratch = [pltpu.VMEM((Bp, Dp), jnp.float32),
+               pltpu.VMEM((1, 1), jnp.float32)]
+    if guard:
+        scratch.append(pltpu.VMEM((1, 8), jnp.float32))
 
     outs = pl.pallas_call(
         functools.partial(
@@ -284,19 +321,26 @@ def fused_chunk_step(x: jax.Array, w: jax.Array, targets: jax.Array,
             n_l=n_l,
             use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
             compute_loss=compute_loss, cached_z=cached_z, kahan=kahan,
-            return_z=return_z),
+            return_z=return_z, guard=guard),
         grid=grid,
         in_specs=in_specs,
         out_specs=tuple(out_specs),
         out_shape=tuple(out_shape),
-        scratch_shapes=[pltpu.VMEM((Bp, Dp), jnp.float32),
-                        pltpu.VMEM((1, 1), jnp.float32)],
+        scratch_shapes=scratch,
         input_output_aliases=aliases,
         interpret=interpret,
     )(*operands)
 
     w_new, xg_new, loss_c = outs[0], outs[1], outs[2]
-    comp_new = outs[3][:L, :D] if kahan else None
-    z_out = outs[-1][:B, :L] if return_z else None
+    nxt = 3
+    comp_new = None
+    if kahan:
+        comp_new = outs[nxt][:L, :D]
+        nxt += 1
+    z_out = None
+    if return_z:
+        z_out = outs[nxt][:B, :L]
+        nxt += 1
+    tele = outs[nxt][0] if guard else None
     return ChunkOut(w_new[:L, :D], xg_new[:B, :D], loss_c[0, 0],
-                    comp_new, z_out)
+                    comp_new, z_out, tele)

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import precision as P
 from repro.core.losses import NEG_INF
 from repro.kernels import prng_utils as PR
 from repro.kernels import tuning
@@ -82,6 +83,7 @@ class HeadStepOut(NamedTuple):
     comp: Optional[jax.Array] = None  # updated Kahan buffer (C, lc, D)
     lse: Optional[jax.Array] = None   # (B,) f32 (mode="ce_full" only)
     z: Optional[jax.Array] = None     # (B, C·lc) bf16 logits (cache_z, bce)
+    tele: Optional[jax.Array] = None  # (8,) f32 numerics telemetry (guard)
 
 
 class LseOut(NamedTuple):
@@ -93,7 +95,8 @@ class LseOut(NamedTuple):
 
 def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
                  n_b: int, kahan: bool, cache_z: bool, use_sr: bool,
-                 quantize_x: bool, drop_rate: float, compute_loss: bool):
+                 quantize_x: bool, drop_rate: float, compute_loss: bool,
+                 guard: bool):
     # ---- unpack the mode-dependent ref list ----
     update = mode in _UPDATE_MODES
     it = iter(refs)
@@ -112,6 +115,7 @@ def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
         z_out_ref = next(it) if (cache_z and mode == "bce") else None
         xg_out_ref, loss_ref = next(it), next(it)
         lse_out_ref = next(it) if mode == "ce_full" else None
+        tele_ref = next(it) if guard else None
     elif mode == "ce_lse":
         z_out_ref = next(it) if cache_z else None
         m_out_ref, s_out_ref = next(it), next(it)
@@ -124,6 +128,7 @@ def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
     if mode == "ce_full":
         lse_v = next(it)
         z_sc = next(it) if cache_z else None    # grid-resident z cache
+    tele_acc = next(it) if guard else None
 
     if mode == "ce_full":
         pss, li = pl.program_id(0), pl.program_id(1)
@@ -202,6 +207,8 @@ def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
             xg_acc[...] = jnp.zeros_like(xg_acc)
             xg_b16[...] = jnp.zeros_like(xg_b16)
             loss_acc[...] = jnp.zeros_like(loss_acc)
+            if guard:
+                tele_acc[...] = jnp.zeros_like(tele_acc)
 
         if cache_z and mode == "ce_full":
             z16 = z_sc[:, pl.ds(li * bl, bl)]
@@ -262,13 +269,37 @@ def _head_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
             t32 = w32 + yk
             w_new = t32.astype(w_out_ref.dtype)
             w_out_ref[...] = w_new
-            comp_out_ref[...] = ((w_new.astype(jnp.float32) - w32) - yk
-                                 ).astype(comp_out_ref.dtype)
+            c_new = ((w_new.astype(jnp.float32) - w32) - yk
+                     ).astype(comp_out_ref.dtype)
+            comp_out_ref[...] = c_new
+            pre_cast = t32
+            cmax = jnp.max(jnp.abs(c_new.astype(jnp.float32)))
         else:
             w_new = w32 * (1.0 - lr * wd) - lr * dw
             bits = PR.hash_bits_2d(su_ref[cidx], off.astype(jnp.uint32),
                                    jnp.uint32(0), (bl, Dp))
             w_out_ref[...] = _apply_sr(w_new, w_out_ref.dtype, bits, use_sr)
+            pre_cast, cmax = w_new, jnp.float32(0.0)
+
+        if guard:
+            # numerics telemetry (DESIGN.md §14): pure reads of values the
+            # update already computed, accumulated in a private scratch
+            # row — bitwise invisible to W/comp/x̄/loss.  Counted only in
+            # the update pass (ce_full pass 0 recomputes z but never
+            # counts it).  Padding contributes exactly 0.
+            lim = jnp.float32(P.max_finite(w_out_ref.dtype))
+            sat = jnp.sum((jnp.abs(pre_cast) >= lim).astype(jnp.float32))
+            znf = jnp.sum((~jnp.isfinite(z32)).astype(jnp.float32)
+                          * valid * rowv)
+            slot = jax.lax.broadcasted_iota(jnp.int32, tele_acc.shape, 1)
+            acc = (tele_acc[...] + jnp.where(slot == 0, sat, 0.0)
+                   + jnp.where(slot == 1, znf, 0.0))
+            tele_acc[...] = jnp.maximum(acc,
+                                        jnp.where(slot == 4, cmax, 0.0))
+
+            @pl.when(li == nb - 1)
+            def _tele_flush():
+                tele_ref[...] = tele_acc[...]
 
     if mode == "ce_lse":
         lse_work()
@@ -336,7 +367,7 @@ def _slice_z(zp, B, C, lcp, lc):
 
 def _launch(mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
             lse, z, comp, num_labels, use_sr, quantize_x, drop_rate,
-            compute_loss, cache_z, block_l, interpret):
+            compute_loss, cache_z, block_l, interpret, guard=False):
     """Shared spec/operand assembly for every grid-kernel entry point."""
     (B, D), (C, lc, _) = x.shape, w.shape
     update = mode in _UPDATE_MODES
@@ -430,6 +461,9 @@ def _launch(mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
         if mode == "ce_full":
             out_shape.append(jax.ShapeDtypeStruct((Bp, 1), jnp.float32))
             out_specs.append(pl.BlockSpec((Bp, 1), full))
+        if guard:
+            out_shape.append(jax.ShapeDtypeStruct((1, 8), jnp.float32))
+            out_specs.append(pl.BlockSpec((1, 8), full))
     elif mode == "ce_lse":
         if cache_z:
             out_shape.append(jax.ShapeDtypeStruct((Bp, C * lcp),
@@ -461,13 +495,15 @@ def _launch(mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
         scratch.append(pltpu.VMEM((Bp, 1), jnp.float32))
         if cache_z:     # grid-resident z cache (persists across both passes)
             scratch.append(pltpu.VMEM((Bp, C * lcp), jnp.bfloat16))
+    if guard:
+        scratch.append(pltpu.VMEM((1, 8), jnp.float32))
 
     outs = pl.pallas_call(
         functools.partial(
             _head_kernel, mode=mode, num_labels=num_labels, lc=lc, bpc=bpc,
             n_b=B, kahan=kahan and update, cache_z=cache_z, use_sr=use_sr,
             quantize_x=quantize_x, drop_rate=drop_rate,
-            compute_loss=compute_loss),
+            compute_loss=compute_loss, guard=guard),
         grid=grid,
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -481,7 +517,7 @@ def _launch(mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
 
 @functools.partial(jax.jit, static_argnames=(
     "mode", "num_labels", "use_sr", "quantize_x", "drop_rate",
-    "compute_loss", "cache_z", "block_l", "interpret"))
+    "compute_loss", "cache_z", "block_l", "interpret", "guard"))
 def fused_head_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                     lr, wd, scale, seeds_drop: jax.Array,
                     seeds_upd: jax.Array, base: jax.Array,
@@ -492,7 +528,8 @@ def fused_head_step(x: jax.Array, w: jax.Array, targets: jax.Array,
                     quantize_x: bool = True, drop_rate: float = 0.0,
                     compute_loss: bool = True, cache_z: bool = False,
                     block_l: int | None = None,
-                    interpret: bool | None = None) -> HeadStepOut:
+                    interpret: bool | None = None,
+                    guard: bool = False) -> HeadStepOut:
     """One whole-head train step in a single launch.
 
     x (B, D) bf16 · w (C, lc, D) storage dtype · targets (B, P)/(B,) int32 ·
@@ -517,7 +554,7 @@ def fused_head_step(x: jax.Array, w: jax.Array, targets: jax.Array,
     outs, (B, D, C, lc, lcp, kahan) = _launch(
         mode, x, w, targets, lr, wd, scale, seeds_drop, seeds_upd, base,
         lse, z, comp, num_labels, use_sr, quantize_x, drop_rate,
-        compute_loss, cache_z, block_l, interpret)
+        compute_loss, cache_z, block_l, interpret, guard=guard)
     it = iter(outs)
     w_new = _slice_w3(next(it), C, lcp, lc, D)
     comp_new = _slice_w3(next(it), C, lcp, lc, D) if kahan else None
@@ -527,7 +564,8 @@ def fused_head_step(x: jax.Array, w: jax.Array, targets: jax.Array,
     xg = next(it)[:B, :D]
     loss = next(it)[0, 0]
     lse_out = next(it)[:B, 0] if mode == "ce_full" else None
-    return HeadStepOut(w_new, xg, loss, comp_new, lse_out, z_out)
+    tele = next(it)[0] if guard else None
+    return HeadStepOut(w_new, xg, loss, comp_new, lse_out, z_out, tele)
 
 
 @functools.partial(jax.jit, static_argnames=(

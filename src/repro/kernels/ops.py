@@ -110,7 +110,8 @@ def fused_chunk_step(x, w, targets, xg, lr, wd, scale, c0, seed_drop,
             lse=lse, z=z, comp=comp, loss=loss, num_labels=num_labels,
             use_sr=use_sr, quantize_x=quantize_x, drop_rate=drop_rate,
             compute_loss=compute_loss,
-            return_z=kw.get("return_z", False))
+            return_z=kw.get("return_z", False),
+            guard=kw.get("guard", False))
     return _fc.fused_chunk_step(
         x, w, targets, xg, lr, wd, scale, c0, seed_drop, seed_upd,
         lse=lse, z=z, comp=comp, loss=loss, num_labels=num_labels,

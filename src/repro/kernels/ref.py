@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import precision as P
 from repro.kernels import prng_utils as PR
+from repro.numerics import telemetry as NT
 
 
 def _hash_full(seed: jax.Array, shape: tuple[int, int]) -> jax.Array:
@@ -86,7 +87,8 @@ def fused_chunk_ref(x: jax.Array, w: jax.Array, targets: jax.Array,
                     comp: jax.Array | None = None, *,
                     loss: str, num_labels: int, use_sr: bool = True,
                     quantize_x: bool = True, drop_rate: float = 0.0,
-                    compute_loss: bool = True, return_z: bool = False):
+                    compute_loss: bool = True, return_z: bool = False,
+                    guard: bool = False):
     """Oracle for the fused chunk megakernel — the exact composition of the
     legacy multi-kernel chunk step (logits → loss-skip grad → input grad →
     fused update), so fused and unfused paths agree bit-for-bit."""
@@ -100,15 +102,45 @@ def fused_chunk_ref(x: jax.Array, w: jax.Array, targets: jax.Array,
     g, loss_c = L.chunk_loss_skip_grad(loss, z, targets, c0, Lc, num_labels,
                                        lse, scale, compute_loss)
     xg_new = xg + fp8_input_grad_ref(g, w)
-    if comp is None:
-        w_new = fused_head_update_ref(g, x, w, lr, wd, seed_upd,
-                                      use_sr=use_sr)
-        comp_new = None
+    tele = None
+    if not guard:
+        if comp is None:
+            w_new = fused_head_update_ref(g, x, w, lr, wd, seed_upd,
+                                          use_sr=use_sr)
+            comp_new = None
+        else:
+            w_new, comp_new = fused_head_update_kahan_ref(g, x, w, comp,
+                                                          lr, wd, seed_upd)
     else:
-        w_new, comp_new = fused_head_update_kahan_ref(g, x, w, comp, lr, wd,
-                                                      seed_upd)
+        # inline the update so the pre-cast f32 value feeds BOTH the
+        # storage cast and the telemetry from ONE dot — replaying the dot
+        # as a separate expression defeated XLA CSE (a 4th gemm, ~12%
+        # step-time).  The arithmetic below is term-for-term identical to
+        # fused_head_update_ref / _kahan_ref, so guard-on stays bitwise
+        # invisible to W/comp.
+        dw = jax.lax.dot_general(g.astype(jnp.bfloat16),
+                                 x.astype(jnp.bfloat16),
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        w32 = w.astype(jnp.float32)
+        if comp is None:
+            pre = w32 * (1.0 - jnp.float32(lr) * jnp.float32(wd)) \
+                - jnp.float32(lr) * dw
+            if use_sr:
+                w_new = P.sr_bits(pre, _hash_full(seed_upd, w.shape),
+                                  w.dtype)
+            else:
+                w_new = pre.astype(w.dtype)
+            comp_new = None
+        else:
+            upd = -jnp.float32(lr) * dw \
+                - (jnp.float32(lr) * jnp.float32(wd)) * w32
+            pre = w32 + (upd - comp.astype(jnp.float32))   # kahan's t32
+            w_new, comp_new = P.kahan_update(w, comp, upd)
+        mask = ((c0 + jnp.arange(Lc)) < num_labels)[None, :]
+        tele = NT.chunk(pre, comp_new, z, mask, w.dtype)
     return ChunkOut(w_new, xg_new, jnp.float32(loss_c), comp_new,
-                    z if return_z else None)
+                    z if return_z else None, tele)
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +194,7 @@ def sparse_chunk_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
                      comp: jax.Array | None = None, *, loss: str,
                      num_labels: int, use_sr: bool = True,
                      quantize_x: bool = True, drop_rate: float = 0.0,
-                     compute_loss: bool = True):
+                     compute_loss: bool = True, guard: bool = False):
     """Oracle for one label chunk of the sparse fused train step
     (``kernels/sparse_head.py``): densify the chunk's value/index rows,
     run the *dense* chunk computation op-for-op (same DropConnect draw
@@ -196,11 +228,17 @@ def sparse_chunk_ref(x: jax.Array, values: jax.Array, indices: jax.Array,
         else:
             values_new = v_new32.astype(values.dtype)
         comp_new = None
+        pre = v_new32
     else:
         upd = -jnp.float32(lr) * dv \
             - (jnp.float32(lr) * jnp.float32(wd)) * v32
         values_new, comp_new = P.kahan_update(values, comp, upd)
-    return values_new, xg_new, jnp.float32(loss_c), comp_new
+        pre = v32 + (upd - comp.astype(jnp.float32))
+    tele = None
+    if guard:
+        mask = ((c0 + jnp.arange(Lc)) < num_labels)[None, :]
+        tele = NT.chunk(pre, comp_new, z, mask, values.dtype)
+    return values_new, xg_new, jnp.float32(loss_c), comp_new, tele
 
 
 def sparse_lse_chunk_ref(x: jax.Array, values: jax.Array,
@@ -231,7 +269,7 @@ def sparse_head_step_ref(x: jax.Array, values: jax.Array,
                          comp: jax.Array | None = None, *, mode: str,
                          num_labels: int, use_sr: bool = True,
                          quantize_x: bool = True, drop_rate: float = 0.0,
-                         compute_loss: bool = True):
+                         compute_loss: bool = True, guard: bool = False):
     """Whole-step oracle for the sparse megakernel: a ``lax.scan`` of
     ``sparse_chunk_ref`` over chunks (with a streaming-LSE pre-scan for
     ``mode="ce_full"``) — the same per-chunk seed addressing, per-chunk
@@ -262,29 +300,35 @@ def sparse_head_step_ref(x: jax.Array, values: jax.Array,
         assert lse is not None, "ce_update needs the finalized LSE"
 
     def body(carry, inp):
-        xg, loss_acc = carry
+        xg, loss_acc = carry[0], carry[1]
         if kahan:
             vals_c, idx_c, comp_c, sd, su, b0 = inp
         else:
             vals_c, idx_c, sd, su, b0 = inp
             comp_c = None
-        v_new, xg_new, loss_c, comp_new = sparse_chunk_ref(
+        v_new, xg_new, loss_c, comp_new, tele_c = sparse_chunk_ref(
             x, vals_c, idx_c, targets, xg, lr, wd, scale, b0, sd, su,
             lse=None if mode == "bce" else lse, comp=comp_c,
             loss=loss_name, num_labels=num_labels, use_sr=use_sr,
             quantize_x=quantize_x, drop_rate=drop_rate,
-            compute_loss=compute_loss)
+            compute_loss=compute_loss, guard=guard)
         ys = (v_new, comp_new) if kahan else (v_new,)
-        return (xg_new, loss_acc + loss_c), ys
+        out_carry = (xg_new, loss_acc + loss_c)
+        if guard:
+            out_carry += (NT.combine(carry[2], tele_c),)
+        return out_carry, ys
 
     xs = (values, indices) + ((comp,) if kahan else ()) \
         + (seeds_drop, seeds_upd, base)
     xg0 = jnp.zeros((B, D), jnp.bfloat16)
-    (xg, loss), ys = jax.lax.scan(body, (xg0, jnp.float32(0.0)), xs)
+    carry0 = (xg0, jnp.float32(0.0)) + ((NT.zero(),) if guard else ())
+    carry, ys = jax.lax.scan(body, carry0, xs)
+    xg, loss = carry[0], carry[1]
+    tele = carry[2] if guard else None
     v_new = ys[0]
     comp_new = ys[1] if kahan else None
     return SparseStepOut(v_new, xg, loss, comp_new,
-                         lse if mode == "ce_full" else None)
+                         lse if mode == "ce_full" else None, tele)
 
 
 def topk_carry_init(B: int, k: int) -> tuple[jax.Array, jax.Array]:

@@ -53,6 +53,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.losses import NEG_INF
+from repro.core import precision as P
 from repro.kernels import prng_utils as PR
 from repro.kernels import ref as REF
 from repro.kernels import tuning
@@ -68,11 +69,13 @@ class SparseStepOut(NamedTuple):
     loss: jax.Array                   # f32 scalar raw loss accumulator
     comp: Optional[jax.Array] = None  # updated Kahan buffer (C, lc, F)
     lse: Optional[jax.Array] = None   # (B,) f32 (mode="ce_full" only)
+    tele: Optional[jax.Array] = None  # (8,) f32 guard telemetry (guard=True)
 
 
 def _sparse_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
                    n_b: int, fan_in: int, kahan: bool, use_sr: bool,
-                   quantize_x: bool, drop_rate: float, compute_loss: bool):
+                   quantize_x: bool, drop_rate: float, compute_loss: bool,
+                   guard: bool):
     # ---- unpack the mode-dependent ref list ----
     it = iter(refs)
     sd_ref, su_ref, hyper_ref = next(it), next(it), next(it)
@@ -84,9 +87,11 @@ def _sparse_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
     comp_out_ref = next(it) if kahan else None
     xg_out_ref, loss_ref = next(it), next(it)
     lse_out_ref = next(it) if mode == "ce_full" else None
+    tele_ref = next(it) if guard else None
     xg_acc, xg_b16, loss_acc = next(it), next(it), next(it)
     if mode == "ce_full":
         m_acc, s_acc, lse_v = next(it), next(it), next(it)
+    tele_acc = next(it) if guard else None
 
     if mode == "ce_full":
         pss, li = pl.program_id(0), pl.program_id(1)
@@ -164,6 +169,8 @@ def _sparse_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
             xg_acc[...] = jnp.zeros_like(xg_acc)
             xg_b16[...] = jnp.zeros_like(xg_b16)
             loss_acc[...] = jnp.zeros_like(loss_acc)
+            if guard:
+                tele_acc[...] = jnp.zeros_like(tele_acc)
 
         z16 = compute_z16()
         z32 = z16.astype(jnp.float32)
@@ -221,12 +228,32 @@ def _sparse_kernel(*refs, mode: str, num_labels: int, lc: int, bpc: int,
                      ).astype(comp_out_ref.dtype)
             _write_stream(v_out_ref, v_new, v_blk)
             _write_stream(comp_out_ref, c_new, comp_blk)
+            pre_cast = t32
+            cmax = jnp.max(jnp.abs(c_new.astype(jnp.float32)))
         else:
             v_new32 = v32 * (1.0 - lr * wd) - lr * dv
             bits = PR.hash_bits_at(su_ref[cidx], off.astype(jnp.uint32),
                                    idx)
             v_new = _apply_sr(v_new32, v_out_ref.dtype, bits, use_sr)
             _write_stream(v_out_ref, v_new, v_blk)
+            pre_cast = v_new32
+            cmax = jnp.float32(0.0)
+
+        if guard:
+            lim = jnp.float32(P.max_finite(v_out_ref.dtype))
+            sat = jnp.sum((jnp.abs(pre_cast) >= lim).astype(jnp.float32))
+            znf = jnp.sum((~jnp.isfinite(z32)).astype(jnp.float32)
+                          * valid * rowv)
+            slot = jax.lax.broadcasted_iota(jnp.int32, tele_acc.shape, 1)
+            acc = tele_acc[...]
+            acc = acc + jnp.where(slot == 0, sat, 0.0)
+            acc = acc + jnp.where(slot == 1, znf, 0.0)
+            acc = jnp.maximum(acc, jnp.where(slot == 4, cmax, 0.0))
+            tele_acc[...] = acc
+
+            @pl.when(li == nb - 1)
+            def _tele_flush():
+                tele_ref[...] = tele_acc[...]
 
     if mode == "ce_full":
         @pl.when(pss == 0)
@@ -283,7 +310,7 @@ def _slice_s3(flat, C, lcp, lc, F):
 def _launch_sparse(mode, x, values, indices, targets, lr, wd, scale,
                    seeds_drop, seeds_upd, base, lse, comp, num_labels,
                    use_sr, quantize_x, drop_rate, compute_loss, block_l,
-                   interpret):
+                   interpret, guard=False):
     """Spec/operand assembly — the sparse mirror of ``fused_head._launch``."""
     (B, D), (C, lc, F) = x.shape, values.shape
     kahan = comp is not None
@@ -350,6 +377,9 @@ def _launch_sparse(mode, x, values, indices, targets, lr, wd, scale,
     if mode == "ce_full":
         out_shape.append(jax.ShapeDtypeStruct((Bp, 1), jnp.float32))
         out_specs.append(pl.BlockSpec((Bp, 1), full))
+    if guard:
+        out_shape.append(jax.ShapeDtypeStruct((1, 8), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 8), full))
 
     aliases = {v_idx: 0}                 # the index stream is read-only
     if kahan:
@@ -362,13 +392,15 @@ def _launch_sparse(mode, x, values, indices, targets, lr, wd, scale,
         scratch += [pltpu.VMEM((Bp, 1), jnp.float32),
                     pltpu.VMEM((Bp, 1), jnp.float32),
                     pltpu.VMEM((Bp, 1), jnp.float32)]
+    if guard:
+        scratch.append(pltpu.VMEM((1, 8), jnp.float32))
 
     outs = pl.pallas_call(
         functools.partial(
             _sparse_kernel, mode=mode, num_labels=num_labels, lc=lc,
             bpc=bpc, n_b=B, fan_in=F, kahan=kahan, use_sr=use_sr,
             quantize_x=quantize_x, drop_rate=drop_rate,
-            compute_loss=compute_loss),
+            compute_loss=compute_loss, guard=guard),
         grid=grid,
         in_specs=in_specs,
         out_specs=tuple(out_specs),
@@ -382,7 +414,7 @@ def _launch_sparse(mode, x, values, indices, targets, lr, wd, scale,
 
 @functools.partial(jax.jit, static_argnames=(
     "mode", "num_labels", "use_sr", "quantize_x", "drop_rate",
-    "compute_loss", "block_l", "interpret"))
+    "compute_loss", "block_l", "interpret", "guard"))
 def sparse_head_step(x: jax.Array, values: jax.Array, indices: jax.Array,
                      targets: jax.Array, lr, wd, scale,
                      seeds_drop: jax.Array, seeds_upd: jax.Array,
@@ -391,7 +423,8 @@ def sparse_head_step(x: jax.Array, values: jax.Array, indices: jax.Array,
                      mode: str, num_labels: int, use_sr: bool = True,
                      quantize_x: bool = True, drop_rate: float = 0.0,
                      compute_loss: bool = True, block_l: int | None = None,
-                     interpret: bool | None = None) -> SparseStepOut:
+                     interpret: bool | None = None,
+                     guard: bool = False) -> SparseStepOut:
     """One whole sparse-head train step in a single launch.
 
     x (B, D) bf16 · values (C, lc, F) storage dtype · indices (C, lc, F)
@@ -409,11 +442,12 @@ def sparse_head_step(x: jax.Array, values: jax.Array, indices: jax.Array,
     outs, (B, D, C, lc, lcp, F, kahan) = _launch_sparse(
         mode, x, values, indices, targets, lr, wd, scale, seeds_drop,
         seeds_upd, base, lse, comp, num_labels, use_sr, quantize_x,
-        drop_rate, compute_loss, block_l, interpret)
+        drop_rate, compute_loss, block_l, interpret, guard=guard)
     it = iter(outs)
     v_new = _slice_s3(next(it), C, lcp, lc, F)
     comp_new = _slice_s3(next(it), C, lcp, lc, F) if kahan else None
     xg = next(it)[:B, :D]
     loss = next(it)[0, 0]
     lse_out = next(it)[:B, 0] if mode == "ce_full" else None
-    return SparseStepOut(v_new, xg, loss, comp_new, lse_out)
+    tele = next(it)[0] if guard else None
+    return SparseStepOut(v_new, xg, loss, comp_new, lse_out, tele)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro import head as RH
 from repro.head import HeadHparams
 from repro.kernels import prng_utils as PR
+from repro.numerics import telemetry as NT
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.optim.base import Optimizer
@@ -125,18 +126,20 @@ def _one_microbatch(cfg, head_cfg, backbone, head_state, tokens, targets,
 def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
                batch: dict, head_lr: jax.Array, backbone_lr: jax.Array,
                head_wd: jax.Array = jnp.float32(1e-4),
-               impl: str = "auto") -> Tuple[TrainState, dict]:
+               impl: str = "auto", seed_salt: int = 0
+               ) -> Tuple[TrainState, dict]:
     head_cfg = make_head_cfg(cfg, impl)
     tokens = batch["tokens"]
     frontend = batch.get("frontend_embeds")
     targets = batch["targets"]
-    seed = PR.mix32(state.step.astype(jnp.uint32))
+    # seed_salt (numerics-guard reseed rung, DESIGN.md §14) shifts the whole
+    # step-derived SR/DropConnect stream; salt 0 is bit-identical to the
+    # historical derivation, so an untripped run matches guard-off exactly
+    seed = PR.mix32(state.step.astype(jnp.uint32)
+                    + jnp.uint32(seed_salt) * jnp.uint32(0x632BE59B))
     n_micro = max(1, cfg.grad_accum)
 
     if n_micro == 1:
-        # prune/regrow (sparse heads with a cadence) rides the optimizer
-        # step; under gradient accumulation it is skipped — the cadence is
-        # defined on whole steps and the microbatch scan carries no step
         head_new, bb_grads, metrics = _one_microbatch(
             cfg, head_cfg, state.backbone, state.head, tokens, targets,
             frontend, head_lr, head_wd, seed, step=state.step)
@@ -159,20 +162,36 @@ def train_step(cfg: ModelConfig, optimizer: Optimizer, state: TrainState,
             head_state, gacc = carry
             tok, tgt, fe, mi = inp
             m_seed = _micro_seed(seed, mi)
+            # prune/regrow cadence is defined on whole optimizer steps:
+            # fire it on the accumulation-boundary microbatch only (−1 is
+            # the controller's never-fires sentinel for the others)
+            m_step = jnp.where(mi == jnp.uint32(n_micro - 1),
+                               state.step, jnp.int32(-1))
             head_state, g, metrics = _one_microbatch(
                 cfg, head_cfg, state.backbone, head_state, tok, tgt, fe,
-                head_lr, head_wd, m_seed)
+                head_lr, head_wd, m_seed, step=m_step)
             gacc = jax.tree.map(
                 lambda a, b: (a + b.astype(a.dtype)), gacc, g)
-            return (head_state, gacc), metrics["loss"]
+            ys = metrics["loss"]
+            if head_cfg.guard:
+                ys = (ys, metrics["telemetry"])
+            return (head_state, gacc), ys
 
         gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
                              state.backbone)
-        (head_new, gacc), losses = jax.lax.scan(
+        (head_new, gacc), ys = jax.lax.scan(
             micro_body, (state.head, gacc0), xs)
+        losses = ys[0] if head_cfg.guard else ys
         bb_grads = jax.tree.map(lambda g: g / n_micro, gacc)
         metrics = {"loss": losses.mean(),
                    "xgrad_norm": jnp.float32(0.0)}
+        if head_cfg.guard:
+            # per-microbatch vectors merge like chunks: counts add, the
+            # comp max maxes (telemetry.combine, vectorized over the scan)
+            teles = ys[1]
+            slot = jnp.arange(teles.shape[1])
+            metrics["telemetry"] = jnp.where(
+                slot == NT.SLOTS["comp_max"], teles.max(0), teles.sum(0))
 
     bb_new, opt_new = optimizer.update(state.backbone, state.opt_state,
                                        bb_grads, state.step, backbone_lr)

@@ -27,6 +27,7 @@ step-derived SR/DropConnect seeds are all functions of the committed step.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import shutil
@@ -48,6 +49,8 @@ from repro.fault import (ElasticController, Heartbeat, HostFailure,
                          StragglerMonitor, retry)
 from repro.launch import steps as St
 from repro.launch.mesh import make_host_mesh
+from repro.numerics import recovery as NR
+from repro.numerics.monitor import NumericsMonitor
 from repro.optim import kahan_adamw, linear_warmup_constant
 
 
@@ -81,16 +84,26 @@ def _shard_head(state: St.TrainState, cfg, ctx) -> St.TrainState:
     return state._replace(head=head)
 
 
-def _check_restore_meta(extra: dict, cfg) -> None:
+def _check_restore_meta(extra: dict, cfg, ladder=None) -> None:
     """Cross-check the manifest's head-plan metadata against this run's
     config: a weight-dtype change cannot be resumed bit-identically (the
-    mesh MAY change — leaves are full-logical; see HeadPlan.checkpoint_meta)."""
+    mesh MAY change — leaves are full-logical; see HeadPlan.checkpoint_meta).
+
+    Exception: the numerics guard's ``escalate_precision`` rung (§14).  When
+    the persisted ladder says this run's dtype IS the escalated one, a
+    lower-precision checkpoint is the expected rollback source — restore
+    upcasts it exactly (e4m3→bf16 is value-preserving), the re-typed
+    ``convert_head`` semantics applied in place."""
     meta = extra.get("head_plan")
     if not meta:
         return
     want = getattr(cfg, "head_weight_dtype", None)
     got = meta.get("weight_dtype")
     if want is not None and got is not None and got != want:
+        if ladder is not None and ladder.weight_dtype == want:
+            print(f"numerics guard: restoring {got} checkpoint into "
+                  f"escalated {want} head (exact upcast)", flush=True)
+            return
         raise RuntimeError(
             f"checkpoint was written with head weight_dtype={got!r} but this "
             f"run uses {want!r}; convert explicitly (repro.head.convert) "
@@ -102,10 +115,15 @@ def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
           ckpt_every: int = 50, impl: str = "auto", log_every: int = 1,
           host_id: int = 0, n_hosts: int = 1, n_data: int = 1,
           n_model: int = 1, hb_timeout: float = 60.0, data_retries: int = 3,
-          on_step=None):
+          on_step=None, guard: bool = False, monitor_kw=None, inject=None,
+          head_lr_sched=None):
     """``n_model`` > 1 runs the label-sharded head (vocab parallelism over a
     host mesh — DESIGN.md §6); ``n_data`` shards the batch on top.
-    ``on_step(i)`` is an observation hook (fault injection, tests)."""
+    ``on_step(i)`` is an observation hook (fault injection, tests);
+    ``inject(i, state) -> state`` mutates state *before* step ``i`` (numeric
+    fault injection).  ``guard`` arms the numerics monitor (DESIGN.md §14):
+    per-step kernel telemetry feeds a ``NumericsMonitor`` and a trip raises
+    ``NumericsTrip`` out of the loop for ``run_guarded`` to handle."""
     ctx = (make_host_mesh(n_data, n_model)
            if n_data * n_model > 1 else None)
     with (meshctx.use(ctx) if ctx is not None else contextlib.nullcontext()):
@@ -114,16 +132,39 @@ def train(cfg, *, steps: int, global_batch: int, seq: int, ckpt_dir: str,
                             backbone_lr=backbone_lr, ckpt_every=ckpt_every,
                             impl=impl, log_every=log_every, host_id=host_id,
                             n_hosts=n_hosts, hb_timeout=hb_timeout,
-                            data_retries=data_retries, on_step=on_step)
+                            data_retries=data_retries, on_step=on_step,
+                            guard=guard, monitor_kw=monitor_kw,
+                            inject=inject, head_lr_sched=head_lr_sched)
 
 
 def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
                  ckpt_dir: str, head_lr: float, backbone_lr: float,
                  ckpt_every: int, impl: str, log_every: int,
                  host_id: int, n_hosts: int, hb_timeout: float,
-                 data_retries: int, on_step):
+                 data_retries: int, on_step, guard: bool = False,
+                 monitor_kw=None, inject=None, head_lr_sched=None):
     opt = kahan_adamw()
     sched = linear_warmup_constant(backbone_lr, warmup_steps=100)
+
+    guard = guard or getattr(cfg, "head_guard", False)
+    ladder = None
+    seed_salt = 0
+    if guard:
+        # the persisted escalation ladder is the recovery manifest: every
+        # knob below is a pure function of it, so a SIGKILL anywhere in the
+        # recovery sequence resumes bit-identically (DESIGN.md §14)
+        ladder = NR.load_ladder(ckpt_dir) if ckpt_dir else NR.LadderState()
+        if not getattr(cfg, "head_guard", False):
+            cfg = dataclasses.replace(cfg, head_guard=True)
+        if (ladder.weight_dtype
+                and ladder.weight_dtype != cfg.head_weight_dtype):
+            cfg = dataclasses.replace(cfg,
+                                      head_weight_dtype=ladder.weight_dtype)
+        head_lr = head_lr * ladder.lr_scale
+        seed_salt = ladder.seed_salt
+        if ladder.trips:
+            print(f"numerics guard: resuming under {ladder.describe()}",
+                  flush=True)
 
     state = St.init_train_state(jax.random.PRNGKey(0), cfg, opt, impl=impl)
     # resolve + log the head's execution plan once, up front: path, blocks,
@@ -145,11 +186,19 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
         # shrunken) incarnation runs — corrupt/torn checkpoints are demoted
         # inside restore_checkpoint and the previous committed step is used
         state, start, extra = restore_checkpoint(ckpt_dir, state)
-        _check_restore_meta(extra, cfg)
+        _check_restore_meta(extra, cfg, ladder)
         cursor = DataCursor.from_state(extra.get("cursor", cursor.state()))
         print(f"restored step {start} (data cursor {cursor})", flush=True)
     if ctx is not None and ctx.model_size > 1:
         state = _shard_head(state, cfg, ctx)
+
+    nmon = None
+    if guard:
+        n_micro = max(1, cfg.grad_accum)
+        upd = hcfg.padded_labels * (hcfg.fan_in or hcfg.d_model)
+        nmon = NumericsMonitor(update_elems=upd * n_micro,
+                               sat_frac=hcfg.guard_sat_frac,
+                               **(monitor_kw or {}))
 
     mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
     hb = (Heartbeat(os.path.join(ckpt_dir, "hb"), host_id,
@@ -162,13 +211,14 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
                           else dict(ctx.mesh.shape)}}
 
     @jax.jit
-    def jstep(state, tokens, targets, frontend, lr_b):
+    def jstep(state, tokens, targets, frontend, lr_b, lr_h):
         batch = {"tokens": tokens, "targets": targets}
         if frontend is not None:
             batch["frontend_embeds"] = frontend
         return St.train_step(cfg, opt, state, batch,
-                             head_lr=jnp.float32(head_lr),
-                             backbone_lr=lr_b, impl=impl)
+                             head_lr=lr_h,
+                             backbone_lr=lr_b, impl=impl,
+                             seed_salt=seed_salt)
 
     batches = make_batches(cfg, global_batch, seq, cursor, host_id, n_hosts)
     losses = []
@@ -191,11 +241,29 @@ def _train_inner(cfg, ctx, *, steps: int, global_batch: int, seq: int,
                 np.random.default_rng(i).standard_normal(
                     (batch["tokens"].shape[0], cfg.n_frontend_tokens, 1280),
                     np.float32), jnp.bfloat16)
+        if inject is not None:
+            state = inject(i, state)
+        hl = head_lr
+        if head_lr_sched is not None:     # the schedule yields the BASE lr;
+            hl = float(head_lr_sched(i))  # the ladder's backoff still applies
+            if ladder is not None:
+                hl *= ladder.lr_scale
         state, metrics = jstep(state, jnp.asarray(batch["tokens"]),
                                jnp.asarray(batch["targets"]), frontend,
-                               sched(jnp.int32(i)))
+                               sched(jnp.int32(i)), jnp.float32(hl))
         loss = float(metrics["loss"])
         losses.append(loss)
+        if nmon is not None:
+            tele = metrics.get("telemetry")
+            trip = nmon.observe(
+                i, loss, None if tele is None else np.asarray(tele, np.float64))
+            if trip is not None:
+                if mgr:
+                    mgr.wait()      # land pre-trip saves; nothing after this
+                #                     step is ever committed
+                print(f"NUMERICS TRIP at step {i}: {trip.kind} "
+                      f"({trip.detail or trip.value})", flush=True)
+                raise NR.NumericsTrip(trip, losses)
         dt = time.time() - t0
         monitor.record(host_id, dt)
         if hb:
@@ -281,6 +349,62 @@ def run_elastic(cfg, *, steps: int, global_batch: int, seq: int,
             restarts += 1
 
 
+def run_guarded(cfg, *, steps: int, global_batch: int, seq: int,
+                ckpt_dir: str, max_recoveries: int = 4, **kw):
+    """The numerics-guard supervision path (DESIGN.md §14): train with the
+    monitor armed; on a ``NumericsTrip``,
+
+    1. escalate + persist the ladder (``guard.json``) — FIRST, so a SIGKILL
+       between here and the restart replays the same recovery;
+    2. quarantine the newest committed checkpoint (the suspect — its state
+       is at or just behind the trip) via §10's CORRUPT demotion;
+    3. re-enter ``train`` — which restores last-good and applies the rung
+       (fresh SR salt → LR backoff → bf16 escalation).
+
+    Each additional trip at the same rung demotes one more checkpoint, so
+    the rollback horizon recedes deterministically until the run clears the
+    bad region.  Returns ``(state, losses, recoveries)``; ``losses``
+    concatenates every incarnation's real (committed) steps."""
+    assert ckpt_dir, "run_guarded needs a checkpoint dir to roll back to"
+    base_dtype = getattr(cfg, "head_weight_dtype", "e4m3")
+    all_losses: list = []
+    recoveries = 0
+    while True:
+        try:
+            state, losses = train(cfg, steps=steps,
+                                  global_batch=global_batch, seq=seq,
+                                  ckpt_dir=ckpt_dir, guard=True, **kw)
+            return state, all_losses + losses, recoveries
+        except NR.NumericsTrip as e:
+            # injected poison fires once: the recovered incarnation is clean
+            # (a genuine re-occurrence escalates through the ladder instead)
+            kw["inject"] = None
+            kw["head_lr_sched"] = None
+            ladder = NR.load_ladder(ckpt_dir).escalate(
+                e.reason.as_dict(), base_dtype=base_dtype)
+            NR.save_ladder(ckpt_dir, ladder)     # BEFORE quarantine: the
+            #   ladder is the recovery manifest — kill-safe ordering
+            last = latest_committed(ckpt_dir)
+            demoted = []
+            if last is not None:
+                horizon = int(os.path.basename(last)[len("ckpt_"):])
+                demoted = NR.quarantine(ckpt_dir, horizon)
+            print(f"numerics recovery #{recoveries + 1}: {e} → "
+                  f"{ladder.describe()}; quarantined "
+                  f"{[os.path.basename(p) for p in demoted]}", flush=True)
+            if recoveries >= max_recoveries:
+                raise
+            # steps up to the checkpoint the next incarnation resumes from
+            # are real; everything after it is rolled back
+            ckpt_step = 0
+            last = latest_committed(ckpt_dir)
+            if last is not None:
+                ckpt_step = int(os.path.basename(last)[len("ckpt_"):])
+            all_losses += e.losses[:max(
+                0, ckpt_step - (e.reason.step + 1 - len(e.losses)))]
+            recoveries += 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -310,6 +434,22 @@ def main():
     ap.add_argument("--losses-out", default="",
                     help="write {start, losses} json (fault-injection "
                          "harness compares trajectories across kills)")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the numerics guard: kernel telemetry + "
+                         "divergence monitor + rollback-and-escalate "
+                         "recovery (DESIGN.md §14)")
+    ap.add_argument("--guard-max-recoveries", type=int, default=4)
+    ap.add_argument("--guard-warmup", type=int, default=8,
+                    help="EWMA warm-up steps before loss-spike trips arm")
+    ap.add_argument("--inject-nan-step", type=int, default=None,
+                    help="NaN-poison one head weight before step N "
+                         "(numerics-guard e2e harness)")
+    ap.add_argument("--inject-sat-step", type=int, default=None,
+                    help="force-saturate the head update stream before "
+                         "step N (needs a Kahan head)")
+    ap.add_argument("--inject-lr-spike-step", type=int, default=None,
+                    help="spike the head LR for exactly step N")
+    ap.add_argument("--inject-lr-spike-factor", type=float, default=64.0)
     args = ap.parse_args()
 
     overrides = {"vocab": args.vocab} if args.vocab else {}
@@ -321,17 +461,46 @@ def main():
         overrides["head_prune_every"] = args.head_prune_every
     cfg = (get_smoke(args.arch, **overrides) if args.smoke
            else get_config(args.arch))
-    _, losses = train(cfg, steps=args.steps, global_batch=args.global_batch,
-                      seq=args.seq, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=args.ckpt_every,
-                      head_lr=args.head_lr, backbone_lr=args.backbone_lr,
-                      impl="xla" if args.smoke else "auto",
-                      n_data=args.n_data, n_model=args.n_model)
+
+    from repro.fault import inject as FI
+    hook = None
+    if args.inject_nan_step is not None:
+        hook = FI.at_step(args.inject_nan_step, FI.nan_poison_head)
+    elif args.inject_sat_step is not None:
+        hook = FI.at_step(args.inject_sat_step, FI.saturate_head)
+    lr_sched = None
+    if args.inject_lr_spike_step is not None:
+        lr_sched = FI.lr_spike(args.head_lr, step=args.inject_lr_spike_step,
+                               factor=args.inject_lr_spike_factor)
+    if ((hook or lr_sched) and args.guard and args.ckpt_dir
+            and NR.load_ladder(args.ckpt_dir).trips):
+        # a restarted (e.g. SIGKILLed-mid-recovery) guarded run has already
+        # taken this poison: recovery must replay clean, not re-trip
+        hook = lr_sched = None
+
+    common = dict(steps=args.steps, global_batch=args.global_batch,
+                  seq=args.seq, ckpt_dir=args.ckpt_dir,
+                  ckpt_every=args.ckpt_every, head_lr=args.head_lr,
+                  backbone_lr=args.backbone_lr,
+                  impl="xla" if args.smoke else "auto",
+                  inject=hook, head_lr_sched=lr_sched)
+    if args.guard:
+        _, losses, recoveries = run_guarded(
+            cfg, max_recoveries=args.guard_max_recoveries,
+            monitor_kw={"warmup": args.guard_warmup}, **common)
+        print(f"numerics guard: {recoveries} recovery(ies); final ladder: "
+              f"{NR.load_ladder(args.ckpt_dir).describe()}", flush=True)
+    else:
+        _, losses = train(cfg, n_data=args.n_data, n_model=args.n_model,
+                          **common)
     if args.losses_out:
         with open(args.losses_out, "w") as f:
             json.dump({"start": args.steps - len(losses),
                        "losses": losses}, f)
-    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f})")
+    else:       # resumed past the last step: nothing left to train
+        print("final loss n/a (restored checkpoint already at --steps)")
 
 
 if __name__ == "__main__":

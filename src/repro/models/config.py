@@ -64,6 +64,9 @@ class ModelConfig:
     # many weight slots per label row (values + i32 indices)
     head_fan_in: int = 0
     head_prune_every: int = 0           # prune/regrow cadence in steps (0=off)
+    # numerics guard (DESIGN.md §14): emit per-step saturation/non-finite
+    # telemetry from the head train step (bitwise invisible to the weights)
+    head_guard: bool = False
     # encoder-style (paper's own XMC archs)
     causal: bool = True
     pool: str = "none"                  # "none" (LM) | "first" (CLS pooling)

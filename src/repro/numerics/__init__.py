@@ -1,0 +1,15 @@
+"""Numerics guard subsystem (DESIGN.md §14): in-step FP8 telemetry,
+divergence detection, and rollback-and-escalate recovery.
+
+* ``telemetry`` — the shared 8-slot per-step counter vector (kernels,
+  oracles, and wrappers all emit/merge the same layout).
+* ``monitor``   — host-side ``NumericsMonitor``: EWMA loss z-score,
+  non-finite hard trips, saturation-fraction threshold.
+* ``recovery``  — the deterministic escalation ladder (reseed → LR
+  backoff → precision escalation) with crash-safe ``guard.json`` state.
+"""
+from repro.numerics import telemetry  # noqa: F401
+from repro.numerics.monitor import NumericsMonitor, TripReason  # noqa: F401
+from repro.numerics.recovery import (  # noqa: F401
+    LadderState, NumericsTrip, RUNGS, load_ladder, save_ladder,
+)

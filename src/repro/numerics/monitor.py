@@ -1,0 +1,130 @@
+"""Host-side divergence detection over the per-step telemetry stream.
+
+``NumericsMonitor`` consumes one ``(step, loss, telemetry)`` observation
+per optimizer step (the telemetry vector is ``telemetry.N_SLOTS`` f32 —
+see that module for the slot layout) and decides whether the run has gone
+numerically bad:
+
+* **non-finite hard trips** — a NaN/Inf loss, any non-finite count in
+  slots 1–3 (logits / LSE / x̄), or a non-finite telemetry value itself
+  (a NaN Kahan-comp max) trip immediately;
+* **saturation-fraction threshold** — slot 0 divided by the head's
+  update-element count exceeding ``sat_frac``
+  (``ELMOHeadConfig.guard_sat_frac``) trips: an e4m3 head whose updates
+  pile onto the ±448 cliff is silently losing its gradient signal;
+* **EWMA loss-spike z-score** — an exponentially-weighted mean/variance
+  of the loss; after ``warmup`` observations a loss more than
+  ``z_thresh`` EWMA standard deviations above the mean trips.  Spiking
+  observations do NOT update the statistics (a divergence must not drag
+  its own baseline up), and ``reset()`` re-warms the estimator after a
+  rollback (the resumed stream starts from last-good, not the spike).
+
+Everything here is plain Python floats — deterministic, replayable, and
+independent of the device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.numerics import telemetry as T
+
+
+@dataclasses.dataclass(frozen=True)
+class TripReason:
+    """Why the monitor tripped — recorded in the ladder state / manifest."""
+    step: int
+    kind: str          # "nonfinite_loss" | "nonfinite_telemetry" |
+    #                    "nonfinite_z" | "nonfinite_lse" | "nonfinite_xg" |
+    #                    "saturation" | "loss_spike"
+    value: float       # the offending measurement
+    detail: str = ""
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class NumericsMonitor:
+    """EWMA loss-spike + non-finite + saturation-fraction trip logic.
+
+    ``update_elems`` is the denominator for the saturation fraction —
+    the number of W-update elements per step (``padded_labels · d_model``
+    dense, ``padded_labels · fan_in`` sparse)."""
+
+    def __init__(self, *, update_elems: int, sat_frac: float = 0.05,
+                 z_thresh: float = 8.0, ewma_beta: float = 0.9,
+                 warmup: int = 8):
+        assert update_elems > 0
+        assert 0.0 < sat_frac <= 1.0
+        assert z_thresh > 0.0 and 0.0 < ewma_beta < 1.0
+        self.update_elems = update_elems
+        self.sat_frac = sat_frac
+        self.z_thresh = z_thresh
+        self.ewma_beta = ewma_beta
+        self.warmup = warmup
+        self.reset()
+
+    def reset(self) -> None:
+        """Forget the loss statistics (call after a rollback)."""
+        self._mean: Optional[float] = None
+        self._var = 0.0
+        self._n = 0
+
+    # ------------------------------------------------------------------
+    def observe(self, step: int, loss: float,
+                tele: Optional[Sequence[float]] = None
+                ) -> Optional[TripReason]:
+        """Feed one step; returns a ``TripReason`` iff the run tripped."""
+        loss = float(loss)
+        trip = self._check_hard(step, loss, tele)
+        if trip is None:
+            trip = self._check_spike(step, loss)
+        if trip is None:
+            self._update_ewma(loss)
+        return trip
+
+    # ------------------------------------------------------------------
+    def _check_hard(self, step: int, loss: float, tele) -> Optional[TripReason]:
+        if not math.isfinite(loss):
+            return TripReason(step, "nonfinite_loss", loss)
+        if tele is None:
+            return None
+        vals = [float(v) for v in tele]
+        for v in vals:
+            if not math.isfinite(v):
+                return TripReason(step, "nonfinite_telemetry", v,
+                                  "non-finite telemetry slot (Kahan comp?)")
+        for kind, slot in (("nonfinite_z", T.SLOTS["z_nonfinite"]),
+                           ("nonfinite_lse", T.SLOTS["lse_nonfinite"]),
+                           ("nonfinite_xg", T.SLOTS["xg_nonfinite"])):
+            if vals[slot] > 0:
+                return TripReason(step, kind, vals[slot],
+                                  f"{int(vals[slot])} non-finite elements")
+        frac = vals[T.SLOTS["sat"]] / self.update_elems
+        if frac > self.sat_frac:
+            return TripReason(step, "saturation", frac,
+                              f"update saturation {frac:.4f} > "
+                              f"{self.sat_frac}")
+        return None
+
+    def _check_spike(self, step: int, loss: float) -> Optional[TripReason]:
+        if self._n < self.warmup or self._mean is None:
+            return None
+        std = math.sqrt(max(self._var, 1e-12))
+        z = (loss - self._mean) / std
+        if z > self.z_thresh:
+            return TripReason(step, "loss_spike", z,
+                              f"loss {loss:.6g} is {z:.1f}σ above EWMA "
+                              f"{self._mean:.6g}")
+        return None
+
+    def _update_ewma(self, loss: float) -> None:
+        if self._mean is None:
+            self._mean = loss
+        else:
+            b = self.ewma_beta
+            delta = loss - self._mean
+            self._mean = b * self._mean + (1.0 - b) * loss
+            self._var = b * (self._var + (1.0 - b) * delta * delta)
+        self._n += 1

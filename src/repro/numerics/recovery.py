@@ -1,0 +1,152 @@
+"""Deterministic rollback-and-escalate recovery (DESIGN.md §14).
+
+On a ``NumericsMonitor`` trip the supervisor in ``launch/train.py``:
+
+1. **persists** the escalated ``LadderState`` to ``guard.json`` (tmp +
+   fsync + atomic replace) — BEFORE touching the checkpoint store, so a
+   SIGKILL at any later point resumes mid-recovery bit-identically;
+2. **quarantines** the suspect checkpoints — every committed step at or
+   after the rollback horizon is demoted ``COMMITTED`` → ``CORRUPT``
+   (reusing §10's demotion, so ``latest_committed``/restore skip them);
+3. **rolls back** to the last-good committed step and resumes under the
+   new rung.
+
+The escalation ladder is a pure function of the trip count — replaying
+the same trips always produces the same rung:
+
+    rung 0  baseline             salt 0, lr ×1, configured dtype
+    rung 1  reseed               new SR seed stream (seed_salt = trips)
+    rung 2  lr_backoff           + learning rate × ``LR_BACKOFF``
+    rung 3  escalate_precision   + head weights e4m3/e5m2 → bf16
+                                 (further trips keep halving the LR)
+
+``seed_salt`` bumps on *every* trip (each recovery attempt replays a
+fresh SR stream — the cheapest lever against an unlucky rounding
+sequence); salt 0 reproduces the unguarded seed derivation exactly, so a
+run that never trips is bit-identical to a guard-off run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional
+
+RUNGS = ("baseline", "reseed", "lr_backoff", "escalate_precision")
+LR_BACKOFF = 0.5
+_GUARD_FILE = "guard.json"
+# low-precision storage dtypes escalate to bf16; bf16/f32 heads have no
+# higher storage rung (the ladder then only reseeds + backs off LR)
+_ESCALATED_DTYPE = {"e4m3": "bf16", "e5m2": "bf16"}
+
+
+@dataclasses.dataclass
+class LadderState:
+    """Where on the escalation ladder the run currently sits."""
+    rung: int = 0
+    seed_salt: int = 0
+    lr_scale: float = 1.0
+    weight_dtype: Optional[str] = None     # override iff escalated
+    trips: List[dict] = dataclasses.field(default_factory=list)
+
+    @property
+    def rung_name(self) -> str:
+        return RUNGS[self.rung]
+
+    def escalate(self, trip: dict, *, base_dtype: str) -> "LadderState":
+        """One rung up (pure — returns a new state).  ``trip`` is the
+        TripReason dict being recorded; ``base_dtype`` is the configured
+        head ``weight_dtype`` the precision rung escalates from."""
+        trips = self.trips + [dict(trip)]
+        rung = min(self.rung + 1, len(RUNGS) - 1)
+        lr_scale = self.lr_scale
+        if RUNGS[rung] == "lr_backoff" and RUNGS[self.rung] != "lr_backoff":
+            lr_scale *= LR_BACKOFF
+        elif self.rung == len(RUNGS) - 1:      # already at the top: keep
+            lr_scale *= LR_BACKOFF             # halving the LR
+        weight_dtype = self.weight_dtype
+        if RUNGS[rung] == "escalate_precision" and weight_dtype is None:
+            weight_dtype = _ESCALATED_DTYPE.get(base_dtype)
+            if weight_dtype is None:           # bf16/f32 head: no storage
+                weight_dtype = None            # rung above it — LR instead
+                lr_scale = self.lr_scale * LR_BACKOFF
+        return LadderState(rung=rung, seed_salt=len(trips),
+                           lr_scale=lr_scale, weight_dtype=weight_dtype,
+                           trips=trips)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def describe(self) -> str:
+        dt = f", dtype→{self.weight_dtype}" if self.weight_dtype else ""
+        return (f"rung {self.rung} ({self.rung_name}): salt="
+                f"{self.seed_salt}, lr×{self.lr_scale:g}{dt}, "
+                f"{len(self.trips)} trip(s)")
+
+
+class NumericsTrip(RuntimeError):
+    """Raised out of the inner train loop on a monitor trip — caught by
+    the guard supervisor (the numeric sibling of ``fault.HostFailure``)."""
+
+    def __init__(self, reason, losses=None):
+        super().__init__(f"numerics trip at step {reason.step}: "
+                         f"{reason.kind} ({reason.detail or reason.value})")
+        self.reason = reason
+        self.losses = list(losses or [])
+
+
+# ---------------------------------------------------------------------------
+# crash-safe ladder persistence
+# ---------------------------------------------------------------------------
+
+
+def _guard_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, _GUARD_FILE)
+
+
+def save_ladder(ckpt_dir: str, state: LadderState) -> str:
+    """Atomically persist the ladder (tmp + fsync + replace) — the same
+    torn-write discipline as the checkpoint commit marker."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = _guard_path(ckpt_dir)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(state.as_dict(), f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_ladder(ckpt_dir: str) -> LadderState:
+    """The persisted ladder, or the baseline if none was ever saved.  An
+    unreadable/torn file is treated as baseline (the .tmp protocol makes
+    that only possible for pre-guard runs)."""
+    try:
+        with open(_guard_path(ckpt_dir)) as f:
+            d = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return LadderState()
+    return LadderState(rung=int(d.get("rung", 0)),
+                       seed_salt=int(d.get("seed_salt", 0)),
+                       lr_scale=float(d.get("lr_scale", 1.0)),
+                       weight_dtype=d.get("weight_dtype"),
+                       trips=list(d.get("trips", [])))
+
+
+def quarantine(ckpt_dir: str, min_step: int) -> List[str]:
+    """Demote every committed checkpoint at step ≥ ``min_step`` to CORRUPT
+    (idempotent — a SIGKILL mid-quarantine just re-demotes the rest on
+    resume).  Returns the demoted paths."""
+    from repro.checkpoint import committed_paths      # local: keep the
+    from repro.checkpoint.ckpt import _demote         # import graph light
+    demoted = []
+    for path in committed_paths(ckpt_dir):
+        try:
+            step = int(os.path.basename(path).split("_")[-1])
+        except ValueError:
+            continue
+        if step >= min_step:
+            _demote(path, f"numerics quarantine (trip horizon {min_step})")
+            demoted.append(path)
+    return demoted

@@ -1,0 +1,87 @@
+"""The 8-slot numerics-telemetry vector (DESIGN.md §14).
+
+Every guard-enabled train-step path — the grid megakernels, the per-chunk
+scan, the sparse kernel, their ``ref.py`` oracles, and the sharded
+wrappers — emits one ``(8,)`` f32 vector per step:
+
+    slot 0  sat            # W-update elements whose pre-cast f32 value
+                           lies at or beyond the storage dtype's max
+                           finite (the e4m3 cliff is ±448) — SR saturates
+                           there, Kahan's cast clips there
+    slot 1  z_nonfinite    # non-finite logits among valid (row, col)s
+    slot 2  lse_nonfinite  # non-finite entries of the finalized LSE
+    slot 3  xg_nonfinite   # non-finite entries of the (B, D) x̄
+    slot 4  comp_max       max |Kahan comp'| after the update (0 if no
+                           Kahan chunks)
+    slots 5–7              reserved (always 0)
+
+Slots 0/1/4 are measured *inside* the step (the pre-cast update value and
+the logits never materialize outside the kernels); slots 2/3 are filled
+by the step wrappers from the final LSE/x̄ outputs (``finalize``), which
+is exact on every path because those arrays ARE step outputs.
+
+Exactness contract: slots 0–3 are integer-valued f32 *counts* — sums of
+1.0 indicators are reassociation-safe below 2²⁴, so a kernel that sums
+per label block and an oracle that sums per chunk agree bitwise; slot 4
+is a max-reduction, order-independent (NaN propagates through
+``jnp.maximum`` regardless of order).  Padding contributes exactly 0 to
+every slot: padded W rows/cols update 0 → 0 (|0| < lim, and a NaN from a
+poisoned x fails the ``>=`` compare), padded logits are masked out of
+slot 1, and padded comp stays 0.  That is why guard-on telemetry is
+identical across the grid kernel, the chunk scan, and the XLA oracle —
+and why the counters can ride along without perturbing W/comp/x̄/loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import precision as P
+
+N_SLOTS = 8
+SLOTS = {"sat": 0, "z_nonfinite": 1, "lse_nonfinite": 2,
+         "xg_nonfinite": 3, "comp_max": 4}
+
+
+def zero() -> jax.Array:
+    return jnp.zeros((N_SLOTS,), jnp.float32)
+
+
+def combine(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Merge two telemetry vectors (across chunks / microbatches / shards):
+    counts add, the comp max maxes."""
+    slot = jnp.arange(N_SLOTS)
+    return jnp.where(slot == SLOTS["comp_max"], jnp.maximum(a, b), a + b)
+
+
+def chunk(pre_cast: jax.Array, comp_new, z: jax.Array, mask: jax.Array,
+          wdtype) -> jax.Array:
+    """In-step telemetry of one chunk/block — the oracle-side mirror of the
+    kernels' in-VMEM accumulation (same indicator products, same reduction
+    values).  ``pre_cast`` is the f32 update value before the storage-dtype
+    cast; ``mask`` selects the valid logit positions."""
+    lim = jnp.float32(P.max_finite(wdtype))
+    sat = jnp.sum((jnp.abs(pre_cast) >= lim).astype(jnp.float32))
+    znf = jnp.sum((~jnp.isfinite(z.astype(jnp.float32))).astype(jnp.float32)
+                  * mask.astype(jnp.float32))
+    cmax = (jnp.max(jnp.abs(comp_new.astype(jnp.float32)))
+            if comp_new is not None else jnp.float32(0.0))
+    slot = jnp.arange(N_SLOTS)
+    out = (jnp.where(slot == SLOTS["sat"], sat, 0.0)
+           + jnp.where(slot == SLOTS["z_nonfinite"], znf, 0.0)
+           + jnp.where(slot == SLOTS["comp_max"], cmax, 0.0))
+    return out.astype(jnp.float32)
+
+
+def finalize(tele: jax.Array, xg: jax.Array, lse) -> jax.Array:
+    """Fill the wrapper-computed slots (LSE/x̄ non-finite counts) from the
+    step's final outputs.  Uniform across grid/scan/sparse/xla/sharded
+    paths — the inputs are the *outputs* every path agrees on bitwise."""
+    lse_nf = (jnp.float32(0.0) if lse is None else
+              jnp.sum((~jnp.isfinite(lse.astype(jnp.float32))
+                       ).astype(jnp.float32)))
+    xg_nf = jnp.sum((~jnp.isfinite(xg.astype(jnp.float32))
+                     ).astype(jnp.float32))
+    slot = jnp.arange(N_SLOTS)
+    return tele + jnp.where(slot == SLOTS["lse_nonfinite"], lse_nf, 0.0) \
+        + jnp.where(slot == SLOTS["xg_nonfinite"], xg_nf, 0.0)

@@ -1,0 +1,134 @@
+"""Numerics-guard checks under a forced multi-device host (default 4;
+tests/test_numerics_guard.py drives this via the ``multidevice_runner``
+fixture).  Exit code 0 = all checks passed.
+
+The contract under test (DESIGN.md §14):
+
+* guard-on ≡ guard-off stays **bitwise** on the label-sharded train step
+  — weights, Kahan comp, x̄ and loss — on every mesh factorization of the
+  forced devices, for the deterministic (BF16 + Kahan) and the production
+  (e4m3 + SR) update alike.
+* the psum/pmax telemetry merge is exact: for deterministic updates the
+  sharded counters equal the single-device counters bit-for-bit on 1×4,
+  2×2 and 4×1 (counts are integers carried in f32 — psum cannot lose
+  them; the comp-max slot merges by pmax).
+* an injected saturation cliff on one label shard is visible in the
+  merged telemetry (the counters cross the device boundary).
+"""
+import os
+
+_N_DEV = int(os.environ.get("REPRO_FORCE_DEVICES", "4"))
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={_N_DEV}")
+
+import dataclasses              # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp        # noqa: E402
+import numpy as np             # noqa: E402
+
+from repro.core import elmo_head as H                # noqa: E402
+from repro.dist import meshctx                       # noqa: E402
+from repro.head.state import state_bits_equal        # noqa: E402
+from repro.launch.mesh import make_host_mesh         # noqa: E402
+from repro.numerics import telemetry as NT           # noqa: E402
+
+assert len(jax.devices()) == _N_DEV, jax.devices()
+
+B, D, NL = 16, 32, 1000        # chunk=256, 4 chunks, 24 padded columns
+_HYPERS = (jnp.float32(0.05), jnp.float32(1e-4), jnp.uint32(7))
+_MESHES = ((1, 4), (2, 2), (4, 1))
+
+
+def _mk(loss, wdtype, kahan, use_sr):
+    # the fused scan path: the only inner with in-kernel telemetry AND an
+    # xla resolution on a host-device mesh
+    cfg = H.ELMOHeadConfig(num_labels=NL, d_model=D, num_chunks=4,
+                           weight_dtype=wdtype, loss=loss, use_sr=use_sr,
+                           kahan_chunks=kahan, impl="fused_xla")
+    st = H.init_head(jax.random.PRNGKey(0), cfg)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (B, D)) * 0.5
+         ).astype(jnp.bfloat16)
+    shape = (B, 8) if loss == "bce" else (B,)
+    tgt = jax.random.randint(jax.random.PRNGKey(2), shape, 0, NL)
+    return cfg, st, x, tgt
+
+
+def _single(cfg, st, x, tgt):
+    return jax.jit(lambda s, x, t: H.head_train_step(
+        cfg, s, x, t, *_HYPERS))(st, x, tgt)
+
+
+def _sharded(cfg, st, x, tgt, mesh_shape):
+    ctx = make_host_mesh(*mesh_shape)
+    with meshctx.use(ctx):
+        return jax.jit(lambda s, x, t: H.head_train_step_sharded(
+            cfg, s, x, t, *_HYPERS))(st, x, tgt)
+
+
+def _bits_eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+def check_guard_invisible_sharded():
+    """guard-on ≡ guard-off bitwise on every mesh, both update styles."""
+    for loss in ("bce", "softmax_ce"):
+        for wdtype, kahan, sr in (("bf16", 4, False), ("e4m3", 0, True)):
+            cfg, st, x, tgt = _mk(loss, wdtype, kahan, sr)
+            g_cfg = dataclasses.replace(cfg, guard=True)
+            for mesh_shape in _MESHES:
+                s_off, xg_off, m_off = _sharded(cfg, st, x, tgt, mesh_shape)
+                s_on, xg_on, m_on = _sharded(g_cfg, st, x, tgt, mesh_shape)
+                tag = (loss, wdtype, mesh_shape)
+                assert state_bits_equal(s_off, s_on), tag
+                assert _bits_eq(xg_off, xg_on), tag
+                assert _bits_eq(m_off["loss"], m_on["loss"]), tag
+                assert "telemetry" not in m_off, tag
+                tele = np.asarray(m_on["telemetry"])
+                assert tele.shape == (NT.N_SLOTS,) and \
+                    np.isfinite(tele).all(), (tag, tele)
+    print("guard invisibility (sharded): OK")
+
+
+def check_telemetry_merge_exact():
+    """Deterministic updates: the psum/pmax-merged sharded telemetry is
+    bit-identical to single-device on every mesh factorization."""
+    for loss in ("bce", "softmax_ce"):
+        cfg, st, x, tgt = _mk(loss, "bf16", kahan=4, use_sr=False)
+        g_cfg = dataclasses.replace(cfg, guard=True)
+        s1, _, m1 = _single(g_cfg, st, x, tgt)
+        t1 = np.asarray(m1["telemetry"])
+        for mesh_shape in _MESHES:
+            sS, _, mS = _sharded(g_cfg, st, x, tgt, mesh_shape)
+            tS = np.asarray(mS["telemetry"])
+            assert state_bits_equal(s1, sS), (loss, mesh_shape)
+            assert _bits_eq(t1, tS), (loss, mesh_shape, t1, tS)
+    print("telemetry psum/pmax merge: OK")
+
+
+def check_saturation_crosses_shards():
+    """Poison ONE label shard's Kahan comp past the e4m3 cliff: the merged
+    counter must report it no matter which shard held the poison."""
+    cfg, st, x, tgt = _mk("bce", "e4m3", kahan=4, use_sr=False)
+    g_cfg = dataclasses.replace(cfg, guard=True)
+    n_poison = 128
+    for shard in (0, _N_DEV - 1):
+        comp = np.asarray(st.comp.astype(jnp.float32)).copy()
+        flat = comp.reshape(-1)
+        per = flat.size // _N_DEV
+        flat[shard * per: shard * per + n_poison] = 450.0   # → ±448, finite
+        stP = st._replace(comp=jnp.asarray(comp).astype(st.comp.dtype))
+        _, _, m = _sharded(g_cfg, stP, x, tgt, (1, _N_DEV))
+        tele = np.asarray(m["telemetry"])
+        assert tele[NT.SLOTS["sat"]] >= n_poison, (shard, tele)
+        assert np.isfinite(tele).all(), (shard, tele)
+    print("cross-shard saturation visibility: OK")
+
+
+if __name__ == "__main__":
+    check_guard_invisible_sharded()
+    check_telemetry_merge_exact()
+    check_saturation_crosses_shards()
+    print("ALL NUMERICS GUARD CHECKS PASSED")

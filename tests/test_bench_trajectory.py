@@ -20,7 +20,8 @@ sys.path.insert(0, REPO)
 from benchmarks import run as bench_run        # noqa: E402
 
 EXPECTED = {"BENCH_3.json", "BENCH_4.json", "BENCH_5.json",
-            "BENCH_7.json", "BENCH_8.json", "BENCH_9.json"}
+            "BENCH_7.json", "BENCH_8.json", "BENCH_9.json",
+            "BENCH_10.json"}
 
 
 def test_bench_files_found_from_any_cwd(tmp_path, monkeypatch):
